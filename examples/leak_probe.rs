@@ -1,0 +1,41 @@
+//! Dev probe: isolate memory growth in the PJRT execute path.
+use sample_factory::runtime::{lit_f32, lit_u8, ModelPrograms, Runtime};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "full".into());
+    let rt = Runtime::cpu().unwrap();
+    let progs = ModelPrograms::load(&rt, "artifacts", "tiny").unwrap();
+    let man = &progs.manifest;
+    let params = progs.init_params(1).unwrap();
+    let b = man.policy_batch;
+    println!("start rss {:.1} MB", rss_mb());
+    for iter in 0..5000 {
+        match mode.as_str() {
+            "lit_only" => {
+                // only create input literals
+                let _obs = lit_u8(&[b, man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]],
+                                  &vec![7u8; b * man.obs_len()]).unwrap();
+                let _h = lit_f32(&[b, man.hidden], &vec![0f32; b * man.hidden]).unwrap();
+            }
+            _ => {
+                let obs = lit_u8(&[b, man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]],
+                                 &vec![7u8; b * man.obs_len()]).unwrap();
+                let h = lit_f32(&[b, man.hidden], &vec![0f32; b * man.hidden]).unwrap();
+                let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+                inputs.push(&obs);
+                inputs.push(&h);
+                let _outs = progs.policy.run(&inputs).unwrap();
+            }
+        }
+        if iter % 1000 == 0 {
+            println!("iter {iter}: rss {:.1} MB", rss_mb());
+        }
+    }
+    println!("end rss {:.1} MB", rss_mb());
+}

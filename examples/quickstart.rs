@@ -1,0 +1,59 @@
+//! Quickstart — the end-to-end validation driver.
+//!
+//! Trains the paper's conv-GRU actor-critic with the full asynchronous
+//! stack (rollout workers -> policy workers -> learner, V-trace + PPO via
+//! the AOT'd Pallas/JAX programs) on the `basic` scenario, and prints the
+//! learning curve.  `basic` is solvable quickly: the agent must learn to
+//! aim at a monster and shoot (random policy scores ~ -150; a trained agent
+//! approaches +75..+90 here).
+//!
+//! Run with:  `make artifacts && cargo run --release --example quickstart`
+//! (~2 million frames; a few minutes on the 1-core container)
+
+use sample_factory::config::Config;
+use sample_factory::coordinator::Trainer;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.spec = "doomish".into();
+    cfg.scenario = "basic".into();
+    cfg.num_workers = 2;
+    cfg.envs_per_worker = 8;
+    cfg.total_env_frames = std::env::var("QUICKSTART_FRAMES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000_000);
+    cfg.log_interval_s = 10.0;
+
+    eprintln!(
+        "[quickstart] training APPO on '{}' for {} frames...",
+        cfg.scenario, cfg.total_env_frames
+    );
+    let res = Trainer::run(&cfg).expect("training failed");
+
+    println!("\n== learning curve (frames -> mean episode return) ==");
+    let step = (res.curve.len() / 20).max(1);
+    for p in res.curve.iter().step_by(step) {
+        let bar_len = ((p.mean_return + 200.0) / 300.0 * 40.0).clamp(0.0, 40.0) as usize;
+        println!(
+            "{:>10} frames  {:>8.1}  |{}",
+            p.frames,
+            p.mean_return,
+            "#".repeat(bar_len)
+        );
+    }
+    println!("\nframes {}  wall {:.0}s  fps {:.0}", res.frames, res.wall_s, res.fps);
+    println!(
+        "episodes {}  sgd steps {}  final return {:.1}  policy lag {:.1}",
+        res.episodes, res.learner_steps, res.mean_return, res.lag_mean
+    );
+    println!(
+        "final loss metrics {:?}",
+        res.final_metrics.iter().map(|m| (m * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+    );
+    if res.mean_return > 0.0 {
+        println!("\nthe agent learned to hunt the monster (return > 0).");
+    } else {
+        println!("\nreturn still negative — train longer (QUICKSTART_FRAMES=4000000).");
+    }
+}

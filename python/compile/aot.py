@@ -1,0 +1,197 @@
+"""AOT bridge: lower the L2 programs to HLO *text* + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the text
+with ``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client.  HLO text — NOT ``.serialize()`` — is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+For every model spec we emit::
+
+    artifacts/<spec>/init.hlo.txt     seed            -> (params...)
+    artifacts/<spec>/policy.hlo.txt   params,obs,h    -> (logits, value, h')
+    artifacts/<spec>/train.hlo.txt    params,opt,hypers,batch -> (params',
+                                      opt', step', metrics)
+    artifacts/<spec>/manifest.json    shapes/dtypes/ordering contract
+
+Usage: ``python -m compile.aot --out ../artifacts [--specs tiny,doomish]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_init(spec: M.ModelSpec) -> str:
+    def fn(seed):
+        return tuple(M.init_params(spec, seed))
+
+    lowered = jax.jit(fn).lower(_sds((), jnp.uint32))
+    return to_hlo_text(lowered)
+
+
+def lower_policy(spec: M.ModelSpec) -> str:
+    n_params = len(M.param_defs(spec))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        obs, h = args[n_params], args[n_params + 1]
+        return M.policy_step(spec, params, obs, h, use_pallas=True)
+
+    b = spec.policy_batch
+    arg_specs = [_sds(s, jnp.float32) for _, s in M.param_defs(spec)]
+    arg_specs.append(_sds((b,) + spec.obs_shape, jnp.uint8))
+    arg_specs.append(_sds((b, spec.hidden), jnp.float32))
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_train(spec: M.ModelSpec) -> str:
+    n_params = len(M.param_defs(spec))
+
+    def fn(*args):
+        i = 0
+        params = list(args[i:i + n_params]); i += n_params
+        m_state = list(args[i:i + n_params]); i += n_params
+        v_state = list(args[i:i + n_params]); i += n_params
+        step = args[i]; i += 1
+        hypers = args[i]; i += 1
+        batch = args[i:i + 7]
+        new_p, new_m, new_v, new_step, metrics = M.train_step(
+            spec, params, m_state, v_state, step, hypers, batch
+        )
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (new_step, metrics)
+
+    b, t = spec.train_batch, spec.rollout
+    pspecs = [_sds(s, jnp.float32) for _, s in M.param_defs(spec)]
+    arg_specs = pspecs + pspecs + pspecs  # params, m, v
+    arg_specs.append(_sds((), jnp.float32))                 # adam step
+    arg_specs.append(_sds((M.N_HYPERS,), jnp.float32))      # hypers
+    arg_specs += [
+        _sds((b, t) + spec.obs_shape, jnp.uint8),           # obs
+        _sds((b,) + spec.obs_shape, jnp.uint8),             # last_obs
+        _sds((b, spec.hidden), jnp.float32),                # h0
+        _sds((b, t, spec.n_heads), jnp.int32),              # actions
+        _sds((b, t), jnp.float32),                          # behavior logprob
+        _sds((b, t), jnp.float32),                          # rewards
+        _sds((b, t), jnp.float32),                          # dones
+    ]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def manifest(spec: M.ModelSpec) -> dict:
+    params = [
+        {"name": n, "shape": list(s), "dtype": "f32"}
+        for n, s in M.param_defs(spec)
+    ]
+    h, w, c = spec.obs_shape
+    return {
+        "name": spec.name,
+        "obs_shape": [h, w, c],
+        "action_heads": list(spec.action_heads),
+        "hidden": spec.hidden,
+        "fc_dim": spec.fc_dim,
+        "policy_batch": spec.policy_batch,
+        "train_batch": spec.train_batch,
+        "rollout": spec.rollout,
+        "params": params,
+        "n_params": len(params),
+        "hyper_names": M.HYPER_NAMES,
+        "hypers_default": M.DEFAULT_HYPERS,
+        "metric_names": M.METRIC_NAMES,
+        "programs": {
+            "init": {
+                "file": "init.hlo.txt",
+                "inputs": ["seed:u32[]"],
+                "outputs": ["params x n_params"],
+            },
+            "policy": {
+                "file": "policy.hlo.txt",
+                "inputs": [
+                    "params x n_params",
+                    f"obs:u8[{spec.policy_batch},{h},{w},{c}]",
+                    f"h:f32[{spec.policy_batch},{spec.hidden}]",
+                ],
+                "outputs": [
+                    f"logits:f32[{spec.policy_batch},{spec.total_actions}]",
+                    f"value:f32[{spec.policy_batch}]",
+                    f"h:f32[{spec.policy_batch},{spec.hidden}]",
+                ],
+            },
+            "train": {
+                "file": "train.hlo.txt",
+                "inputs": [
+                    "params x n_params", "m x n_params", "v x n_params",
+                    "step:f32[]", f"hypers:f32[{M.N_HYPERS}]",
+                    "obs:u8[B,T,H,W,C]", "last_obs:u8[B,H,W,C]",
+                    "h0:f32[B,hidden]", "actions:i32[B,T,heads]",
+                    "behavior_logprob:f32[B,T]", "rewards:f32[B,T]",
+                    "dones:f32[B,T]",
+                ],
+                "outputs": [
+                    "params x n_params", "m x n_params", "v x n_params",
+                    "step:f32[]", f"metrics:f32[{M.N_METRICS}]",
+                ],
+            },
+        },
+    }
+
+
+def build_spec(spec: M.ModelSpec, out_dir: str, force: bool = False) -> None:
+    d = os.path.join(out_dir, spec.name)
+    os.makedirs(d, exist_ok=True)
+    man_path = os.path.join(d, "manifest.json")
+    if not force and os.path.exists(man_path):
+        print(f"[aot] {spec.name}: up to date, skipping")
+        return
+    print(f"[aot] {spec.name}: lowering init/policy/train ...")
+    with open(os.path.join(d, "init.hlo.txt"), "w") as f:
+        f.write(lower_init(spec))
+    with open(os.path.join(d, "policy.hlo.txt"), "w") as f:
+        f.write(lower_policy(spec))
+    with open(os.path.join(d, "train.hlo.txt"), "w") as f:
+        f.write(lower_train(spec))
+    with open(man_path, "w") as f:
+        json.dump(manifest(spec), f, indent=1)
+    print(f"[aot] {spec.name}: done -> {d}")
+
+
+def main(argv: List[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--specs", default=",".join(M.SPECS.keys()))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    for name in args.specs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in M.SPECS:
+            raise SystemExit(f"unknown spec '{name}'; have {list(M.SPECS)}")
+        build_spec(M.SPECS[name], args.out, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernel: fused GRU cell — the recurrent core on the policy
+worker's inference hot path (paper §A.1.3: the full model uses GRU cells).
+
+A cuDNN-style GPU GRU fuses the two GEMMs and the gate math into one kernel
+launch per step.  The TPU/Pallas formulation (DESIGN.md
+§Hardware-Adaptation): both GEMMs target the MXU systolic array (weights are
+kept 128-aligned via the model's hidden size), the gate nonlinearities run on
+the VPU over VMEM-resident tiles, and h' is written back once.  BlockSpec
+tiles the batch dimension; weights are broadcast to every grid step.
+
+Gate convention matches PyTorch's ``nn.GRUCell`` (the implementation used by
+the original Sample Factory), with separate input/hidden biases:
+
+    r  = sigmoid(x W_xr + b_xr + h W_hr + b_hr)
+    z  = sigmoid(x W_xz + b_xz + h W_hz + b_hz)
+    n  = tanh  (x W_xn + b_xn + r * (h W_hn + b_hn))
+    h' = (1 - z) * n + z * h
+
+Weights are packed ``w_x: (I, 3H)``, ``w_h: (H, 3H)``, ``b: (2, 3H)`` with
+gate order (r, z, n).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _gru_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, o_ref):
+    x = x_ref[...]            # (Bt, I)
+    h = h_ref[...]            # (Bt, H)
+    wx = wx_ref[...]          # (I, 3H)
+    wh = wh_ref[...]          # (H, 3H)
+    b = b_ref[...]            # (2, 3H)
+
+    hidden = h.shape[-1]
+    # Two MXU GEMMs; f32 accumulation.
+    gx = jnp.dot(x, wx, preferred_element_type=jnp.float32) + b[0]
+    gh = jnp.dot(h, wh, preferred_element_type=jnp.float32) + b[1]
+
+    gx_r, gx_z, gx_n = gx[:, :hidden], gx[:, hidden:2 * hidden], gx[:, 2 * hidden:]
+    gh_r, gh_z, gh_n = gh[:, :hidden], gh[:, hidden:2 * hidden], gh[:, 2 * hidden:]
+
+    r = jax.nn.sigmoid(gx_r + gh_r)
+    z = jax.nn.sigmoid(gx_z + gh_z)
+    n = jnp.tanh(gx_n + r * gh_n)
+    o_ref[...] = (1.0 - z) * n + z * h
+
+
+def gru_cell(
+    x: jax.Array,
+    h: jax.Array,
+    w_x: jax.Array,
+    w_h: jax.Array,
+    b: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused GRU cell step: returns h' with shape (B, H).
+
+    Args:
+      x:   (B, I) f32 input features.
+      h:   (B, H) f32 previous hidden state.
+      w_x: (I, 3H) packed input weights, gate order (r, z, n).
+      w_h: (H, 3H) packed hidden weights.
+      b:   (2, 3H) — row 0 input bias, row 1 hidden bias.
+    """
+    bsz, in_dim = x.shape
+    hidden = h.shape[-1]
+    if w_x.shape != (in_dim, 3 * hidden):
+        raise ValueError(f"w_x shape {w_x.shape} != {(in_dim, 3 * hidden)}")
+    if w_h.shape != (hidden, 3 * hidden):
+        raise ValueError(f"w_h shape {w_h.shape} != {(hidden, 3 * hidden)}")
+    if b.shape != (2, 3 * hidden):
+        raise ValueError(f"b shape {b.shape} != {(2, 3 * hidden)}")
+
+    bt = min(block_b, bsz)
+    if bsz % bt != 0:
+        bt = bsz
+    grid = (bsz // bt,)
+
+    out = pl.pallas_call(
+        _gru_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((bt, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim, 3 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, 3 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((2, 3 * hidden), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+        interpret=interpret,
+    )(x, h, w_x, w_h, b)
+    return out
+
+
+def mxu_flops_per_step(batch: int, in_dim: int, hidden: int) -> int:
+    """MACs x2 for the two packed GEMMs — the §Perf MXU utilisation estimate."""
+    return 2 * batch * 3 * hidden * (in_dim + hidden)
+
+
+def vmem_footprint_bytes(block_b: int, in_dim: int, hidden: int) -> int:
+    """VMEM bytes for one grid step (x, h, w_x, w_h, b, gx, gh, out)."""
+    return 4 * (
+        block_b * in_dim          # x
+        + 2 * block_b * hidden    # h, out
+        + in_dim * 3 * hidden     # w_x
+        + hidden * 3 * hidden     # w_h
+        + 2 * 3 * hidden          # b
+        + 2 * block_b * 3 * hidden  # gx, gh intermediates
+    )

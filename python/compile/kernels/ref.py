@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: straightforward, obviously-correct
+implementations of V-trace (following Espeholt et al. 2018, eq. 1) and the
+PyTorch-convention GRU cell.  ``python/tests`` sweeps shapes and dtypes with
+hypothesis and asserts allclose between kernel and oracle.
+
+The training graph (model.py) uses ``gru_cell_ref`` for BPTT (Pallas interpret
+kernels are forward-only; the inference program uses the fused kernel) — the
+equivalence tests are therefore also the guarantee that the policy worker and
+the learner evaluate the *same* recurrent function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vtrace_ref(values, rewards, discounts, rhos, bootstrap,
+               rho_clip: float = 1.0, c_clip: float = 1.0):
+    """Reference V-trace: explicit backward loop, time-major (T, B) inputs.
+
+    Returns (vs, pg_advantage), each (T, B).
+    """
+    t_len = values.shape[0]
+    rho_c = jnp.minimum(rhos, rho_clip)
+    c = jnp.minimum(rhos, c_clip)
+    v_tp1 = jnp.concatenate([values[1:], bootstrap[None, :]], axis=0)
+    delta = rho_c * (rewards + discounts * v_tp1 - values)
+
+    acc = jnp.zeros_like(bootstrap)
+    out = []
+    for t in range(t_len - 1, -1, -1):
+        acc = delta[t] + discounts[t] * c[t] * acc
+        out.append(acc)
+    vs_minus_v = jnp.stack(out[::-1], axis=0)
+    vs = values + vs_minus_v
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap[None, :]], axis=0)
+    adv = rho_c * (rewards + discounts * vs_tp1 - values)
+    return vs, adv
+
+
+def gru_cell_ref(x, h, w_x, w_h, b):
+    """Reference GRU cell, PyTorch convention; see kernels/gru.py."""
+    hidden = h.shape[-1]
+    gx = x @ w_x + b[0]
+    gh = h @ w_h + b[1]
+    r = jax.nn.sigmoid(gx[:, :hidden] + gh[:, :hidden])
+    z = jax.nn.sigmoid(gx[:, hidden:2 * hidden] + gh[:, hidden:2 * hidden])
+    n = jnp.tanh(gx[:, 2 * hidden:] + r * gh[:, 2 * hidden:])
+    return (1.0 - z) * n + z * h

@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernel: fused V-trace off-policy correction (§3.4 of the paper).
+
+V-trace (Espeholt et al., 2018) computes corrected value targets ``vs`` and
+policy-gradient advantages from behaviour-policy trajectories:
+
+    c_t      = min(c_bar,   rho_t)
+    rho_c_t  = min(rho_bar, rho_t)
+    delta_t  = rho_c_t * (r_t + gamma_t * V(x_{t+1}) - V(x_t))
+    vs_t     = V(x_t) + sum_{k>=t} gamma^{k-t} (prod_{i<k} c_i) delta_k
+    adv_t    = rho_c_t * (r_t + gamma_t * vs_{t+1} - V(x_t))
+
+GPU implementations run this as a chain of small elementwise kernels with a
+sequential time loop on device.  The TPU/Pallas re-think (DESIGN.md
+§Hardware-Adaptation): tile the *batch* dimension across the Pallas grid and
+run the whole time-reversed recursion inside VMEM — one HBM->VMEM round trip
+for the entire (T, B_tile) block, all five stages fused.  The time loop is
+statically unrolled (T is a compile-time constant, 32 in all experiments,
+matching the paper's rollout length).
+
+All tensors are time-major ``(T, B)``; ``bootstrap`` is ``(1, B)`` — the
+value estimate for x_{T+1}.
+
+Lowered with ``interpret=True``: the container executes on CPU-PJRT; real
+TPU lowering would emit a Mosaic custom call (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile.  256 f32 rows x (4 inputs + 2 outputs) x T=32 = 768 KiB
+# of VMEM at T=32 — comfortably under a TPU core's ~16 MiB VMEM while giving
+# the VPU full 8x128 lanes.  See EXPERIMENTS.md §Perf for the footprint table.
+DEFAULT_BLOCK_B = 256
+
+
+def _vtrace_kernel(
+    v_ref, r_ref, disc_ref, rho_ref, boot_ref, vs_ref, adv_ref, *, t_len: int,
+    rho_clip: float, c_clip: float,
+):
+    """One grid step: full V-trace recursion for a (T, B_tile) block in VMEM."""
+    v = v_ref[...]        # (T, Bt) values V(x_t) under the *target* policy
+    r = r_ref[...]        # (T, Bt) rewards
+    disc = disc_ref[...]  # (T, Bt) discounts gamma * (1 - done_t)
+    rho = rho_ref[...]    # (T, Bt) importance ratios pi/mu
+    boot = boot_ref[0, :]  # (Bt,) bootstrap value V(x_{T+1})
+
+    rho_c = jnp.minimum(rho, rho_clip)   # truncated rho-bar
+    c = jnp.minimum(rho, c_clip)         # truncated c-bar ("trace cutting")
+
+    # v_{t+1} with the bootstrap appended; computed once for the whole block.
+    v_tp1 = jnp.concatenate([v[1:], boot[None, :]], axis=0)
+    delta = rho_c * (r + disc * v_tp1 - v)
+
+    # Backward recursion a_t = delta_t + disc_t * c_t * a_{t+1}, statically
+    # unrolled: T is a lowering-time constant.  Everything stays in VMEM.
+    acc = jnp.zeros_like(boot)
+    rows = [None] * t_len
+    for t in range(t_len - 1, -1, -1):
+        acc = delta[t] + disc[t] * c[t] * acc
+        rows[t] = acc
+    vs_minus_v = jnp.stack(rows, axis=0)
+    vs = v + vs_minus_v
+
+    vs_tp1 = jnp.concatenate([vs[1:], boot[None, :]], axis=0)
+    adv = rho_c * (r + disc * vs_tp1 - v)
+
+    vs_ref[...] = vs
+    adv_ref[...] = adv
+
+
+def vtrace(
+    values: jax.Array,
+    rewards: jax.Array,
+    discounts: jax.Array,
+    rhos: jax.Array,
+    bootstrap: jax.Array,
+    *,
+    rho_clip: float = 1.0,
+    c_clip: float = 1.0,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+):
+    """Fused V-trace targets.
+
+    Args:
+      values:    (T, B) f32 — V(x_t) under the current (target) policy.
+      rewards:   (T, B) f32.
+      discounts: (T, B) f32 — gamma * (1 - done_t).
+      rhos:      (T, B) f32 — untruncated importance ratios pi(a|x)/mu(a|x).
+      bootstrap: (B,)   f32 — V(x_{T+1}).
+      rho_clip / c_clip: the paper uses rho_bar = c_bar = 1 (Table A.5).
+
+    Returns:
+      (vs, pg_advantage), both (T, B) f32.  Callers must treat both as
+      constants (stop_gradient) — V-trace targets carry no gradient.
+    """
+    t_len, b = values.shape
+    if bootstrap.shape != (b,):
+        raise ValueError(f"bootstrap shape {bootstrap.shape} != ({b},)")
+    for name, arr in (("rewards", rewards), ("discounts", discounts), ("rhos", rhos)):
+        if arr.shape != (t_len, b):
+            raise ValueError(f"{name} shape {arr.shape} != {(t_len, b)}")
+
+    bt = min(block_b, b)
+    if b % bt != 0:
+        # Fall back to a single block covering the whole (possibly ragged)
+        # batch; callers on the AOT path always pass power-of-two batches.
+        bt = b
+    grid = (b // bt,)
+
+    boot2 = bootstrap[None, :]  # (1, B)
+    kernel = functools.partial(
+        _vtrace_kernel, t_len=t_len, rho_clip=float(rho_clip), c_clip=float(c_clip)
+    )
+    seq_spec = pl.BlockSpec((t_len, bt), lambda i: (0, i))
+    boot_spec = pl.BlockSpec((1, bt), lambda i: (0, i))
+    out_shape = jax.ShapeDtypeStruct((t_len, b), jnp.float32)
+    vs, adv = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, boot_spec],
+        out_specs=[seq_spec, seq_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(values, rewards, discounts, rhos, boot2)
+    return vs, adv
+
+
+def vmem_footprint_bytes(t_len: int, block_b: int) -> int:
+    """Estimated VMEM bytes for one grid step (4 inputs + 2 outputs + boot).
+
+    Used by DESIGN/EXPERIMENTS §Perf to argue TPU viability; asserted <16MiB
+    in tests.
+    """
+    block = t_len * block_b * 4
+    return 6 * block + block_b * 4

@@ -1,0 +1,392 @@
+"""Layer-2: the Sample Factory actor-critic model and the APPO train step.
+
+This module defines, in JAX, everything the Rust coordinator executes through
+PJRT (build-time only — Python is never on the sample path):
+
+* ``init_params``  — parameter initialisation from an integer seed.
+* ``policy_step``  — batched inference for the policy worker: pixels + GRU
+  hidden state -> per-head action logits, value estimate, new hidden state.
+  Uses the fused Pallas GRU kernel (kernels/gru.py) on the hot path.
+* ``train_step``   — one APPO SGD step for the learner: forward over a
+  (B, T) trajectory batch with BPTT, V-trace off-policy correction (the
+  Pallas kernel in kernels/vtrace.py), PPO clipping, entropy bonus, and an
+  in-graph Adam update with global-norm gradient clipping.  Parameters and
+  optimiser state are inputs *and* outputs, so the Rust learner chains
+  device buffers without host round trips.
+
+The architecture follows the paper (appendix A.1.3): a 3-layer conv encoder,
+a fully-connected projection, a GRU core (the paper's "full" model uses GRU),
+and L independent discrete action heads plus a value head.
+
+Hyperparameters that PBT mutates (learning rate, entropy coefficient, Adam
+beta1, ...) are a runtime *input vector* (``HYPERS``) rather than baked-in
+constants, so a population shares one compiled program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gru as gru_kernel
+from .kernels import ref as kref
+from .kernels import vtrace as vtrace_kernel
+
+# ---------------------------------------------------------------------------
+# Hyperparameter vector layout (f32[N_HYPERS]); indices are mirrored by
+# rust/src/config/hypers.rs.  PBT mutates entries without recompilation.
+# ---------------------------------------------------------------------------
+HYPER_NAMES: List[str] = [
+    "lr",            # 0  Adam learning rate
+    "ent_coef",      # 1  entropy bonus coefficient
+    "ppo_clip",      # 2  PPO clip eps: ratio clipped to [1/(1+eps), 1+eps]
+    "rho_clip",      # 3  V-trace rho-bar
+    "c_clip",        # 4  V-trace c-bar
+    "vf_coef",       # 5  critic loss coefficient
+    "gamma",         # 6  discount
+    "max_grad_norm", # 7  global-norm gradient clip
+    "adam_b1",       # 8
+    "adam_b2",       # 9
+    "adam_eps",      # 10
+]
+N_HYPERS = len(HYPER_NAMES)
+
+# Paper defaults, Table A.5.
+DEFAULT_HYPERS: List[float] = [
+    1e-4, 0.003, 0.1, 1.0, 1.0, 0.5, 0.99, 4.0, 0.9, 0.999, 1e-6,
+]
+
+METRIC_NAMES: List[str] = [
+    "total_loss", "pg_loss", "v_loss", "entropy",
+    "approx_kl", "grad_norm", "mean_rho", "mean_vs",
+]
+N_METRICS = len(METRIC_NAMES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static (AOT-time) description of one environment's model."""
+
+    name: str
+    obs_shape: Tuple[int, int, int]          # (H, W, C) uint8 pixels
+    action_heads: Tuple[int, ...]            # sizes of independent heads
+    conv: Tuple[Tuple[int, int, int], ...]   # (out_ch, kernel, stride) x 3
+    fc_dim: int
+    hidden: int                              # GRU hidden size
+    policy_batch: int                        # inference batch (AOT-fixed)
+    train_batch: int                         # trajectories per SGD step
+    rollout: int                             # T
+
+    @property
+    def total_actions(self) -> int:
+        return int(sum(self.action_heads))
+
+    @property
+    def n_heads(self) -> int:
+        return len(self.action_heads)
+
+
+# ---------------------------------------------------------------------------
+# Environment model configurations.  Resolutions and widths are scaled to the
+# 1-core CPU testbed (DESIGN.md §Scaling); ratios mirror the paper's setups.
+# ---------------------------------------------------------------------------
+def _doomish_conv():
+    return ((16, 8, 4), (32, 4, 2), (32, 3, 2))
+
+
+SPECS: Dict[str, ModelSpec] = {
+    # Test-size config: fast to lower/compile, used by pytest + cargo test.
+    "tiny": ModelSpec(
+        name="tiny", obs_shape=(24, 32, 3), action_heads=(3, 2),
+        conv=((8, 4, 2), (8, 4, 2), (8, 3, 1)), fc_dim=32, hidden=32,
+        policy_batch=8, train_batch=4, rollout=8,
+    ),
+    # VizDoom-like standard scenarios + Battle (paper's "simplified" model,
+    # action heads: move / strafe / attack / horizontal aim -- Table A.4).
+    "doomish": ModelSpec(
+        name="doomish", obs_shape=(36, 64, 3), action_heads=(3, 3, 2, 21),
+        conv=_doomish_conv(), fc_dim=128, hidden=128,
+        policy_batch=32, train_batch=16, rollout=32,
+    ),
+    # Full action space for Duel/Deathmatch (7 heads = 12096 combos,
+    # exactly the paper's Table A.4).
+    "doomish_full": ModelSpec(
+        name="doomish_full", obs_shape=(36, 64, 3),
+        action_heads=(3, 3, 2, 2, 2, 8, 21),
+        conv=_doomish_conv(), fc_dim=128, hidden=128,
+        policy_batch=32, train_batch=16, rollout=32,
+    ),
+    # Atari-like Breakout: 84x84 grayscale, 4-framestack folded into C.
+    "arcade": ModelSpec(
+        name="arcade", obs_shape=(84, 84, 4), action_heads=(4,),
+        conv=((16, 8, 4), (32, 4, 2), (32, 3, 1)), fc_dim=128, hidden=128,
+        policy_batch=32, train_batch=16, rollout=32,
+    ),
+    # DMLab-like collect_good_objects: deliberately heavier render.
+    "gridlab": ModelSpec(
+        name="gridlab", obs_shape=(72, 96, 3), action_heads=(7,),
+        conv=_doomish_conv(), fc_dim=128, hidden=128,
+        policy_batch=32, train_batch=16, rollout=32,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters.  A flat, deterministically-ordered list of named arrays; the
+# same order is recorded in manifest.json and relied on by the Rust runtime.
+# ---------------------------------------------------------------------------
+def param_defs(spec: ModelSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list for every parameter tensor."""
+    defs: List[Tuple[str, Tuple[int, ...]]] = []
+    h_in, w_in, c_in = spec.obs_shape
+    ch = c_in
+    h, w = h_in, w_in
+    for i, (out_ch, k, s) in enumerate(spec.conv):
+        defs.append((f"conv{i}/w", (k, k, ch, out_ch)))
+        defs.append((f"conv{i}/b", (out_ch,)))
+        ch = out_ch
+        h = (h + s - 1) // s  # SAME padding
+        w = (w + s - 1) // s
+    flat = h * w * ch
+    defs.append(("fc/w", (flat, spec.fc_dim)))
+    defs.append(("fc/b", (spec.fc_dim,)))
+    defs.append(("gru/wx", (spec.fc_dim, 3 * spec.hidden)))
+    defs.append(("gru/wh", (spec.hidden, 3 * spec.hidden)))
+    defs.append(("gru/b", (2, 3 * spec.hidden)))
+    for i, n in enumerate(spec.action_heads):
+        defs.append((f"head{i}/w", (spec.hidden, n)))
+        defs.append((f"head{i}/b", (n,)))
+    defs.append(("value/w", (spec.hidden, 1)))
+    defs.append(("value/b", (1,)))
+    return defs
+
+
+def init_params(spec: ModelSpec, seed: jax.Array) -> List[jax.Array]:
+    """He/orthogonal-style init, returned in param_defs order."""
+    key = jax.random.PRNGKey(seed)
+    out: List[jax.Array] = []
+    for name, shape in param_defs(spec):
+        key, sub = jax.random.split(key)
+        if name.endswith("/b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.startswith("head"):
+            # Small-scale policy head init stabilises early training.
+            out.append(0.01 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            out.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def _as_dict(spec: ModelSpec, flat: List[jax.Array]) -> Dict[str, jax.Array]:
+    names = [n for n, _ in param_defs(spec)]
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces.
+# ---------------------------------------------------------------------------
+def encode(spec: ModelSpec, p: Dict[str, jax.Array], obs_u8: jax.Array) -> jax.Array:
+    """Conv encoder: uint8 (N, H, W, C) pixels -> (N, fc_dim) features."""
+    x = obs_u8.astype(jnp.float32) * (1.0 / 255.0)
+    for i, (_, _, s) in enumerate(spec.conv):
+        x = jax.lax.conv_general_dilated(
+            x, p[f"conv{i}/w"], window_strides=(s, s), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p[f"conv{i}/b"]
+        x = jax.nn.relu(x)
+    x = x.reshape((x.shape[0], -1))
+    x = jax.nn.relu(x @ p["fc/w"] + p["fc/b"])
+    return x
+
+
+def heads_and_value(
+    spec: ModelSpec, p: Dict[str, jax.Array], core: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Core features -> (concatenated logits (N, sum heads), value (N,))."""
+    logits = jnp.concatenate(
+        [core @ p[f"head{i}/w"] + p[f"head{i}/b"] for i in range(spec.n_heads)],
+        axis=-1,
+    )
+    value = (core @ p["value/w"] + p["value/b"])[:, 0]
+    return logits, value
+
+
+def policy_step(
+    spec: ModelSpec, params: List[jax.Array], obs_u8: jax.Array, h: jax.Array,
+    *, use_pallas: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Inference: (B,H,W,C) u8 obs + (B,hidden) h -> (logits, value, h').
+
+    The fused Pallas GRU kernel runs here — this is the policy worker's hot
+    path.  (Training uses the jnp reference cell for BPTT; equivalence is
+    pytest-enforced.)
+    """
+    p = _as_dict(spec, params)
+    emb = encode(spec, p, obs_u8)
+    if use_pallas:
+        h_new = gru_kernel.gru_cell(emb, h, p["gru/wx"], p["gru/wh"], p["gru/b"])
+    else:
+        h_new = kref.gru_cell_ref(emb, h, p["gru/wx"], p["gru/wh"], p["gru/b"])
+    logits, value = heads_and_value(spec, p, h_new)
+    return logits, value, h_new
+
+
+def _split_logits(spec: ModelSpec, logits: jax.Array) -> List[jax.Array]:
+    outs, off = [], 0
+    for n in spec.action_heads:
+        outs.append(logits[..., off:off + n])
+        off += n
+    return outs
+
+
+def action_logprob_entropy(
+    spec: ModelSpec, logits: jax.Array, actions: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Sum over heads of log pi(a_i) and entropy.  actions: (..., n_heads)."""
+    lp_total = 0.0
+    ent_total = 0.0
+    for i, head in enumerate(_split_logits(spec, logits)):
+        logp = jax.nn.log_softmax(head, axis=-1)
+        a = actions[..., i]
+        lp_total = lp_total + jnp.take_along_axis(logp, a[..., None], axis=-1)[..., 0]
+        probs = jnp.exp(logp)
+        ent_total = ent_total - jnp.sum(probs * logp, axis=-1)
+    return lp_total, ent_total
+
+
+# ---------------------------------------------------------------------------
+# APPO loss + Adam.
+# ---------------------------------------------------------------------------
+def _unroll(spec, p, obs_u8, last_obs_u8, h0, dones):
+    """Forward over a (B, T) trajectory batch with BPTT.
+
+    Returns time-major logits (T, B, A), values (T, B) and bootstrap (B,).
+    The conv encoder runs once over all B*(T+1) frames (XLA fuses this into
+    large GEMMs); only the GRU recursion is sequential.
+    """
+    bsz, t_len = obs_u8.shape[0], obs_u8.shape[1]
+    all_obs = jnp.concatenate([
+        obs_u8.reshape((bsz * t_len,) + spec.obs_shape),
+        last_obs_u8,
+    ], axis=0)
+    emb_all = encode(spec, p, all_obs)
+    emb_seq = emb_all[: bsz * t_len].reshape(bsz, t_len, spec.fc_dim)
+    emb_seq = jnp.swapaxes(emb_seq, 0, 1)          # (T, B, F)
+    emb_last = emb_all[bsz * t_len:]               # (B, F)
+    dones_tm = jnp.swapaxes(dones, 0, 1)           # (T, B)
+
+    def step(h, inp):
+        emb_t, done_prev = inp
+        h = h * (1.0 - done_prev)[:, None]
+        h_new = kref.gru_cell_ref(emb_t, h, p["gru/wx"], p["gru/wh"], p["gru/b"])
+        return h_new, h_new
+
+    # done *before* step t resets the hidden state: shift dones right by one.
+    done_prev = jnp.concatenate([jnp.zeros((1, bsz)), dones_tm[:-1]], axis=0)
+    h_last, cores = jax.lax.scan(step, h0, (emb_seq, done_prev))
+
+    logits, values = heads_and_value(spec, p, cores.reshape(t_len * bsz, -1))
+    logits = logits.reshape(t_len, bsz, spec.total_actions)
+    values = values.reshape(t_len, bsz)
+
+    # Bootstrap value for x_{T+1}: one more step from the final hidden state
+    # (zeroed if the trajectory ended exactly at T — discount handles it too).
+    h_boot_in = h_last * (1.0 - dones_tm[-1])[:, None]
+    h_boot = kref.gru_cell_ref(emb_last, h_boot_in, p["gru/wx"], p["gru/wh"], p["gru/b"])
+    _, v_boot = heads_and_value(spec, p, h_boot)
+    return logits, values, v_boot
+
+
+def appo_loss(spec, params, hypers, batch):
+    """The APPO objective: PPO-clipped policy gradient on V-trace advantages
+    + V-trace value targets + entropy bonus (paper §3.4: both V-trace and
+    PPO clipping are applied in all experiments)."""
+    p = _as_dict(spec, params)
+    obs, last_obs, h0, actions, behavior_lp, rewards, dones = batch
+    t_len = spec.rollout
+
+    logits, values, v_boot = _unroll(spec, p, obs, last_obs, h0, dones)
+
+    actions_tm = jnp.swapaxes(actions, 0, 1)       # (T, B, heads)
+    blp_tm = jnp.swapaxes(behavior_lp, 0, 1)       # (T, B)
+    rew_tm = jnp.swapaxes(rewards, 0, 1)
+    dones_tm = jnp.swapaxes(dones, 0, 1)
+
+    target_lp, entropy = action_logprob_entropy(spec, logits, actions_tm)
+
+    gamma = hypers[6]
+    discounts = gamma * (1.0 - dones_tm)
+    rhos = jnp.exp(jax.lax.stop_gradient(target_lp) - blp_tm)
+    vs, pg_adv = vtrace_kernel.vtrace(
+        jax.lax.stop_gradient(values), rew_tm, discounts, rhos,
+        jax.lax.stop_gradient(v_boot),
+        rho_clip=1.0, c_clip=1.0,   # paper Table A.5: rho_bar = c_bar = 1
+    )
+    vs = jax.lax.stop_gradient(vs)
+    pg_adv = jax.lax.stop_gradient(pg_adv)
+    # Advantage normalisation (standard APPO practice) stabilises training.
+    pg_adv = (pg_adv - jnp.mean(pg_adv)) / (jnp.std(pg_adv) + 1e-5)
+
+    ratio = jnp.exp(target_lp - blp_tm)
+    clip = hypers[2]
+    lo, hi = 1.0 / (1.0 + clip), 1.0 + clip
+    surr = jnp.minimum(ratio * pg_adv, jnp.clip(ratio, lo, hi) * pg_adv)
+    pg_loss = -jnp.mean(surr)
+
+    v_loss = 0.5 * jnp.mean(jnp.square(values - vs))
+    ent = jnp.mean(entropy)
+    total = pg_loss + hypers[5] * v_loss - hypers[1] * ent
+
+    aux = {
+        "pg_loss": pg_loss,
+        "v_loss": v_loss,
+        "entropy": ent,
+        "approx_kl": jnp.mean(blp_tm - target_lp),
+        "mean_rho": jnp.mean(jnp.minimum(rhos, 1.0)),
+        "mean_vs": jnp.mean(vs),
+    }
+    return total, aux
+
+
+def train_step(spec, params, m_state, v_state, step, hypers, batch):
+    """One SGD iteration: grads of appo_loss + global-norm clip + Adam.
+
+    Everything (optimiser included) is one fused HLO program so the Rust
+    learner's hot loop is a single PJRT execute with device-resident state.
+    Returns (params', m', v', step', metrics[N_METRICS]).
+    """
+    (total, aux), grads = jax.value_and_grad(
+        lambda ps: appo_loss(spec, ps, hypers, batch), has_aux=True
+    )(params)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads) + 1e-12)
+    max_norm = hypers[7]
+    scale = jnp.minimum(1.0, max_norm / gnorm)
+    grads = [g * scale for g in grads]
+
+    b1, b2, eps, lr = hypers[8], hypers[9], hypers[10], hypers[0]
+    new_step = step + 1.0
+    bc1 = 1.0 - jnp.power(b1, new_step)
+    bc2 = 1.0 - jnp.power(b2, new_step)
+    new_params, new_m, new_v = [], [], []
+    for pth, g, m, v in zip(params, grads, m_state, v_state):
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * jnp.square(g)
+        upd = lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        new_params.append(pth - upd)
+        new_m.append(m2)
+        new_v.append(v2)
+
+    metrics = jnp.stack([
+        total, aux["pg_loss"], aux["v_loss"], aux["entropy"],
+        aux["approx_kl"], gnorm, aux["mean_rho"], aux["mean_vs"],
+    ])
+    return new_params, new_m, new_v, new_step, metrics

@@ -1,0 +1,50 @@
+"""AOT bridge tests: lowering emits loadable HLO text and a consistent
+manifest for the tiny spec (the config cargo integration tests execute)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+SPEC = M.SPECS["tiny"]
+
+
+def test_manifest_consistent():
+    man = aot.manifest(SPEC)
+    assert man["n_params"] == len(M.param_defs(SPEC))
+    assert [tuple(p["shape"]) for p in man["params"]] == \
+        [s for _, s in M.param_defs(SPEC)]
+    assert man["hyper_names"] == M.HYPER_NAMES
+    assert len(man["hypers_default"]) == M.N_HYPERS
+    assert man["metric_names"] == M.METRIC_NAMES
+    assert sum(man["action_heads"]) == SPEC.total_actions
+
+
+def test_lowered_hlo_is_text(tmp_path):
+    text = aot.lower_policy(SPEC)
+    assert text.startswith("HloModule")
+    # Entry layout must list every param plus obs & hidden inputs.
+    n_inputs = len(M.param_defs(SPEC)) + 2
+    first_line = text.splitlines()[0]
+    assert first_line.count("f32[") + first_line.count("u8[") >= n_inputs
+
+
+def test_build_spec_idempotent(tmp_path):
+    aot.build_spec(SPEC, str(tmp_path))
+    man = os.path.join(tmp_path, "tiny", "manifest.json")
+    mtime = os.path.getmtime(man)
+    aot.build_spec(SPEC, str(tmp_path))  # skips: manifest exists
+    assert os.path.getmtime(man) == mtime
+    with open(man) as f:
+        data = json.load(f)
+    assert data["name"] == "tiny"
+    for prog in ("init", "policy", "train"):
+        path = os.path.join(tmp_path, "tiny", data["programs"][prog]["file"])
+        assert os.path.getsize(path) > 1000
+
+
+def test_unknown_spec_rejected():
+    with pytest.raises(SystemExit):
+        aot.main(["--out", "/tmp/nope", "--specs", "not_a_spec"])

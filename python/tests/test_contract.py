@@ -1,0 +1,77 @@
+"""Cross-language contract tests: the values hard-coded on the Rust side
+(env::obs_for_spec / env::heads_for_spec, hyper layout, trajectory slot
+geometry) must match the python model SPECS that generate the artifacts.
+A drift here would produce garbage training, not an error — so we pin it.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import model as M
+
+# Mirrors rust/src/env/mod.rs obs_for_spec / heads_for_spec.
+RUST_OBS = {
+    "tiny": (24, 32, 3),
+    "doomish": (36, 64, 3),
+    "doomish_full": (36, 64, 3),
+    "arcade": (84, 84, 4),
+    "gridlab": (72, 96, 3),
+}
+RUST_HEADS = {
+    "tiny": (3, 2),
+    "doomish": (3, 3, 2, 21),
+    "doomish_full": (3, 3, 2, 2, 2, 8, 21),
+    "arcade": (4,),
+    "gridlab": (7,),
+}
+
+
+@pytest.mark.parametrize("name", list(M.SPECS))
+def test_obs_shapes_match_rust(name):
+    assert M.SPECS[name].obs_shape == RUST_OBS[name], (
+        f"python SPECS['{name}'].obs_shape drifted from rust obs_for_spec"
+    )
+
+
+@pytest.mark.parametrize("name", list(M.SPECS))
+def test_action_heads_match_rust(name):
+    assert M.SPECS[name].action_heads == RUST_HEADS[name]
+
+
+def test_full_action_space_is_papers_12096():
+    import math
+    assert math.prod(M.SPECS["doomish_full"].action_heads) == 12096
+
+
+def test_hyper_layout_is_stable():
+    # rust/src learners index hypers by manifest order; locking the names
+    # locks the contract.
+    assert M.HYPER_NAMES == [
+        "lr", "ent_coef", "ppo_clip", "rho_clip", "c_clip", "vf_coef",
+        "gamma", "max_grad_norm", "adam_b1", "adam_b2", "adam_eps",
+    ]
+    assert M.METRIC_NAMES[0] == "total_loss"
+    assert "v_loss" in M.METRIC_NAMES
+    assert "grad_norm" in M.METRIC_NAMES
+
+
+@pytest.mark.parametrize("name", list(M.SPECS))
+def test_built_artifacts_match_current_specs(name):
+    """If artifacts/ exists, its manifests must match the live SPECS —
+    otherwise `make artifacts` is stale and the rust runtime would load
+    programs lowered from old shapes."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        name, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        man = json.load(f)
+    spec = M.SPECS[name]
+    assert tuple(man["obs_shape"]) == spec.obs_shape
+    assert tuple(man["action_heads"]) == spec.action_heads
+    assert man["train_batch"] == spec.train_batch
+    assert man["rollout"] == spec.rollout
+    assert man["n_params"] == len(M.param_defs(spec))
+    assert [p["name"] for p in man["params"]] == [n for n, _ in M.param_defs(spec)]

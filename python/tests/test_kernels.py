@@ -1,0 +1,200 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and, where meaningful, dtype-adjacent edge cases
+like extreme rho values) and asserts allclose against ref.py — this is the
+core correctness signal for the compute layer.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gru as gru_k
+from compile.kernels import ref
+from compile.kernels import vtrace as vtrace_k
+
+jax.config.update("jax_platform_name", "cpu")
+
+HSETTINGS = dict(deadline=None, max_examples=25,
+                 suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# V-trace
+# ---------------------------------------------------------------------------
+@hypothesis.given(
+    t_len=st.integers(1, 40),
+    batch=st.integers(1, 33),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**HSETTINGS)
+def test_vtrace_matches_ref(t_len, batch, seed):
+    r = _rng(seed)
+    v = r.normal(size=(t_len, batch)).astype(np.float32)
+    rew = r.normal(size=(t_len, batch)).astype(np.float32)
+    disc = (0.99 * (r.random(size=(t_len, batch)) > 0.1)).astype(np.float32)
+    rhos = np.exp(r.normal(scale=0.7, size=(t_len, batch))).astype(np.float32)
+    boot = r.normal(size=(batch,)).astype(np.float32)
+
+    vs_k, adv_k = vtrace_k.vtrace(v, rew, disc, rhos, boot)
+    vs_r, adv_r = ref.vtrace_ref(
+        jnp.asarray(v), jnp.asarray(rew), jnp.asarray(disc),
+        jnp.asarray(rhos), jnp.asarray(boot))
+    np.testing.assert_allclose(vs_k, vs_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(adv_k, adv_r, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    rho_clip=st.floats(0.1, 5.0),
+    c_clip=st.floats(0.1, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**HSETTINGS)
+def test_vtrace_clipping_params(rho_clip, c_clip, seed):
+    r = _rng(seed)
+    t_len, batch = 16, 8
+    v = r.normal(size=(t_len, batch)).astype(np.float32)
+    rew = r.normal(size=(t_len, batch)).astype(np.float32)
+    disc = np.full((t_len, batch), 0.95, np.float32)
+    rhos = np.exp(r.normal(scale=1.5, size=(t_len, batch))).astype(np.float32)
+    boot = r.normal(size=(batch,)).astype(np.float32)
+    vs_k, adv_k = vtrace_k.vtrace(v, rew, disc, rhos, boot,
+                                  rho_clip=rho_clip, c_clip=c_clip)
+    vs_r, adv_r = ref.vtrace_ref(
+        jnp.asarray(v), jnp.asarray(rew), jnp.asarray(disc),
+        jnp.asarray(rhos), jnp.asarray(boot),
+        rho_clip=rho_clip, c_clip=c_clip)
+    # Wide rho/c clips (up to 5) let importance weights ~e^{1.5 sigma} pile
+    # up through the f32 backward recursion; 1e-4 is the right tolerance
+    # for identical-math-different-association comparisons there.
+    np.testing.assert_allclose(vs_k, vs_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(adv_k, adv_r, rtol=1e-4, atol=1e-4)
+
+
+def test_vtrace_on_policy_reduces_to_discounted_returns():
+    """With rho=1 and no truncation, vs_t is the n-step bootstrapped return."""
+    t_len, batch = 8, 3
+    r = _rng(0)
+    v = r.normal(size=(t_len, batch)).astype(np.float32)
+    rew = r.normal(size=(t_len, batch)).astype(np.float32)
+    gamma = 0.9
+    disc = np.full((t_len, batch), gamma, np.float32)
+    rhos = np.ones((t_len, batch), np.float32)
+    boot = r.normal(size=(batch,)).astype(np.float32)
+    vs, _ = vtrace_k.vtrace(v, rew, disc, rhos, boot)
+    # Manual discounted return with bootstrap.
+    expected = np.zeros_like(v)
+    nxt = boot
+    for t in range(t_len - 1, -1, -1):
+        nxt = rew[t] + gamma * nxt
+        expected[t] = nxt
+    np.testing.assert_allclose(vs, expected, rtol=1e-4, atol=1e-4)
+
+
+def test_vtrace_terminal_cuts_bootstrap():
+    """A done at step t must stop reward propagation across the boundary."""
+    t_len, batch = 6, 1
+    v = np.zeros((t_len, batch), np.float32)
+    rew = np.zeros((t_len, batch), np.float32)
+    rew[5] = 100.0  # reward after the terminal must not leak backwards
+    disc = np.full((t_len, batch), 0.99, np.float32)
+    disc[2] = 0.0   # terminal at t=2
+    rhos = np.ones((t_len, batch), np.float32)
+    boot = np.zeros((batch,), np.float32)
+    vs, _ = vtrace_k.vtrace(v, rew, disc, rhos, boot)
+    assert vs[0, 0] == pytest.approx(0.0, abs=1e-6)
+    assert vs[1, 0] == pytest.approx(0.0, abs=1e-6)
+    assert vs[3, 0] > 90.0
+
+
+def test_vtrace_vmem_budget():
+    """§Perf: the default block must fit comfortably in a TPU core's VMEM."""
+    assert vtrace_k.vmem_footprint_bytes(32, vtrace_k.DEFAULT_BLOCK_B) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# GRU cell
+# ---------------------------------------------------------------------------
+@hypothesis.given(
+    batch=st.integers(1, 48),
+    in_dim=st.integers(1, 64),
+    hidden=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**HSETTINGS)
+def test_gru_matches_ref(batch, in_dim, hidden, seed):
+    r = _rng(seed)
+    x = r.normal(size=(batch, in_dim)).astype(np.float32)
+    h = r.normal(size=(batch, hidden)).astype(np.float32)
+    wx = r.normal(scale=0.3, size=(in_dim, 3 * hidden)).astype(np.float32)
+    wh = r.normal(scale=0.3, size=(hidden, 3 * hidden)).astype(np.float32)
+    b = r.normal(scale=0.1, size=(2, 3 * hidden)).astype(np.float32)
+    out_k = gru_k.gru_cell(x, h, wx, wh, b)
+    out_r = ref.gru_cell_ref(jnp.asarray(x), jnp.asarray(h),
+                             jnp.asarray(wx), jnp.asarray(wh), jnp.asarray(b))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+def test_gru_zero_update_gate_keeps_state():
+    """If z==1 (huge bias on the z gate), h' == h identically."""
+    batch, in_dim, hidden = 4, 8, 16
+    r = _rng(1)
+    x = r.normal(size=(batch, in_dim)).astype(np.float32)
+    h = r.normal(size=(batch, hidden)).astype(np.float32)
+    wx = np.zeros((in_dim, 3 * hidden), np.float32)
+    wh = np.zeros((hidden, 3 * hidden), np.float32)
+    b = np.zeros((2, 3 * hidden), np.float32)
+    b[0, hidden:2 * hidden] = 50.0  # z -> sigmoid(50) ~= 1
+    out = gru_k.gru_cell(x, h, wx, wh, b)
+    np.testing.assert_allclose(out, h, rtol=1e-5, atol=1e-5)
+
+
+def test_gru_bounded_output():
+    """h' is a convex combination of h and tanh(n): |h'| <= max(|h|, 1)."""
+    r = _rng(2)
+    x = r.normal(size=(16, 8)).astype(np.float32)
+    h = np.clip(r.normal(size=(16, 12)), -1, 1).astype(np.float32)
+    wx = r.normal(scale=2.0, size=(8, 36)).astype(np.float32)
+    wh = r.normal(scale=2.0, size=(12, 36)).astype(np.float32)
+    b = r.normal(size=(2, 36)).astype(np.float32)
+    out = np.asarray(gru_k.gru_cell(x, h, wx, wh, b))
+    assert np.all(np.abs(out) <= 1.0 + 1e-5)
+
+
+def test_gru_vmem_budget():
+    assert gru_k.vmem_footprint_bytes(gru_k.DEFAULT_BLOCK_B, 512, 512) < 16 * 2**20
+
+
+def test_gru_grid_tiles_match_single_block():
+    """Batch tiling across the grid must not change the result."""
+    r = _rng(3)
+    batch, in_dim, hidden = 32, 16, 8
+    x = r.normal(size=(batch, in_dim)).astype(np.float32)
+    h = r.normal(size=(batch, hidden)).astype(np.float32)
+    wx = r.normal(scale=0.3, size=(in_dim, 3 * hidden)).astype(np.float32)
+    wh = r.normal(scale=0.3, size=(hidden, 3 * hidden)).astype(np.float32)
+    b = r.normal(scale=0.1, size=(2, 3 * hidden)).astype(np.float32)
+    tiled = gru_k.gru_cell(x, h, wx, wh, b, block_b=8)
+    single = gru_k.gru_cell(x, h, wx, wh, b, block_b=batch)
+    np.testing.assert_allclose(tiled, single, rtol=1e-6, atol=1e-6)
+
+
+def test_vtrace_grid_tiles_match_single_block():
+    r = _rng(4)
+    t_len, batch = 8, 24
+    v = r.normal(size=(t_len, batch)).astype(np.float32)
+    rew = r.normal(size=(t_len, batch)).astype(np.float32)
+    disc = np.full((t_len, batch), 0.97, np.float32)
+    rhos = np.exp(r.normal(size=(t_len, batch))).astype(np.float32)
+    boot = r.normal(size=(batch,)).astype(np.float32)
+    vs_a, adv_a = vtrace_k.vtrace(v, rew, disc, rhos, boot, block_b=8)
+    vs_b, adv_b = vtrace_k.vtrace(v, rew, disc, rhos, boot, block_b=batch)
+    np.testing.assert_allclose(vs_a, vs_b, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(adv_a, adv_b, rtol=1e-6, atol=1e-6)

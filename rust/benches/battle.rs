@@ -1,0 +1,6 @@
+//! `cargo bench --bench battle` — Fig 7 Battle/Battle2 scores.
+fn main() {
+    let frames = std::env::var("SF_BENCH_FRAMES").unwrap_or_else(|_| "120000".into());
+    let args = vec!["--frames".to_string(), frames];
+    sample_factory::bench::battle::run_cli(&args).expect("fig7");
+}

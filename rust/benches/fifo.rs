@@ -1,0 +1,4 @@
+//! `cargo bench --bench fifo` — Appendix B.1 queue comparison.
+fn main() {
+    sample_factory::bench::fifo::run_cli(&[]).expect("fifo bench");
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench lag` — §3.4 policy-lag ablation (slot slack / envs).
+fn main() {
+    sample_factory::bench::lag::run_cli(&[]).expect("lag ablation");
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench multitask` — Fig 5 / Fig A.2 multitask run.
+fn main() {
+    let frames = std::env::var("SF_BENCH_FRAMES").unwrap_or_else(|_| "100000".into());
+    let args = vec!["--frames".to_string(), frames];
+    sample_factory::bench::multitask::run_cli(&args).expect("fig5");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench pbt` — Fig 8 population training + Table A.3.
+fn main() {
+    let frames = std::env::var("SF_BENCH_FRAMES").unwrap_or_else(|_| "60000".into());
+    let args = vec!["--frames".to_string(), frames.clone()];
+    sample_factory::bench::pbt::run_throughput_cli(&args).expect("tableA3");
+    sample_factory::bench::pbt::run_duel_cli(&args).expect("fig8");
+}

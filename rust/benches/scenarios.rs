@@ -1,0 +1,6 @@
+//! `cargo bench --bench scenarios` — Fig 6 standard-scenario curves.
+fn main() {
+    let frames = std::env::var("SF_BENCH_FRAMES").unwrap_or_else(|_| "80000".into());
+    let args = vec!["--frames".to_string(), frames];
+    sample_factory::bench::scenarios::run_cli(&args).expect("fig6");
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench throughput` — Fig 3 / Table A.2 / Table 1.
+//! Shares the harness with `repro bench throughput` / `repro bench table1`.
+//! Budget per cell is kept small so the whole sweep finishes on the 1-core
+//! container; pass frames via SF_BENCH_FRAMES to scale up.
+fn main() {
+    let frames = std::env::var("SF_BENCH_FRAMES").unwrap_or_else(|_| "40000".into());
+    let args = vec!["--frames".to_string(), frames];
+    sample_factory::bench::throughput::run_cli(&args).expect("fig3 sweep");
+    sample_factory::bench::throughput::run_table1_cli(&args).expect("table1");
+    sample_factory::bench::throughput::run_double_buffer_ablation(&args)
+        .expect("double-buffer ablation");
+}

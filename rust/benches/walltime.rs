@@ -1,0 +1,6 @@
+//! `cargo bench --bench walltime` — Fig 4 wall-time comparison.
+fn main() {
+    let frames = std::env::var("SF_BENCH_FRAMES").unwrap_or_else(|_| "100000".into());
+    let args = vec!["--frames".to_string(), frames];
+    sample_factory::bench::walltime::run_cli(&args).expect("fig4");
+}

@@ -1,0 +1,148 @@
+//! Helpers shared by the baseline trainers: batched inference from plain
+//! buffers, multi-discrete action sampling, train-step invocation.
+//! (The APPO coordinator has its own zero-copy versions of these working
+//! directly on the trajectory slab; baselines work from owned buffers,
+//! which is part of what is being measured.)
+
+use anyhow::Result;
+
+use crate::runtime::{
+    lit_f32, lit_i32, lit_u8, read_f32_into, to_f32_vec, LearnerState, ModelPrograms,
+    Tensors,
+};
+use crate::util::{log_softmax, sample_categorical, Rng};
+
+/// Output of one batched inference call.
+pub struct InferOut {
+    pub logits: Vec<f32>,
+    pub values: Vec<f32>,
+    pub h_new: Vec<f32>,
+}
+
+/// Run the policy program on `n` rows (padded to the AOT batch size).
+pub fn infer(
+    progs: &ModelPrograms,
+    params: &Tensors,
+    obs: &[u8],
+    h: &[f32],
+    out: &mut InferOut,
+) -> Result<()> {
+    let man = &progs.manifest;
+    let b = man.policy_batch;
+    debug_assert_eq!(obs.len(), b * man.obs_len());
+    debug_assert_eq!(h.len(), b * man.hidden);
+    let obs_lit = lit_u8(
+        &[b, man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]],
+        obs,
+    )?;
+    let h_lit = lit_f32(&[b, man.hidden], h)?;
+    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 2);
+    inputs.extend(params.iter());
+    inputs.push(&obs_lit);
+    inputs.push(&h_lit);
+    let outs = progs.policy.run(&inputs)?;
+    out.logits.resize(b * man.total_actions(), 0.0);
+    out.values.resize(b, 0.0);
+    out.h_new.resize(b * man.hidden, 0.0);
+    read_f32_into(&outs[0], &mut out.logits)?;
+    read_f32_into(&outs[1], &mut out.values)?;
+    read_f32_into(&outs[2], &mut out.h_new)?;
+    Ok(())
+}
+
+/// Sample one multi-discrete action row from concatenated logits.
+/// Returns the summed behaviour log-prob; writes head indices into `actions`.
+pub fn sample_row(
+    heads: &[usize],
+    logits_row: &[f32],
+    rng: &mut Rng,
+    scratch: &mut Vec<f32>,
+    actions: &mut [i32],
+) -> f32 {
+    let mut lp = 0.0f32;
+    let mut off = 0usize;
+    for (i, &n) in heads.iter().enumerate() {
+        let hl = &logits_row[off..off + n];
+        let a = sample_categorical(rng, hl);
+        scratch.resize(n, 0.0);
+        log_softmax(hl, &mut scratch[..n]);
+        lp += scratch[a];
+        actions[i] = a as i32;
+        off += n;
+    }
+    lp
+}
+
+/// Plain-buffer minibatch for the train step.
+pub struct HostBatch {
+    pub obs: Vec<u8>,      // B*T*obs_len
+    pub last_obs: Vec<u8>, // B*obs_len
+    pub h0: Vec<f32>,      // B*hidden
+    pub actions: Vec<i32>, // B*T*heads
+    pub blp: Vec<f32>,     // B*T
+    pub rewards: Vec<f32>, // B*T
+    pub dones: Vec<f32>,   // B*T
+}
+
+impl HostBatch {
+    pub fn new(progs: &ModelPrograms) -> Self {
+        let man = &progs.manifest;
+        let (b, t) = (man.train_batch, man.rollout);
+        HostBatch {
+            obs: vec![0; b * t * man.obs_len()],
+            last_obs: vec![0; b * man.obs_len()],
+            h0: vec![0.0; b * man.hidden],
+            actions: vec![0; b * t * man.n_heads()],
+            blp: vec![0.0; b * t],
+            rewards: vec![0.0; b * t],
+            dones: vec![0.0; b * t],
+        }
+    }
+}
+
+/// Execute one fused train step from a host batch; updates `state` in place
+/// and returns the metrics vector.
+pub fn train_once(
+    progs: &ModelPrograms,
+    state: &mut LearnerState,
+    hypers: &[f32],
+    batch: &HostBatch,
+) -> Result<Vec<f32>> {
+    let man = &progs.manifest;
+    let (b, t) = (man.train_batch, man.rollout);
+    let (hh, ww, cc) = (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
+    let n_params = man.n_params;
+    let lits = (
+        lit_u8(&[b, t, hh, ww, cc], &batch.obs)?,
+        lit_u8(&[b, hh, ww, cc], &batch.last_obs)?,
+        lit_f32(&[b, man.hidden], &batch.h0)?,
+        lit_i32(&[b, t, man.n_heads()], &batch.actions)?,
+        lit_f32(&[b, t], &batch.blp)?,
+        lit_f32(&[b, t], &batch.rewards)?,
+        lit_f32(&[b, t], &batch.dones)?,
+    );
+    let hypers_lit = lit_f32(&[hypers.len()], hypers)?;
+    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n_params + 9);
+    inputs.extend(state.params.iter());
+    inputs.extend(state.m.iter());
+    inputs.extend(state.v.iter());
+    inputs.push(&state.step[0]);
+    inputs.push(&hypers_lit);
+    inputs.push(&lits.0);
+    inputs.push(&lits.1);
+    inputs.push(&lits.2);
+    inputs.push(&lits.3);
+    inputs.push(&lits.4);
+    inputs.push(&lits.5);
+    inputs.push(&lits.6);
+    let mut outs = progs.train.run(&inputs)?;
+    let metrics_lit = outs.pop().unwrap();
+    let step_lit = outs.pop().unwrap();
+    let v_new = outs.split_off(2 * n_params);
+    let m_new = outs.split_off(n_params);
+    state.params = Tensors(outs);
+    state.m = Tensors(m_new);
+    state.v = Tensors(v_new);
+    state.step = Tensors(vec![step_lit]);
+    to_f32_vec(&metrics_lit)
+}

@@ -1,0 +1,17 @@
+//! Baseline sampler architectures the paper measures against (Fig 3,
+//! Table 1), rebuilt on the same substrates so the comparison is
+//! apples-to-apples (same envs, same model, same PJRT runtime):
+//!
+//! * [`sync_rl`] — synchronous A2C-style PPO (the rlpyt-like baseline):
+//!   sampling halts during inference and during backprop.
+//! * [`serialized`] — asynchronous like APPO, but every message crossing a
+//!   component boundary is **serialized and copied** (obs, hidden states,
+//!   actions, whole trajectories), the GA3C/IMPALA data path whose cost the
+//!   paper's §3.3 design eliminates.
+//! * [`pure_sim`] — the random-policy sampling-only upper bound (Table 1's
+//!   100% row).
+
+pub mod common;
+pub mod pure_sim;
+pub mod serialized;
+pub mod sync_rl;

@@ -1,0 +1,116 @@
+//! Pure-simulation upper bound (Table 1's "100%" row): a bare-bones sampler
+//! executing a random policy as fast as the simulators allow — an ideal RL
+//! algorithm with infinitely fast inference and learning.  Same threading
+//! and frameskip as the real samplers; only the policy/learner work is
+//! stripped away.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::coordinator::{CurvePoint, TrainResult};
+use crate::env::vec_env::VecEnv;
+use crate::env::AgentStep;
+use crate::util::Rng;
+
+pub fn run_pure_sim(cfg: &Config) -> Result<TrainResult> {
+    let mut root_rng = Rng::new(cfg.seed);
+    let frames = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let budget = cfg.total_env_frames;
+    let start = Instant::now();
+
+    let mut threads = Vec::new();
+    for w in 0..cfg.num_workers {
+        let scenario = if cfg.scenario == "multitask" {
+            format!("gridlab_task{}", w % crate::env::multitask::n_tasks())
+        } else {
+            cfg.scenario.clone()
+        };
+        let mut rng = root_rng.fork(w as u64 + 1);
+        let mut venv = VecEnv::build(
+            &cfg.spec,
+            &scenario,
+            cfg.envs_per_worker,
+            false,
+            &mut rng,
+        )
+        .map_err(|e| anyhow!(e))?;
+        let frames = frames.clone();
+        let stop = stop.clone();
+        let frameskip = cfg.frameskip;
+        let mut wrng = root_rng.fork(0x77 + w as u64);
+        threads.push(std::thread::spawn(move || {
+            let heads = venv.envs[0].spec().action_heads.clone();
+            let n_agents = venv.envs[0].spec().n_agents;
+            let obs_len = venv.envs[0].spec().obs.len();
+            let mut actions = vec![0i32; n_agents * heads.len()];
+            let mut out = vec![AgentStep::default(); n_agents];
+            let mut obs = vec![0u8; obs_len];
+            while !stop.load(Ordering::Relaxed) {
+                for e in 0..venv.envs.len() {
+                    for a in actions.iter_mut() {
+                        *a = 0;
+                    }
+                    for (i, chunk) in actions.chunks_mut(heads.len()).enumerate() {
+                        let _ = i;
+                        for (h, &n) in heads.iter().enumerate() {
+                            chunk[h] = wrng.below(n) as i32;
+                        }
+                    }
+                    for _ in 0..frameskip {
+                        venv.envs[e].step(&actions, &mut out);
+                    }
+                    // The sampler still renders (observations must be
+                    // produced — that is part of the sampling cost).
+                    for a in 0..n_agents {
+                        venv.envs[e].render(a, &mut obs);
+                    }
+                    frames.fetch_add((frameskip as u64) * n_agents as u64, Ordering::Relaxed);
+                }
+                if frames.load(Ordering::Relaxed) >= budget {
+                    break;
+                }
+            }
+        }));
+    }
+
+    // Wait for the budget.
+    let mut curve = Vec::new();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let f = frames.load(Ordering::Relaxed);
+        let el = start.elapsed().as_secs_f64();
+        if curve
+            .last()
+            .map(|p: &CurvePoint| el - p.wall_s > 1.0)
+            .unwrap_or(true)
+        {
+            curve.push(CurvePoint {
+                frames: f,
+                wall_s: el,
+                mean_return: 0.0,
+                fps: f as f64 / el.max(1e-9),
+            });
+        }
+        if f >= budget {
+            break;
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for t in threads {
+        let _ = t.join();
+    }
+    let f = frames.load(Ordering::Relaxed);
+    let wall_s = start.elapsed().as_secs_f64();
+    Ok(TrainResult {
+        frames: f,
+        wall_s,
+        fps: f as f64 / wall_s.max(1e-9),
+        curve,
+        ..Default::default()
+    })
+}

@@ -1,0 +1,506 @@
+//! Serialized-IPC asynchronous baseline ("IMPALA-like").
+//!
+//! Same asynchronous decomposition as APPO — rollout workers, a batched
+//! inference server, a learner — but every payload that crosses a component
+//! boundary is **serialized into a byte message and copied**: observations
+//! and hidden states on the request path, actions on the reply path, whole
+//! trajectories to the learner, and parameter vectors back to the inference
+//! server.  This is the GA3C / DeepMind-IMPALA / RLlib data path.  The
+//! paper's §3.3 argues (and Fig 3 / Table 1 show) that at >1e5 FPS this
+//! serialization tax dominates; this baseline measures exactly that tax on
+//! our substrate, with everything else held equal.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::coordinator::{CurvePoint, TrainResult};
+use crate::env::vec_env::VecEnv;
+use crate::env::AgentStep;
+use crate::ipc::{Fifo, RecvError};
+use crate::runtime::{lit_f32, LearnerState, ModelPrograms, Runtime, Tensors};
+use crate::stats::EpisodeTracker;
+use crate::util::Rng;
+
+use super::common::{infer, sample_row, train_once, HostBatch, InferOut};
+
+// ---- wire format helpers (little-endian, length-free: shapes are static) --
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], off: &mut usize) -> u32 {
+    let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    v
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(buf: &[u8], off: &mut usize, out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = f32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+    }
+}
+
+fn put_i32s(buf: &mut Vec<u8>, xs: &[i32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_i32s(buf: &[u8], off: &mut usize, out: &mut [i32]) {
+    for o in out.iter_mut() {
+        *o = i32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+    }
+}
+
+struct Shared {
+    req_q: Fifo<Vec<u8>>,
+    reply_qs: Vec<Fifo<Vec<u8>>>,
+    traj_q: Fifo<Vec<u8>>,
+    /// Serialized parameter snapshots (version, bytes).
+    param_msg: std::sync::RwLock<(u32, Arc<Vec<u8>>)>,
+    stop: AtomicBool,
+    frames: AtomicU64,
+    episodes: Fifo<(f64, u64)>,
+}
+
+/// Serialize a parameter set (flat f32 concatenation; shapes are static).
+fn serialize_params(params: &Tensors) -> Vec<u8> {
+    let mut out = Vec::new();
+    for p in params.iter() {
+        let v = p.to_vec::<f32>().expect("param read");
+        put_f32s(&mut out, &v);
+    }
+    out
+}
+
+/// Deserialize into literals following the manifest shapes.
+fn deserialize_params(progs: &ModelPrograms, bytes: &[u8]) -> Result<Tensors> {
+    let mut off = 0usize;
+    let mut lits = Vec::with_capacity(progs.manifest.n_params);
+    let mut tmp: Vec<f32> = Vec::new();
+    for p in &progs.manifest.params {
+        let n: usize = p.shape.iter().product::<usize>().max(1);
+        tmp.resize(n, 0.0);
+        get_f32s(bytes, &mut off, &mut tmp);
+        lits.push(lit_f32(&p.shape, &tmp)?);
+    }
+    Ok(Tensors(lits))
+}
+
+pub fn run_serialized(cfg: &Config) -> Result<TrainResult> {
+    let rt = Runtime::cpu()?;
+    let progs = Arc::new(ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)?);
+    let man = progs.manifest.clone();
+    cfg.validate_against_manifest(man.train_batch, man.rollout)
+        .map_err(|e| anyhow!(e))?;
+
+    let mut root_rng = Rng::new(cfg.seed);
+    let state = LearnerState::fresh(&progs, cfg.seed as u32)?;
+    let init_params = serialize_params(&state.params);
+
+    let shared = Arc::new(Shared {
+        req_q: Fifo::new(cfg.total_envs().max(64) * 2),
+        reply_qs: (0..cfg.num_workers).map(|_| Fifo::new(cfg.envs_per_worker * 4)).collect(),
+        traj_q: Fifo::new(4 * man.train_batch),
+        param_msg: std::sync::RwLock::new((1, Arc::new(init_params))),
+        stop: AtomicBool::new(false),
+        frames: AtomicU64::new(0),
+        episodes: Fifo::new(4096),
+    });
+
+    let obs_len = man.obs_len();
+    let hidden = man.hidden;
+    let heads = man.action_heads.clone();
+    let t_len = man.rollout;
+    let n_heads = heads.len();
+
+    let mut threads = Vec::new();
+
+    // ---- rollout workers --------------------------------------------------
+    for w in 0..cfg.num_workers {
+        let mut rng = root_rng.fork(w as u64 + 1);
+        let venv = VecEnv::build(&cfg.spec, &cfg.scenario, cfg.envs_per_worker, false, &mut rng)
+            .map_err(|e| anyhow!(e))?;
+        let sh = shared.clone();
+        let frameskip = cfg.frameskip;
+        let budget = cfg.total_env_frames;
+        threads.push(std::thread::spawn(move || {
+            serialized_worker(sh, venv, w, frameskip, budget, obs_len, hidden, n_heads, t_len)
+        }));
+    }
+
+    // ---- inference server --------------------------------------------------
+    {
+        let sh = shared.clone();
+        let progs = progs.clone();
+        let seed = root_rng.next_u64();
+        threads.push(std::thread::spawn(move || {
+            inference_server(sh, progs, seed);
+        }));
+    }
+
+    // ---- learner (this thread owns it) --------------------------------------
+    let sh = shared.clone();
+    let learner_progs = progs.clone();
+    let hypers = man.hypers_with(&cfg.hyper_overrides).map_err(|e| anyhow!(e))?;
+    let learner = std::thread::spawn(move || -> Result<(u64, Vec<f32>)> {
+        let mut state = state;
+        let mut steps = 0u64;
+        let mut batch = HostBatch::new(&learner_progs);
+        let man = &learner_progs.manifest;
+        let (b, t) = (man.train_batch, man.rollout);
+        let obs_len = man.obs_len();
+        let mut metrics = Vec::new();
+        let mut trajs: Vec<Vec<u8>> = Vec::with_capacity(b);
+        loop {
+            while trajs.len() < b {
+                let want = b - trajs.len();
+                match sh.traj_q.pop_many(&mut trajs, want, Duration::from_millis(100)) {
+                    Ok(_) => {}
+                    Err(RecvError::Closed) => return Ok((steps, metrics)),
+                    Err(RecvError::Timeout) => {
+                        if sh.stop.load(Ordering::Relaxed) {
+                            return Ok((steps, metrics));
+                        }
+                    }
+                }
+            }
+            // Deserialize the trajectory payloads into the batch.
+            for (i, msg) in trajs.iter().enumerate() {
+                let mut off = 0usize;
+                let src_obs = &msg[off..off + (t + 1) * obs_len];
+                batch.obs[i * t * obs_len..(i + 1) * t * obs_len]
+                    .copy_from_slice(&src_obs[..t * obs_len]);
+                batch.last_obs[i * obs_len..(i + 1) * obs_len]
+                    .copy_from_slice(&src_obs[t * obs_len..]);
+                off += (t + 1) * obs_len;
+                get_f32s(msg, &mut off, &mut batch.h0[i * man.hidden..(i + 1) * man.hidden]);
+                get_i32s(
+                    msg,
+                    &mut off,
+                    &mut batch.actions[i * t * man.n_heads()..(i + 1) * t * man.n_heads()],
+                );
+                get_f32s(msg, &mut off, &mut batch.blp[i * t..(i + 1) * t]);
+                get_f32s(msg, &mut off, &mut batch.rewards[i * t..(i + 1) * t]);
+                get_f32s(msg, &mut off, &mut batch.dones[i * t..(i + 1) * t]);
+            }
+            trajs.clear();
+            metrics = train_once(&learner_progs, &mut state, &hypers, &batch)?;
+            steps += 1;
+            // Publish parameters — serialized, as a distributed learner would.
+            let blob = Arc::new(serialize_params(&state.params));
+            let mut guard = sh.param_msg.write().unwrap();
+            let v = guard.0 + 1;
+            *guard = (v, blob);
+            drop(guard);
+            if sh.stop.load(Ordering::Relaxed) {
+                return Ok((steps, metrics));
+            }
+        }
+    });
+
+    // ---- monitor -------------------------------------------------------------
+    let start = Instant::now();
+    let mut tracker = EpisodeTracker::new(100);
+    let mut episodes = 0u64;
+    let mut curve: Vec<CurvePoint> = Vec::new();
+    loop {
+        let mut eps = Vec::new();
+        let _ = shared.episodes.pop_many(&mut eps, 256, Duration::from_millis(50));
+        for (ret, len) in eps {
+            tracker.push(ret, len);
+            episodes += 1;
+        }
+        let f = shared.frames.load(Ordering::Relaxed);
+        let el = start.elapsed().as_secs_f64();
+        if curve.last().map(|p| el - p.wall_s > 1.0).unwrap_or(true) {
+            curve.push(CurvePoint {
+                frames: f,
+                wall_s: el,
+                mean_return: tracker.mean_return(),
+                fps: f as f64 / el.max(1e-9),
+            });
+        }
+        if f >= cfg.total_env_frames {
+            break;
+        }
+    }
+    shared.stop.store(true, Ordering::Relaxed);
+    shared.req_q.close();
+    for q in &shared.reply_qs {
+        q.close();
+    }
+    shared.traj_q.close();
+    shared.episodes.close();
+    for t in threads {
+        let _ = t.join();
+    }
+    let (learner_steps, final_metrics) = learner.join().unwrap()?;
+
+    let f = shared.frames.load(Ordering::Relaxed);
+    let wall_s = start.elapsed().as_secs_f64();
+    Ok(TrainResult {
+        frames: f,
+        wall_s,
+        fps: f as f64 / wall_s.max(1e-9),
+        episodes,
+        learner_steps,
+        per_policy_return: vec![tracker.mean_return()],
+        mean_return: tracker.mean_return(),
+        curve,
+        final_metrics,
+        ..Default::default()
+    })
+}
+
+/// Rollout worker: serializes obs+hidden per request, deserializes actions,
+/// serializes whole trajectories for the learner.
+#[allow(clippy::too_many_arguments)]
+fn serialized_worker(
+    sh: Arc<Shared>,
+    mut venv: VecEnv,
+    worker_id: usize,
+    frameskip: u32,
+    budget: u64,
+    obs_len: usize,
+    hidden: usize,
+    n_heads: usize,
+    t_len: usize,
+) {
+    struct WStream {
+        env: usize,
+        agent: usize,
+        obs: Vec<u8>,
+        h0: Vec<f32>,
+        h: Vec<f32>,
+        actions: Vec<i32>,
+        blp: Vec<f32>,
+        rewards: Vec<f32>,
+        dones: Vec<f32>,
+        t: usize,
+    }
+    let n_agents = venv.n_agents_per_env();
+    let mut streams = Vec::new();
+    for e in 0..venvs_len(&venv) {
+        for a in 0..n_agents {
+            streams.push(WStream {
+                env: e,
+                agent: a,
+                obs: vec![0; (t_len + 1) * obs_len],
+                h0: vec![0.0; hidden],
+                h: vec![0.0; hidden],
+                actions: vec![0; t_len * n_heads],
+                blp: vec![0.0; t_len],
+                rewards: vec![0.0; t_len],
+                dones: vec![0.0; t_len],
+                t: 0,
+            });
+        }
+    }
+    let mut step_out = vec![AgentStep::default(); n_agents];
+    let mut env_actions = vec![0i32; n_agents * n_heads];
+
+    for s in &mut streams {
+        venv.envs[s.env].render(s.agent, &mut s.obs[..obs_len]);
+    }
+
+    loop {
+        if sh.stop.load(Ordering::Relaxed) || sh.frames.load(Ordering::Relaxed) >= budget {
+            return;
+        }
+        // Send one serialized request per stream (copying obs + h).
+        for (si, s) in streams.iter().enumerate() {
+            let mut msg = Vec::with_capacity(8 + obs_len + hidden * 4);
+            put_u32(&mut msg, si as u32);
+            put_u32(&mut msg, worker_id as u32);
+            msg.extend_from_slice(&s.obs[s.t * obs_len..(s.t + 1) * obs_len]);
+            put_f32s(&mut msg, &s.h);
+            if !sh.req_q.push(msg) {
+                return;
+            }
+        }
+        // Await all replies; deserialize actions.
+        let mut got = 0;
+        while got < streams.len() {
+            let msg = match sh.reply_qs[worker_id].pop(Duration::from_millis(100)) {
+                Ok(m) => m,
+                Err(RecvError::Closed) => return,
+                Err(RecvError::Timeout) => {
+                    if sh.stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    continue;
+                }
+            };
+            let mut off = 0usize;
+            let si = get_u32(&msg, &mut off) as usize;
+            let s = &mut streams[si];
+            let t = s.t;
+            get_i32s(&msg, &mut off, &mut s.actions[t * n_heads..(t + 1) * n_heads]);
+            let mut lp = [0f32; 1];
+            get_f32s(&msg, &mut off, &mut lp);
+            s.blp[t] = lp[0];
+            get_f32s(&msg, &mut off, &mut s.h);
+            got += 1;
+        }
+        // Step all envs.
+        for e in 0..venvs_len(&venv) {
+            for s in streams.iter().filter(|s| s.env == e) {
+                env_actions[s.agent * n_heads..(s.agent + 1) * n_heads]
+                    .copy_from_slice(&s.actions[s.t * n_heads..(s.t + 1) * n_heads]);
+            }
+            let mut acc = vec![AgentStep::default(); n_agents];
+            for _ in 0..frameskip {
+                venv.envs[e].step(&env_actions, &mut step_out);
+                let mut any_done = false;
+                for a in 0..n_agents {
+                    acc[a].reward += step_out[a].reward;
+                    acc[a].done |= step_out[a].done;
+                    any_done |= step_out[a].done;
+                }
+                sh.frames.fetch_add(n_agents as u64, Ordering::Relaxed);
+                if any_done {
+                    break;
+                }
+            }
+            for si in 0..streams.len() {
+                if streams[si].env != e {
+                    continue;
+                }
+                let a = streams[si].agent;
+                let t = streams[si].t;
+                {
+                    let s = &mut streams[si];
+                    s.rewards[t] = acc[a].reward;
+                    s.dones[t] = if acc[a].done { 1.0 } else { 0.0 };
+                    if acc[a].done {
+                        s.h.fill(0.0);
+                    }
+                }
+                if let Some((ret, len)) = venv.monitors[e].record(a, &acc[a]) {
+                    let _ = sh.episodes.try_push((ret, len * frameskip as u64));
+                }
+                let s = &mut streams[si];
+                s.t += 1;
+                let t_next = s.t;
+                {
+                    // Render the next obs (bootstrap row when t == T).
+                    let (obs_l, _) = (obs_len, ());
+                    let row = &mut s.obs[t_next * obs_l..(t_next + 1) * obs_l];
+                    venv.envs[e].render(a, row);
+                }
+                if s.t == t_len {
+                    // Serialize the complete trajectory (the copy the paper
+                    // eliminates) and roll over.
+                    let mut msg = Vec::with_capacity(
+                        (t_len + 1) * obs_len + 4 * (hidden + t_len * (n_heads + 3)),
+                    );
+                    msg.extend_from_slice(&s.obs);
+                    put_f32s(&mut msg, &s.h0);
+                    put_i32s(&mut msg, &s.actions);
+                    put_f32s(&mut msg, &s.blp);
+                    put_f32s(&mut msg, &s.rewards);
+                    put_f32s(&mut msg, &s.dones);
+                    if !sh.traj_q.push(msg) {
+                        return;
+                    }
+                    let last = s.obs[t_len * obs_len..].to_vec();
+                    s.obs[..obs_len].copy_from_slice(&last);
+                    s.h0.copy_from_slice(&s.h);
+                    s.t = 0;
+                }
+            }
+        }
+    }
+}
+
+fn venvs_len(v: &VecEnv) -> usize {
+    v.envs.len()
+}
+
+/// Batched inference server: deserializes requests, runs the policy program,
+/// serializes replies, deserializes fresh parameter blobs when published.
+fn inference_server(sh: Arc<Shared>, progs: Arc<ModelPrograms>, seed: u64) {
+    let man = &progs.manifest;
+    let b = man.policy_batch;
+    let obs_len = man.obs_len();
+    let hidden = man.hidden;
+    let heads = man.action_heads.clone();
+    let mut rng = Rng::new(seed);
+
+    let mut version = 0u32;
+    let mut params: Option<Tensors> = None;
+    let mut reqs: Vec<Vec<u8>> = Vec::with_capacity(b);
+    let mut obs_buf = vec![0u8; b * obs_len];
+    let mut h_buf = vec![0f32; b * hidden];
+    let mut out = InferOut { logits: Vec::new(), values: Vec::new(), h_new: Vec::new() };
+    let mut scratch = Vec::new();
+    let mut actions = vec![0i32; heads.len()];
+
+    loop {
+        // Parameter refresh: deserialize the published blob if newer.
+        {
+            let guard = sh.param_msg.read().unwrap();
+            if guard.0 > version {
+                let (v, blob) = (guard.0, guard.1.clone());
+                drop(guard);
+                params = Some(deserialize_params(&progs, &blob).expect("param blob"));
+                version = v;
+            }
+        }
+        let Some(p) = &params else {
+            std::thread::yield_now();
+            continue;
+        };
+
+        reqs.clear();
+        match sh.req_q.pop_many(&mut reqs, b, Duration::from_millis(100)) {
+            Ok(_) => {}
+            Err(RecvError::Closed) => return,
+            Err(RecvError::Timeout) => {
+                if sh.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+        }
+        let n = reqs.len();
+        let mut meta = Vec::with_capacity(n);
+        for (i, msg) in reqs.iter().enumerate() {
+            let mut off = 0usize;
+            let stream = get_u32(msg, &mut off);
+            let worker = get_u32(msg, &mut off);
+            obs_buf[i * obs_len..(i + 1) * obs_len]
+                .copy_from_slice(&msg[off..off + obs_len]);
+            off += obs_len;
+            get_f32s(msg, &mut off, &mut h_buf[i * hidden..(i + 1) * hidden]);
+            meta.push((stream, worker));
+        }
+        infer(&progs, p, &obs_buf, &h_buf, &mut out).expect("inference");
+        let total_actions = man.total_actions();
+        for (i, &(stream, worker)) in meta.iter().enumerate() {
+            let row = &out.logits[i * total_actions..(i + 1) * total_actions];
+            let lp = sample_row(&heads, row, &mut rng, &mut scratch, &mut actions);
+            let mut msg = Vec::with_capacity(4 + 4 * (heads.len() + 2 + hidden));
+            put_u32(&mut msg, stream);
+            put_i32s(&mut msg, &actions);
+            put_f32s(&mut msg, &[lp]);
+            put_f32s(&mut msg, &[out.values[i]]);
+            put_f32s(&mut msg, &out.h_new[i * hidden..(i + 1) * hidden]);
+            let _ = sh.reply_qs[worker as usize].push(msg);
+        }
+    }
+}

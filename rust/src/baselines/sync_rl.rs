@@ -1,0 +1,237 @@
+//! Synchronous PPO baseline (A2C-style stepping, "rlpyt-like").
+//!
+//! The standard policy-gradient implementation the paper's §2 describes:
+//! one loop interleaves (a) batched inference for all envs, (b) stepping
+//! all envs, and (c) the SGD update — each phase *waits* for the previous
+//! one, so the CPU idles during inference/backprop and the learner idles
+//! during sampling.  This is the architecture whose utilisation ceiling
+//! Fig 3 / Table 1 quantify against APPO.
+//!
+//! Note the rlpyt property the paper calls out: with N envs the effective
+//! batch per iteration grows with N (we run ceil(streams/train_batch) SGD
+//! steps per sampling iteration), so sample efficiency shifts with the env
+//! count — unlike APPO's fixed batch.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::coordinator::{CurvePoint, TrainResult};
+use crate::env::{make, AgentStep, EpisodeMonitor};
+use crate::runtime::{LearnerState, ModelPrograms, Runtime};
+use crate::stats::EpisodeTracker;
+use crate::util::Rng;
+
+use super::common::{infer, sample_row, train_once, HostBatch, InferOut};
+
+/// One synchronous sample stream's trajectory under construction.
+struct SyncStream {
+    env: usize,
+    agent: usize,
+    obs: Vec<u8>,     // (T+1) rows
+    h0: Vec<f32>,
+    h: Vec<f32>,
+    actions: Vec<i32>,
+    blp: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+}
+
+pub fn run_sync(cfg: &Config) -> Result<TrainResult> {
+    let rt = Runtime::cpu()?;
+    let progs = ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)?;
+    let man = progs.manifest.clone();
+    cfg.validate_against_manifest(man.train_batch, man.rollout)
+        .map_err(|e| anyhow!(e))?;
+
+    let mut rng = Rng::new(cfg.seed);
+    let n_envs = cfg.total_envs();
+    let mut envs = Vec::with_capacity(n_envs);
+    let mut monitors = Vec::with_capacity(n_envs);
+    for _ in 0..n_envs {
+        let e = make(&cfg.spec, &cfg.scenario, &mut rng).map_err(|e| anyhow!(e))?;
+        monitors.push(EpisodeMonitor::new(e.spec().n_agents));
+        envs.push(e);
+    }
+    let n_agents = envs[0].spec().n_agents;
+    let heads = man.action_heads.clone();
+    let obs_len = man.obs_len();
+    let (t_len, hidden) = (man.rollout, man.hidden);
+
+    let mut streams: Vec<SyncStream> = Vec::new();
+    for e in 0..n_envs {
+        for a in 0..n_agents {
+            streams.push(SyncStream {
+                env: e,
+                agent: a,
+                obs: vec![0; (t_len + 1) * obs_len],
+                h0: vec![0.0; hidden],
+                h: vec![0.0; hidden],
+                actions: vec![0; t_len * heads.len()],
+                blp: vec![0.0; t_len],
+                rewards: vec![0.0; t_len],
+                dones: vec![0.0; t_len],
+            });
+        }
+    }
+    let n_streams = streams.len();
+
+    let mut state = LearnerState::fresh(&progs, cfg.seed as u32)?;
+    let hypers = man
+        .hypers_with(&cfg.hyper_overrides)
+        .map_err(|e| anyhow!(e))?;
+
+    let b_inf = man.policy_batch;
+    let mut infer_obs = vec![0u8; b_inf * obs_len];
+    let mut infer_h = vec![0f32; b_inf * hidden];
+    let mut infer_out = InferOut { logits: Vec::new(), values: Vec::new(), h_new: Vec::new() };
+    let mut scratch = Vec::new();
+    let mut batch = HostBatch::new(&progs);
+    let mut tracker = EpisodeTracker::new(100);
+
+    let start = Instant::now();
+    let mut frames = 0u64;
+    let mut episodes = 0u64;
+    let mut learner_steps = 0u64;
+    let mut curve: Vec<CurvePoint> = Vec::new();
+    let mut final_metrics = Vec::new();
+    let mut step_out = vec![AgentStep::default(); n_agents];
+    let mut env_actions = vec![0i32; n_agents * heads.len()];
+
+    // Initial observations.
+    for s in &mut streams {
+        envs[s.env].render(s.agent, &mut s.obs[..obs_len]);
+    }
+
+    'outer: loop {
+        // ---- (a)+(b): collect T steps for ALL streams, synchronously ----
+        for t in 0..t_len {
+            // Batched inference in chunks of the AOT batch size; sampling
+            // halts while this runs (the A2C bottleneck).
+            let mut c0 = 0;
+            while c0 < n_streams {
+                let c1 = (c0 + b_inf).min(n_streams);
+                for (i, s) in streams[c0..c1].iter().enumerate() {
+                    infer_obs[i * obs_len..(i + 1) * obs_len]
+                        .copy_from_slice(&s.obs[t * obs_len..(t + 1) * obs_len]);
+                    infer_h[i * hidden..(i + 1) * hidden].copy_from_slice(&s.h);
+                }
+                infer(&progs, &state.params, &infer_obs, &infer_h, &mut infer_out)?;
+                let total_actions = man.total_actions();
+                for (i, s) in streams[c0..c1].iter_mut().enumerate() {
+                    let row = &infer_out.logits[i * total_actions..(i + 1) * total_actions];
+                    let lp = sample_row(
+                        &heads,
+                        row,
+                        &mut rng,
+                        &mut scratch,
+                        &mut s.actions[t * heads.len()..(t + 1) * heads.len()],
+                    );
+                    s.blp[t] = lp;
+                    s.h.copy_from_slice(&infer_out.h_new[i * hidden..(i + 1) * hidden]);
+                }
+                c0 = c1;
+            }
+
+            // Step every env (all agents of an env at once).
+            for e in 0..n_envs {
+                for s in streams.iter().filter(|s| s.env == e) {
+                    env_actions[s.agent * heads.len()..(s.agent + 1) * heads.len()]
+                        .copy_from_slice(&s.actions[t * heads.len()..(t + 1) * heads.len()]);
+                }
+                let mut acc = vec![AgentStep::default(); n_agents];
+                for _ in 0..cfg.frameskip {
+                    envs[e].step(&env_actions, &mut step_out);
+                    let mut any_done = false;
+                    for a in 0..n_agents {
+                        acc[a].reward += step_out[a].reward;
+                        acc[a].done |= step_out[a].done;
+                        any_done |= step_out[a].done;
+                    }
+                    frames += n_agents as u64;
+                    if any_done {
+                        break;
+                    }
+                }
+                for s in streams.iter_mut().filter(|s| s.env == e) {
+                    let a = s.agent;
+                    s.rewards[t] = acc[a].reward;
+                    s.dones[t] = if acc[a].done { 1.0 } else { 0.0 };
+                    if acc[a].done {
+                        s.h.fill(0.0);
+                    }
+                    if let Some((ret, len)) = monitors[e].record(a, &acc[a]) {
+                        tracker.push(ret, len * cfg.frameskip as u64);
+                        episodes += 1;
+                    }
+                    envs[e].render(a, &mut s.obs[(t + 1) * obs_len..(t + 2) * obs_len]);
+                }
+            }
+        }
+
+        // ---- (c): SGD on all collected trajectories, in manifest-sized
+        // chunks (sampling halts during backprop) ----
+        let b = man.train_batch;
+        let mut idx = 0;
+        while idx < n_streams {
+            let chunk = (idx..(idx + b).min(n_streams)).collect::<Vec<_>>();
+            for (row, &si) in chunk.iter().enumerate() {
+                let s = &streams[si];
+                batch.obs[row * t_len * obs_len..(row + 1) * t_len * obs_len]
+                    .copy_from_slice(&s.obs[..t_len * obs_len]);
+                batch.last_obs[row * obs_len..(row + 1) * obs_len]
+                    .copy_from_slice(&s.obs[t_len * obs_len..]);
+                batch.h0[row * hidden..(row + 1) * hidden].copy_from_slice(&s.h0);
+                batch.actions
+                    [row * t_len * heads.len()..(row + 1) * t_len * heads.len()]
+                    .copy_from_slice(&s.actions);
+                batch.blp[row * t_len..(row + 1) * t_len].copy_from_slice(&s.blp);
+                batch.rewards[row * t_len..(row + 1) * t_len].copy_from_slice(&s.rewards);
+                batch.dones[row * t_len..(row + 1) * t_len].copy_from_slice(&s.dones);
+            }
+            // Ragged tail: rows beyond the chunk reuse stale data (the
+            // gradient contribution is tiny; rlpyt pads similarly).
+            final_metrics = train_once(&progs, &mut state, &hypers, &batch)?;
+            learner_steps += 1;
+            idx += b;
+        }
+
+        // Roll trajectories: next rollout starts from the last obs/hidden.
+        for s in &mut streams {
+            let last = s.obs[t_len * obs_len..].to_vec();
+            s.obs[..obs_len].copy_from_slice(&last);
+            s.h0.copy_from_slice(&s.h);
+        }
+
+        let el = start.elapsed().as_secs_f64();
+        if curve.last().map(|p| el - p.wall_s > 1.0).unwrap_or(true) {
+            curve.push(CurvePoint {
+                frames,
+                wall_s: el,
+                mean_return: tracker.mean_return(),
+                fps: frames as f64 / el.max(1e-9),
+            });
+        }
+        if cfg.log_interval_s > 0.0 {
+            // lightweight progress
+        }
+        if frames >= cfg.total_env_frames {
+            break 'outer;
+        }
+    }
+
+    let wall_s = start.elapsed().as_secs_f64();
+    Ok(TrainResult {
+        frames,
+        wall_s,
+        fps: frames as f64 / wall_s.max(1e-9),
+        episodes,
+        learner_steps,
+        per_policy_return: vec![tracker.mean_return()],
+        mean_return: tracker.mean_return(),
+        curve,
+        final_metrics,
+        ..Default::default()
+    })
+}

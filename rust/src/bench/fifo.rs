@@ -1,0 +1,121 @@
+//! Appendix B.1: the custom FIFO queue vs the standard library channel in
+//! the many-producers / one-consumer configuration that dominates the
+//! sampler (every rollout worker pushes action requests to few policy
+//! workers).  The paper's C++ faster-fifo reports 20-30x over Python's
+//! multiprocessing.Queue; here the baseline is `std::sync::mpsc` and the
+//! win comes from batched consumption under one lock.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::ipc::{Fifo, RecvError};
+
+use super::{parse_bench_args, print_table, write_csv};
+
+const MSGS_PER_PRODUCER: usize = 100_000;
+
+fn bench_fifo(producers: usize, batched: bool) -> f64 {
+    let q: Fifo<u64> = Fifo::new(4096);
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let q = q.clone();
+        handles.push(thread::spawn(move || {
+            for i in 0..MSGS_PER_PRODUCER {
+                while q.try_push((p * MSGS_PER_PRODUCER + i) as u64).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+        }));
+    }
+    let total = producers * MSGS_PER_PRODUCER;
+    let consumer = thread::spawn(move || {
+        let mut got = 0usize;
+        let mut buf = Vec::with_capacity(1024);
+        while got < total {
+            if batched {
+                buf.clear();
+                match q.pop_many(&mut buf, 1024, Duration::from_millis(100)) {
+                    Ok(n) => got += n,
+                    Err(RecvError::Closed) => break,
+                    Err(RecvError::Timeout) => {}
+                }
+            } else {
+                match q.pop(Duration::from_millis(100)) {
+                    Ok(_) => got += 1,
+                    Err(RecvError::Closed) => break,
+                    Err(RecvError::Timeout) => {}
+                }
+            }
+        }
+    });
+    for h in handles {
+        h.join().unwrap();
+    }
+    consumer.join().unwrap();
+    total as f64 / start.elapsed().as_secs_f64()
+}
+
+fn bench_mpsc(producers: usize) -> f64 {
+    let (tx, rx) = mpsc::sync_channel::<u64>(4096);
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || {
+            for i in 0..MSGS_PER_PRODUCER {
+                tx.send((p * MSGS_PER_PRODUCER + i) as u64).unwrap();
+            }
+        }));
+    }
+    drop(tx);
+    let total = producers * MSGS_PER_PRODUCER;
+    let consumer = thread::spawn(move || {
+        let mut got = 0usize;
+        while got < total {
+            if rx.recv().is_err() {
+                break;
+            }
+            got += 1;
+        }
+    });
+    for h in handles {
+        h.join().unwrap();
+    }
+    consumer.join().unwrap();
+    total as f64 / start.elapsed().as_secs_f64()
+}
+
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let (_, _extra) = parse_bench_args(crate::config::Config::default(), args)?;
+    println!("== Appendix B.1: FIFO queue throughput (msgs/s), many producers -> 1 consumer ==");
+    let mut rows = Vec::new();
+    for producers in [1usize, 2, 4, 8] {
+        let f_batched = bench_fifo(producers, true);
+        let f_single = bench_fifo(producers, false);
+        let m = bench_mpsc(producers);
+        eprintln!(
+            "  producers={producers}: fifo(batched)={f_batched:.0} fifo={f_single:.0} mpsc={m:.0}"
+        );
+        rows.push(vec![
+            format!("{producers}"),
+            format!("{f_batched:.0}"),
+            format!("{f_single:.0}"),
+            format!("{m:.0}"),
+            format!("{:.1}x", f_batched / m),
+        ]);
+    }
+    let header = [
+        "producers",
+        "fifo_batched_msgs/s",
+        "fifo_msgs/s",
+        "std_mpsc_msgs/s",
+        "batched_vs_mpsc",
+    ];
+    print_table(&header, &rows);
+    write_csv("bench_results/appB1_fifo.csv", &header, &rows)?;
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Bench harnesses — one module per paper exhibit (DESIGN.md's
+//! per-experiment index).  Each prints the paper-style rows to stdout and
+//! writes CSV under `bench_results/`.  The `cargo bench` runners in
+//! `rust/benches/` and the `repro bench` CLI both call these, so there is
+//! exactly one code path per exhibit.
+//!
+//! Scale knobs: every harness accepts `--frames N` (per measured cell) and
+//! the usual config overrides; defaults are sized for the 1-core container
+//! (seconds per cell).  EXPERIMENTS.md records full-scale runs.
+
+pub mod battle;
+pub mod fifo;
+pub mod lag;
+pub mod multitask;
+pub mod pbt;
+pub mod scenarios;
+pub mod throughput;
+pub mod walltime;
+
+use anyhow::Result;
+
+use crate::config::Config;
+
+/// Parse `--key value` overrides into a base config (plus bench-local keys
+/// returned separately: any key the Config rejects is kept as a bench arg).
+pub fn parse_bench_args(base: Config, args: &[String]) -> Result<(Config, BenchArgs)> {
+    let mut cfg = base;
+    let mut extra = BenchArgs::default();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i].trim_start_matches("--");
+        let val = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("missing value for --{key}"))?;
+        match key {
+            "frames" => extra.frames = Some(val.parse()?),
+            "full" => extra.full = val.parse()?,
+            "out" => extra.out = Some(val.clone()),
+            _ => cfg
+                .set(key, val)
+                .map_err(|e| anyhow::anyhow!(e))?,
+        }
+        i += 2;
+    }
+    Ok((cfg, extra))
+}
+
+#[derive(Default, Clone)]
+pub struct BenchArgs {
+    /// Frames per measured cell (overrides the harness default).
+    pub frames: Option<u64>,
+    /// Full-scale mode (paper-sized budgets; hours on this container).
+    pub full: bool,
+    /// CSV output path override.
+    pub out: Option<String>,
+}
+
+/// Write a results CSV row-set and echo the path.
+pub fn write_csv(path: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut w = crate::stats::CsvWriter::create(path, header)?;
+    for r in rows {
+        w.row(r)?;
+    }
+    println!("  -> {path}");
+    Ok(())
+}
+
+/// Pretty fixed-width table printer.
+pub fn print_table(header: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}

@@ -1,0 +1,62 @@
+//! Fig 6: training curves on the standard (VizDoom-distribution) scenarios.
+//! Trains APPO on each and dumps the (frames, return) curve + final score.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::Trainer;
+
+use super::{parse_bench_args, print_table, write_csv};
+
+pub const SCENARIOS: [&str; 5] = [
+    "basic",
+    "defend_center",
+    "defend_line",
+    "health_gathering",
+    "my_way_home",
+];
+
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let (base, extra) = parse_bench_args(Config::default(), args)?;
+    let frames = extra.frames.unwrap_or(if extra.full { 2_000_000 } else { 200_000 });
+    println!("== Fig 6: standard scenarios, APPO, {frames} frames each ==");
+
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for scenario in SCENARIOS {
+        let mut cfg = base.clone();
+        cfg.spec = "doomish".into();
+        cfg.scenario = scenario.into();
+        cfg.total_env_frames = frames;
+        cfg.log_interval_s = 0.0;
+        let res = Trainer::run(&cfg)?;
+        eprintln!(
+            "  [{scenario}] return {:.2} after {} episodes ({:.0} fps)",
+            res.mean_return, res.episodes, res.fps
+        );
+        rows.push(vec![
+            scenario.to_string(),
+            format!("{:.2}", res.mean_return),
+            format!("{}", res.episodes),
+            format!("{:.0}", res.fps),
+            format!("{:.2}", res.lag_mean),
+        ]);
+        for p in &res.curve {
+            curves.push(vec![
+                scenario.to_string(),
+                format!("{}", p.frames),
+                format!("{:.2}", p.wall_s),
+                format!("{:.3}", p.mean_return),
+            ]);
+        }
+    }
+    let header = ["scenario", "final_return", "episodes", "fps", "lag"];
+    print_table(&header, &rows);
+    write_csv("bench_results/fig6_scenarios.csv", &header, &rows)?;
+    write_csv(
+        "bench_results/fig6_curves.csv",
+        &["scenario", "frames", "wall_s", "return"],
+        &curves,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Fig 3 / Table A.2 / Table 1: sampler throughput.
+//!
+//! Sweeps {method} x {env suite} x {total envs} and reports environment
+//! frames per second, then (table1) the peak per method as a percentage of
+//! the pure-simulation upper bound.  The paper's "System #1 / #2" hardware
+//! axis collapses to this container (1 core); worker counts are scaled
+//! accordingly and recorded in the output.
+
+use anyhow::Result;
+
+use crate::config::{Config, Method};
+use crate::coordinator::Trainer;
+
+use super::{parse_bench_args, print_table, write_csv, BenchArgs};
+
+/// Envs-sampled sweep, scaled from the paper's 20..3000 to this testbed.
+const ENV_SWEEP: [usize; 4] = [4, 8, 16, 32];
+const METHODS: [Method; 4] =
+    [Method::Appo, Method::Sync, Method::Serialized, Method::PureSim];
+
+/// The three benchmark suites (paper: Atari / VizDoom / DMLab).
+pub const SUITES: [(&str, &str, &str); 3] = [
+    ("arcade", "arcade", "breakout"),
+    ("doomish", "doomish", "battle"),
+    ("gridlab", "gridlab", "collect_good_objects"),
+];
+
+fn suite_base(spec: &str, scenario: &str, cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.spec = spec.into();
+    c.scenario = scenario.into();
+    c.log_interval_s = 0.0;
+    c
+}
+
+fn measure(cfg: &Config) -> Result<f64> {
+    let res = Trainer::run(cfg)?;
+    Ok(res.fps)
+}
+
+/// Fig 3 / Table A.2: FPS vs number of envs, per method, per suite.
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let (base, extra) = parse_bench_args(Config::default(), args)?;
+    let frames = extra.frames.unwrap_or(if extra.full { 400_000 } else { 60_000 });
+    println!("== Fig 3 / Table A.2: training throughput (env frames/s) ==");
+    println!("   ({} frames per cell, 1-core container)", frames);
+
+    let mut rows = Vec::new();
+    for (suite, spec, scenario) in SUITES {
+        for method in METHODS {
+            let mut cells = vec![suite.to_string(), method.name().to_string()];
+            for &n_envs in &ENV_SWEEP {
+                let mut cfg = suite_base(spec, scenario, &base);
+                cfg.method = method;
+                cfg.total_env_frames = frames;
+                cfg.num_workers = 2;
+                cfg.envs_per_worker = (n_envs / cfg.num_workers).max(1);
+                let fps = measure(&cfg)?;
+                cells.push(format!("{fps:.0}"));
+                eprintln!(
+                    "  [{suite}/{}] envs={n_envs} fps={fps:.0}",
+                    method.name()
+                );
+            }
+            rows.push(cells);
+        }
+    }
+    let header: Vec<String> = ["suite", "method"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain(ENV_SWEEP.iter().map(|n| format!("envs={n}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(&header_refs, &rows);
+    write_csv(
+        &format!("bench_results/fig3_throughput.csv"),
+        &header_refs,
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Table 1: peak throughput + % of the pure-simulation bound.
+pub fn run_table1_cli(args: &[String]) -> Result<()> {
+    let (base, extra) = parse_bench_args(Config::default(), args)?;
+    let frames = extra.frames.unwrap_or(if extra.full { 400_000 } else { 80_000 });
+    println!("== Table 1: peak throughput (frames/s, % of pure simulation) ==");
+
+    // Peak config on this box: 2 workers, 16 envs each.
+    let mut rows = Vec::new();
+    let mut suite_bounds = Vec::new();
+    for (suite, spec, scenario) in SUITES {
+        let mut cfg = suite_base(spec, scenario, &base);
+        cfg.method = Method::PureSim;
+        cfg.total_env_frames = frames;
+        cfg.num_workers = 2;
+        cfg.envs_per_worker = 16;
+        let bound = measure(&cfg)?;
+        eprintln!("  [{suite}] pure_sim bound {bound:.0} fps");
+        suite_bounds.push((suite, spec, scenario, bound));
+    }
+    for method in [Method::Appo, Method::Sync, Method::Serialized] {
+        let mut cells = vec![method.name().to_string()];
+        for &(suite, spec, scenario, bound) in &suite_bounds {
+            let mut cfg = suite_base(spec, scenario, &base);
+            cfg.method = method;
+            cfg.total_env_frames = frames;
+            cfg.num_workers = 2;
+            cfg.envs_per_worker = 16;
+            let fps = measure(&cfg)?;
+            let _ = suite;
+            cells.push(format!("{fps:.0} ({:.1}%)", 100.0 * fps / bound));
+            eprintln!("  [{suite}/{}] {fps:.0} fps", method.name());
+        }
+        rows.push(cells);
+    }
+    let mut bound_cells = vec!["pure_sim".to_string()];
+    for &(_, _, _, bound) in &suite_bounds {
+        bound_cells.push(format!("{bound:.0} (100%)"));
+    }
+    rows.push(bound_cells);
+
+    let header = ["method", "arcade FPS", "doomish FPS", "gridlab FPS"];
+    print_table(&header, &rows);
+    write_csv("bench_results/table1_peak.csv", &header, &rows)?;
+    println!(
+        "\npaper shape check: appo > sync > serialized, and every method is\n\
+         closest to the bound on gridlab (simulator-bound, like DMLab)."
+    );
+    Ok(())
+}
+
+/// Double-buffering ablation (§3.2 / Fig 2): APPO with and without.
+pub fn run_double_buffer_ablation(args: &[String]) -> Result<(f64, f64)> {
+    let (base, extra) = parse_bench_args(Config::default(), args)?;
+    let frames = extra.frames.unwrap_or(60_000);
+    let mut cfg = suite_base("doomish", "battle", &base);
+    cfg.method = Method::Appo;
+    cfg.total_env_frames = frames;
+    let mut on = cfg.clone();
+    on.double_buffer = true;
+    let mut off = cfg;
+    off.double_buffer = false;
+    let fps_on = measure(&on)?;
+    let fps_off = measure(&off)?;
+    println!("double-buffered sampling: on={fps_on:.0} fps  off={fps_off:.0} fps");
+    Ok((fps_on, fps_off))
+}
+
+#[allow(unused)]
+fn unused(_: BenchArgs) {}

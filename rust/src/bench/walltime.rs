@@ -1,0 +1,65 @@
+//! Fig 4: direct wall-time comparison — score vs wall-clock for APPO vs the
+//! synchronous baseline on two standard scenarios, same sample budget.
+//! The paper shows ~4x wall-time advantage for the asynchronous
+//! architecture at equal sample efficiency.
+
+use anyhow::Result;
+
+use crate::config::{Config, Method};
+use crate::coordinator::Trainer;
+
+use super::{parse_bench_args, print_table, write_csv};
+
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let (base, extra) = parse_bench_args(Config::default(), args)?;
+    let frames = extra.frames.unwrap_or(if extra.full { 2_000_000 } else { 150_000 });
+    println!("== Fig 4: wall-time to consume {frames} frames (APPO vs sync) ==");
+
+    let mut rows = Vec::new();
+    let mut curves: Vec<Vec<String>> = Vec::new();
+    for scenario in ["basic", "defend_center"] {
+        for method in [Method::Appo, Method::Sync] {
+            let mut cfg = base.clone();
+            cfg.spec = "doomish".into();
+            cfg.scenario = scenario.into();
+            cfg.method = method;
+            cfg.total_env_frames = frames;
+            cfg.log_interval_s = 0.0;
+            let res = Trainer::run(&cfg)?;
+            eprintln!(
+                "  [{scenario}/{}] wall {:.1}s fps {:.0} return {:.2}",
+                method.name(),
+                res.wall_s,
+                res.fps,
+                res.mean_return
+            );
+            rows.push(vec![
+                scenario.to_string(),
+                method.name().to_string(),
+                format!("{:.1}", res.wall_s),
+                format!("{:.0}", res.fps),
+                format!("{:.2}", res.mean_return),
+                format!("{}", res.episodes),
+            ]);
+            for p in &res.curve {
+                curves.push(vec![
+                    scenario.to_string(),
+                    method.name().to_string(),
+                    format!("{:.2}", p.wall_s),
+                    format!("{}", p.frames),
+                    format!("{:.3}", p.mean_return),
+                ]);
+            }
+        }
+    }
+    let header = ["scenario", "method", "wall_s", "fps", "return", "episodes"];
+    print_table(&header, &rows);
+    write_csv("bench_results/fig4_walltime.csv", &header, &rows)?;
+    write_csv(
+        "bench_results/fig4_curves.csv",
+        &["scenario", "method", "wall_s", "frames", "return"],
+        &curves,
+    )?;
+    println!("\npaper shape check: appo wall_s << sync wall_s at the same frame budget.");
+    Ok(())
+}

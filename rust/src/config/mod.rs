@@ -1,0 +1,393 @@
+//! Configuration system: typed config tree, TOML-lite config files, CLI
+//! overrides, and per-experiment presets.
+//!
+//! Every runnable (the `repro` binary, examples, benches) builds a
+//! [`Config`], optionally merges a config file (`--config file.toml`) and
+//! applies `--key value` command-line overrides.  Unknown keys are hard
+//! errors — silent misconfiguration is how throughput experiments lie.
+
+mod parse;
+
+pub use parse::{parse_kv_file, ParseError};
+
+use std::collections::BTreeMap;
+
+/// Sampler architecture to run — the paper's system plus the baselines it
+/// is measured against (Fig 3 / Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Sample Factory APPO: fully asynchronous, double-buffered sampling.
+    Appo,
+    /// Synchronous PPO (A2C-style stepping, the rlpyt-like baseline).
+    Sync,
+    /// IMPALA-like: asynchronous but serializes every trajectory payload
+    /// across the worker/learner boundary (the serialization tax).
+    Serialized,
+    /// Random-action sampler: the pure-simulation throughput upper bound.
+    PureSim,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "appo" => Some(Method::Appo),
+            "sync" => Some(Method::Sync),
+            "serialized" => Some(Method::Serialized),
+            "pure_sim" | "puresim" => Some(Method::PureSim),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Appo => "appo",
+            Method::Sync => "sync",
+            Method::Serialized => "serialized",
+            Method::PureSim => "pure_sim",
+        }
+    }
+}
+
+/// Population-based training settings (paper §3.5, §A.3.1).
+#[derive(Clone, Debug)]
+pub struct PbtConfig {
+    /// Population size (1 = PBT disabled).
+    pub population: usize,
+    /// Env frames between PBT exploit/explore steps (paper: 5e6).
+    pub interval_frames: u64,
+    /// Fraction of the population eligible for mutation (paper: bottom 70%).
+    pub mutate_fraction: f32,
+    /// Per-hyperparameter mutation probability (paper: 15%).
+    pub mutation_rate: f32,
+    /// Multiplicative perturbation factor (paper: 1.2).
+    pub perturb_factor: f32,
+    /// Replace weights of the bottom fraction with a sample from the top
+    /// fraction (paper: bottom 30% <- top 30%).
+    pub replace_fraction: f32,
+    /// Minimum relative win-rate/score gap before weights are exchanged
+    /// (paper Duel experiment: 0.35).
+    pub replace_threshold: f32,
+}
+
+impl Default for PbtConfig {
+    fn default() -> Self {
+        PbtConfig {
+            population: 1,
+            interval_frames: 200_000,
+            mutate_fraction: 0.7,
+            mutation_rate: 0.15,
+            perturb_factor: 1.2,
+            replace_fraction: 0.3,
+            replace_threshold: 0.0,
+        }
+    }
+}
+
+/// Top-level system configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Model spec / artifacts subdirectory: tiny|doomish|doomish_full|arcade|gridlab.
+    pub spec: String,
+    /// Environment scenario (see `env::make`): basic, defend_center,
+    /// health_gathering, defend_line, my_way_home, battle, battle2, duel,
+    /// deathmatch, breakout, collect_good_objects, multitask...
+    pub scenario: String,
+    pub artifacts_dir: String,
+    pub method: Method,
+
+    /// N rollout workers (threads).
+    pub num_workers: usize,
+    /// k envs per rollout worker (split into two groups when
+    /// double-buffering is on; paper recommends k/2 > t_inf/t_env).
+    pub envs_per_worker: usize,
+    /// M policy workers per policy (paper: 2-4 saturate the samplers).
+    pub policy_workers: usize,
+    /// Double-buffered sampling (§3.2). Off = plain batched sampling
+    /// (Fig 2a) — exposed for the ablation bench.
+    pub double_buffer: bool,
+
+    /// Action repeat: each policy action advances the env this many frames
+    /// (paper: 4, or 2 for duel/deathmatch).  Reported FPS counts raw env
+    /// frames, i.e. samples/s x frameskip, matching the paper.
+    pub frameskip: u32,
+    /// Stop after this many environment frames (frameskip-inclusive).
+    pub total_env_frames: u64,
+
+    /// Trajectories per SGD minibatch — must equal the manifest's
+    /// train_batch (AOT-fixed).
+    pub batch_size: usize,
+    /// Rollout length T — must equal the manifest (AOT-fixed).
+    pub rollout: usize,
+    /// Trajectory slots in the store, as a multiple of the in-flight
+    /// minimum (workers*envs + batch).  Bounds policy lag via back-pressure.
+    pub slot_slack: f32,
+
+    pub seed: u64,
+    /// Hyperparameter overrides by name (see manifest hyper_names).
+    pub hyper_overrides: BTreeMap<String, f32>,
+    pub pbt: PbtConfig,
+
+    /// Episode-stat logging interval in seconds (0 = quiet).
+    pub log_interval_s: f64,
+    /// Directory for CSV/JSON run outputs.
+    pub out_dir: String,
+    /// Save final per-policy checkpoints under `out_dir/ckpt/` at the end
+    /// of training.
+    pub save_ckpt: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            spec: "doomish".into(),
+            scenario: "battle".into(),
+            artifacts_dir: "artifacts".into(),
+            method: Method::Appo,
+            num_workers: 2,
+            envs_per_worker: 8,
+            policy_workers: 1,
+            double_buffer: true,
+            frameskip: 4,
+            total_env_frames: 200_000,
+            batch_size: 16,
+            rollout: 32,
+            slot_slack: 1.5,
+            seed: 42,
+            hyper_overrides: BTreeMap::new(),
+            pbt: PbtConfig::default(),
+            log_interval_s: 5.0,
+            out_dir: "bench_results".into(),
+            save_ckpt: false,
+        }
+    }
+}
+
+impl Config {
+    /// Total parallel environments.
+    pub fn total_envs(&self) -> usize {
+        self.num_workers * self.envs_per_worker
+    }
+
+    /// Apply one `key = value` pair (from file or CLI).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T, String> {
+            v.parse::<T>().map_err(|_| format!("bad value '{v}' for {k}"))
+        }
+        match key {
+            "spec" => self.spec = value.into(),
+            "scenario" => self.scenario = value.into(),
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "method" => {
+                self.method = Method::parse(value)
+                    .ok_or_else(|| format!("unknown method '{value}'"))?
+            }
+            "num_workers" => self.num_workers = p(key, value)?,
+            "envs_per_worker" => self.envs_per_worker = p(key, value)?,
+            "policy_workers" => self.policy_workers = p(key, value)?,
+            "double_buffer" => self.double_buffer = p(key, value)?,
+            "frameskip" => self.frameskip = p(key, value)?,
+            "total_env_frames" => self.total_env_frames = p(key, value)?,
+            "batch_size" => self.batch_size = p(key, value)?,
+            "rollout" => self.rollout = p(key, value)?,
+            "slot_slack" => self.slot_slack = p(key, value)?,
+            "seed" => self.seed = p(key, value)?,
+            "log_interval_s" => self.log_interval_s = p(key, value)?,
+            "out_dir" => self.out_dir = value.into(),
+            "save_ckpt" => self.save_ckpt = p(key, value)?,
+            "population" => self.pbt.population = p(key, value)?,
+            "pbt_interval_frames" => self.pbt.interval_frames = p(key, value)?,
+            "pbt_mutate_fraction" => self.pbt.mutate_fraction = p(key, value)?,
+            "pbt_mutation_rate" => self.pbt.mutation_rate = p(key, value)?,
+            "pbt_perturb_factor" => self.pbt.perturb_factor = p(key, value)?,
+            "pbt_replace_fraction" => self.pbt.replace_fraction = p(key, value)?,
+            "pbt_replace_threshold" => self.pbt.replace_threshold = p(key, value)?,
+            k if k.starts_with("hyper.") => {
+                let name = &k["hyper.".len()..];
+                let v: f32 = p(key, value)?;
+                self.hyper_overrides.insert(name.to_string(), v);
+            }
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+
+    /// Merge a TOML-lite config file.
+    pub fn merge_file(&mut self, path: &str) -> Result<(), String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        for (k, v) in parse_kv_file(&text).map_err(|e| e.to_string())? {
+            self.set(&k, &v)?;
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` style CLI arguments. Returns leftover positional
+    /// args. `--config <file>` is handled inline (applied before later
+    /// overrides so CLI wins).
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>, String> {
+        let mut rest = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| format!("missing value for --{key}"))?;
+                if key == "config" {
+                    self.merge_file(val)?;
+                } else {
+                    self.set(key, val)?;
+                }
+                i += 2;
+            } else {
+                rest.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(rest)
+    }
+
+    /// Validate cross-field invariants against a loaded manifest.
+    pub fn validate_against_manifest(
+        &self,
+        train_batch: usize,
+        rollout: usize,
+    ) -> Result<(), String> {
+        if self.batch_size != train_batch {
+            return Err(format!(
+                "config batch_size {} != manifest train_batch {} (AOT-fixed; \
+                 re-run `make artifacts` with a different spec to change it)",
+                self.batch_size, train_batch
+            ));
+        }
+        if self.rollout != rollout {
+            return Err(format!(
+                "config rollout {} != manifest rollout {}",
+                self.rollout, rollout
+            ));
+        }
+        Ok(())
+    }
+
+    /// Number of trajectory slots to pre-allocate.
+    pub fn n_slots(&self) -> usize {
+        let in_flight = self.total_envs() + self.batch_size * 2;
+        ((in_flight as f32) * self.slot_slack).ceil() as usize + 2
+    }
+}
+
+/// Named experiment presets (the configurations the paper's figures use).
+pub fn preset(name: &str) -> Option<Config> {
+    let mut c = Config::default();
+    match name {
+        "tiny_smoke" => {
+            c.spec = "tiny".into();
+            c.scenario = "basic".into();
+            c.batch_size = 4;
+            c.rollout = 8;
+            c.num_workers = 2;
+            c.envs_per_worker = 4;
+            c.total_env_frames = 20_000;
+        }
+        "doom_basic" => {
+            c.scenario = "basic".into();
+            c.total_env_frames = 2_000_000;
+        }
+        "doom_battle" => {
+            c.scenario = "battle".into();
+            c.total_env_frames = 4_000_000;
+        }
+        "duel_pbt" => {
+            c.spec = "doomish_full".into();
+            c.scenario = "duel".into();
+            c.frameskip = 2;
+            c.pbt.population = 4;
+            c.hyper_overrides.insert("gamma".into(), 0.995);
+            c.total_env_frames = 4_000_000;
+        }
+        "breakout" => {
+            c.spec = "arcade".into();
+            c.scenario = "breakout".into();
+            c.total_env_frames = 2_000_000;
+        }
+        "gridlab" => {
+            c.spec = "gridlab".into();
+            c.scenario = "collect_good_objects".into();
+            c.total_env_frames = 2_000_000;
+        }
+        "multitask" => {
+            c.spec = "gridlab".into();
+            c.scenario = "multitask".into();
+            c.pbt.population = 2;
+            c.total_env_frames = 2_000_000;
+        }
+        _ => return None,
+    }
+    Some(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_consistent() {
+        let c = Config::default();
+        assert_eq!(c.total_envs(), 16);
+        assert!(c.n_slots() > c.total_envs());
+    }
+
+    #[test]
+    fn set_and_cli_overrides() {
+        let mut c = Config::default();
+        c.set("num_workers", "7").unwrap();
+        c.set("method", "sync").unwrap();
+        c.set("hyper.lr", "0.001").unwrap();
+        assert_eq!(c.num_workers, 7);
+        assert_eq!(c.method, Method::Sync);
+        assert_eq!(c.hyper_overrides["lr"], 0.001);
+
+        let args: Vec<String> = ["--envs_per_worker", "3", "pos", "--seed", "9"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let rest = c.apply_cli(&args).unwrap();
+        assert_eq!(c.envs_per_worker, 3);
+        assert_eq!(c.seed, 9);
+        assert_eq!(rest, vec!["pos"]);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let mut c = Config::default();
+        assert!(c.set("num_wrokers", "3").is_err());
+        assert!(c.set("method", "warp").is_err());
+    }
+
+    #[test]
+    fn manifest_validation() {
+        let c = Config::default();
+        assert!(c.validate_against_manifest(16, 32).is_ok());
+        assert!(c.validate_against_manifest(8, 32).is_err());
+        assert!(c.validate_against_manifest(16, 16).is_err());
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for p in ["tiny_smoke", "doom_basic", "doom_battle", "duel_pbt",
+                  "breakout", "gridlab", "multitask"] {
+            assert!(preset(p).is_some(), "{p}");
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn merge_file_roundtrip() {
+        let path = std::env::temp_dir().join("sf_cfg_test.toml");
+        std::fs::write(&path, "# comment\nnum_workers = 5\n[pbt]\npopulation = 3\n").unwrap();
+        let mut c = Config::default();
+        c.merge_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.num_workers, 5);
+        assert_eq!(c.pbt.population, 3);
+    }
+}

@@ -1,0 +1,111 @@
+//! TOML-lite parser: `key = value` lines, `[section]` headers (flattened to
+//! plain keys — sections exist for readability only), `#` comments, quoted
+//! or bare values.  This deliberately covers only what config files need;
+//! structured data goes through `json`.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a config file into ordered (key, value) pairs.
+///
+/// Section headers `[pbt]` map bare keys to the flat namespace used by
+/// `Config::set` (`population` stays `population`; the sections are purely
+/// cosmetic). Keys may also be written fully qualified (`hyper.lr`).
+pub fn parse_kv_file(text: &str) -> Result<Vec<(String, String)>, ParseError> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') || line.len() < 3 {
+                return Err(ParseError {
+                    line: ln + 1,
+                    msg: format!("malformed section header '{line}'"),
+                });
+            }
+            continue; // sections are cosmetic
+        }
+        let eq = line.find('=').ok_or(ParseError {
+            line: ln + 1,
+            msg: format!("expected 'key = value', got '{line}'"),
+        })?;
+        let key = line[..eq].trim();
+        let mut val = line[eq + 1..].trim();
+        // Strip trailing comment on unquoted values.
+        if !val.starts_with('"') {
+            if let Some(h) = val.find('#') {
+                val = val[..h].trim();
+            }
+        }
+        // Strip quotes.
+        let val = if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+            &val[1..val.len() - 1]
+        } else {
+            val
+        };
+        if key.is_empty() {
+            return Err(ParseError { line: ln + 1, msg: "empty key".into() });
+        }
+        if val.is_empty() {
+            return Err(ParseError {
+                line: ln + 1,
+                msg: format!("empty value for '{key}'"),
+            });
+        }
+        out.push((key.to_string(), val.to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = r#"
+# a comment
+spec = doomish
+scenario = "battle"
+num_workers = 4        # inline comment
+
+[pbt]
+population = 8
+"#;
+        let kv = parse_kv_file(text).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("spec".to_string(), "doomish".to_string()),
+                ("scenario".to_string(), "battle".to_string()),
+                ("num_workers".to_string(), "4".to_string()),
+                ("population".to_string(), "8".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_kv_file("a = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse_kv_file("x =\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse_kv_file("[unclosed\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+}

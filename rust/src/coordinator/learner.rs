@@ -1,0 +1,175 @@
+//! Learner (§3.1, §3.4): consumes completed trajectory slots, assembles the
+//! SGD minibatch, executes the fused APPO train_step (V-trace Pallas kernel
+//! + PPO clipping + Adam, one HLO program) through PJRT, publishes the new
+//! parameters, and recycles the slots.
+//!
+//! Policy-lag accounting: every step of every trajectory carries the param
+//! version that generated it; lag = (version being trained) - (version that
+//! acted).  The paper reports 5-10 SGD steps of average lag as the stable
+//! regime — the monitor prints the same statistic and the integration tests
+//! assert it stays bounded (back-pressure through the finite slot store).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::ipc::{RecvError, SlotIdx};
+use crate::runtime::{lit_f32, lit_i32, lit_u8, to_f32_vec, LearnerState, ParamStore, Tensors};
+
+use super::msgs::{SharedCtx, StatMsg};
+
+pub struct LearnerCfg {
+    pub policy_id: u32,
+    /// Hyperparameter vector (PBT mutates this through `HyperHandle`).
+    pub hypers: Arc<std::sync::RwLock<Vec<f32>>>,
+    /// When set (by PBT), replace this policy's weights with the published
+    /// params of the named source policy before the next step.
+    pub copy_from: Arc<std::sync::Mutex<Option<crate::runtime::VersionedParams>>>,
+}
+
+/// Reusable minibatch assembly buffers.
+struct BatchBufs {
+    obs: Vec<u8>,
+    last_obs: Vec<u8>,
+    h0: Vec<f32>,
+    actions: Vec<i32>,
+    blp: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+}
+
+/// Body of a learner thread (one per policy).
+pub fn run_learner(
+    ctx: &SharedCtx,
+    params_store: Arc<ParamStore>,
+    mut state: LearnerState,
+    cfg: LearnerCfg,
+) {
+    let man = &ctx.progs.manifest;
+    let b = man.train_batch;
+    let t = man.rollout;
+    let obs_len = man.obs_len();
+    let hidden = man.hidden;
+    let n_heads = man.n_heads();
+    let n_params = man.n_params;
+    let queue = ctx.learner_queues[cfg.policy_id as usize].clone();
+
+    let mut bufs = BatchBufs {
+        obs: vec![0u8; b * t * obs_len],
+        last_obs: vec![0u8; b * obs_len],
+        h0: vec![0f32; b * hidden],
+        actions: vec![0i32; b * t * n_heads],
+        blp: vec![0f32; b * t],
+        rewards: vec![0f32; b * t],
+        dones: vec![0f32; b * t],
+    };
+    let mut slots: Vec<SlotIdx> = Vec::with_capacity(b);
+
+    loop {
+        // ---- gather a full minibatch of trajectories --------------------
+        while slots.len() < b {
+            let want = b - slots.len();
+            match queue.pop_many(&mut slots, want, Duration::from_millis(100)) {
+                Ok(_) => {}
+                Err(RecvError::Closed) => return,
+                Err(RecvError::Timeout) => {
+                    if ctx.should_stop() {
+                        return;
+                    }
+                }
+            }
+        }
+
+        // ---- PBT weight exchange (cheap: swap the literals) -------------
+        if let Some(src) = cfg.copy_from.lock().unwrap().take() {
+            state.params = Tensors(src.0.clone());
+        }
+
+        // ---- assemble ----------------------------------------------------
+        let mut lag_sum = 0u64;
+        let mut lag_max = 0u32;
+        let train_version = params_store.version();
+        for (i, &sl) in slots.iter().enumerate() {
+            let slot = ctx.store.slot(sl);
+            bufs.obs[i * t * obs_len..(i + 1) * t * obs_len]
+                .copy_from_slice(&slot.obs[..t * obs_len]);
+            bufs.last_obs[i * obs_len..(i + 1) * obs_len]
+                .copy_from_slice(slot.obs_row(t, obs_len));
+            bufs.h0[i * hidden..(i + 1) * hidden].copy_from_slice(&slot.h0);
+            bufs.actions[i * t * n_heads..(i + 1) * t * n_heads]
+                .copy_from_slice(&slot.actions[..t * n_heads]);
+            bufs.blp[i * t..(i + 1) * t].copy_from_slice(&slot.behavior_lp[..t]);
+            bufs.rewards[i * t..(i + 1) * t].copy_from_slice(&slot.rewards[..t]);
+            bufs.dones[i * t..(i + 1) * t].copy_from_slice(&slot.dones[..t]);
+            for &v in &slot.versions[..t] {
+                let lag = train_version.saturating_sub(v);
+                lag_sum += lag as u64;
+                lag_max = lag_max.max(lag);
+            }
+        }
+
+        let (hh, ww, cc) = (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
+        let hypers_now = cfg.hypers.read().unwrap().clone();
+        let lits = (
+            lit_u8(&[b, t, hh, ww, cc], &bufs.obs).expect("obs lit"),
+            lit_u8(&[b, hh, ww, cc], &bufs.last_obs).expect("last_obs lit"),
+            lit_f32(&[b, hidden], &bufs.h0).expect("h0 lit"),
+            lit_i32(&[b, t, n_heads], &bufs.actions).expect("actions lit"),
+            lit_f32(&[b, t], &bufs.blp).expect("blp lit"),
+            lit_f32(&[b, t], &bufs.rewards).expect("rewards lit"),
+            lit_f32(&[b, t], &bufs.dones).expect("dones lit"),
+        );
+        let hypers_lit = lit_f32(&[hypers_now.len()], &hypers_now).expect("hypers lit");
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n_params + 9);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.m.iter());
+        inputs.extend(state.v.iter());
+        inputs.push(&state.step[0]);
+        inputs.push(&hypers_lit);
+        inputs.push(&lits.0);
+        inputs.push(&lits.1);
+        inputs.push(&lits.2);
+        inputs.push(&lits.3);
+        inputs.push(&lits.4);
+        inputs.push(&lits.5);
+        inputs.push(&lits.6);
+
+        // ---- the fused train step ---------------------------------------
+        let mut outs = ctx.progs.train.run(&inputs).expect("train step failed");
+        debug_assert_eq!(outs.len(), 3 * n_params + 2);
+        let metrics_lit = outs.pop().unwrap();
+        let step_lit = outs.pop().unwrap();
+        let v_new: Vec<xla::Literal> = outs.split_off(2 * n_params);
+        let m_new: Vec<xla::Literal> = outs.split_off(n_params);
+        let p_new: Vec<xla::Literal> = outs;
+        state.params = Tensors(p_new);
+        state.m = Tensors(m_new);
+        state.v = Tensors(v_new);
+        state.step = Tensors(vec![step_lit]);
+
+        // ---- publish to the policy workers (§3.4: immediately) ----------
+        let version = params_store.publish(state.publish());
+
+        let metrics = to_f32_vec(&metrics_lit).expect("metrics read");
+        let samples = (b * t) as u64;
+        let _ = ctx.stats.try_push(StatMsg::Train {
+            policy: cfg.policy_id,
+            version,
+            metrics,
+            lag_mean: lag_sum as f64 / samples as f64,
+            lag_max,
+            samples,
+        });
+
+        // ---- recycle the slots -------------------------------------------
+        for &sl in &slots {
+            ctx.store.slot(sl).recycle();
+            ctx.store.release(sl);
+        }
+        slots.clear();
+
+        if ctx.should_stop() {
+            return;
+        }
+    }
+}

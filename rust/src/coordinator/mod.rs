@@ -1,0 +1,360 @@
+//! The Sample Factory coordinator (paper §3): fully asynchronous
+//! rollout-worker / policy-worker / learner topology over index-passing
+//! shared-memory IPC, with double-buffered sampling, policy-lag accounting,
+//! multi-policy routing, and population-based training.
+//!
+//! Public entry point: [`Trainer`].
+
+pub mod learner;
+pub mod msgs;
+pub mod pbt;
+pub mod policy_worker;
+pub mod rollout;
+
+use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Config, Method};
+use crate::env::vec_env::VecEnv;
+use crate::env::{heads_for_spec, multitask};
+use crate::ipc::{Fifo, TrajStore, TrajStoreSpec};
+use crate::runtime::{LearnerState, ModelPrograms, ParamStore, Runtime};
+use crate::stats::{EpisodeTracker, ThroughputMeter};
+use crate::util::Rng;
+
+use msgs::{SharedCtx, StatMsg};
+use pbt::{PbtController, PolicyHandles};
+
+/// One point on the training curve (sampled every monitor interval).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub frames: u64,
+    pub wall_s: f64,
+    pub mean_return: f64,
+    pub fps: f64,
+}
+
+/// Outcome of a training run — everything the benches report.
+#[derive(Clone, Debug, Default)]
+pub struct TrainResult {
+    pub frames: u64,
+    pub wall_s: f64,
+    pub fps: f64,
+    pub episodes: u64,
+    pub learner_steps: u64,
+    /// Mean episode return over the trailing window, per policy.
+    pub per_policy_return: Vec<f64>,
+    /// Best policy's trailing mean return.
+    pub mean_return: f64,
+    pub lag_mean: f64,
+    pub lag_max: u32,
+    pub curve: Vec<CurvePoint>,
+    /// Trailing mean return per multitask task (empty otherwise).
+    pub per_task_return: Vec<(String, f64)>,
+    /// Last train metrics vector (manifest.metric_names order).
+    pub final_metrics: Vec<f32>,
+    /// PBT event log.
+    pub pbt_events: Vec<String>,
+    /// Saved checkpoint paths (when `save_ckpt` is on), one per policy.
+    pub ckpt_paths: Vec<String>,
+}
+
+impl TrainResult {
+    pub fn best_policy(&self) -> usize {
+        self.per_policy_return
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Training front-end: dispatches on [`Method`].
+pub struct Trainer;
+
+impl Trainer {
+    pub fn run(cfg: &Config) -> Result<TrainResult> {
+        match cfg.method {
+            Method::Appo => run_appo(cfg),
+            Method::Sync => crate::baselines::sync_rl::run_sync(cfg),
+            Method::Serialized => crate::baselines::serialized::run_serialized(cfg),
+            Method::PureSim => crate::baselines::pure_sim::run_pure_sim(cfg),
+        }
+    }
+}
+
+/// Scenario name for a given rollout worker in multitask mode (§A.2: equal
+/// *compute* per task — one worker share per task, OS-scheduled).
+fn worker_scenario(cfg: &Config, worker: usize) -> (String, usize) {
+    if cfg.scenario == "multitask" {
+        let task = worker % multitask::n_tasks();
+        (format!("gridlab_task{task}"), task)
+    } else {
+        (cfg.scenario.clone(), usize::MAX)
+    }
+}
+
+/// The full asynchronous architecture (paper Fig 1).
+pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
+    let rt = Runtime::cpu()?;
+    let progs = Arc::new(ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)?);
+    let man = &progs.manifest;
+    cfg.validate_against_manifest(man.train_batch, man.rollout)
+        .map_err(|e| anyhow!(e))?;
+    let expect_heads = heads_for_spec(&cfg.spec).map_err(|e| anyhow!(e))?;
+    if expect_heads != man.action_heads {
+        return Err(anyhow!(
+            "spec/manifest action heads mismatch: {expect_heads:?} vs {:?}",
+            man.action_heads
+        ));
+    }
+
+    let n_policies = cfg.pbt.population.max(1);
+    let mut root_rng = Rng::new(cfg.seed);
+
+    // ---- shared trajectory store ---------------------------------------
+    let mut probe_rng = root_rng.fork(0xE);
+    let probe = crate::env::make(&cfg.spec, &worker_scenario(cfg, 0).0, &mut probe_rng)
+        .map_err(|e| anyhow!(e))?;
+    let agents_per_env = probe.spec().n_agents;
+    drop(probe);
+    let total_streams = cfg.total_envs() * agents_per_env;
+    let n_slots = ((total_streams + 2 * man.train_batch * n_policies) as f32
+        * cfg.slot_slack)
+        .ceil() as usize
+        + 2;
+    let store = TrajStore::new(TrajStoreSpec {
+        obs_len: man.obs_len(),
+        rollout: man.rollout,
+        n_heads: man.n_heads(),
+        hidden: man.hidden,
+        n_slots,
+    });
+
+    // ---- queues + shared context ----------------------------------------
+    let ctx = Arc::new(SharedCtx {
+        policy_queues: (0..n_policies).map(|_| Fifo::new(total_streams.max(64))).collect(),
+        reply_queues: (0..cfg.num_workers)
+            .map(|_| Fifo::new((cfg.envs_per_worker * agents_per_env).max(16)))
+            .collect(),
+        learner_queues: (0..n_policies).map(|_| Fifo::new(n_slots)).collect(),
+        stats: Fifo::new(4096),
+        store,
+        progs: progs.clone(),
+        meter: Arc::new(ThroughputMeter::new()),
+        shutdown: Arc::new(AtomicBool::new(false)),
+        frame_budget: cfg.total_env_frames,
+        frames: Arc::new(AtomicU64::new(0)),
+    });
+
+    // ---- per-policy state -------------------------------------------------
+    let mut handles: Vec<PolicyHandles> = Vec::with_capacity(n_policies);
+    let mut threads = Vec::new();
+    for p in 0..n_policies {
+        let state = LearnerState::fresh(&progs, (cfg.seed as u32).wrapping_add(p as u32 * 7919))?;
+        let param_store = ParamStore::new(state.publish());
+        let hypers = Arc::new(RwLock::new(
+            man.hypers_with(&cfg.hyper_overrides).map_err(|e| anyhow!(e))?,
+        ));
+        let copy_from = Arc::new(Mutex::new(None));
+        handles.push(PolicyHandles {
+            hypers: hypers.clone(),
+            copy_from: copy_from.clone(),
+            param_store: param_store.clone(),
+        });
+
+        // learner thread
+        {
+            let ctx = ctx.clone();
+            let ps = param_store.clone();
+            let lcfg = learner::LearnerCfg { policy_id: p as u32, hypers, copy_from };
+            threads.push(std::thread::Builder::new()
+                .name(format!("learner-{p}"))
+                .spawn(move || learner::run_learner(&ctx, ps, state, lcfg))
+                .expect("spawn learner"));
+        }
+        // policy worker threads
+        for w in 0..cfg.policy_workers.max(1) {
+            let ctx = ctx.clone();
+            let ps = param_store.clone();
+            let pcfg = policy_worker::PolicyWorkerCfg {
+                policy_id: p as u32,
+                seed: root_rng.next_u64(),
+                batch_linger: Duration::from_micros(200),
+            };
+            threads.push(std::thread::Builder::new()
+                .name(format!("policy-{p}-{w}"))
+                .spawn(move || policy_worker::run_policy_worker(&ctx, ps, pcfg))
+                .expect("spawn policy worker"));
+        }
+    }
+
+    // ---- rollout workers ----------------------------------------------------
+    for w in 0..cfg.num_workers {
+        let (scenario, task_id) = worker_scenario(cfg, w);
+        let mut rng = root_rng.fork(w as u64 + 1);
+        let venv = VecEnv::build(&cfg.spec, &scenario, cfg.envs_per_worker, cfg.double_buffer, &mut rng)
+            .map_err(|e| anyhow!(e))?;
+        let rcfg = rollout::RolloutWorkerCfg {
+            worker_id: w as u16,
+            frameskip: cfg.frameskip,
+            n_policies: n_policies as u32,
+            seed: root_rng.next_u64(),
+            task_id,
+        };
+        let ctx = ctx.clone();
+        threads.push(std::thread::Builder::new()
+            .name(format!("rollout-{w}"))
+            .spawn(move || rollout::run_rollout_worker(&ctx, venv, rcfg))
+            .expect("spawn rollout worker"));
+    }
+
+    // ---- monitor loop (main thread) -----------------------------------------
+    let result = monitor_loop(cfg, &ctx, &handles, man.metric_names.len());
+
+    ctx.request_shutdown();
+    for t in threads {
+        let _ = t.join();
+    }
+    let mut result = result?;
+    if cfg.save_ckpt {
+        for (i, h) in handles.iter().enumerate() {
+            let path = std::path::Path::new(&cfg.out_dir)
+                .join("ckpt")
+                .join(format!("{}_{}_p{}.ckpt", cfg.spec, cfg.scenario, i));
+            let (_, params) = h.param_store.fetch();
+            crate::runtime::checkpoint::save(&path, &ctx.progs.manifest, &params)?;
+            result.ckpt_paths.push(path.display().to_string());
+        }
+    }
+    Ok(result)
+}
+
+/// Drain stats, drive PBT, sample the training curve, stop at the budget.
+fn monitor_loop(
+    cfg: &Config,
+    ctx: &Arc<SharedCtx>,
+    handles: &[PolicyHandles],
+    n_metrics: usize,
+) -> Result<TrainResult> {
+    let n_policies = handles.len();
+    let start = Instant::now();
+    let mut trackers: Vec<EpisodeTracker> =
+        (0..n_policies).map(|_| EpisodeTracker::new(100)).collect();
+    let mut task_trackers: Vec<EpisodeTracker> =
+        (0..multitask::n_tasks()).map(|_| EpisodeTracker::new(50)).collect();
+    let mut is_multitask = false;
+    let mut episodes = 0u64;
+    let mut learner_steps = 0u64;
+    let mut lag_sum = 0f64;
+    let mut lag_n = 0u64;
+    let mut lag_max = 0u32;
+    let mut final_metrics = vec![0f32; n_metrics];
+    let mut curve = Vec::new();
+    let mut pbt = PbtController::new(cfg.pbt.clone(), &ctx.progs.manifest, cfg.seed ^ 0xbbbb);
+    let mut last_log = Instant::now();
+    let mut msgs = Vec::with_capacity(256);
+
+    loop {
+        msgs.clear();
+        match ctx.stats.pop_many(&mut msgs, 256, Duration::from_millis(50)) {
+            Ok(_) | Err(crate::ipc::RecvError::Timeout) => {}
+            Err(crate::ipc::RecvError::Closed) => break,
+        }
+        for m in &msgs {
+            match m {
+                StatMsg::Episode { policy, ret, len, task, .. } => {
+                    trackers[*policy as usize].push(*ret, *len);
+                    if *task != usize::MAX {
+                        is_multitask = true;
+                        task_trackers[*task].push(*ret, *len);
+                    }
+                    episodes += 1;
+                }
+                StatMsg::Train { metrics, lag_mean, lag_max: lm, samples, .. } => {
+                    learner_steps += 1;
+                    lag_sum += lag_mean * *samples as f64;
+                    lag_n += *samples;
+                    lag_max = lag_max.max(*lm);
+                    final_metrics.copy_from_slice(metrics);
+                }
+            }
+        }
+
+        let frames = ctx.frames.load(std::sync::atomic::Ordering::Relaxed);
+        let scores: Vec<f64> = trackers.iter().map(|t| t.mean_return()).collect();
+        pbt.step(frames, &scores, handles);
+
+        let elapsed = start.elapsed().as_secs_f64();
+        if cfg.log_interval_s > 0.0
+            && last_log.elapsed().as_secs_f64() >= cfg.log_interval_s
+        {
+            last_log = Instant::now();
+            let fps = frames as f64 / elapsed.max(1e-9);
+            let best = scores.iter().cloned().fold(f64::MIN, f64::max);
+            eprintln!(
+                "[{elapsed:7.1}s] frames {frames:>10}  fps {fps:>9.0}  \
+                 episodes {episodes:>6}  sgd {learner_steps:>5}  \
+                 return {best:>8.2}  lag {:.1}",
+                if lag_n > 0 { lag_sum / lag_n as f64 } else { 0.0 },
+            );
+        }
+        // Curve sampling (denser than logging; benches bin it as needed).
+        let need_point = curve
+            .last()
+            .map(|p: &CurvePoint| {
+                elapsed - p.wall_s > 1.0 || frames - p.frames > 20_000
+            })
+            .unwrap_or(true);
+        if need_point {
+            curve.push(CurvePoint {
+                frames,
+                wall_s: elapsed,
+                mean_return: scores.first().cloned().unwrap_or(0.0),
+                fps: frames as f64 / elapsed.max(1e-9),
+            });
+        }
+
+        if frames >= cfg.total_env_frames {
+            break;
+        }
+        // Safety net: if all workers died (e.g. panics), stop.
+        if ctx.shutdown.load(std::sync::atomic::Ordering::Acquire) {
+            break;
+        }
+    }
+
+    let frames = ctx.frames.load(std::sync::atomic::Ordering::Relaxed);
+    let wall_s = start.elapsed().as_secs_f64();
+    let per_policy_return: Vec<f64> = trackers.iter().map(|t| t.mean_return()).collect();
+    let mean_return = per_policy_return.iter().cloned().fold(f64::MIN, f64::max);
+    let per_task_return = if is_multitask {
+        multitask::task_names()
+            .iter()
+            .zip(&task_trackers)
+            .map(|(n, t)| (n.to_string(), t.mean_return()))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    Ok(TrainResult {
+        frames,
+        wall_s,
+        fps: frames as f64 / wall_s.max(1e-9),
+        episodes,
+        learner_steps,
+        per_policy_return,
+        mean_return: if mean_return == f64::MIN { 0.0 } else { mean_return },
+        lag_mean: if lag_n > 0 { lag_sum / lag_n as f64 } else { 0.0 },
+        lag_max,
+        curve,
+        per_task_return,
+        final_metrics,
+        pbt_events: pbt.events,
+        ckpt_paths: Vec::new(),
+    })
+}

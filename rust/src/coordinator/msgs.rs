@@ -1,0 +1,95 @@
+//! Message types + queue bundle wiring the coordinator together (Fig 1).
+//!
+//! Everything that crosses a thread boundary is a few bytes: slot indices
+//! and stream ids.  Observations, hidden states, actions and rewards stay
+//! in the shared trajectory slab (`ipc::slab`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::ipc::{Fifo, SlotIdx, TrajStore};
+use crate::runtime::ModelPrograms;
+use crate::stats::ThroughputMeter;
+
+/// Request: "produce an action for step `t` of the trajectory in `slot`".
+/// The policy worker finds the observation at `slot.obs[t]` and the GRU
+/// state in `slot.h_cur`; it writes the action/logprob/value/new hidden
+/// back into the slot and acks on `reply_to`'s queue.
+#[derive(Clone, Copy, Debug)]
+pub struct ActionRequest {
+    pub slot: SlotIdx,
+    pub t: u16,
+    /// Rollout worker to ack.
+    pub reply_to: u16,
+    /// Worker-local stream index (the rollout worker's bookkeeping handle).
+    pub stream: u32,
+}
+
+/// Ack: actions for `stream` are in its slot.
+#[derive(Clone, Copy, Debug)]
+pub struct ActionReply {
+    pub stream: u32,
+}
+
+/// Stats flowing to the monitor thread.
+#[derive(Clone, Debug)]
+pub enum StatMsg {
+    Episode {
+        policy: u32,
+        ret: f64,
+        len: u64,
+        /// Final frags (match modes) for the PBT meta-objective.
+        frags: i32,
+        /// Which task produced it (multitask suite), usize::MAX otherwise.
+        task: usize,
+    },
+    Train {
+        policy: u32,
+        version: u32,
+        metrics: Vec<f32>,
+        lag_mean: f64,
+        lag_max: u32,
+        samples: u64,
+    },
+}
+
+/// All queues + shared state for one training run.
+pub struct SharedCtx {
+    /// One request queue per policy (population member).
+    pub policy_queues: Vec<Fifo<ActionRequest>>,
+    /// One reply queue per rollout worker.
+    pub reply_queues: Vec<Fifo<ActionReply>>,
+    /// One trajectory queue per policy (rollout -> learner).
+    pub learner_queues: Vec<Fifo<SlotIdx>>,
+    pub stats: Fifo<StatMsg>,
+    pub store: Arc<TrajStore>,
+    pub progs: Arc<ModelPrograms>,
+    pub meter: Arc<ThroughputMeter>,
+    pub shutdown: Arc<AtomicBool>,
+    /// Env frames target; rollout workers stop sampling once reached.
+    pub frame_budget: u64,
+    /// Frames actually produced (frameskip-inclusive).
+    pub frames: Arc<AtomicU64>,
+}
+
+impl SharedCtx {
+    pub fn should_stop(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+            || self.frames.load(Ordering::Relaxed) >= self.frame_budget
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        for q in &self.policy_queues {
+            q.close();
+        }
+        for q in &self.reply_queues {
+            q.close();
+        }
+        for q in &self.learner_queues {
+            q.close();
+        }
+        self.store.close();
+        self.stats.close();
+    }
+}

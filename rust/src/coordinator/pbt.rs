@@ -1,0 +1,232 @@
+//! Population-based training (§3.5, §A.3.1).
+//!
+//! Every `interval_frames` environment frames:
+//! * rank the population by recent episode score (or win-rate proxy),
+//! * **explore**: the bottom `mutate_fraction` mutates each eligible
+//!   hyperparameter with probability `mutation_rate` by a factor of
+//!   `perturb_factor` (up or down) — the paper mutates learning rate,
+//!   entropy coefficient and Adam beta1,
+//! * **exploit**: the bottom `replace_fraction` copies weights and hypers
+//!   from a random member of the top `replace_fraction`, unless the score
+//!   gap is below `replace_threshold` (the Duel diversity guard).
+//!
+//! Hyperparameters are *inputs* to the AOT train step, so mutation never
+//! recompiles anything; weight exchange swaps `Arc`s of literals.
+
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::config::PbtConfig;
+use crate::runtime::{Manifest, ParamStore, VersionedParams};
+use crate::util::Rng;
+
+/// Hyperparameters the controller is allowed to mutate (paper §A.3.1).
+const MUTABLE: [&str; 3] = ["lr", "ent_coef", "adam_b1"];
+
+/// Per-policy handles shared with the learner threads.
+pub struct PolicyHandles {
+    pub hypers: Arc<RwLock<Vec<f32>>>,
+    pub copy_from: Arc<Mutex<Option<VersionedParams>>>,
+    pub param_store: Arc<ParamStore>,
+}
+
+pub struct PbtController {
+    cfg: PbtConfig,
+    mutable_idx: Vec<usize>,
+    last_frames: u64,
+    rng: Rng,
+    /// (policy, event) log for diagnostics/EXPERIMENTS.md.
+    pub events: Vec<String>,
+}
+
+impl PbtController {
+    pub fn new(cfg: PbtConfig, manifest: &Manifest, seed: u64) -> Self {
+        let mutable_idx = MUTABLE
+            .iter()
+            .filter_map(|n| manifest.hyper_index(n))
+            .collect();
+        PbtController {
+            cfg,
+            mutable_idx,
+            last_frames: 0,
+            rng: Rng::new(seed),
+            events: Vec::new(),
+        }
+    }
+
+    /// Run one controller check. `scores[i]` is policy i's recent mean
+    /// episode score. Returns true if a PBT step fired.
+    pub fn step(&mut self, frames: u64, scores: &[f64], handles: &[PolicyHandles]) -> bool {
+        let n = handles.len();
+        if n < 2 || frames - self.last_frames < self.cfg.interval_frames {
+            return false;
+        }
+        self.last_frames = frames;
+
+        // Rank: best first.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+        let n_bottom_mut = ((n as f32) * self.cfg.mutate_fraction).floor() as usize;
+        let n_exchange = ((n as f32) * self.cfg.replace_fraction).floor() as usize;
+
+        // Explore: mutate the bottom slice.
+        for &p in order.iter().rev().take(n_bottom_mut) {
+            let mut h = handles[p].hypers.write().unwrap();
+            for &idx in &self.mutable_idx {
+                if self.rng.chance(self.cfg.mutation_rate) {
+                    let up = self.rng.chance(0.5);
+                    let f = if up {
+                        self.cfg.perturb_factor
+                    } else {
+                        1.0 / self.cfg.perturb_factor
+                    };
+                    h[idx] *= f;
+                    // Keep beta1 a valid momentum coefficient.
+                    if idx < h.len() {
+                        h[idx] = h[idx].clamp(1e-7, 0.9999);
+                    }
+                    self.events
+                        .push(format!("frames={frames} policy={p} mutate h[{idx}] x{f:.3}"));
+                }
+            }
+        }
+
+        // Exploit: bottom <- top weight/hyper copies.
+        for k in 0..n_exchange {
+            let loser = order[n - 1 - k];
+            let winner = order[self.rng.below(n_exchange.max(1))];
+            if loser == winner {
+                continue;
+            }
+            let gap = scores[winner] - scores[loser];
+            if gap < self.cfg.replace_threshold as f64 {
+                self.events.push(format!(
+                    "frames={frames} policy={loser} spared (gap {gap:.3} < thr)"
+                ));
+                continue;
+            }
+            // Copy weights (applied by the loser's learner next iteration)
+            // and hypers.
+            let (_, params) = handles[winner].param_store.fetch();
+            *handles[loser].copy_from.lock().unwrap() = Some(params);
+            let src = handles[winner].hypers.read().unwrap().clone();
+            *handles[loser].hypers.write().unwrap() = src;
+            self.events.push(format!(
+                "frames={frames} policy={loser} <- weights of policy={winner}"
+            ));
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{lit_f32, Tensors};
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"name":"t","obs_shape":[8,8,3],"action_heads":[3],
+                "hidden":4,"policy_batch":2,"train_batch":2,"rollout":4,
+                "params":[{"name":"w","shape":[2],"dtype":"f32"}],
+                "n_params":1,
+                "hyper_names":["lr","ent_coef","ppo_clip","adam_b1"],
+                "hypers_default":[0.001,0.003,0.1,0.9],
+                "metric_names":["loss"]}"#,
+        )
+        .unwrap()
+    }
+
+    fn handles(n: usize, man: &Manifest) -> Vec<PolicyHandles> {
+        (0..n)
+            .map(|i| PolicyHandles {
+                hypers: Arc::new(RwLock::new(man.hypers_default.clone())),
+                copy_from: Arc::new(Mutex::new(None)),
+                param_store: ParamStore::new(Arc::new(Tensors(vec![lit_f32(
+                    &[2],
+                    &[i as f32, i as f32],
+                )
+                .unwrap()]))),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn no_step_before_interval() {
+        let man = manifest();
+        let cfg = PbtConfig { population: 4, interval_frames: 1000, ..Default::default() };
+        let mut c = PbtController::new(cfg, &man, 1);
+        let h = handles(4, &man);
+        assert!(!c.step(500, &[1.0, 2.0, 3.0, 4.0], &h));
+        assert!(c.step(1500, &[1.0, 2.0, 3.0, 4.0], &h));
+        // interval resets
+        assert!(!c.step(1600, &[1.0, 2.0, 3.0, 4.0], &h));
+    }
+
+    #[test]
+    fn worst_policy_receives_weights_from_top() {
+        let man = manifest();
+        let cfg = PbtConfig {
+            population: 4,
+            interval_frames: 1,
+            replace_fraction: 0.25,
+            mutation_rate: 0.0,
+            ..Default::default()
+        };
+        let mut c = PbtController::new(cfg, &man, 2);
+        let h = handles(4, &man);
+        // Policy 3 best (params [3,3]), policy 0 worst.
+        assert!(c.step(10, &[0.0, 5.0, 6.0, 9.0], &h));
+        let copied = h[0].copy_from.lock().unwrap().take();
+        let copied = copied.expect("worst policy got no weights");
+        assert_eq!(copied[0].to_vec::<f32>().unwrap(), vec![3.0, 3.0]);
+        // Winners untouched.
+        assert!(h[3].copy_from.lock().unwrap().is_none());
+    }
+
+    #[test]
+    fn replace_threshold_guards_diversity() {
+        let man = manifest();
+        let cfg = PbtConfig {
+            population: 4,
+            interval_frames: 1,
+            replace_fraction: 0.25,
+            replace_threshold: 10.0,
+            mutation_rate: 0.0,
+            ..Default::default()
+        };
+        let mut c = PbtController::new(cfg, &man, 3);
+        let h = handles(4, &man);
+        assert!(c.step(10, &[1.0, 2.0, 3.0, 4.0], &h)); // gaps all < 10
+        assert!(h[0].copy_from.lock().unwrap().is_none());
+    }
+
+    #[test]
+    fn mutation_changes_only_mutable_hypers() {
+        let man = manifest();
+        let cfg = PbtConfig {
+            population: 2,
+            interval_frames: 1,
+            mutate_fraction: 1.0,
+            mutation_rate: 1.0,
+            replace_fraction: 0.0,
+            ..Default::default()
+        };
+        let mut c = PbtController::new(cfg, &man, 4);
+        let h = handles(2, &man);
+        c.step(10, &[1.0, 2.0], &h);
+        let worst = h[0].hypers.read().unwrap().clone();
+        // lr (0), ent_coef (1), adam_b1 (3) may move; ppo_clip (2) must not.
+        assert_eq!(worst[2], 0.1);
+        assert_ne!(worst[0], 0.001);
+    }
+
+    #[test]
+    fn single_policy_population_is_noop() {
+        let man = manifest();
+        let cfg = PbtConfig { population: 1, interval_frames: 1, ..Default::default() };
+        let mut c = PbtController::new(cfg, &man, 5);
+        let h = handles(1, &man);
+        assert!(!c.step(100, &[1.0], &h));
+    }
+}

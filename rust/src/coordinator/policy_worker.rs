@@ -1,0 +1,163 @@
+//! Policy worker (§3.1): batches action requests from many rollout workers,
+//! runs the AOT-compiled inference program (conv encoder + fused Pallas GRU
+//! + heads) through PJRT, samples multi-discrete actions from the returned
+//! logits, and writes everything back into the shared trajectory slots.
+//!
+//! Policy workers are stateless with respect to trajectories — any worker
+//! can serve any stream, because all stream state (obs, hidden) lives in
+//! the slab (§3.1 "Parallelism").  Model weights are refreshed from the
+//! [`ParamStore`] the moment the learner publishes (§3.4, the first source
+//! of policy lag).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::ipc::RecvError;
+use crate::runtime::{lit_f32, lit_u8, read_f32_into, ParamStore};
+use crate::util::{log_softmax, sample_categorical, Rng};
+
+use super::msgs::{ActionReply, ActionRequest, SharedCtx};
+
+pub struct PolicyWorkerCfg {
+    pub policy_id: u32,
+    pub seed: u64,
+    /// Max time to wait for more requests once at least one is queued.
+    /// 0 = greedy (take whatever is there).
+    pub batch_linger: Duration,
+}
+
+/// Body of a policy worker thread.
+pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWorkerCfg) {
+    let man = &ctx.progs.manifest;
+    let b_max = man.policy_batch;
+    let obs_len = man.obs_len();
+    let hidden = man.hidden;
+    let heads = man.action_heads.clone();
+    let total_actions = man.total_actions();
+    let n_heads = heads.len();
+
+    let mut rng = Rng::new(cfg.seed);
+    let queue = ctx.policy_queues[cfg.policy_id as usize].clone();
+
+    // Reusable buffers: zero allocation in steady state.
+    let mut reqs: Vec<ActionRequest> = Vec::with_capacity(b_max);
+    let mut obs_buf = vec![0u8; b_max * obs_len];
+    let mut h_buf = vec![0f32; b_max * hidden];
+    let mut logits_buf = vec![0f32; b_max * total_actions];
+    let mut value_buf = vec![0f32; b_max];
+    let mut h_out_buf = vec![0f32; b_max * hidden];
+    let mut lsm_scratch = vec![0f32; *heads.iter().max().unwrap_or(&1)];
+
+    // Device-resident parameter cache (§Perf): parameters are uploaded once
+    // per published version; per-batch uploads are only obs + hidden.
+    // IMPORTANT: `cur_params` (the host literals) must stay alive as long as
+    // `param_bufs` — PJRT's BufferFromHostLiteral may borrow the host memory
+    // until the (async) transfer completes.
+    let (mut version, mut cur_params) = params.fetch();
+    let mut param_bufs = ctx
+        .progs
+        .policy
+        .upload(&cur_params.iter().collect::<Vec<_>>())
+        .expect("param upload");
+
+    loop {
+        // ---- collect a batch -------------------------------------------
+        reqs.clear();
+        match queue.pop_many(&mut reqs, b_max, Duration::from_millis(100)) {
+            Ok(_) => {}
+            Err(RecvError::Closed) => return,
+            Err(RecvError::Timeout) => {
+                if ctx.should_stop() {
+                    return;
+                }
+                continue;
+            }
+        }
+        // Small linger lets more requests join the batch — bigger batches
+        // amortise the fixed PJRT dispatch cost (tunable; see §Perf).
+        if reqs.len() < b_max && !cfg.batch_linger.is_zero() {
+            let deadline = std::time::Instant::now() + cfg.batch_linger;
+            while reqs.len() < b_max && std::time::Instant::now() < deadline {
+                match queue.try_pop() {
+                    Some(r) => reqs.push(r),
+                    None => std::thread::yield_now(),
+                }
+            }
+        }
+
+        // ---- refresh weights if the learner published (§3.4) ------------
+        if let Some((v, p)) = params.fetch_if_newer(version) {
+            version = v;
+            param_bufs = ctx
+                .progs
+                .policy
+                .upload(&p.iter().collect::<Vec<_>>())
+                .expect("param upload");
+            cur_params = p; // keep host literals alive for the buffers
+        }
+
+        // ---- assemble the inference batch from the slab -----------------
+        let n = reqs.len();
+        for (i, r) in reqs.iter().enumerate() {
+            let slot = ctx.store.slot(r.slot);
+            obs_buf[i * obs_len..(i + 1) * obs_len]
+                .copy_from_slice(slot.obs_row(r.t as usize, obs_len));
+            h_buf[i * hidden..(i + 1) * hidden].copy_from_slice(&slot.h_cur);
+        }
+        // Pad rows [n..b_max) are stale data — harmless, ignored on output.
+
+        let (h_dim, w_dim, c_dim) =
+            (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
+        let obs_lit = match lit_u8(&[b_max, h_dim, w_dim, c_dim], &obs_buf) {
+            Ok(l) => l,
+            Err(e) => panic!("policy worker obs literal: {e}"),
+        };
+        let h_lit = match lit_f32(&[b_max, hidden], &h_buf) {
+            Ok(l) => l,
+            Err(e) => panic!("policy worker h literal: {e}"),
+        };
+
+        // SF_NO_PARAM_CACHE=1 re-uploads parameters every batch — the
+        // §Perf ablation switch for the device-resident cache.
+        let outs = if std::env::var_os("SF_NO_PARAM_CACHE").is_some() {
+            let p = &cur_params;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(p.len() + 2);
+            inputs.extend(p.iter());
+            inputs.push(&obs_lit);
+            inputs.push(&h_lit);
+            ctx.progs.policy.run(&inputs)
+        } else {
+            ctx.progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])
+        }
+        .expect("policy inference failed");
+        debug_assert_eq!(outs.len(), 3);
+        read_f32_into(&outs[0], &mut logits_buf).expect("logits read");
+        read_f32_into(&outs[1], &mut value_buf).expect("value read");
+        read_f32_into(&outs[2], &mut h_out_buf).expect("hidden read");
+
+        // ---- sample actions, write results back, ack --------------------
+        for (i, r) in reqs.iter().enumerate().take(n) {
+            let row = &logits_buf[i * total_actions..(i + 1) * total_actions];
+            let mut slot = ctx.store.slot(r.slot);
+            let t = r.t as usize;
+            let mut lp_sum = 0.0f32;
+            let mut off = 0usize;
+            for (hd, &hn) in heads.iter().enumerate() {
+                let head_logits = &row[off..off + hn];
+                let a = sample_categorical(&mut rng, head_logits);
+                log_softmax(head_logits, &mut lsm_scratch[..hn]);
+                lp_sum += lsm_scratch[a];
+                slot.actions[t * n_heads + hd] = a as i32;
+                off += hn;
+            }
+            slot.behavior_lp[t] = lp_sum;
+            slot.values[t] = value_buf[i];
+            slot.versions[t] = version;
+            slot.h_cur
+                .copy_from_slice(&h_out_buf[i * hidden..(i + 1) * hidden]);
+            drop(slot);
+            let _ = ctx.reply_queues[r.reply_to as usize]
+                .push(ActionReply { stream: r.stream });
+        }
+    }
+}

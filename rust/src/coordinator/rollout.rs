@@ -1,0 +1,310 @@
+//! Rollout worker (§3.1-3.2): owns `k` environments, steps them with
+//! actions produced by the policy workers, writes observations straight
+//! into the shared trajectory slab, and submits completed trajectories to
+//! the learner.
+//!
+//! Rollout workers hold **no copy of the policy** — they are thin wrappers
+//! around the simulators, which is what lets the paper parallelize them
+//! massively.  Double-buffered sampling (Fig 2b): the env vector is split
+//! into two groups; while group A's action requests are in flight on the
+//! policy worker, group B is being stepped, masking inference latency.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use crate::env::vec_env::VecEnv;
+use crate::env::{AgentStep, EpisodeMonitor};
+use crate::ipc::{RecvError, SlotIdx};
+use crate::util::Rng;
+
+use super::msgs::{ActionRequest, SharedCtx, StatMsg};
+
+/// One (env, agent) sample stream: the unit of trajectory production.
+struct Stream {
+    env_idx: usize,
+    agent_idx: usize,
+    slot: SlotIdx,
+    /// Steps filled in the current trajectory (0..T).
+    t: usize,
+    /// Policy this episode's experience belongs to (multi-policy routing:
+    /// resampled per episode, §3.5).
+    policy: u32,
+    /// Action reply received for the pending request.
+    ready: bool,
+    /// Frames produced by this stream (diagnostics).
+    frames: u64,
+}
+
+pub struct RolloutWorkerCfg {
+    pub worker_id: u16,
+    pub frameskip: u32,
+    pub n_policies: u32,
+    pub seed: u64,
+    /// Multitask suite: which task each env of this worker runs
+    /// (empty = single task).
+    pub task_id: usize,
+}
+
+/// Body of a rollout worker thread.
+pub fn run_rollout_worker(ctx: &SharedCtx, mut venv: VecEnv, cfg: RolloutWorkerCfg) {
+    let spec = ctx.store.spec().clone();
+    let obs_len = spec.obs_len;
+    let t_max = spec.rollout;
+    let n_heads = spec.n_heads;
+    let mut rng = Rng::new(cfg.seed);
+
+    let n_agents = venv.n_agents_per_env();
+    let n_envs = venv.envs.len();
+
+    // Build streams; acquire initial slots (blocks if the store is tight).
+    let mut streams: Vec<Stream> = Vec::with_capacity(n_envs * n_agents);
+    for e in 0..n_envs {
+        for a in 0..n_agents {
+            let Some(slot) = ctx.store.acquire(Duration::from_secs(10)) else {
+                return;
+            };
+            let policy = rng.below(cfg.n_policies as usize) as u32;
+            {
+                let mut s = ctx.store.slot(slot);
+                s.t = 0;
+                s.policy_id = policy;
+                s.env_id = (cfg.worker_id as u32) << 16 | (e * n_agents + a) as u32;
+                s.h0.fill(0.0);
+                s.h_cur.fill(0.0);
+            }
+            streams.push(Stream {
+                env_idx: e,
+                agent_idx: a,
+                slot,
+                t: 0,
+                policy,
+                ready: false,
+                frames: 0,
+            });
+        }
+    }
+
+    // Group streams by env group (all agents of an env share its group).
+    let groups: Vec<Vec<usize>> = (0..venv.n_groups())
+        .map(|g| {
+            let r = venv.group(g);
+            streams
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| r.contains(&s.env_idx))
+                .map(|(i, _)| i)
+                .collect()
+        })
+        .collect();
+
+    let mut monitors: Vec<EpisodeMonitor> = std::mem::take(&mut venv.monitors);
+    let mut step_out = vec![AgentStep::default(); n_agents];
+    let mut actions_buf = vec![0i32; n_agents * n_heads];
+    let mut pending = vec![0usize; groups.len()];
+
+    // Render t=0 observations and issue the initial requests for all groups.
+    for (g, members) in groups.iter().enumerate() {
+        for &si in members {
+            render_into_slot(ctx, &mut venv, &mut streams[si], obs_len);
+            send_request(ctx, &streams[si], cfg.worker_id, si as u32);
+            pending[g] += 1;
+        }
+    }
+
+    'outer: loop {
+        for g in 0..groups.len() {
+            // Wait until every stream in group g has its action.
+            while pending[g] > 0 {
+                let reply = match ctx.reply_queues[cfg.worker_id as usize]
+                    .pop(Duration::from_millis(100))
+                {
+                    Ok(r) => r,
+                    Err(RecvError::Closed) => break 'outer,
+                    Err(RecvError::Timeout) => {
+                        if ctx.should_stop() {
+                            break 'outer;
+                        }
+                        continue;
+                    }
+                };
+                let si = reply.stream as usize;
+                streams[si].ready = true;
+                let sg = group_of(&groups, si);
+                pending[sg] -= 1;
+            }
+            if ctx.should_stop() {
+                break 'outer;
+            }
+
+            // Step every env in this group with the actions from the slab.
+            let member_range = venv.group(g);
+            for env_idx in member_range {
+                // Gather all agents' actions for this env.
+                let env_streams: Vec<usize> = groups[g]
+                    .iter()
+                    .copied()
+                    .filter(|&si| streams[si].env_idx == env_idx)
+                    .collect();
+                for &si in &env_streams {
+                    let st = &streams[si];
+                    let slot = ctx.store.slot(st.slot);
+                    let a0 = st.t * n_heads;
+                    actions_buf[st.agent_idx * n_heads..(st.agent_idx + 1) * n_heads]
+                        .copy_from_slice(&slot.actions[a0..a0 + n_heads]);
+                }
+                // Frameskip: repeat the action, summing rewards; stop early
+                // on done (the env auto-resets internally).
+                let mut acc: Vec<AgentStep> = vec![AgentStep::default(); n_agents];
+                for skip in 0..cfg.frameskip {
+                    venv.envs[env_idx].step(&actions_buf, &mut step_out);
+                    let mut any_done = false;
+                    for a in 0..n_agents {
+                        acc[a].reward += step_out[a].reward;
+                        acc[a].done |= step_out[a].done;
+                        any_done |= step_out[a].done;
+                    }
+                    let frames = n_agents as u64;
+                    ctx.meter.add(frames);
+                    ctx.frames.fetch_add(frames, Ordering::Relaxed);
+                    let _ = skip;
+                    if any_done {
+                        break;
+                    }
+                }
+
+                // Record the transition into each agent's trajectory.
+                for &si in &env_streams {
+                    let st = &mut streams[si];
+                    let a = st.agent_idx;
+                    st.frames += cfg.frameskip as u64;
+                    {
+                        let mut slot = ctx.store.slot(st.slot);
+                        slot.rewards[st.t] = acc[a].reward;
+                        slot.dones[st.t] = if acc[a].done { 1.0 } else { 0.0 };
+                        if acc[a].done {
+                            // Fresh episode: hidden state restarts at zero.
+                            slot.h_cur.fill(0.0);
+                        }
+                    }
+                    if let Some((ret, len)) = monitors[env_idx].record(a, &acc[a]) {
+                        let frags = 0; // env-level frag queries happen in PBT mode
+                        let _ = ctx.stats.try_push(StatMsg::Episode {
+                            policy: st.policy,
+                            ret,
+                            len: len * cfg.frameskip as u64,
+                            frags,
+                            task: cfg.task_id,
+                        });
+                    }
+                    st.t += 1;
+
+                    // Render the next observation into row t.  When the
+                    // trajectory is full this is row T — the V-trace
+                    // bootstrap observation.
+                    render_into_slot(ctx, &mut venv, &mut streams[si], obs_len);
+                    if streams[si].t == t_max {
+                        // Ship the full slot; the bootstrap row doubles as
+                        // the first observation of the next trajectory.
+                        if !finalize_trajectory(
+                            ctx,
+                            &mut streams[si],
+                            &mut rng,
+                            cfg.n_policies,
+                            obs_len,
+                        ) {
+                            break 'outer;
+                        }
+                    }
+                    send_request(ctx, &streams[si], cfg.worker_id, si as u32);
+                    pending[g] += 1;
+                }
+            }
+        }
+    }
+
+    // Drop slots we still own back to the store so shutdown can drain.
+    for st in &streams {
+        ctx.store.release(st.slot);
+    }
+}
+
+fn group_of(groups: &[Vec<usize>], si: usize) -> usize {
+    groups
+        .iter()
+        .position(|g| g.contains(&si))
+        .expect("stream not in any group")
+}
+
+/// Render the stream's current observation into its slot row `t`.
+fn render_into_slot(
+    ctx: &SharedCtx,
+    venv: &mut VecEnv,
+    st: &mut Stream,
+    obs_len: usize,
+) {
+    let mut slot = ctx.store.slot(st.slot);
+    let row = slot.obs_row_mut(st.t, obs_len);
+    venv.envs[st.env_idx].render(st.agent_idx, row);
+}
+
+fn send_request(ctx: &SharedCtx, st: &Stream, worker_id: u16, stream: u32) {
+    let req = ActionRequest {
+        slot: st.slot,
+        t: st.t as u16,
+        reply_to: worker_id,
+        stream,
+    };
+    let _ = ctx.policy_queues[st.policy as usize].push(req);
+}
+
+/// Trajectory complete (`st.t == T`, bootstrap row rendered): ship the slot
+/// to the learner, acquire a fresh one, carry the hidden state and the
+/// bootstrap observation (= first obs of the next trajectory) across.
+/// Returns false when the run is shutting down.
+fn finalize_trajectory(
+    ctx: &SharedCtx,
+    st: &mut Stream,
+    rng: &mut Rng,
+    n_policies: u32,
+    obs_len: usize,
+) -> bool {
+    let t_max = st.t;
+    let (h_carry, obs_carry): (Vec<f32>, Vec<u8>) = {
+        let slot = ctx.store.slot(st.slot);
+        (slot.h_cur.clone(), slot.obs_row(t_max, obs_len).to_vec())
+    };
+    let old_slot = st.slot;
+
+    // Acquire the next slot *before* submitting the old one so the pair of
+    // operations can never deadlock against learner recycling.
+    let new_slot = loop {
+        match ctx.store.acquire(Duration::from_millis(200)) {
+            Some(s) => break s,
+            None => {
+                if ctx.should_stop() {
+                    return false;
+                }
+            }
+        }
+    };
+    {
+        let mut slot = ctx.store.slot(new_slot);
+        slot.t = 0;
+        slot.policy_id = st.policy;
+        slot.h0.copy_from_slice(&h_carry);
+        slot.h_cur.copy_from_slice(&h_carry);
+        slot.obs_row_mut(0, obs_len).copy_from_slice(&obs_carry);
+    }
+    let _ = ctx.learner_queues[st.policy as usize].push(old_slot);
+
+    st.slot = new_slot;
+    st.t = 0;
+    // Policy resampling happens per *episode* in multi-policy mode;
+    // trajectories truncate mid-episode, so only resample when the last
+    // step ended an episode (h_cur was zeroed on done).
+    if n_policies > 1 && h_carry.iter().all(|&h| h == 0.0) {
+        st.policy = rng.below(n_policies as usize) as u32;
+        ctx.store.slot(st.slot).policy_id = st.policy;
+    }
+    true
+}

@@ -1,0 +1,224 @@
+//! Environment substrates.
+//!
+//! The paper evaluates on three simulators; we rebuild the computational
+//! equivalent of each from scratch (DESIGN.md lists the substitutions):
+//!
+//! * [`raycast`] — a DDA raycasting 3D engine with monsters, weapons,
+//!   pickups, doors and scripted bots: the VizDoom stand-in.  Scenarios:
+//!   `basic`, `defend_center`, `defend_line`, `health_gathering`,
+//!   `my_way_home`, `battle`, `battle2`, `duel`, `deathmatch`.
+//! * [`arcade`] — a Breakout implementation at 84x84 grayscale with
+//!   4-framestack: the Atari stand-in.
+//! * [`gridlab`] — collect-good-objects on the raycast engine with
+//!   deliberately heavier rendering: the DeepMind-Lab stand-in, plus the
+//!   [`multitask`] GridLab-8 suite standing in for DMLab-30.
+//!
+//! Everything implements the uniform multi-agent [`Env`] trait; single-agent
+//! environments report `n_agents == 1`.  Observations are rendered directly
+//! into caller-provided byte buffers — on the hot path that buffer is a row
+//! of the shared trajectory slab, so pixels move simulator -> learner with
+//! zero intermediate copies (paper §3.3).
+
+pub mod arcade;
+pub mod gridlab;
+pub mod multitask;
+pub mod raycast;
+pub mod vec_env;
+
+use crate::util::Rng;
+
+/// Observation geometry; byte length is `h * w * c` (u8 pixels, HWC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObsSpec {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl ObsSpec {
+    pub fn len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Static environment description.
+#[derive(Clone, Debug)]
+pub struct EnvSpec {
+    pub name: String,
+    pub obs: ObsSpec,
+    /// Sizes of the independent discrete action heads (paper Table A.4).
+    pub action_heads: Vec<usize>,
+    pub n_agents: usize,
+}
+
+/// Per-agent step outcome for a single simulated frame.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AgentStep {
+    pub reward: f32,
+    /// Episode ended for this agent this frame (the env auto-resets at the
+    /// *episode* level; callers observe `done` exactly once per episode).
+    pub done: bool,
+}
+
+/// The uniform environment interface.
+///
+/// One call to [`Env::step`] advances the simulation by exactly one frame;
+/// action repeat (frameskip) is applied by the rollout worker so that
+/// rendering can be skipped on intermediate frames — the single biggest
+/// simulator throughput lever, as in VizDoom itself.
+pub trait Env: Send {
+    fn spec(&self) -> &EnvSpec;
+
+    /// Start a fresh episode for all agents.
+    fn reset(&mut self, seed: u64);
+
+    /// Advance one frame. `actions` is the concatenation of every agent's
+    /// head indices (`n_agents * action_heads.len()` entries). Results are
+    /// written into `out` (`n_agents` entries).  When an agent's `done` is
+    /// set the env must have already reset that agent's episode state.
+    fn step(&mut self, actions: &[i32], out: &mut [AgentStep]);
+
+    /// Render the current observation for `agent` into `obs`
+    /// (`obs.len() == spec().obs.len()`).
+    fn render(&mut self, agent: usize, obs: &mut [u8]);
+}
+
+/// Episode bookkeeping the trainers share: accumulates per-agent return and
+/// length, emits `(return, length)` when an episode finishes.
+#[derive(Clone, Debug)]
+pub struct EpisodeMonitor {
+    ret: Vec<f64>,
+    len: Vec<u64>,
+}
+
+impl EpisodeMonitor {
+    pub fn new(n_agents: usize) -> Self {
+        EpisodeMonitor { ret: vec![0.0; n_agents], len: vec![0; n_agents] }
+    }
+
+    /// Record one frame; returns Some((episode_return, episode_len)) on done.
+    pub fn record(&mut self, agent: usize, step: &AgentStep) -> Option<(f64, u64)> {
+        self.ret[agent] += step.reward as f64;
+        self.len[agent] += 1;
+        if step.done {
+            let out = (self.ret[agent], self.len[agent]);
+            self.ret[agent] = 0.0;
+            self.len[agent] = 0;
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+/// Construct an environment by scenario name.
+///
+/// `spec_name` selects the model/obs configuration (the artifacts dir);
+/// `scenario` the gameplay.  Seeds are applied on `reset`.
+pub fn make(spec_name: &str, scenario: &str, rng: &mut Rng) -> Result<Box<dyn Env>, String> {
+    let obs = obs_for_spec(spec_name)?;
+    let mut e: Box<dyn Env> = match scenario {
+        "basic" => Box::new(raycast::scenarios::build(raycast::scenarios::Kind::Basic, obs)),
+        "defend_center" => {
+            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DefendCenter, obs))
+        }
+        "defend_line" => {
+            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DefendLine, obs))
+        }
+        "health_gathering" => {
+            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::HealthGathering, obs))
+        }
+        "my_way_home" => {
+            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::MyWayHome, obs))
+        }
+        "battle" => Box::new(raycast::scenarios::build(raycast::scenarios::Kind::Battle, obs)),
+        "battle2" => Box::new(raycast::scenarios::build(raycast::scenarios::Kind::Battle2, obs)),
+        "duel_bots" => {
+            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DuelBots, obs))
+        }
+        "deathmatch_bots" => {
+            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DeathmatchBots, obs))
+        }
+        "duel" => Box::new(raycast::scenarios::build_multi(
+            raycast::scenarios::MultiKind::Duel, obs)),
+        "deathmatch" => Box::new(raycast::scenarios::build_multi(
+            raycast::scenarios::MultiKind::Deathmatch, obs)),
+        "breakout" => Box::new(arcade::Breakout::new(obs)),
+        "collect_good_objects" => Box::new(gridlab::Collect::new(obs, gridlab::Task::default())),
+        name if name.starts_with("gridlab_task") => {
+            let idx: usize = name["gridlab_task".len()..]
+                .parse()
+                .map_err(|_| format!("bad gridlab task '{name}'"))?;
+            let task = multitask::task(idx).ok_or(format!("no gridlab task {idx}"))?;
+            Box::new(gridlab::Collect::new(obs, task))
+        }
+        other => return Err(format!("unknown scenario '{other}'")),
+    };
+    // Give each instance an independent starting seed.
+    e.reset(rng.next_u64());
+    Ok(e)
+}
+
+/// Observation geometry for each model spec (mirrors python SPECS).
+pub fn obs_for_spec(spec_name: &str) -> Result<ObsSpec, String> {
+    Ok(match spec_name {
+        "tiny" => ObsSpec { h: 24, w: 32, c: 3 },
+        "doomish" | "doomish_full" => ObsSpec { h: 36, w: 64, c: 3 },
+        "arcade" => ObsSpec { h: 84, w: 84, c: 4 },
+        "gridlab" => ObsSpec { h: 72, w: 96, c: 3 },
+        other => return Err(format!("unknown spec '{other}'")),
+    })
+}
+
+/// Action heads for each model spec; used to validate that the scenario and
+/// the AOT'd model agree before training starts.
+pub fn heads_for_spec(spec_name: &str) -> Result<Vec<usize>, String> {
+    Ok(match spec_name {
+        "tiny" => vec![3, 2],
+        "doomish" => vec![3, 3, 2, 21],
+        "doomish_full" => vec![3, 3, 2, 2, 2, 8, 21],
+        "arcade" => vec![4],
+        "gridlab" => vec![7],
+        other => return Err(format!("unknown spec '{other}'")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_monitor_accumulates_and_resets() {
+        let mut m = EpisodeMonitor::new(2);
+        assert!(m.record(0, &AgentStep { reward: 1.0, done: false }).is_none());
+        assert!(m.record(1, &AgentStep { reward: -3.0, done: false }).is_none());
+        let (r, l) = m.record(0, &AgentStep { reward: 2.0, done: true }).unwrap();
+        assert_eq!(r, 3.0);
+        assert_eq!(l, 2);
+        // Agent 0 restarted; agent 1 unaffected.
+        assert!(m.record(0, &AgentStep { reward: 5.0, done: false }).is_none());
+        let (r1, l1) = m.record(1, &AgentStep { reward: 0.0, done: true }).unwrap();
+        assert_eq!(r1, -3.0);
+        assert_eq!(l1, 2);
+    }
+
+    #[test]
+    fn obs_specs_match_python_specs() {
+        assert_eq!(obs_for_spec("doomish").unwrap().len(), 36 * 64 * 3);
+        assert_eq!(obs_for_spec("arcade").unwrap().len(), 84 * 84 * 4);
+        assert_eq!(obs_for_spec("tiny").unwrap().len(), 24 * 32 * 3);
+        assert!(obs_for_spec("nope").is_err());
+    }
+
+    #[test]
+    fn full_action_space_is_12096() {
+        // Paper Table A.4: the full action space has 12096 combinations.
+        let heads = heads_for_spec("doomish_full").unwrap();
+        let combos: usize = heads.iter().product();
+        assert_eq!(combos, 12096);
+    }
+}

@@ -1,0 +1,347 @@
+//! Grid maps for the raycast engine: ASCII-art authored layouts and
+//! procedurally generated mazes (battle2 / my_way_home style).
+
+use crate::util::Rng;
+
+/// Cell contents. Values 1..=6 are wall texture ids.
+pub const EMPTY: u8 = 0;
+pub const DOOR_CLOSED: u8 = 7;
+pub const DOOR_OPEN: u8 = 8;
+
+#[derive(Clone, Debug)]
+pub struct GridMap {
+    pub w: usize,
+    pub h: usize,
+    cells: Vec<u8>,
+}
+
+impl GridMap {
+    pub fn new(w: usize, h: usize, fill: u8) -> Self {
+        GridMap { w, h, cells: vec![fill; w * h] }
+    }
+
+    /// Parse an ASCII layout: `#1-6` walls, `D` closed door, `.`/space empty.
+    /// Rows must be equal length.  `#` maps to texture 1.
+    pub fn from_ascii(art: &str) -> Self {
+        let rows: Vec<&str> = art
+            .lines()
+            .map(|l| l.trim_end())
+            .filter(|l| !l.is_empty())
+            .collect();
+        let h = rows.len();
+        let w = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        assert!(w >= 3 && h >= 3, "map too small");
+        let mut m = GridMap::new(w, h, EMPTY);
+        for (y, row) in rows.iter().enumerate() {
+            for (x, ch) in row.chars().enumerate() {
+                let v = match ch {
+                    '#' => 1,
+                    '1'..='6' => ch as u8 - b'0',
+                    'D' => DOOR_CLOSED,
+                    _ => EMPTY,
+                };
+                m.set(x, y, v);
+            }
+        }
+        m
+    }
+
+    /// Recursive-backtracker maze on odd coordinates, with `loop_p`
+    /// probability of knocking through extra walls (adds cycles so agents
+    /// cannot solve it with wall-following).  Cell size: the maze unit is
+    /// `scale` grid cells wide, so corridors are wide enough for combat.
+    pub fn maze(mw: usize, mh: usize, scale: usize, loop_p: f32, rng: &mut Rng) -> Self {
+        assert!(mw >= 2 && mh >= 2 && scale >= 1);
+        // logical maze: mw x mh cells, walls between them
+        let gw = mw * (scale + 1) + 1;
+        let gh = mh * (scale + 1) + 1;
+        let mut m = GridMap::new(gw, gh, 1);
+        let mut visited = vec![false; mw * mh];
+        let mut stack = vec![(0usize, 0usize)];
+        visited[0] = true;
+        let carve_cell = |m: &mut GridMap, cx: usize, cy: usize| {
+            let x0 = cx * (scale + 1) + 1;
+            let y0 = cy * (scale + 1) + 1;
+            for y in y0..y0 + scale {
+                for x in x0..x0 + scale {
+                    m.set(x, y, EMPTY);
+                }
+            }
+        };
+        let carve_wall = |m: &mut GridMap, ax: usize, ay: usize, bx: usize, by: usize| {
+            // carve the wall strip between adjacent cells a and b
+            let ax0 = ax * (scale + 1) + 1;
+            let ay0 = ay * (scale + 1) + 1;
+            let bx0 = bx * (scale + 1) + 1;
+            let by0 = by * (scale + 1) + 1;
+            if ax == bx {
+                let y = ay0.max(by0) - 1;
+                for x in ax0..ax0 + scale {
+                    m.set(x, y, EMPTY);
+                }
+            } else {
+                let x = ax0.max(bx0) - 1;
+                for y in ay0..ay0 + scale {
+                    m.set(x, y, EMPTY);
+                }
+            }
+        };
+        carve_cell(&mut m, 0, 0);
+        while let Some(&(cx, cy)) = stack.last() {
+            let mut neigh = [(0usize, 0usize); 4];
+            let mut n = 0;
+            if cx > 0 && !visited[cy * mw + cx - 1] {
+                neigh[n] = (cx - 1, cy);
+                n += 1;
+            }
+            if cx + 1 < mw && !visited[cy * mw + cx + 1] {
+                neigh[n] = (cx + 1, cy);
+                n += 1;
+            }
+            if cy > 0 && !visited[(cy - 1) * mw + cx] {
+                neigh[n] = (cx, cy - 1);
+                n += 1;
+            }
+            if cy + 1 < mh && !visited[(cy + 1) * mw + cx] {
+                neigh[n] = (cx, cy + 1);
+                n += 1;
+            }
+            if n == 0 {
+                stack.pop();
+                continue;
+            }
+            let (nx, ny) = neigh[rng.below(n)];
+            visited[ny * mw + nx] = true;
+            carve_cell(&mut m, nx, ny);
+            carve_wall(&mut m, cx, cy, nx, ny);
+            stack.push((nx, ny));
+        }
+        // Extra loops.
+        for cy in 0..mh {
+            for cx in 0..mw {
+                if cx + 1 < mw && rng.chance(loop_p) {
+                    carve_wall(&mut m, cx, cy, cx + 1, cy);
+                }
+                if cy + 1 < mh && rng.chance(loop_p) {
+                    carve_wall(&mut m, cx, cy, cx, cy + 1);
+                }
+            }
+        }
+        // Vary wall textures by position for visual structure.
+        for y in 0..gh {
+            for x in 0..gw {
+                if m.cell(x, y) == 1 {
+                    let tex = 1 + ((x / 3 + y / 3) % 4) as u8;
+                    m.set(x, y, tex);
+                }
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn cell(&self, x: usize, y: usize) -> u8 {
+        if x >= self.w || y >= self.h {
+            return 1; // out of bounds is solid
+        }
+        self.cells[y * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        if x < self.w && y < self.h {
+            self.cells[y * self.w + x] = v;
+        }
+    }
+
+    /// Solid for movement and bullets (doors block until opened).
+    #[inline]
+    pub fn is_solid(&self, x: f32, y: f32) -> bool {
+        if x < 0.0 || y < 0.0 {
+            return true;
+        }
+        let c = self.cell(x as usize, y as usize);
+        c != EMPTY && c != DOOR_OPEN
+    }
+
+    /// Toggle a door cell adjacent to (x, y) facing `angle`. Returns true if
+    /// a door was opened.
+    pub fn open_door(&mut self, x: f32, y: f32, angle: f32) -> bool {
+        let tx = x + angle.cos() * 1.2;
+        let ty = y + angle.sin() * 1.2;
+        if self.cell(tx as usize, ty as usize) == DOOR_CLOSED {
+            self.set(tx as usize, ty as usize, DOOR_OPEN);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// All empty cells (spawn candidates).
+    pub fn empty_cells(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for y in 0..self.h {
+            for x in 0..self.w {
+                if self.cell(x, y) == EMPTY {
+                    out.push((x, y));
+                }
+            }
+        }
+        out
+    }
+
+    /// A random empty position (cell center), at least `min_dist` from
+    /// `(ax, ay)` if given.
+    pub fn random_spawn(
+        &self,
+        rng: &mut Rng,
+        avoid: Option<(f32, f32, f32)>,
+    ) -> (f32, f32) {
+        let cells = self.empty_cells();
+        assert!(!cells.is_empty(), "map has no empty cells");
+        for _ in 0..64 {
+            let (cx, cy) = cells[rng.below(cells.len())];
+            let (x, y) = (cx as f32 + 0.5, cy as f32 + 0.5);
+            match avoid {
+                Some((ax, ay, d)) => {
+                    if (x - ax).hypot(y - ay) >= d {
+                        return (x, y);
+                    }
+                }
+                None => return (x, y),
+            }
+        }
+        let (cx, cy) = cells[rng.below(cells.len())];
+        (cx as f32 + 0.5, cy as f32 + 0.5)
+    }
+
+    /// Line of sight between two points (DDA walk, solid cells block).
+    pub fn los(&self, x0: f32, y0: f32, x1: f32, y1: f32) -> bool {
+        let dx = x1 - x0;
+        let dy = y1 - y0;
+        let dist = dx.hypot(dy);
+        if dist < 1e-6 {
+            return true;
+        }
+        let steps = (dist * 4.0).ceil() as usize;
+        let sx = dx / steps as f32;
+        let sy = dy / steps as f32;
+        let mut x = x0;
+        let mut y = y0;
+        for _ in 0..steps {
+            x += sx;
+            y += sy;
+            if self.is_solid(x, y) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let m = GridMap::from_ascii(
+            "#####\n\
+             #...#\n\
+             #.D.#\n\
+             #..2#\n\
+             #####",
+        );
+        assert_eq!(m.w, 5);
+        assert_eq!(m.h, 5);
+        assert_eq!(m.cell(0, 0), 1);
+        assert_eq!(m.cell(1, 1), EMPTY);
+        assert_eq!(m.cell(2, 2), DOOR_CLOSED);
+        assert_eq!(m.cell(3, 3), 2);
+        assert!(m.is_solid(2.5, 2.5)); // closed door is solid
+        assert!(!m.is_solid(1.5, 1.5));
+    }
+
+    #[test]
+    fn out_of_bounds_is_solid() {
+        let m = GridMap::new(4, 4, EMPTY);
+        assert!(m.is_solid(-0.1, 2.0));
+        assert!(m.is_solid(2.0, 100.0));
+        assert_eq!(m.cell(100, 0), 1);
+    }
+
+    #[test]
+    fn maze_is_fully_connected() {
+        let mut rng = Rng::new(3);
+        let m = GridMap::maze(6, 5, 2, 0.1, &mut rng);
+        let cells = m.empty_cells();
+        assert!(!cells.is_empty());
+        // BFS from the first empty cell must reach every empty cell.
+        let mut seen = std::collections::HashSet::new();
+        let mut queue = vec![cells[0]];
+        seen.insert(cells[0]);
+        while let Some((x, y)) = queue.pop() {
+            for (dx, dy) in [(1i64, 0i64), (-1, 0), (0, 1), (0, -1)] {
+                let nx = x as i64 + dx;
+                let ny = y as i64 + dy;
+                if nx < 0 || ny < 0 {
+                    continue;
+                }
+                let p = (nx as usize, ny as usize);
+                if m.cell(p.0, p.1) == EMPTY && seen.insert(p) {
+                    queue.push(p);
+                }
+            }
+        }
+        assert_eq!(seen.len(), cells.len(), "maze has unreachable cells");
+    }
+
+    #[test]
+    fn maze_deterministic_per_seed() {
+        let a = GridMap::maze(5, 5, 2, 0.2, &mut Rng::new(9));
+        let b = GridMap::maze(5, 5, 2, 0.2, &mut Rng::new(9));
+        assert_eq!(a.cells, b.cells);
+    }
+
+    #[test]
+    fn door_open_makes_walkable() {
+        let mut m = GridMap::from_ascii(
+            "#####\n\
+             #.D.#\n\
+             #####",
+        );
+        assert!(m.is_solid(2.5, 1.5));
+        // Standing at (1.5, 1.5) facing +x (angle 0): door is 1.2 ahead.
+        assert!(m.open_door(1.5, 1.5, 0.0));
+        assert!(!m.is_solid(2.5, 1.5));
+        // Re-opening returns false (already open).
+        assert!(!m.open_door(1.5, 1.5, 0.0));
+    }
+
+    #[test]
+    fn los_blocked_by_walls() {
+        let m = GridMap::from_ascii(
+            "#####\n\
+             #.#.#\n\
+             #####",
+        );
+        assert!(!m.los(1.5, 1.5, 3.5, 1.5));
+        let open = GridMap::from_ascii(
+            "#####\n\
+             #...#\n\
+             #####",
+        );
+        assert!(open.los(1.5, 1.5, 3.5, 1.5));
+    }
+
+    #[test]
+    fn random_spawn_respects_avoid() {
+        let m = GridMap::maze(5, 5, 2, 0.2, &mut Rng::new(1));
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let (x, y) = m.random_spawn(&mut rng, Some((1.5, 1.5, 4.0)));
+            assert!(!m.is_solid(x, y));
+            assert!((x - 1.5).hypot(y - 1.5) >= 4.0 - 1e-3);
+        }
+    }
+}

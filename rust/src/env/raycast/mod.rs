@@ -1,0 +1,12 @@
+//! The VizDoom-substitute: a from-scratch egocentric 3D engine.
+//!
+//! * [`map`] — grid maps: ASCII layouts + procedural mazes.
+//! * [`world`] — simulation: players, monsters, hitscan combat, pickups,
+//!   doors, scripted-bot AI, per-tick event stream.
+//! * [`render`] — DDA raycast renderer with sprites, depth buffer, HUD.
+//! * [`scenarios`] — the paper's nine scenarios wired up as [`crate::env::Env`]s.
+
+pub mod map;
+pub mod render;
+pub mod scenarios;
+pub mod world;

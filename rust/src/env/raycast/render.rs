@@ -1,0 +1,473 @@
+//! Egocentric software renderer: textured walls via DDA raycasting,
+//! billboard sprites with a per-column depth buffer, optional per-pixel
+//! floor casting (the "heavy" mode used by gridlab to mirror DMLab's
+//! higher rendering cost), and a 2-row HUD strip encoding health/ammo —
+//! the pixel-space equivalent of the game info VizDoom shows on screen.
+//!
+//! This is the simulator's hot loop: the paper's entire premise is that
+//! environment frames are cheap and plentiful, so the renderer avoids
+//! allocation (callers pass the output buffer and a reusable z-buffer) and
+//! any per-pixel trig.
+
+use super::map::{DOOR_CLOSED, DOOR_OPEN};
+use super::world::{EntityKind, MonsterKind, World, WEAPONS};
+use crate::env::ObsSpec;
+
+/// Horizontal field of view ~ 77 degrees (tan(fov/2) = 0.8), Doom-like.
+const PLANE_SCALE: f32 = 0.8;
+/// Rows reserved at the bottom of the frame for the HUD strip.
+pub const HUD_ROWS: usize = 2;
+
+/// Wall texture palette: base RGB per texture id.
+const WALL_COLORS: [[f32; 3]; 9] = [
+    [0.0, 0.0, 0.0],    // 0 unused (empty)
+    [0.62, 0.57, 0.50], // 1 stone
+    [0.55, 0.33, 0.24], // 2 brick
+    [0.36, 0.48, 0.38], // 3 moss
+    [0.42, 0.42, 0.55], // 4 tech
+    [0.60, 0.50, 0.30], // 5 wood
+    [0.50, 0.55, 0.60], // 6 metal
+    [0.70, 0.20, 0.20], // 7 door closed (red)
+    [0.20, 0.55, 0.20], // 8 door open (green frame)
+];
+
+const CEIL_COLOR: [u8; 3] = [38, 40, 48];
+const FLOOR_COLOR: [u8; 3] = [52, 48, 42];
+
+fn entity_color(kind: EntityKind) -> [f32; 3] {
+    match kind {
+        EntityKind::Monster(MonsterKind::Chaser) => [0.85, 0.30, 0.55],
+        EntityKind::Monster(MonsterKind::Shooter) => [0.45, 0.70, 0.30],
+        EntityKind::HealthPack => [0.95, 0.95, 0.95],
+        EntityKind::ArmorPack => [0.20, 0.80, 0.30],
+        EntityKind::AmmoPack => [0.85, 0.75, 0.20],
+        EntityKind::WeaponPickup(_) => [0.95, 0.55, 0.10],
+        EntityKind::Object { good: true } => [0.30, 0.90, 0.90],
+        EntityKind::Object { good: false } => [0.90, 0.25, 0.15],
+    }
+}
+
+/// Reusable per-instance scratch (z-buffer + sprite order).
+pub struct RenderScratch {
+    zbuf: Vec<f32>,
+    order: Vec<(f32, usize, bool)>, // (dist, idx, is_player)
+}
+
+impl RenderScratch {
+    pub fn new(w: usize) -> Self {
+        RenderScratch { zbuf: vec![0.0; w], order: Vec::with_capacity(64) }
+    }
+}
+
+#[inline]
+fn put(out: &mut [u8], w: usize, x: usize, y: usize, rgb: [u8; 3], channels: usize) {
+    let o = (y * w + x) * channels;
+    out[o] = rgb[0];
+    out[o + 1] = rgb[1];
+    if channels >= 3 {
+        out[o + 2] = rgb[2];
+    }
+}
+
+/// Render the world from `player`'s viewpoint into `out` (HWC u8).
+///
+/// `heavy` enables per-pixel floor/ceiling casting (gridlab). For c==1
+/// outputs, luminance is written instead of RGB (arcade never uses this
+/// renderer, but the tiny test spec may configure odd channel counts).
+pub fn render(
+    world: &World,
+    player: usize,
+    obs: ObsSpec,
+    heavy: bool,
+    scratch: &mut RenderScratch,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(out.len(), obs.len());
+    let (w, h, ch) = (obs.w, obs.h, obs.c);
+    let view_h = h - HUD_ROWS.min(h / 4);
+    let p = &world.players[player];
+    let (dir_x, dir_y) = (p.angle.cos(), p.angle.sin());
+    let (plane_x, plane_y) = (-dir_y * PLANE_SCALE, dir_x * PLANE_SCALE);
+    if scratch.zbuf.len() != w {
+        scratch.zbuf.resize(w, 0.0);
+    }
+
+    // --- background: flat ceiling/floor, or per-pixel casting in heavy mode
+    let horizon = view_h / 2;
+    if heavy {
+        // lodev-style floor casting: one world-space step per row.
+        for y in 0..view_h {
+            let is_floor = y >= horizon;
+            let d = if is_floor {
+                (y as f32 - view_h as f32 / 2.0).max(0.5)
+            } else {
+                (view_h as f32 / 2.0 - y as f32).max(0.5)
+            };
+            let row_dist = view_h as f32 * 0.5 / d;
+            let step_x = row_dist * 2.0 * plane_x / w as f32;
+            let step_y = row_dist * 2.0 * plane_y / w as f32;
+            let mut fx = p.x + row_dist * (dir_x - plane_x);
+            let mut fy = p.y + row_dist * (dir_y - plane_y);
+            let fog = 1.0 / (1.0 + row_dist * 0.22);
+            for x in 0..w {
+                let checker = ((fx.floor() as i64 + fy.floor() as i64) & 1) == 0;
+                let base: [f32; 3] = if is_floor {
+                    if checker { [0.30, 0.28, 0.25] } else { [0.22, 0.21, 0.19] }
+                } else if checker {
+                    [0.16, 0.17, 0.22]
+                } else {
+                    [0.12, 0.13, 0.17]
+                };
+                let rgb = [
+                    (base[0] * fog * 255.0) as u8,
+                    (base[1] * fog * 255.0) as u8,
+                    (base[2] * fog * 255.0) as u8,
+                ];
+                put(out, w, x, y, rgb, ch);
+                fx += step_x;
+                fy += step_y;
+            }
+        }
+    } else {
+        for y in 0..view_h {
+            let rgb = if y < horizon { CEIL_COLOR } else { FLOOR_COLOR };
+            for x in 0..w {
+                put(out, w, x, y, rgb, ch);
+            }
+        }
+    }
+
+    // --- walls: one DDA per column
+    for x in 0..w {
+        let camera_x = 2.0 * x as f32 / w as f32 - 1.0;
+        let rd_x = dir_x + plane_x * camera_x;
+        let rd_y = dir_y + plane_y * camera_x;
+        let mut map_x = p.x as i64;
+        let mut map_y = p.y as i64;
+        let delta_x = if rd_x.abs() < 1e-9 { f32::MAX } else { (1.0 / rd_x).abs() };
+        let delta_y = if rd_y.abs() < 1e-9 { f32::MAX } else { (1.0 / rd_y).abs() };
+        let (step_x, mut side_x) = if rd_x < 0.0 {
+            (-1i64, (p.x - map_x as f32) * delta_x)
+        } else {
+            (1i64, (map_x as f32 + 1.0 - p.x) * delta_x)
+        };
+        let (step_y, mut side_y) = if rd_y < 0.0 {
+            (-1i64, (p.y - map_y as f32) * delta_y)
+        } else {
+            (1i64, (map_y as f32 + 1.0 - p.y) * delta_y)
+        };
+        let mut side = 0u8;
+        let mut tex = 1u8;
+        for _ in 0..256 {
+            if side_x < side_y {
+                side_x += delta_x;
+                map_x += step_x;
+                side = 0;
+            } else {
+                side_y += delta_y;
+                map_y += step_y;
+                side = 1;
+            }
+            if map_x < 0 || map_y < 0 {
+                tex = 1;
+                break;
+            }
+            let c = world.map.cell(map_x as usize, map_y as usize);
+            if c != 0 && c != DOOR_OPEN {
+                tex = c;
+                break;
+            }
+        }
+        let perp = if side == 0 { side_x - delta_x } else { side_y - delta_y };
+        let perp = perp.max(1e-4);
+        scratch.zbuf[x] = perp;
+
+        let line_h = (view_h as f32 / perp) as i64;
+        let y0 = ((view_h as i64 - line_h) / 2).max(0) as usize;
+        let y1 = (((view_h as i64 + line_h) / 2) as usize).min(view_h);
+
+        // Texture u-coordinate from the wall hit position.
+        let wall_u = if side == 0 {
+            p.y + perp * rd_y
+        } else {
+            p.x + perp * rd_x
+        };
+        let wall_u = wall_u - wall_u.floor();
+
+        let base = WALL_COLORS[(tex as usize).min(WALL_COLORS.len() - 1)];
+        let fog = 1.0 / (1.0 + perp * 0.18);
+        let side_shade = if side == 1 { 0.75 } else { 1.0 };
+        // Cheap procedural texture: vertical brick bands + mortar lines.
+        let band = ((wall_u * 6.0) as i32) & 1;
+        let band_shade = if band == 0 { 1.0 } else { 0.82 };
+        let is_door = tex == DOOR_CLOSED || tex == DOOR_OPEN;
+        for y in y0..y1 {
+            let v = (y - y0) as f32 / ((y1 - y0).max(1)) as f32;
+            let row_shade = if is_door {
+                // horizontal panel lines on doors
+                if ((v * 5.0) as i32) & 1 == 0 { 1.0 } else { 0.7 }
+            } else if ((v * 8.0) as i32) & 1 == 0 {
+                1.0
+            } else {
+                0.9
+            };
+            let sh = fog * side_shade * band_shade * row_shade * 255.0;
+            let rgb = [
+                (base[0] * sh) as u8,
+                (base[1] * sh) as u8,
+                (base[2] * sh) as u8,
+            ];
+            put(out, w, x, y, rgb, ch);
+        }
+    }
+
+    // --- sprites: entities + other players, far to near
+    scratch.order.clear();
+    for (i, e) in world.entities.iter().enumerate() {
+        if e.alive {
+            let d = (e.x - p.x).hypot(e.y - p.y);
+            scratch.order.push((d, i, false));
+        }
+    }
+    for (i, q) in world.players.iter().enumerate() {
+        if i != player && q.alive {
+            let d = (q.x - p.x).hypot(q.y - p.y);
+            scratch.order.push((d, i, true));
+        }
+    }
+    scratch
+        .order
+        .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let inv_det = 1.0 / (plane_x * dir_y - dir_x * plane_y);
+    // Borrow fields separately to appease the borrow checker.
+    let order = std::mem::take(&mut scratch.order);
+    for &(_, idx, is_player) in &order {
+        let (ex, ey, color, scale_h): (f32, f32, [f32; 3], f32) = if is_player {
+            let q = &world.players[idx];
+            (q.x, q.y, [0.30, 0.45, 0.95], 1.0)
+        } else {
+            let e = &world.entities[idx];
+            let s = if e.is_monster() { 1.0 } else { 0.5 };
+            (e.x, e.y, entity_color(e.kind), s)
+        };
+        let rel_x = ex - p.x;
+        let rel_y = ey - p.y;
+        let trans_x = inv_det * (dir_y * rel_x - dir_x * rel_y);
+        let trans_y = inv_det * (-plane_y * rel_x + plane_x * rel_y);
+        if trans_y <= 0.05 {
+            continue; // behind the camera
+        }
+        let screen_x = ((w as f32 / 2.0) * (1.0 + trans_x / trans_y)) as i64;
+        let sprite_h = ((view_h as f32 / trans_y) * scale_h) as i64;
+        let sprite_w = sprite_h * 2 / 3;
+        if sprite_h <= 0 {
+            continue;
+        }
+        // Pickups sit on the floor; monsters/players are full height.
+        let v_offset = if scale_h < 1.0 {
+            (view_h as f32 / trans_y * (1.0 - scale_h) * 0.5) as i64
+        } else {
+            0
+        };
+        let y0 = ((view_h as i64 - sprite_h) / 2 + v_offset).max(0) as usize;
+        let y1 = (((view_h as i64 + sprite_h) / 2 + v_offset) as usize).min(view_h);
+        let x0 = (screen_x - sprite_w / 2).max(0) as usize;
+        let x1 = ((screen_x + sprite_w / 2) as usize).min(w);
+        let fog = 1.0 / (1.0 + trans_y * 0.15);
+        for x in x0..x1 {
+            if trans_y >= scratch.zbuf[x] {
+                continue; // occluded by a wall
+            }
+            // Elliptic mask + simple two-tone shading makes sprites readable.
+            let fx = (x as f32 - screen_x as f32) / (sprite_w.max(1) as f32 / 2.0);
+            for y in y0..y1 {
+                let fy = (y as f32 - (y0 + y1) as f32 / 2.0) / ((y1 - y0).max(1) as f32 / 2.0);
+                let r2 = fx * fx + fy * fy;
+                if r2 > 1.0 {
+                    continue;
+                }
+                let tone = if r2 < 0.35 { 1.0 } else { 0.75 };
+                let sh = fog * tone * 255.0;
+                let rgb = [
+                    (color[0] * sh) as u8,
+                    (color[1] * sh) as u8,
+                    (color[2] * sh) as u8,
+                ];
+                put(out, w, x, y, rgb, ch);
+            }
+        }
+    }
+    scratch.order = order;
+
+    // --- HUD strip: health (red), armor (green), ammo (yellow), weapon id
+    if view_h < h {
+        let hud_y0 = view_h;
+        for y in hud_y0..h {
+            for x in 0..w {
+                put(out, w, x, y, [12, 12, 12], ch);
+            }
+        }
+        let health_px = ((p.health / 100.0).clamp(0.0, 1.0) * (w as f32 * 0.45)) as usize;
+        let armor_px = ((p.armor / 100.0).clamp(0.0, 1.0) * (w as f32 * 0.45)) as usize;
+        for x in 0..health_px {
+            put(out, w, x, hud_y0, [220, 40, 40], ch);
+        }
+        for x in 0..armor_px {
+            put(out, w, x, hud_y0 + 1.min(h - hud_y0 - 1), [40, 200, 60], ch);
+        }
+        let ammo = p.ammo[p.weapon] as usize;
+        let ammo_px = (ammo.min(60) * (w / 2 - 2)) / 60;
+        for x in 0..ammo_px {
+            put(out, w, w / 2 + x, hud_y0, [230, 210, 60], ch);
+        }
+        // Weapon slot indicator: WEAPONS.len() ticks, the active one bright.
+        for wslot in 0..WEAPONS.len() {
+            let x = w / 2 + wslot * 3;
+            if x + 1 < w {
+                let on = wslot == p.weapon;
+                let rgb = if on { [240, 240, 240] } else { [70, 70, 70] };
+                put(out, w, x, hud_y0 + 1.min(h - hud_y0 - 1), rgb, ch);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::raycast::map::GridMap;
+    use crate::env::raycast::world::{Entity, Player, WorldCfg};
+
+    fn test_world() -> World {
+        let map = GridMap::from_ascii(
+            "########\n\
+             #......#\n\
+             #......#\n\
+             #......#\n\
+             ########",
+        );
+        let mut w = World::new(map, WorldCfg::default(), 1);
+        w.players.push(Player::new(1.5, 2.5, 0.0));
+        w
+    }
+
+    fn spec() -> ObsSpec {
+        ObsSpec { h: 36, w: 64, c: 3 }
+    }
+
+    #[test]
+    fn renders_nonuniform_frame() {
+        let w = test_world();
+        let obs = spec();
+        let mut scratch = RenderScratch::new(obs.w);
+        let mut out = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut out);
+        let distinct: std::collections::HashSet<u8> = out.iter().copied().collect();
+        assert!(distinct.len() > 8, "frame is too uniform: {} values", distinct.len());
+    }
+
+    #[test]
+    fn closer_walls_are_taller() {
+        // Wall column height grows as the player approaches the east wall.
+        let obs = spec();
+        let mut scratch = RenderScratch::new(obs.w);
+        let mut w = test_world();
+        let mut out = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut out);
+        let far_z = scratch.zbuf[obs.w / 2];
+        w.players[0].x = 5.5;
+        render(&w, 0, obs, false, &mut scratch, &mut out);
+        let near_z = scratch.zbuf[obs.w / 2];
+        assert!(near_z < far_z, "depth did not shrink: {near_z} vs {far_z}");
+    }
+
+    #[test]
+    fn sprite_visible_when_in_front() {
+        let obs = spec();
+        let mut scratch = RenderScratch::new(obs.w);
+        let mut w = test_world();
+        let mut base = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut base);
+        w.entities.push(Entity::new(
+            EntityKind::Monster(MonsterKind::Chaser),
+            3.5,
+            2.5,
+        ));
+        let mut with = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut with);
+        assert_ne!(base, with, "monster sprite not drawn");
+        // Monster behind the camera must not be drawn.
+        w.entities[0].x = 0.5; // behind/inside wall west of player
+        w.entities[0].y = 2.5;
+        let mut behind = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut behind);
+        assert_eq!(base, behind);
+    }
+
+    #[test]
+    fn sprite_occluded_by_wall() {
+        let map = GridMap::from_ascii(
+            "#########\n\
+             #...#...#\n\
+             #...#...#\n\
+             #########",
+        );
+        let obs = spec();
+        let mut scratch = RenderScratch::new(obs.w);
+        let mut w = World::new(map, WorldCfg::default(), 1);
+        w.players.push(Player::new(1.5, 1.5, 0.0));
+        let mut base = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut base);
+        // Monster in the second room, hidden by the dividing wall.
+        w.entities.push(Entity::new(
+            EntityKind::Monster(MonsterKind::Chaser),
+            6.5,
+            1.5,
+        ));
+        let mut with = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut with);
+        assert_eq!(base, with, "occluded sprite leaked through the wall");
+    }
+
+    #[test]
+    fn hud_reflects_health() {
+        let obs = spec();
+        let mut scratch = RenderScratch::new(obs.w);
+        let mut w = test_world();
+        let mut full = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut full);
+        w.players[0].health = 10.0;
+        let mut low = vec![0u8; obs.len()];
+        render(&w, 0, obs, false, &mut scratch, &mut low);
+        // Count red HUD pixels in the last two rows.
+        let hud_red = |buf: &[u8]| {
+            let mut n = 0;
+            for y in obs.h - HUD_ROWS..obs.h {
+                for x in 0..obs.w {
+                    let o = (y * obs.w + x) * obs.c;
+                    if buf[o] > 180 && buf[o + 1] < 90 {
+                        n += 1;
+                    }
+                }
+            }
+            n
+        };
+        assert!(hud_red(&full) > hud_red(&low));
+    }
+
+    #[test]
+    fn heavy_mode_differs_and_is_deterministic() {
+        let w = test_world();
+        let obs = ObsSpec { h: 72, w: 96, c: 3 };
+        let mut scratch = RenderScratch::new(obs.w);
+        let mut a = vec![0u8; obs.len()];
+        let mut b = vec![0u8; obs.len()];
+        let mut flat = vec![0u8; obs.len()];
+        render(&w, 0, obs, true, &mut scratch, &mut a);
+        render(&w, 0, obs, true, &mut scratch, &mut b);
+        render(&w, 0, obs, false, &mut scratch, &mut flat);
+        assert_eq!(a, b);
+        assert_ne!(a, flat);
+    }
+}

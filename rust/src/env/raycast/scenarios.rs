@@ -1,0 +1,893 @@
+//! Scenario definitions: the paper's VizDoom environments rebuilt on the
+//! raycast engine (§4.3 and Fig 6/7/8).
+//!
+//! Single-player: `basic`, `defend_center`, `defend_line`,
+//! `health_gathering`, `my_way_home`, `battle`, `battle2`, plus
+//! `duel_bots`/`deathmatch_bots` (agent vs scripted bots, the paper's
+//! single-player match modes).  Multi-agent: `duel` (1v1 self-play) and
+//! `deathmatch` (2 agents + 2 bots) for the population/self-play
+//! experiments.
+//!
+//! Reward structures follow appendix A.3: game score (kills/frags) plus
+//! small shaping for pickups and damage, penalties for dying and for
+//! switching weapons too often.
+
+use crate::env::{AgentStep, Env, EnvSpec, ObsSpec};
+use crate::util::Rng;
+
+use super::map::GridMap;
+use super::render::{render, RenderScratch};
+use super::world::{
+    Entity, EntityKind, Intent, MonsterKind, Player, World, WorldCfg,
+};
+
+/// Single-player scenario kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Basic,
+    DefendCenter,
+    DefendLine,
+    HealthGathering,
+    MyWayHome,
+    Battle,
+    Battle2,
+    DuelBots,
+    DeathmatchBots,
+}
+
+/// Multi-agent scenario kinds (self-play experiments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MultiKind {
+    /// 1v1: two policy-controlled players.
+    Duel,
+    /// 2 policy players + 2 scripted bots.
+    Deathmatch,
+}
+
+/// Reward shaping weights (appendix A.3).
+#[derive(Clone, Copy, Debug)]
+pub struct Rewards {
+    pub monster_kill: f32,
+    pub player_kill: f32,
+    pub death: f32,
+    pub shot: f32,
+    pub step: f32,
+    pub health_pickup: f32,
+    pub armor_pickup: f32,
+    pub ammo_pickup: f32,
+    pub weapon_pickup: f32,
+    pub weapon_switch: f32,
+    pub damage: f32,
+    pub goal: f32,
+    pub good_object: f32,
+    pub bad_object: f32,
+}
+
+impl Default for Rewards {
+    fn default() -> Self {
+        Rewards {
+            monster_kill: 1.0,
+            player_kill: 1.0,
+            death: -1.0,
+            shot: 0.0,
+            step: 0.0,
+            health_pickup: 0.0,
+            armor_pickup: 0.0,
+            ammo_pickup: 0.0,
+            weapon_pickup: 0.0,
+            weapon_switch: 0.0,
+            damage: 0.0,
+            goal: 0.0,
+            good_object: 0.0,
+            bad_object: 0.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ScenarioCfg {
+    pub kind_name: &'static str,
+    pub episode_ticks: u32,
+    pub rewards: Rewards,
+    pub end_on_death: bool,
+    /// Episode ends when every monster is dead (basic).
+    pub end_on_clear: bool,
+    /// Episode ends on goal-object pickup (my_way_home).
+    pub end_on_goal: bool,
+    /// Player cannot translate (defend_center).
+    pub frozen_position: bool,
+    pub heavy_render: bool,
+    pub n_agents: usize,
+    pub n_bots: usize,
+}
+
+/// Decode the per-spec multi-discrete action heads into an [`Intent`].
+///
+/// Layouts (must match `env::heads_for_spec` and the python model specs):
+/// * 2 heads `[3,2]` (tiny): move/turn combo + attack.
+/// * 4 heads `[3,3,2,21]` (doomish): move, strafe, attack, aim.
+/// * 7 heads `[3,3,2,2,2,8,21]` (doomish_full): + sprint, interact, weapon.
+/// * 1 head `[7]` (gridlab): noop/fwd/back/strafeL/strafeR/turnL/turnR.
+#[derive(Clone, Copy, Debug)]
+pub struct ActionDecoder {
+    pub n_heads: usize,
+}
+
+/// Aim head: 21 discrete turn rates between -12.5 and +12.5 degrees in
+/// 1.25-degree steps (paper Table A.4); index 10 is "no turn".
+#[inline]
+fn aim_to_radians(a: i32) -> f32 {
+    ((a - 10) as f32) * 1.25f32.to_radians()
+}
+
+#[inline]
+fn tri(a: i32) -> f32 {
+    // 0 -> none, 1 -> +, 2 -> -
+    match a {
+        1 => 1.0,
+        2 => -1.0,
+        _ => 0.0,
+    }
+}
+
+impl ActionDecoder {
+    pub fn decode(&self, a: &[i32]) -> Intent {
+        debug_assert_eq!(a.len(), self.n_heads);
+        let mut it = Intent::default();
+        match self.n_heads {
+            2 => {
+                // tiny: head0 0=turnL 1=turnR 2=forward; head1 attack
+                match a[0] {
+                    0 => it.turn = -6.0f32.to_radians(),
+                    1 => it.turn = 6.0f32.to_radians(),
+                    _ => it.mv = 1.0,
+                }
+                it.attack = a[1] == 1;
+            }
+            4 => {
+                it.mv = tri(a[0]);
+                it.strafe = tri(a[1]);
+                it.attack = a[2] == 1;
+                it.turn = aim_to_radians(a[3]);
+            }
+            7 => {
+                if self.n_heads == 7 {
+                    it.mv = tri(a[0]);
+                    it.strafe = tri(a[1]);
+                    it.attack = a[2] == 1;
+                    it.sprint = a[3] == 1;
+                    it.interact = a[4] == 1;
+                    if a[5] > 0 {
+                        it.weapon = Some(a[5] as usize);
+                    }
+                    it.turn = aim_to_radians(a[6]);
+                }
+            }
+            1 => {
+                match a[0] {
+                    1 => it.mv = 1.0,
+                    2 => it.mv = -1.0,
+                    3 => it.strafe = -1.0,
+                    4 => it.strafe = 1.0,
+                    5 => it.turn = -8.0f32.to_radians(),
+                    6 => it.turn = 8.0f32.to_radians(),
+                    _ => {}
+                }
+            }
+            n => panic!("unsupported action head layout: {n} heads"),
+        }
+        it
+    }
+}
+
+/// A raycast-engine scenario exposed through the [`Env`] trait.
+pub struct RaycastEnv {
+    spec: EnvSpec,
+    cfg: ScenarioCfg,
+    world: World,
+    scratch: RenderScratch,
+    decoder: ActionDecoder,
+    /// player indices controlled by the policy (agents) / by scripts (bots)
+    agent_players: Vec<usize>,
+    bot_players: Vec<usize>,
+    tick_in_ep: u32,
+    episode_seed: u64,
+    intents: Vec<Intent>,
+    kind: KindOrMulti,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum KindOrMulti {
+    Single(Kind),
+    Multi(MultiKind),
+}
+
+pub fn build(kind: Kind, obs: ObsSpec) -> RaycastEnv {
+    let cfg = single_cfg(kind);
+    RaycastEnv::new(KindOrMulti::Single(kind), cfg, obs)
+}
+
+pub fn build_multi(kind: MultiKind, obs: ObsSpec) -> RaycastEnv {
+    let cfg = multi_cfg(kind);
+    RaycastEnv::new(KindOrMulti::Multi(kind), cfg, obs)
+}
+
+fn single_cfg(kind: Kind) -> ScenarioCfg {
+    let mut c = ScenarioCfg {
+        kind_name: "?",
+        episode_ticks: 2100,
+        rewards: Rewards::default(),
+        end_on_death: true,
+        end_on_clear: false,
+        end_on_goal: false,
+        frozen_position: false,
+        heavy_render: false,
+        n_agents: 1,
+        n_bots: 0,
+    };
+    match kind {
+        Kind::Basic => {
+            c.kind_name = "basic";
+            c.episode_ticks = 300;
+            c.end_on_clear = true;
+            c.rewards.monster_kill = 100.0;
+            c.rewards.shot = -1.0; // discourage spray without burying the kill signal
+            c.rewards.step = -0.25; // -1 per 4-frameskip action, as VizDoom
+        }
+        Kind::DefendCenter => {
+            c.kind_name = "defend_center";
+            c.frozen_position = true;
+            c.rewards.monster_kill = 1.0;
+            c.rewards.death = -1.0;
+        }
+        Kind::DefendLine => {
+            c.kind_name = "defend_line";
+            c.rewards.monster_kill = 1.0;
+            c.rewards.death = -1.0;
+        }
+        Kind::HealthGathering => {
+            c.kind_name = "health_gathering";
+            c.rewards.step = 0.25; // +1 per action alive
+            c.rewards.death = -1.0;
+        }
+        Kind::MyWayHome => {
+            c.kind_name = "my_way_home";
+            c.end_on_goal = true;
+            c.end_on_death = false;
+            c.rewards.goal = 1.0;
+            c.rewards.step = -0.0001;
+        }
+        Kind::Battle => {
+            c.kind_name = "battle";
+            c.rewards.monster_kill = 1.0;
+            c.rewards.death = -1.0;
+            c.rewards.health_pickup = 0.2;
+            c.rewards.ammo_pickup = 0.2;
+            c.rewards.damage = 0.01;
+        }
+        Kind::Battle2 => {
+            c.kind_name = "battle2";
+            c.rewards.monster_kill = 1.0;
+            c.rewards.death = -1.0;
+            c.rewards.health_pickup = 0.2;
+            c.rewards.ammo_pickup = 0.2;
+            c.rewards.damage = 0.01;
+        }
+        Kind::DuelBots => {
+            c.kind_name = "duel_bots";
+            c.end_on_death = false; // respawn, match runs to the timer
+            c.n_bots = 1;
+            c.rewards = match_rewards();
+        }
+        Kind::DeathmatchBots => {
+            c.kind_name = "deathmatch_bots";
+            c.end_on_death = false;
+            c.n_bots = 3;
+            c.rewards = match_rewards();
+        }
+    }
+    c
+}
+
+fn match_rewards() -> Rewards {
+    Rewards {
+        player_kill: 1.0,
+        death: -1.0,
+        damage: 0.01,
+        weapon_pickup: 0.2,
+        health_pickup: 0.05,
+        armor_pickup: 0.05,
+        ammo_pickup: 0.05,
+        weapon_switch: -0.05,
+        ..Rewards::default()
+    }
+}
+
+fn multi_cfg(kind: MultiKind) -> ScenarioCfg {
+    let (name, n_agents, n_bots) = match kind {
+        MultiKind::Duel => ("duel", 2, 0),
+        MultiKind::Deathmatch => ("deathmatch", 2, 2),
+    };
+    ScenarioCfg {
+        kind_name: name,
+        episode_ticks: 2100,
+        rewards: match_rewards(),
+        end_on_death: false,
+        end_on_clear: false,
+        end_on_goal: false,
+        frozen_position: false,
+        heavy_render: false,
+        n_agents,
+        n_bots,
+    }
+}
+
+/// The hand-authored duel arena: pillars for cover, weapon pickups in the
+/// middle, armor behind a door (the paper's agents learn to open it).
+const ARENA: &str = "\
+####################
+#........##........#
+#.2#..............4#
+#..#..####..####...#
+#..........2.......#
+#...##........##...#
+#...#..........#...#
+#........##........#
+#...#..........#...#
+#...##........##...#
+#.......4..........#
+#..#..####..####...#
+#.3#..............5#
+#........D.........#
+####################";
+
+impl RaycastEnv {
+    fn new(kind: KindOrMulti, cfg: ScenarioCfg, obs: ObsSpec) -> Self {
+        let n_heads = match obs {
+            // tiny spec drives basic with 2 heads; real specs pass via env::make
+            _ if obs.h == 24 => 2,
+            _ if obs.h == 72 => 1, // gridlab geometry is handled by gridlab.rs
+            _ => match kind {
+                KindOrMulti::Single(Kind::DuelBots)
+                | KindOrMulti::Single(Kind::DeathmatchBots)
+                | KindOrMulti::Multi(_) => 7,
+                _ => 4,
+            },
+        };
+        let heads = match n_heads {
+            2 => vec![3, 2],
+            4 => vec![3, 3, 2, 21],
+            7 => vec![3, 3, 2, 2, 2, 8, 21],
+            1 => vec![7],
+            _ => unreachable!(),
+        };
+        let spec = EnvSpec {
+            name: cfg.kind_name.to_string(),
+            obs,
+            action_heads: heads,
+            n_agents: cfg.n_agents,
+        };
+        let world = World::new(GridMap::new(3, 3, 1), WorldCfg::default(), 0);
+        let mut env = RaycastEnv {
+            spec,
+            cfg,
+            world,
+            scratch: RenderScratch::new(obs.w),
+            decoder: ActionDecoder { n_heads },
+            agent_players: Vec::new(),
+            bot_players: Vec::new(),
+            tick_in_ep: 0,
+            episode_seed: 0,
+            intents: Vec::new(),
+            kind,
+        };
+        env.start_episode(12345);
+        env
+    }
+
+    /// (Re)build the world for a fresh episode.
+    fn start_episode(&mut self, seed: u64) {
+        self.episode_seed = seed;
+        let mut rng = Rng::new(seed);
+        let kind = self.kind;
+        let cfg = &self.cfg;
+        let mut wcfg = WorldCfg::default();
+        let (map, players, entities): (GridMap, Vec<Player>, Vec<Entity>) = match kind {
+            KindOrMulti::Single(Kind::Basic) => {
+                let map = GridMap::from_ascii(
+                    "##############\n\
+                     #............#\n\
+                     #............#\n\
+                     #............#\n\
+                     #............#\n\
+                     #............#\n\
+                     ##############",
+                );
+                wcfg.passive_monsters = true; // the basic target never fights back
+                let py = 1.5 + rng.next_f32() * 4.0;
+                let my = 1.5 + rng.next_f32() * 4.0;
+                let p = Player::new(1.5, py, 0.0);
+                let mut m =
+                    Entity::new(EntityKind::Monster(MonsterKind::Shooter), 12.5, my);
+                m.hp = 10.0; // dies to a single hit, as in VizDoom basic
+                (map, vec![p], vec![m])
+            }
+            KindOrMulti::Single(Kind::DefendCenter) => {
+                let map = GridMap::from_ascii(
+                    "###############\n\
+                     #.............#\n\
+                     #.............#\n\
+                     #.............#\n\
+                     #.............#\n\
+                     #.............#\n\
+                     #.............#\n\
+                     #.............#\n\
+                     ###############",
+                );
+                wcfg.monster_respawn_ticks = 120;
+                let mut p = Player::new(7.5, 4.5, 0.0);
+                p.ammo[1] = 26; // limited ammo, as in VizDoom
+                let mut ents = Vec::new();
+                for i in 0..5 {
+                    let a = i as f32 * 1.26;
+                    let (x, y) = (7.5 + a.cos() * 5.5, 4.5 + a.sin() * 3.0);
+                    ents.push(Entity::new(
+                        EntityKind::Monster(MonsterKind::Chaser),
+                        x.clamp(1.5, 13.5),
+                        y.clamp(1.5, 7.5),
+                    ));
+                }
+                (map, vec![p], ents)
+            }
+            KindOrMulti::Single(Kind::DefendLine) => {
+                let map = GridMap::from_ascii(
+                    "####################\n\
+                     #..................#\n\
+                     #..................#\n\
+                     #..................#\n\
+                     #..................#\n\
+                     #..................#\n\
+                     ####################",
+                );
+                wcfg.monster_respawn_ticks = 150;
+                let p = Player::new(2.0, 3.5, 0.0);
+                let mut ents = Vec::new();
+                for i in 0..6 {
+                    let y = 1.5 + (i as f32) * 0.8;
+                    let kind = if i % 2 == 0 {
+                        MonsterKind::Chaser
+                    } else {
+                        MonsterKind::Shooter
+                    };
+                    ents.push(Entity::new(EntityKind::Monster(kind), 17.5, y));
+                }
+                (map, vec![p], ents)
+            }
+            KindOrMulti::Single(Kind::HealthGathering) => {
+                let map = GridMap::from_ascii(
+                    "################\n\
+                     #..............#\n\
+                     #..............#\n\
+                     #..............#\n\
+                     #..............#\n\
+                     #..............#\n\
+                     #..............#\n\
+                     #..............#\n\
+                     ################",
+                );
+                wcfg.floor_damage = 0.23; // ~8 hp/s at 35 ticks/s, VizDoom-like
+                let p = Player::new(8.0, 4.5, rng.range_f32(-3.14, 3.14));
+                let mut ents = Vec::new();
+                for _ in 0..10 {
+                    let (x, y) = map.random_spawn(&mut rng, None);
+                    ents.push(Entity::new(EntityKind::HealthPack, x, y).with_respawn(220));
+                }
+                (map, vec![p], ents)
+            }
+            KindOrMulti::Single(Kind::MyWayHome) => {
+                let map = GridMap::maze(5, 4, 2, 0.12, &mut rng);
+                let (gx, gy) = map.random_spawn(&mut rng, None);
+                let goal = Entity::new(EntityKind::Object { good: true }, gx, gy);
+                let (px, py) = map.random_spawn(&mut rng, Some((gx, gy, 5.0)));
+                let p = Player::new(px, py, rng.range_f32(-3.14, 3.14));
+                (map, vec![p], vec![goal])
+            }
+            KindOrMulti::Single(Kind::Battle) | KindOrMulti::Single(Kind::Battle2) => {
+                let battle2 = matches!(kind, KindOrMulti::Single(Kind::Battle2));
+                let map = if battle2 {
+                    GridMap::maze(9, 7, 2, 0.12, &mut rng)
+                } else {
+                    GridMap::maze(6, 5, 3, 0.3, &mut rng)
+                };
+                wcfg.monster_respawn_ticks = 220;
+                let (px, py) = map.random_spawn(&mut rng, None);
+                let mut p = Player::new(px, py, rng.range_f32(-3.14, 3.14));
+                p.weapons_owned |= 1 << 3; // chaingun, the battle loadout
+                p.weapon = 3;
+                p.ammo[3] = 60;
+                let mut ents = Vec::new();
+                let n_monsters = if battle2 { 14 } else { 10 };
+                for i in 0..n_monsters {
+                    let (x, y) = map.random_spawn(&mut rng, Some((px, py, 4.0)));
+                    let kindm = if i % 3 == 0 {
+                        MonsterKind::Shooter
+                    } else {
+                        MonsterKind::Chaser
+                    };
+                    ents.push(Entity::new(EntityKind::Monster(kindm), x, y));
+                }
+                let (n_hp, n_ammo) = if battle2 { (3, 3) } else { (6, 6) };
+                for _ in 0..n_hp {
+                    let (x, y) = map.random_spawn(&mut rng, None);
+                    ents.push(Entity::new(EntityKind::HealthPack, x, y).with_respawn(350));
+                }
+                for _ in 0..n_ammo {
+                    let (x, y) = map.random_spawn(&mut rng, None);
+                    ents.push(Entity::new(EntityKind::AmmoPack, x, y).with_respawn(350));
+                }
+                (map, vec![p], ents)
+            }
+            KindOrMulti::Single(Kind::DuelBots)
+            | KindOrMulti::Single(Kind::DeathmatchBots)
+            | KindOrMulti::Multi(_) => {
+                let map = GridMap::from_ascii(ARENA);
+                wcfg.player_respawn_ticks = 70;
+                let total = cfg.n_agents + cfg.n_bots;
+                let mut players = Vec::new();
+                for i in 0..total {
+                    let avoid = players.first().map(|q: &Player| (q.x, q.y, 6.0));
+                    let (x, y) = map.random_spawn(&mut rng, avoid);
+                    let mut p = Player::new(x, y, rng.range_f32(-3.14, 3.14));
+                    p.is_bot = i >= cfg.n_agents;
+                    players.push(p);
+                }
+                let mut ents = Vec::new();
+                // Weapon pickups: shotgun, chaingun, plasma; armor; health.
+                for (slot, n) in [(2usize, 2), (3, 2), (5, 1)] {
+                    for _ in 0..n {
+                        let (x, y) = map.random_spawn(&mut rng, None);
+                        ents.push(
+                            Entity::new(EntityKind::WeaponPickup(slot), x, y)
+                                .with_respawn(400),
+                        );
+                    }
+                }
+                for _ in 0..3 {
+                    let (x, y) = map.random_spawn(&mut rng, None);
+                    ents.push(Entity::new(EntityKind::HealthPack, x, y).with_respawn(300));
+                }
+                for _ in 0..2 {
+                    let (x, y) = map.random_spawn(&mut rng, None);
+                    ents.push(Entity::new(EntityKind::ArmorPack, x, y).with_respawn(500));
+                }
+                for _ in 0..3 {
+                    let (x, y) = map.random_spawn(&mut rng, None);
+                    ents.push(Entity::new(EntityKind::AmmoPack, x, y).with_respawn(250));
+                }
+                (map, players, ents)
+            }
+        };
+
+        let mut world = World::new(map, wcfg, rng.next_u64());
+        world.players = players;
+        world.entities = entities;
+        self.agent_players = (0..self.cfg.n_agents).collect();
+        self.bot_players = (self.cfg.n_agents..world.players.len()).collect();
+        self.world = world;
+        self.tick_in_ep = 0;
+        self.intents.clear();
+        self.intents.resize(
+            self.agent_players.len() + self.bot_players.len(),
+            Intent::default(),
+        );
+    }
+
+    fn episode_done(&self) -> bool {
+        if self.tick_in_ep >= self.cfg.episode_ticks {
+            return true;
+        }
+        if self.cfg.end_on_death
+            && self.agent_players.iter().any(|&i| !self.world.players[i].alive)
+        {
+            return true;
+        }
+        if self.cfg.end_on_clear
+            && !self.world.entities.iter().any(|e| e.alive && e.is_monster())
+        {
+            return true;
+        }
+        if self.cfg.end_on_goal && !self.world.events.objects.is_empty() {
+            return true;
+        }
+        false
+    }
+
+    /// Final per-agent score of the current episode (frags for match modes)
+    /// — used by the PBT meta-objective.
+    pub fn agent_frags(&self, agent: usize) -> i32 {
+        self.world.players[self.agent_players[agent]].frags
+    }
+}
+
+impl Env for RaycastEnv {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.start_episode(seed);
+    }
+
+    fn step(&mut self, actions: &[i32], out: &mut [AgentStep]) {
+        let n_heads = self.decoder.n_heads;
+        debug_assert_eq!(actions.len(), self.cfg.n_agents * n_heads);
+        debug_assert_eq!(out.len(), self.cfg.n_agents);
+
+        // Decode agent intents; ask the scripted policy for bot intents.
+        for (a, &pi) in self.agent_players.clone().iter().enumerate() {
+            let mut intent = self.decoder.decode(&actions[a * n_heads..(a + 1) * n_heads]);
+            if self.cfg.frozen_position {
+                intent.mv = 0.0;
+                intent.strafe = 0.0;
+                intent.sprint = false;
+            }
+            self.intents[pi] = intent;
+        }
+        for &pi in &self.bot_players.clone() {
+            self.intents[pi] = self.world.bot_intent(pi);
+        }
+
+        let intents = std::mem::take(&mut self.intents);
+        self.world.tick(&intents);
+        self.intents = intents;
+        self.tick_in_ep += 1;
+
+        // Rewards from the event stream.
+        let rw = self.cfg.rewards;
+        for (a, &pi) in self.agent_players.iter().enumerate() {
+            let mut r = rw.step;
+            let ev = &self.world.events;
+            r += rw.monster_kill
+                * ev.monster_kills.iter().filter(|&&k| k == pi).count() as f32;
+            r += rw.player_kill
+                * ev.player_kills.iter().filter(|&&(k, _)| k == pi).count() as f32;
+            r += rw.death * ev.deaths.iter().filter(|&&d| d == pi).count() as f32;
+            r += rw.shot * ev.shots.iter().filter(|&&s| s == pi).count() as f32;
+            r += rw.weapon_switch
+                * ev.weapon_switches.iter().filter(|&&s| s == pi).count() as f32;
+            for &(p, dmg) in &ev.damage_dealt {
+                if p == pi {
+                    r += rw.damage * dmg;
+                }
+            }
+            for &(p, kind) in &ev.pickups {
+                if p == pi {
+                    r += match kind {
+                        EntityKind::HealthPack => rw.health_pickup,
+                        EntityKind::ArmorPack => rw.armor_pickup,
+                        EntityKind::AmmoPack => rw.ammo_pickup,
+                        EntityKind::WeaponPickup(_) => rw.weapon_pickup,
+                        _ => 0.0,
+                    };
+                }
+            }
+            for &(p, good) in &ev.objects {
+                if p == pi {
+                    r += if self.cfg.end_on_goal {
+                        rw.goal
+                    } else if good {
+                        rw.good_object
+                    } else {
+                        rw.bad_object
+                    };
+                }
+            }
+            out[a] = AgentStep { reward: r, done: false };
+        }
+
+        if self.episode_done() {
+            for s in out.iter_mut() {
+                s.done = true;
+            }
+            // Auto-reset with a fresh seed derived from the episode.
+            let next = self
+                .episode_seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(self.tick_in_ep as u64 + 1);
+            self.start_episode(next);
+        }
+    }
+
+    fn render(&mut self, agent: usize, obs: &mut [u8]) {
+        render(
+            &self.world,
+            self.agent_players[agent],
+            self.spec.obs,
+            self.cfg.heavy_render,
+            &mut self.scratch,
+            obs,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOOM_OBS: ObsSpec = ObsSpec { h: 36, w: 64, c: 3 };
+
+    fn run_random(env: &mut RaycastEnv, steps: usize, seed: u64) -> (f64, usize) {
+        let mut rng = Rng::new(seed);
+        let heads = env.spec().action_heads.clone();
+        let n_agents = env.spec().n_agents;
+        let mut actions = vec![0i32; n_agents * heads.len()];
+        let mut out = vec![AgentStep::default(); n_agents];
+        let mut total = 0.0f64;
+        let mut dones = 0usize;
+        let mut obs = vec![0u8; env.spec().obs.len()];
+        for t in 0..steps {
+            for a in 0..n_agents {
+                for (h, &n) in heads.iter().enumerate() {
+                    actions[a * heads.len() + h] = rng.below(n) as i32;
+                }
+            }
+            env.step(&actions, &mut out);
+            total += out[0].reward as f64;
+            dones += out.iter().filter(|s| s.done).count();
+            if t % 16 == 0 {
+                env.render(0, &mut obs);
+            }
+        }
+        (total, dones)
+    }
+
+    #[test]
+    fn all_single_scenarios_run() {
+        for kind in [
+            Kind::Basic,
+            Kind::DefendCenter,
+            Kind::DefendLine,
+            Kind::HealthGathering,
+            Kind::MyWayHome,
+            Kind::Battle,
+            Kind::Battle2,
+            Kind::DuelBots,
+            Kind::DeathmatchBots,
+        ] {
+            let mut env = build(kind, DOOM_OBS);
+            env.reset(7);
+            let (_, _) = run_random(&mut env, 800, 99);
+        }
+    }
+
+    #[test]
+    fn multi_scenarios_have_two_agents() {
+        for kind in [MultiKind::Duel, MultiKind::Deathmatch] {
+            let mut env = build_multi(kind, DOOM_OBS);
+            env.reset(3);
+            assert_eq!(env.spec().n_agents, 2);
+            assert_eq!(env.spec().action_heads.len(), 7);
+            let (_, _) = run_random(&mut env, 500, 5);
+        }
+    }
+
+    #[test]
+    fn basic_timeout_ends_episode() {
+        let mut env = build(Kind::Basic, DOOM_OBS);
+        env.reset(1);
+        // Never fires: episode must end by timeout at 300 ticks.
+        let mut out = [AgentStep::default()];
+        let noop = [2i32, 0, 0, 10]; // move fwd, no attack
+        let mut done_at = 0;
+        for t in 1..=400 {
+            env.step(&noop, &mut out);
+            if out[0].done {
+                done_at = t;
+                break;
+            }
+        }
+        assert_eq!(done_at, 300);
+    }
+
+    #[test]
+    fn basic_kill_gives_big_reward_and_ends() {
+        // Aim straight ahead and shoot: the monster is in line (same y
+        // within spawn randomness won't guarantee), so steer by scanning:
+        // turn until the shot lands, which must eventually kill it.
+        let mut env = build(Kind::Basic, DOOM_OBS);
+        env.reset(11);
+        let mut out = [AgentStep::default()];
+        let mut best_step_reward = f32::NEG_INFINITY;
+        let mut kill_ended_episode = false;
+        for t in 0..4000 {
+            // sweep aim slowly while firing every few frames
+            let aim = if t % 60 < 30 { 11 } else { 9 };
+            let attack = i32::from(t % 4 == 0);
+            env.step(&[0, 0, attack, aim], &mut out);
+            best_step_reward = best_step_reward.max(out[0].reward);
+            if out[0].reward > 50.0 {
+                // The kill reward (+100) must also terminate the episode.
+                kill_ended_episode = out[0].done;
+                break;
+            }
+        }
+        assert!(
+            best_step_reward > 50.0,
+            "never scored a kill, best step reward={best_step_reward}"
+        );
+        assert!(kill_ended_episode, "kill did not end the basic episode");
+    }
+
+    #[test]
+    fn health_gathering_rewards_survival() {
+        let mut env = build(Kind::HealthGathering, DOOM_OBS);
+        env.reset(2);
+        let mut out = [AgentStep::default()];
+        let mut ticks_alive = 0;
+        // Move around collecting medkits: random walk lives longer than
+        // standing still, but even idle the reward is positive until death.
+        for _ in 0..300 {
+            env.step(&[1, 0, 0, 10], &mut out);
+            if out[0].done {
+                break;
+            }
+            assert!(out[0].reward > 0.0);
+            ticks_alive += 1;
+        }
+        assert!(ticks_alive > 100);
+    }
+
+    #[test]
+    fn duel_bots_episode_is_fixed_length_match() {
+        let mut env = build(Kind::DuelBots, DOOM_OBS);
+        env.reset(5);
+        assert_eq!(env.spec().action_heads.len(), 7);
+        let mut out = [AgentStep::default()];
+        let noop = [0i32, 0, 0, 0, 0, 0, 10];
+        let mut steps = 0;
+        loop {
+            env.step(&noop, &mut out);
+            steps += 1;
+            if out[0].done {
+                break;
+            }
+            assert!(steps <= 2100, "match never ended");
+        }
+        assert_eq!(steps, 2100);
+    }
+
+    #[test]
+    fn deterministic_episode_given_seed() {
+        let run = |seed: u64| {
+            let mut env = build(Kind::Battle, DOOM_OBS);
+            env.reset(seed);
+            run_random(&mut env, 600, 1234)
+        };
+        assert_eq!(run(10), run(10));
+        assert_ne!(run(10), run(11));
+    }
+
+    #[test]
+    fn aim_mapping_matches_paper_table() {
+        // 21 aim actions spanning [-12.5, +12.5] degrees in 1.25 steps.
+        assert!((aim_to_radians(0) + 12.5f32.to_radians()).abs() < 1e-6);
+        assert!((aim_to_radians(10)).abs() < 1e-9);
+        assert!((aim_to_radians(20) - 12.5f32.to_radians()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn frozen_position_blocks_movement() {
+        let mut env = build(Kind::DefendCenter, DOOM_OBS);
+        env.reset(4);
+        let (x0, y0) = (env.world.players[0].x, env.world.players[0].y);
+        let mut out = [AgentStep::default()];
+        for _ in 0..50 {
+            env.step(&[1, 1, 0, 10], &mut out); // try to run
+            if out[0].done {
+                break;
+            }
+        }
+        let p = &env.world.players[0];
+        assert_eq!((p.x, p.y), (x0, y0));
+    }
+}

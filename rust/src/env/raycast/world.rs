@@ -1,0 +1,983 @@
+//! World simulation for the raycast engine: players, monsters, pickups,
+//! projectile-free hitscan combat, doors, scripted-bot and monster AI.
+//!
+//! One [`World::tick`] advances the simulation a single frame (the paper's
+//! "environment step"); rendering is separate (`render.rs`) so frameskip
+//! can skip it.
+
+use crate::util::Rng;
+
+use super::map::{GridMap, DOOR_OPEN, EMPTY};
+
+pub const PLAYER_RADIUS: f32 = 0.3;
+pub const MONSTER_RADIUS: f32 = 0.35;
+pub const PICKUP_RADIUS: f32 = 0.45;
+pub const MOVE_SPEED: f32 = 0.10;
+pub const SPRINT_MULT: f32 = 1.6;
+pub const MONSTER_SPEED: f32 = 0.045;
+
+/// Weapon table: (damage, cooldown ticks, range, ammo slot, ammo cost, name).
+/// Slot 0 (fist) is melee and needs no ammo; higher slots roughly match the
+/// classic Doom arsenal's pacing.
+pub const WEAPONS: [WeaponDef; 8] = [
+    WeaponDef { damage: 12.0, cooldown: 12, range: 1.6, ammo_cost: 0, name: "fist" },
+    WeaponDef { damage: 12.0, cooldown: 10, range: 24.0, ammo_cost: 1, name: "pistol" },
+    WeaponDef { damage: 42.0, cooldown: 22, range: 12.0, ammo_cost: 2, name: "shotgun" },
+    WeaponDef { damage: 11.0, cooldown: 3, range: 24.0, ammo_cost: 1, name: "chaingun" },
+    WeaponDef { damage: 70.0, cooldown: 30, range: 20.0, ammo_cost: 4, name: "rocket" },
+    WeaponDef { damage: 24.0, cooldown: 6, range: 24.0, ammo_cost: 1, name: "plasma" },
+    WeaponDef { damage: 150.0, cooldown: 50, range: 24.0, ammo_cost: 8, name: "bfg" },
+    WeaponDef { damage: 20.0, cooldown: 8, range: 18.0, ammo_cost: 1, name: "ssg" },
+];
+
+#[derive(Clone, Copy, Debug)]
+pub struct WeaponDef {
+    pub damage: f32,
+    pub cooldown: u32,
+    pub range: f32,
+    pub ammo_cost: u32,
+    pub name: &'static str,
+}
+
+/// Movement/combat intent decoded from the discrete action heads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Intent {
+    /// -1 / 0 / +1 (backward / none / forward).
+    pub mv: f32,
+    /// -1 / 0 / +1 (left / none / right).
+    pub strafe: f32,
+    /// Turn delta in radians this frame.
+    pub turn: f32,
+    pub attack: bool,
+    pub sprint: bool,
+    pub interact: bool,
+    /// Switch to weapon slot (0..8).
+    pub weapon: Option<usize>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MonsterKind {
+    /// Melee chaser (pinky-style).
+    Chaser,
+    /// Hitscan shooter (zombieman-style).
+    Shooter,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntityKind {
+    Monster(MonsterKind),
+    HealthPack,
+    ArmorPack,
+    AmmoPack,
+    WeaponPickup(usize),
+    /// Gridlab objects: reward +1 (good) or -1 (bad).
+    Object { good: bool },
+}
+
+#[derive(Clone, Debug)]
+pub struct Entity {
+    pub kind: EntityKind,
+    pub x: f32,
+    pub y: f32,
+    pub hp: f32,
+    pub alive: bool,
+    pub cooldown: u32,
+    /// Ticks until a consumed pickup respawns (0 = never).
+    pub respawn_ticks: u32,
+    respawn_in: u32,
+}
+
+impl Entity {
+    pub fn new(kind: EntityKind, x: f32, y: f32) -> Self {
+        let hp = match kind {
+            EntityKind::Monster(MonsterKind::Chaser) => 40.0,
+            EntityKind::Monster(MonsterKind::Shooter) => 25.0,
+            _ => 1.0,
+        };
+        Entity { kind, x, y, hp, alive: true, cooldown: 0, respawn_ticks: 0, respawn_in: 0 }
+    }
+
+    pub fn with_respawn(mut self, ticks: u32) -> Self {
+        self.respawn_ticks = ticks;
+        self
+    }
+
+    pub fn is_monster(&self) -> bool {
+        matches!(self.kind, EntityKind::Monster(_))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Player {
+    pub x: f32,
+    pub y: f32,
+    pub angle: f32,
+    pub health: f32,
+    pub armor: f32,
+    pub alive: bool,
+    pub ammo: [u32; 8],
+    pub weapons_owned: u8, // bitmask
+    pub weapon: usize,
+    pub cooldown: u32,
+    pub frags: i32,
+    pub deaths: u32,
+    /// Ticks until respawn when dead (match modes).
+    pub respawn_in: u32,
+    /// True for scripted bots (full state access, as in the paper).
+    pub is_bot: bool,
+    /// Scripted-bot state: current waypoint.
+    bot_goal: Option<(f32, f32)>,
+}
+
+impl Player {
+    pub fn new(x: f32, y: f32, angle: f32) -> Self {
+        Player {
+            x,
+            y,
+            angle,
+            health: 100.0,
+            armor: 0.0,
+            alive: true,
+            ammo: [0, 50, 0, 0, 0, 0, 0, 0],
+            weapons_owned: 0b11, // fist + pistol
+            weapon: 1,
+            cooldown: 0,
+            frags: 0,
+            deaths: 0,
+            respawn_in: 0,
+            is_bot: false,
+            bot_goal: None,
+        }
+    }
+
+    pub fn owns(&self, w: usize) -> bool {
+        self.weapons_owned & (1 << w) != 0
+    }
+}
+
+/// Events emitted by one tick, consumed by the scenario layer to compute
+/// rewards (kills, damage, pickups, deaths...).
+#[derive(Clone, Debug, Default)]
+pub struct TickEvents {
+    /// (player idx, monsters killed this tick)
+    pub monster_kills: Vec<usize>,
+    /// (killer player, victim player)
+    pub player_kills: Vec<(usize, usize)>,
+    /// (player, damage dealt to monsters or players)
+    pub damage_dealt: Vec<(usize, f32)>,
+    /// players that died this tick
+    pub deaths: Vec<usize>,
+    /// (player, kind) pickups collected
+    pub pickups: Vec<(usize, EntityKind)>,
+    /// (player, good) gridlab objects collected
+    pub objects: Vec<(usize, bool)>,
+    /// players that fired a shot this tick
+    pub shots: Vec<usize>,
+    /// players that switched weapons this tick
+    pub weapon_switches: Vec<usize>,
+    /// (player, amount) health lost to environment (acid floor)
+    pub env_damage: Vec<usize>,
+}
+
+impl TickEvents {
+    pub fn clear(&mut self) {
+        self.monster_kills.clear();
+        self.player_kills.clear();
+        self.damage_dealt.clear();
+        self.deaths.clear();
+        self.pickups.clear();
+        self.objects.clear();
+        self.shots.clear();
+        self.weapon_switches.clear();
+        self.env_damage.clear();
+    }
+}
+
+/// World configuration flags (set by the scenario).
+#[derive(Clone, Debug)]
+pub struct WorldCfg {
+    /// Monsters respawn after this many ticks (0 = stay dead).
+    pub monster_respawn_ticks: u32,
+    /// Dead players respawn (match modes) after this many ticks (0 = stay
+    /// dead, scenario ends the episode).
+    pub player_respawn_ticks: u32,
+    /// Acid floor: health drained per tick (health_gathering).
+    pub floor_damage: f32,
+    /// Friendly monsters never attack (gridlab).
+    pub passive_monsters: bool,
+}
+
+impl Default for WorldCfg {
+    fn default() -> Self {
+        WorldCfg {
+            monster_respawn_ticks: 0,
+            player_respawn_ticks: 0,
+            floor_damage: 0.0,
+            passive_monsters: false,
+        }
+    }
+}
+
+pub struct World {
+    pub map: GridMap,
+    pub players: Vec<Player>,
+    pub entities: Vec<Entity>,
+    pub cfg: WorldCfg,
+    pub tick_count: u64,
+    pub rng: Rng,
+    pub events: TickEvents,
+}
+
+impl World {
+    pub fn new(map: GridMap, cfg: WorldCfg, seed: u64) -> Self {
+        World {
+            map,
+            players: Vec::new(),
+            entities: Vec::new(),
+            cfg,
+            tick_count: 0,
+            rng: Rng::new(seed),
+            events: TickEvents::default(),
+        }
+    }
+
+    /// Move an actor with wall sliding; returns the new position.
+    fn slide(map: &GridMap, x: f32, y: f32, dx: f32, dy: f32, r: f32) -> (f32, f32) {
+        let mut nx = x;
+        let mut ny = y;
+        let tx = x + dx;
+        if !map.is_solid(tx + r * dx.signum(), y - r)
+            && !map.is_solid(tx + r * dx.signum(), y + r)
+        {
+            nx = tx;
+        }
+        let ty = y + dy;
+        if !map.is_solid(nx - r, ty + r * dy.signum())
+            && !map.is_solid(nx + r, ty + r * dy.signum())
+        {
+            ny = ty;
+        }
+        (nx, ny)
+    }
+
+    /// Distance to the nearest wall along `angle` from (x, y), capped.
+    pub fn wall_distance(&self, x: f32, y: f32, angle: f32, max: f32) -> f32 {
+        let (dx, dy) = (angle.cos(), angle.sin());
+        let step = 0.05f32;
+        let mut d = 0.0;
+        while d < max {
+            d += step;
+            if self.map.is_solid(x + dx * d, y + dy * d) {
+                return d;
+            }
+        }
+        max
+    }
+
+    /// Hitscan attack from player `shooter`; applies damage, records events.
+    fn fire(&mut self, shooter: usize) {
+        let (sx, sy, angle, weapon) = {
+            let p = &self.players[shooter];
+            (p.x, p.y, p.angle, p.weapon)
+        };
+        let def = &WEAPONS[weapon];
+        let wall_d = self.wall_distance(sx, sy, angle, def.range);
+        let (dx, dy) = (angle.cos(), angle.sin());
+
+        // Nearest target (monster or other player) within the beam.
+        let mut best: Option<(f32, Target)> = None;
+        for (i, e) in self.entities.iter().enumerate() {
+            if !e.alive || !e.is_monster() {
+                continue;
+            }
+            if let Some(d) = beam_hit(sx, sy, dx, dy, e.x, e.y, MONSTER_RADIUS, wall_d) {
+                if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                    best = Some((d, Target::Monster(i)));
+                }
+            }
+        }
+        for (i, p) in self.players.iter().enumerate() {
+            if i == shooter || !p.alive {
+                continue;
+            }
+            if let Some(d) = beam_hit(sx, sy, dx, dy, p.x, p.y, PLAYER_RADIUS + 0.05, wall_d)
+            {
+                if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                    best = Some((d, Target::Player(i)));
+                }
+            }
+        }
+
+        if let Some((_, target)) = best {
+            let dmg = def.damage;
+            match target {
+                Target::Monster(i) => {
+                    let e = &mut self.entities[i];
+                    e.hp -= dmg;
+                    self.events.damage_dealt.push((shooter, dmg));
+                    if e.hp <= 0.0 {
+                        e.alive = false;
+                        e.respawn_in = self.cfg.monster_respawn_ticks;
+                        self.events.monster_kills.push(shooter);
+                    }
+                }
+                Target::Player(i) => {
+                    self.events.damage_dealt.push((shooter, dmg));
+                    self.damage_player(i, dmg, Some(shooter));
+                }
+            }
+        }
+    }
+
+    fn damage_player(&mut self, victim: usize, dmg: f32, source: Option<usize>) {
+        let p = &mut self.players[victim];
+        if !p.alive {
+            return;
+        }
+        // Armor absorbs a third, Doom-style.
+        let absorbed = (dmg / 3.0).min(p.armor);
+        p.armor -= absorbed;
+        p.health -= dmg - absorbed;
+        if p.health <= 0.0 {
+            p.alive = false;
+            p.deaths += 1;
+            p.respawn_in = self.cfg.player_respawn_ticks;
+            self.events.deaths.push(victim);
+            if let Some(s) = source {
+                self.players[s].frags += 1;
+                self.events.player_kills.push((s, victim));
+            }
+        }
+    }
+
+    /// Advance one frame given per-player intents (bots get their intent
+    /// from `bot_intent`, agents from the policy).
+    pub fn tick(&mut self, intents: &[Intent]) {
+        assert_eq!(intents.len(), self.players.len());
+        self.events.clear();
+        self.tick_count += 1;
+
+        // 1. Player movement / actions.
+        for i in 0..self.players.len() {
+            let intent = intents[i];
+            // Respawn handling.
+            if !self.players[i].alive {
+                if self.players[i].respawn_in > 0 {
+                    self.players[i].respawn_in -= 1;
+                    if self.players[i].respawn_in == 0 {
+                        self.respawn_player(i);
+                    }
+                }
+                continue;
+            }
+            let p = &mut self.players[i];
+            p.angle += intent.turn;
+            // Keep angle in [-pi, pi] to avoid float drift over long matches.
+            if p.angle > std::f32::consts::PI {
+                p.angle -= 2.0 * std::f32::consts::PI;
+            } else if p.angle < -std::f32::consts::PI {
+                p.angle += 2.0 * std::f32::consts::PI;
+            }
+            let speed = MOVE_SPEED * if intent.sprint { SPRINT_MULT } else { 1.0 };
+            let (c, s) = (p.angle.cos(), p.angle.sin());
+            let dx = (c * intent.mv - s * intent.strafe) * speed;
+            let dy = (s * intent.mv + c * intent.strafe) * speed;
+            let (px, py) = (p.x, p.y);
+            let (nx, ny) = Self::slide(&self.map, px, py, dx, dy, PLAYER_RADIUS);
+            let p = &mut self.players[i];
+            p.x = nx;
+            p.y = ny;
+
+            if let Some(w) = intent.weapon {
+                if w < 8 && p.owns(w) && p.weapon != w {
+                    p.weapon = w;
+                    p.cooldown = p.cooldown.max(6); // switch delay
+                    self.events.weapon_switches.push(i);
+                }
+            }
+            if intent.interact {
+                let (x, y, a) = (p.x, p.y, p.angle);
+                self.map.open_door(x, y, a);
+            }
+            if p.cooldown > 0 {
+                p.cooldown -= 1;
+            }
+            if intent.attack && self.players[i].cooldown == 0 {
+                let (weapon, can_fire) = {
+                    let p = &mut self.players[i];
+                    let def = &WEAPONS[p.weapon];
+                    let ok = def.ammo_cost == 0 || p.ammo[p.weapon] >= def.ammo_cost;
+                    if ok {
+                        p.ammo[p.weapon] = p.ammo[p.weapon].saturating_sub(def.ammo_cost);
+                        p.cooldown = def.cooldown;
+                    }
+                    (p.weapon, ok)
+                };
+                let _ = weapon;
+                if can_fire {
+                    self.events.shots.push(i);
+                    self.fire(i);
+                }
+            }
+            // Acid floor.
+            if self.cfg.floor_damage > 0.0 {
+                let dmg = self.cfg.floor_damage;
+                self.events.env_damage.push(i);
+                self.damage_player(i, dmg, None);
+            }
+        }
+
+        // 2. Pickups.
+        for ei in 0..self.entities.len() {
+            if !self.entities[ei].alive || self.entities[ei].is_monster() {
+                continue;
+            }
+            let (ex, ey, kind) = {
+                let e = &self.entities[ei];
+                (e.x, e.y, e.kind)
+            };
+            for pi in 0..self.players.len() {
+                let p = &self.players[pi];
+                if !p.alive {
+                    continue;
+                }
+                if (p.x - ex).hypot(p.y - ey) > PICKUP_RADIUS {
+                    continue;
+                }
+                let consumed = match kind {
+                    EntityKind::HealthPack => {
+                        let p = &mut self.players[pi];
+                        if p.health < 100.0 {
+                            p.health = (p.health + 25.0).min(100.0);
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                    EntityKind::ArmorPack => {
+                        let p = &mut self.players[pi];
+                        if p.armor < 100.0 {
+                            p.armor = (p.armor + 50.0).min(100.0);
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                    EntityKind::AmmoPack => {
+                        let p = &mut self.players[pi];
+                        let w = p.weapon.max(1);
+                        p.ammo[w] += 20;
+                        true
+                    }
+                    EntityKind::WeaponPickup(w) => {
+                        let p = &mut self.players[pi];
+                        let newly = !p.owns(w);
+                        p.weapons_owned |= 1 << w;
+                        p.ammo[w] += 15;
+                        newly
+                    }
+                    EntityKind::Object { good } => {
+                        self.events.objects.push((pi, good));
+                        true
+                    }
+                    EntityKind::Monster(_) => unreachable!(),
+                };
+                if consumed {
+                    if !matches!(kind, EntityKind::Object { .. }) {
+                        self.events.pickups.push((pi, kind));
+                    }
+                    let e = &mut self.entities[ei];
+                    e.alive = false;
+                    e.respawn_in = e.respawn_ticks;
+                    break;
+                }
+            }
+        }
+
+        // 3. Monster AI + respawns.
+        for ei in 0..self.entities.len() {
+            let e = &self.entities[ei];
+            if !e.alive {
+                if self.entities[ei].respawn_in > 0 {
+                    self.entities[ei].respawn_in -= 1;
+                    if self.entities[ei].respawn_in == 0 {
+                        self.respawn_entity(ei);
+                    }
+                }
+                continue;
+            }
+            if !e.is_monster() || self.cfg.passive_monsters {
+                continue;
+            }
+            self.monster_ai(ei);
+        }
+    }
+
+    fn respawn_player(&mut self, i: usize) {
+        let (x, y) = self.map.random_spawn(&mut self.rng, None);
+        let p = &mut self.players[i];
+        let (frags, deaths, is_bot) = (p.frags, p.deaths, p.is_bot);
+        *p = Player::new(x, y, self.rng.range_f32(-3.14, 3.14));
+        p.frags = frags;
+        p.deaths = deaths;
+        p.is_bot = is_bot;
+    }
+
+    fn respawn_entity(&mut self, ei: usize) {
+        let avoid = self
+            .players
+            .first()
+            .map(|p| (p.x, p.y, 3.0));
+        let (x, y) = self.map.random_spawn(&mut self.rng, avoid);
+        let e = &mut self.entities[ei];
+        e.alive = true;
+        e.x = x;
+        e.y = y;
+        e.hp = match e.kind {
+            EntityKind::Monster(MonsterKind::Chaser) => 40.0,
+            EntityKind::Monster(MonsterKind::Shooter) => 25.0,
+            _ => 1.0,
+        };
+        e.cooldown = 0;
+    }
+
+    fn monster_ai(&mut self, ei: usize) {
+        // Target: nearest living player.
+        let (ex, ey, kind) = {
+            let e = &self.entities[ei];
+            (e.x, e.y, e.kind)
+        };
+        let mut best: Option<(f32, usize)> = None;
+        for (i, p) in self.players.iter().enumerate() {
+            if !p.alive {
+                continue;
+            }
+            let d = (p.x - ex).hypot(p.y - ey);
+            if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                best = Some((d, i));
+            }
+        }
+        let Some((dist, target)) = best else { return };
+        let (tx, ty) = (self.players[target].x, self.players[target].y);
+        let has_los = self.map.los(ex, ey, tx, ty);
+
+        if self.entities[ei].cooldown > 0 {
+            self.entities[ei].cooldown -= 1;
+        }
+        match kind {
+            EntityKind::Monster(MonsterKind::Chaser) => {
+                if dist < MONSTER_RADIUS + PLAYER_RADIUS + 0.3 {
+                    if self.entities[ei].cooldown == 0 {
+                        self.entities[ei].cooldown = 20;
+                        self.damage_player(target, 10.0, None);
+                    }
+                } else if has_los {
+                    let inv = 1.0 / dist.max(1e-4);
+                    let dx = (tx - ex) * inv * MONSTER_SPEED;
+                    let dy = (ty - ey) * inv * MONSTER_SPEED;
+                    let (nx, ny) =
+                        Self::slide(&self.map, ex, ey, dx, dy, MONSTER_RADIUS);
+                    let e = &mut self.entities[ei];
+                    e.x = nx;
+                    e.y = ny;
+                } else {
+                    // Wander.
+                    let a = self.rng.range_f32(-3.14, 3.14);
+                    let (dx, dy) = (a.cos() * MONSTER_SPEED, a.sin() * MONSTER_SPEED);
+                    let (nx, ny) =
+                        Self::slide(&self.map, ex, ey, dx, dy, MONSTER_RADIUS);
+                    let e = &mut self.entities[ei];
+                    e.x = nx;
+                    e.y = ny;
+                }
+            }
+            EntityKind::Monster(MonsterKind::Shooter) => {
+                if has_los && dist < 14.0 {
+                    if self.entities[ei].cooldown == 0 {
+                        self.entities[ei].cooldown = 35;
+                        // Accuracy decays with distance.
+                        let hit_p = (1.2 - dist * 0.08).clamp(0.15, 0.9);
+                        if self.rng.chance(hit_p) {
+                            self.damage_player(target, 8.0, None);
+                        }
+                    }
+                } else if has_los {
+                    let inv = 1.0 / dist.max(1e-4);
+                    let dx = (tx - ex) * inv * MONSTER_SPEED;
+                    let dy = (ty - ey) * inv * MONSTER_SPEED;
+                    let (nx, ny) =
+                        Self::slide(&self.map, ex, ey, dx, dy, MONSTER_RADIUS);
+                    let e = &mut self.entities[ei];
+                    e.x = nx;
+                    e.y = ny;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Scripted-bot policy (paper: in-game bots have full state access).
+    /// Aims at the nearest visible opponent, fires with human-ish error,
+    /// seeks pickups when hurt/out of ammo, wanders otherwise.
+    pub fn bot_intent(&mut self, i: usize) -> Intent {
+        let me = self.players[i].clone();
+        if !me.alive {
+            return Intent::default();
+        }
+        let mut intent = Intent::default();
+
+        // Nearest living opponent.
+        let mut target: Option<(f32, usize)> = None;
+        for (j, p) in self.players.iter().enumerate() {
+            if j == i || !p.alive {
+                continue;
+            }
+            let d = (p.x - me.x).hypot(p.y - me.y);
+            if target.map(|(bd, _)| d < bd).unwrap_or(true) {
+                target = Some((d, j));
+            }
+        }
+
+        // Goal selection: health pack when hurt, ammo when dry, else enemy.
+        let needs_health = me.health < 40.0;
+        let needs_ammo = me.ammo[me.weapon.max(1)] < 5;
+        let mut goal: Option<(f32, f32)> = None;
+        if needs_health || needs_ammo {
+            let mut best = f32::MAX;
+            for e in &self.entities {
+                if !e.alive {
+                    continue;
+                }
+                let want = match e.kind {
+                    EntityKind::HealthPack => needs_health,
+                    EntityKind::AmmoPack | EntityKind::WeaponPickup(_) => needs_ammo,
+                    _ => false,
+                };
+                if want {
+                    let d = (e.x - me.x).hypot(e.y - me.y);
+                    if d < best {
+                        best = d;
+                        goal = Some((e.x, e.y));
+                    }
+                }
+            }
+        }
+
+        if let Some((dist, t)) = target {
+            let tp = &self.players[t];
+            let visible = self.map.los(me.x, me.y, tp.x, tp.y);
+            if visible && goal.is_none() {
+                // Face the target with bounded turn rate + aim error.
+                let want = (tp.y - me.y).atan2(tp.x - me.x);
+                let mut da = want - me.angle;
+                while da > std::f32::consts::PI {
+                    da -= 2.0 * std::f32::consts::PI;
+                }
+                while da < -std::f32::consts::PI {
+                    da += 2.0 * std::f32::consts::PI;
+                }
+                let max_turn = 0.12;
+                intent.turn = da.clamp(-max_turn, max_turn)
+                    + self.rng.range_f32(-0.02, 0.02);
+                if da.abs() < 0.12 && dist < WEAPONS[me.weapon].range {
+                    intent.attack = true;
+                }
+                // Strafe to be harder to hit; close distance when far.
+                intent.strafe = if (self.tick_count / 20) % 2 == 0 { 1.0 } else { -1.0 };
+                if dist > 6.0 {
+                    intent.mv = 1.0;
+                }
+                self.players[i].bot_goal = None;
+                return intent;
+            }
+        }
+
+        // Navigate to goal (or wander): greedy with wall avoidance.
+        let goal = goal.or(me_goal_or_wander(self, i));
+        if let Some((gx, gy)) = goal {
+            let want = (gy - me.y).atan2(gx - me.x);
+            let mut da = want - me.angle;
+            while da > std::f32::consts::PI {
+                da -= 2.0 * std::f32::consts::PI;
+            }
+            while da < -std::f32::consts::PI {
+                da += 2.0 * std::f32::consts::PI;
+            }
+            intent.turn = da.clamp(-0.15, 0.15);
+            if da.abs() < 0.8 {
+                intent.mv = 1.0;
+            }
+            // Arrived or stuck against a wall: pick a new wander goal.
+            let close = (gx - me.x).hypot(gy - me.y) < 0.8;
+            let blocked = self.wall_distance(me.x, me.y, me.angle, 0.6) < 0.5;
+            if close || (blocked && da.abs() < 0.3) {
+                self.players[i].bot_goal = None;
+            }
+        }
+        intent
+    }
+}
+
+fn me_goal_or_wander(w: &mut World, i: usize) -> Option<(f32, f32)> {
+    if let Some(g) = w.players[i].bot_goal {
+        return Some(g);
+    }
+    let g = w.map.random_spawn(&mut w.rng, None);
+    w.players[i].bot_goal = Some(g);
+    Some(g)
+}
+
+#[derive(Clone, Copy)]
+enum Target {
+    Monster(usize),
+    Player(usize),
+}
+
+/// Ray-vs-circle: distance along the beam to the target if hit before
+/// `max_d`. The beam direction is normalised (dx, dy).
+fn beam_hit(
+    sx: f32,
+    sy: f32,
+    dx: f32,
+    dy: f32,
+    tx: f32,
+    ty: f32,
+    radius: f32,
+    max_d: f32,
+) -> Option<f32> {
+    let ox = tx - sx;
+    let oy = ty - sy;
+    let along = ox * dx + oy * dy; // projection on the beam
+    if along <= 0.0 || along > max_d {
+        return None;
+    }
+    let perp = (ox * dy - oy * dx).abs();
+    if perp <= radius {
+        Some(along)
+    } else {
+        None
+    }
+}
+
+/// Check whether `open_door` interaction or walls make the world consistent
+/// for spawning: cell at (x, y) must be walkable.
+pub fn valid_spawn(map: &GridMap, x: f32, y: f32) -> bool {
+    let c = map.cell(x as usize, y as usize);
+    c == EMPTY || c == DOOR_OPEN
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::raycast::map::GridMap;
+
+    fn arena(seed: u64) -> World {
+        let map = GridMap::from_ascii(
+            "##########\n\
+             #........#\n\
+             #........#\n\
+             #........#\n\
+             ##########",
+        );
+        World::new(map, WorldCfg::default(), seed)
+    }
+
+    #[test]
+    fn movement_and_wall_collision() {
+        let mut w = arena(1);
+        w.players.push(Player::new(1.5, 2.0, 0.0));
+        let fwd = Intent { mv: 1.0, ..Default::default() };
+        for _ in 0..200 {
+            w.tick(&[fwd]);
+        }
+        let p = &w.players[0];
+        // Walked forward until the east wall; never inside a wall.
+        assert!(p.x > 8.0 && p.x < 9.0, "x={}", p.x);
+        assert!(!w.map.is_solid(p.x, p.y));
+    }
+
+    #[test]
+    fn turning_changes_heading() {
+        let mut w = arena(2);
+        w.players.push(Player::new(5.0, 2.0, 0.0));
+        let turn = Intent { turn: 0.1, ..Default::default() };
+        for _ in 0..10 {
+            w.tick(&[turn]);
+        }
+        assert!((w.players[0].angle - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn hitscan_kills_monster_and_emits_events() {
+        let mut w = arena(3);
+        w.players.push(Player::new(1.5, 2.0, 0.0)); // facing +x
+        w.entities.push(Entity::new(
+            EntityKind::Monster(MonsterKind::Shooter),
+            5.0,
+            2.0,
+        ));
+        let shoot = Intent { attack: true, ..Default::default() };
+        let mut kills = 0;
+        for _ in 0..100 {
+            w.tick(&[shoot]);
+            kills += w.events.monster_kills.len();
+            if kills > 0 {
+                break;
+            }
+        }
+        assert_eq!(kills, 1);
+        assert!(!w.entities[0].alive);
+        // Pistol: 25 hp shooter needs 3 hits of 12 => at least 3 shots.
+        assert!(w.players[0].ammo[1] <= 47);
+    }
+
+    #[test]
+    fn walls_block_bullets() {
+        let map = GridMap::from_ascii(
+            "#######\n\
+             #..#..#\n\
+             #######",
+        );
+        let mut w = World::new(map, WorldCfg::default(), 4);
+        w.players.push(Player::new(1.5, 1.5, 0.0));
+        w.entities.push(Entity::new(
+            EntityKind::Monster(MonsterKind::Shooter),
+            5.0,
+            1.5,
+        ));
+        let shoot = Intent { attack: true, ..Default::default() };
+        for _ in 0..60 {
+            w.tick(&[shoot]);
+        }
+        assert!(w.entities[0].alive, "bullet went through a wall");
+    }
+
+    #[test]
+    fn chaser_approaches_and_damages_player() {
+        let mut w = arena(5);
+        w.players.push(Player::new(2.0, 2.0, 0.0));
+        w.entities.push(Entity::new(
+            EntityKind::Monster(MonsterKind::Chaser),
+            7.0,
+            2.0,
+        ));
+        let idle = Intent::default();
+        for _ in 0..600 {
+            w.tick(&[idle]);
+        }
+        assert!(w.players[0].health < 100.0, "chaser never reached the player");
+    }
+
+    #[test]
+    fn health_pack_heals_and_respawns() {
+        let mut w = arena(6);
+        w.cfg.floor_damage = 1.0; // hurt the player so the pack is consumable
+        w.players.push(Player::new(2.0, 2.0, 0.0));
+        w.entities.push(Entity::new(EntityKind::HealthPack, 2.0, 2.0).with_respawn(5));
+        let idle = Intent::default();
+        w.tick(&[idle]); // floor hurts, then pickup heals
+        assert!(!w.entities[0].alive);
+        assert_eq!(w.events.pickups.len(), 1);
+        assert!(w.players[0].health > 99.0);
+        for _ in 0..6 {
+            w.tick(&[idle]);
+        }
+        assert!(w.entities[0].alive, "pickup did not respawn");
+    }
+
+    #[test]
+    fn player_kill_awards_frag_and_respawn() {
+        let mut w = arena(7);
+        w.cfg.player_respawn_ticks = 10;
+        w.players.push(Player::new(1.5, 2.0, 0.0));
+        w.players.push(Player::new(6.0, 2.0, 3.14));
+        w.players[0].weapon = 3; // chaingun
+        w.players[0].ammo[3] = 200;
+        w.players[0].weapons_owned |= 1 << 3;
+        let shoot = Intent { attack: true, ..Default::default() };
+        let idle = Intent::default();
+        let mut killed = false;
+        for _ in 0..400 {
+            w.tick(&[shoot, idle]);
+            if !w.events.player_kills.is_empty() {
+                killed = true;
+                break;
+            }
+        }
+        assert!(killed, "never killed the opponent");
+        assert_eq!(w.players[0].frags, 1);
+        assert_eq!(w.players[1].deaths, 1);
+        for _ in 0..12 {
+            w.tick(&[idle, idle]);
+        }
+        assert!(w.players[1].alive, "victim did not respawn");
+        assert_eq!(w.players[1].health, 100.0);
+    }
+
+    #[test]
+    fn weapon_switch_requires_ownership() {
+        let mut w = arena(8);
+        w.players.push(Player::new(2.0, 2.0, 0.0));
+        let switch = Intent { weapon: Some(2), ..Default::default() };
+        w.tick(&[switch]);
+        assert_eq!(w.players[0].weapon, 1, "switched to unowned weapon");
+        w.players[0].weapons_owned |= 1 << 2;
+        w.tick(&[switch]);
+        assert_eq!(w.players[0].weapon, 2);
+        assert_eq!(w.events.weapon_switches.len(), 1);
+    }
+
+    #[test]
+    fn ammo_gates_firing() {
+        let mut w = arena(9);
+        w.players.push(Player::new(2.0, 2.0, 0.0));
+        w.players[0].ammo[1] = 1;
+        let shoot = Intent { attack: true, ..Default::default() };
+        w.tick(&[shoot]);
+        assert_eq!(w.events.shots.len(), 1);
+        for _ in 0..30 {
+            w.tick(&[shoot]);
+            assert!(w.events.shots.is_empty(), "fired with no ammo");
+        }
+    }
+
+    #[test]
+    fn bot_fights_player() {
+        let mut w = arena(10);
+        w.players.push(Player::new(2.0, 2.0, 0.0));
+        w.players.push(Player::new(7.0, 2.0, 3.14));
+        w.players[1].is_bot = true;
+        w.players[1].ammo[1] = 500;
+        let idle = Intent::default();
+        let mut hurt = false;
+        for _ in 0..2000 {
+            let bi = w.bot_intent(1);
+            w.tick(&[idle, bi]);
+            if w.players[0].health < 100.0 || !w.players[0].alive {
+                hurt = true;
+                break;
+            }
+        }
+        assert!(hurt, "bot never damaged the idle player");
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_actions() {
+        let run = || {
+            let mut w = arena(42);
+            w.players.push(Player::new(2.0, 2.0, 0.5));
+            w.entities.push(Entity::new(
+                EntityKind::Monster(MonsterKind::Chaser),
+                6.0,
+                2.5,
+            ));
+            let a = Intent { mv: 1.0, turn: 0.03, attack: true, ..Default::default() };
+            for _ in 0..300 {
+                w.tick(&[a]);
+            }
+            let p = &w.players[0];
+            (p.x, p.y, p.health, w.entities[0].alive, w.entities[0].hp as i32)
+        };
+        assert_eq!(run(), run());
+    }
+}

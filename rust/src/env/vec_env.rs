@@ -1,0 +1,120 @@
+//! Env vector for rollout workers + the double-buffered grouping (§3.2).
+//!
+//! A rollout worker hosts `k` environments.  With double-buffering the
+//! vector is split into two groups: while group A waits for actions on the
+//! policy worker, group B is being stepped — with a fast enough policy
+//! worker and `k/2 > t_inf / t_env` the CPU never idles (paper Fig 2b).
+
+use super::{make, Env, EpisodeMonitor};
+use crate::util::Rng;
+
+/// One rollout worker's environments plus per-agent episode bookkeeping.
+pub struct VecEnv {
+    pub envs: Vec<Box<dyn Env>>,
+    pub monitors: Vec<EpisodeMonitor>,
+    /// Group boundaries: `groups[g]` is a range of env indices.
+    groups: Vec<std::ops::Range<usize>>,
+}
+
+impl VecEnv {
+    /// Build `k` env instances of the given scenario, split into one or two
+    /// sampling groups.
+    pub fn build(
+        spec_name: &str,
+        scenario: &str,
+        k: usize,
+        double_buffer: bool,
+        rng: &mut Rng,
+    ) -> Result<VecEnv, String> {
+        assert!(k > 0);
+        let mut envs = Vec::with_capacity(k);
+        let mut monitors = Vec::with_capacity(k);
+        for _ in 0..k {
+            let e = make(spec_name, scenario, rng)?;
+            monitors.push(EpisodeMonitor::new(e.spec().n_agents));
+            envs.push(e);
+        }
+        let groups = split_groups(k, double_buffer);
+        Ok(VecEnv { envs, monitors, groups })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn group(&self, g: usize) -> std::ops::Range<usize> {
+        self.groups[g].clone()
+    }
+
+    pub fn n_agents_per_env(&self) -> usize {
+        self.envs[0].spec().n_agents
+    }
+
+    /// Total policy streams this worker produces (envs x agents).
+    pub fn total_agents(&self) -> usize {
+        self.envs.iter().map(|e| e.spec().n_agents).sum()
+    }
+}
+
+/// Split `k` envs into sampling groups: two for double-buffering (sizes
+/// differing by at most one), one otherwise.
+pub fn split_groups(k: usize, double_buffer: bool) -> Vec<std::ops::Range<usize>> {
+    if double_buffer && k >= 2 {
+        let half = k / 2;
+        vec![0..half, half..k]
+    } else {
+        vec![0..k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_split_covers_all_envs() {
+        for k in 1..10 {
+            for db in [false, true] {
+                let gs = split_groups(k, db);
+                let total: usize = gs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, k);
+                if db && k >= 2 {
+                    assert_eq!(gs.len(), 2);
+                    assert!((gs[0].len() as i64 - gs[1].len() as i64).abs() <= 1);
+                } else {
+                    assert_eq!(gs.len(), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn builds_vector_of_envs() {
+        let mut rng = Rng::new(1);
+        let v = VecEnv::build("doomish", "battle", 4, true, &mut rng).unwrap();
+        assert_eq!(v.envs.len(), 4);
+        assert_eq!(v.n_groups(), 2);
+        assert_eq!(v.total_agents(), 4);
+        assert_eq!(v.n_agents_per_env(), 1);
+    }
+
+    #[test]
+    fn multiagent_vector_counts_agents() {
+        let mut rng = Rng::new(2);
+        let v = VecEnv::build("doomish_full", "duel", 2, false, &mut rng).unwrap();
+        assert_eq!(v.total_agents(), 4);
+        assert_eq!(v.n_agents_per_env(), 2);
+    }
+
+    #[test]
+    fn envs_are_independently_seeded() {
+        let mut rng = Rng::new(3);
+        let mut v = VecEnv::build("doomish", "battle", 2, false, &mut rng).unwrap();
+        let spec = v.envs[0].spec().obs;
+        let mut a = vec![0u8; spec.len()];
+        let mut b = vec![0u8; spec.len()];
+        v.envs[0].render(0, &mut a);
+        v.envs[1].render(0, &mut b);
+        assert_ne!(a, b, "two battle instances rendered identical frames");
+    }
+}

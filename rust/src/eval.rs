@@ -1,0 +1,247 @@
+//! Evaluation harness: run trained policies without learning.
+//!
+//! * [`evaluate`] — roll N episodes of a checkpointed policy in any
+//!   scenario, greedy or sampled, and report score statistics (used to
+//!   verify trained agents, e.g. "beats the scripted bots in 100% of
+//!   matches", §4.3).
+//! * [`play_match`] — pit two checkpoints against each other in the
+//!   multi-agent `duel` environment and report wins/losses/ties by frags —
+//!   the paper's self-play-vs-bots-trained showdown (78W/3L/19T over 100
+//!   matches).
+
+use anyhow::{anyhow, Result};
+
+use crate::env::{make, AgentStep};
+use crate::runtime::{lit_f32, lit_u8, read_f32_into, ModelPrograms, Tensors};
+use crate::stats::Aggregate;
+use crate::util::{log_softmax, sample_categorical, Rng};
+
+/// Per-episode outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct EpisodeOutcome {
+    pub ret: f64,
+    pub len: u64,
+}
+
+/// Stateless single-stream policy evaluator (batch slot 0 of the AOT'd
+/// inference program; the rest of the batch is padding).
+pub struct PolicyEval<'a> {
+    progs: &'a ModelPrograms,
+    params: Tensors,
+    obs_buf: Vec<u8>,
+    h: Vec<f32>,
+    logits: Vec<f32>,
+    values: Vec<f32>,
+    h_out: Vec<f32>,
+    scratch: Vec<f32>,
+    pub greedy: bool,
+}
+
+impl<'a> PolicyEval<'a> {
+    pub fn new(progs: &'a ModelPrograms, params: Tensors, greedy: bool) -> Self {
+        let man = &progs.manifest;
+        let b = man.policy_batch;
+        PolicyEval {
+            progs,
+            params,
+            obs_buf: vec![0; b * man.obs_len()],
+            h: vec![0.0; man.hidden],
+            logits: vec![0.0; b * man.total_actions()],
+            values: vec![0.0; b],
+            h_out: vec![0.0; b * man.hidden],
+            scratch: Vec::new(),
+            greedy,
+        }
+    }
+
+    pub fn reset_state(&mut self) {
+        self.h.fill(0.0);
+    }
+
+    /// One action for `obs`; maintains the recurrent state internally.
+    pub fn act(&mut self, obs: &[u8], rng: &mut Rng, actions: &mut [i32]) -> Result<f32> {
+        let man = &self.progs.manifest;
+        let obs_len = man.obs_len();
+        self.obs_buf[..obs_len].copy_from_slice(obs);
+        // h occupies row 0; other rows are padding.
+        let b = man.policy_batch;
+        let mut h_full = vec![0f32; b * man.hidden];
+        h_full[..man.hidden].copy_from_slice(&self.h);
+        let obs_lit = lit_u8(
+            &[b, man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]],
+            &self.obs_buf,
+        )?;
+        let h_lit = lit_f32(&[b, man.hidden], &h_full)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&obs_lit);
+        inputs.push(&h_lit);
+        let outs = self.progs.policy.run(&inputs)?;
+        read_f32_into(&outs[0], &mut self.logits)?;
+        read_f32_into(&outs[1], &mut self.values)?;
+        read_f32_into(&outs[2], &mut self.h_out)?;
+        self.h.copy_from_slice(&self.h_out[..man.hidden]);
+
+        let mut off = 0usize;
+        for (i, &n) in man.action_heads.iter().enumerate() {
+            let hl = &self.logits[off..off + n];
+            let a = if self.greedy {
+                hl.iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                    .map(|(k, _)| k)
+                    .unwrap_or(0)
+            } else {
+                sample_categorical(rng, hl)
+            };
+            self.scratch.resize(n, 0.0);
+            log_softmax(hl, &mut self.scratch[..n]);
+            actions[i] = a as i32;
+            off += n;
+        }
+        Ok(self.values[0])
+    }
+}
+
+/// Evaluate a policy for `episodes` episodes; returns per-episode outcomes.
+pub fn evaluate(
+    progs: &ModelPrograms,
+    params: Tensors,
+    spec: &str,
+    scenario: &str,
+    episodes: usize,
+    frameskip: u32,
+    greedy: bool,
+    seed: u64,
+) -> Result<Vec<EpisodeOutcome>> {
+    let mut rng = Rng::new(seed);
+    let mut env = make(spec, scenario, &mut rng).map_err(|e| anyhow!(e))?;
+    if env.spec().n_agents != 1 {
+        return Err(anyhow!(
+            "evaluate() is single-agent; use play_match for '{scenario}'"
+        ));
+    }
+    let man = &progs.manifest;
+    if env.spec().action_heads != man.action_heads {
+        return Err(anyhow!("scenario/manifest action head mismatch"));
+    }
+    let mut pol = PolicyEval::new(progs, params, greedy);
+    let mut outcomes = Vec::with_capacity(episodes);
+    let mut obs = vec![0u8; man.obs_len()];
+    let mut actions = vec![0i32; man.n_heads()];
+    let mut out = [AgentStep::default()];
+
+    for ep in 0..episodes {
+        env.reset(seed.wrapping_add(ep as u64 * 977));
+        pol.reset_state();
+        let mut ret = 0.0f64;
+        let mut len = 0u64;
+        loop {
+            env.render(0, &mut obs);
+            pol.act(&obs, &mut rng, &mut actions)?;
+            let mut done = false;
+            for _ in 0..frameskip {
+                env.step(&actions, &mut out);
+                ret += out[0].reward as f64;
+                len += 1;
+                if out[0].done {
+                    done = true;
+                    break;
+                }
+            }
+            if done {
+                break;
+            }
+        }
+        outcomes.push(EpisodeOutcome { ret, len });
+    }
+    Ok(outcomes)
+}
+
+/// Result of a head-to-head match series.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MatchReport {
+    pub wins_a: u32,
+    pub wins_b: u32,
+    pub ties: u32,
+    pub mean_frags_a: f64,
+    pub mean_frags_b: f64,
+}
+
+/// Play `n_matches` duels between two parameter sets (policy A = agent 0,
+/// policy B = agent 1), scoring by episode return (frag-based in duel).
+pub fn play_match(
+    progs: &ModelPrograms,
+    params_a: Tensors,
+    params_b: Tensors,
+    spec: &str,
+    n_matches: usize,
+    frameskip: u32,
+    seed: u64,
+) -> Result<MatchReport> {
+    let mut rng = Rng::new(seed);
+    let mut env = make(spec, "duel", &mut rng).map_err(|e| anyhow!(e))?;
+    let man = &progs.manifest;
+    if env.spec().n_agents != 2 {
+        return Err(anyhow!("duel must expose 2 agents"));
+    }
+    if env.spec().action_heads != man.action_heads {
+        return Err(anyhow!("duel/manifest action head mismatch"));
+    }
+    let mut pa = PolicyEval::new(progs, params_a, false);
+    let mut pb = PolicyEval::new(progs, params_b, false);
+    let n_heads = man.n_heads();
+    let obs_len = man.obs_len();
+    let mut obs = vec![0u8; obs_len];
+    let mut actions = vec![0i32; 2 * n_heads];
+    let mut out = [AgentStep::default(); 2];
+    let mut report = MatchReport::default();
+    let mut frags_a = 0.0;
+    let mut frags_b = 0.0;
+
+    for m in 0..n_matches {
+        env.reset(seed.wrapping_add(m as u64 * 7919 + 1));
+        pa.reset_state();
+        pb.reset_state();
+        let (mut score_a, mut score_b) = (0.0f64, 0.0f64);
+        loop {
+            env.render(0, &mut obs);
+            pa.act(&obs, &mut rng, &mut actions[..n_heads])?;
+            env.render(1, &mut obs);
+            pb.act(&obs, &mut rng, &mut actions[n_heads..])?;
+            let mut done = false;
+            for _ in 0..frameskip {
+                env.step(&actions, &mut out);
+                score_a += out[0].reward as f64;
+                score_b += out[1].reward as f64;
+                if out[0].done || out[1].done {
+                    done = true;
+                    break;
+                }
+            }
+            if done {
+                break;
+            }
+        }
+        frags_a += score_a;
+        frags_b += score_b;
+        if score_a > score_b + 1e-9 {
+            report.wins_a += 1;
+        } else if score_b > score_a + 1e-9 {
+            report.wins_b += 1;
+        } else {
+            report.ties += 1;
+        }
+    }
+    report.mean_frags_a = frags_a / n_matches.max(1) as f64;
+    report.mean_frags_b = frags_b / n_matches.max(1) as f64;
+    Ok(report)
+}
+
+/// Summarise outcomes.
+pub fn summarize(outcomes: &[EpisodeOutcome]) -> Aggregate {
+    let mut agg = Aggregate::default();
+    for o in outcomes {
+        agg.push(o.ret);
+    }
+    agg
+}

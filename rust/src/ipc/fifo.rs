@@ -1,0 +1,364 @@
+//! Bounded MPMC FIFO over a circular buffer — the `faster-fifo` analogue.
+//!
+//! The paper found that above 1e5 FPS even exchanging *indices* through
+//! Python's `multiprocessing.Queue` burned a significant share of CPU, and
+//! replaced it with a circular-buffer queue supporting **batched** consume
+//! (many-producers/few-consumers pattern).  This is the same design for the
+//! threaded setting: one mutex + two condvars around a fixed ring, a
+//! `pop_many` that drains up to N messages under a single lock acquisition,
+//! and a `push_many` for the symmetric case.  `rust/benches/fifo.rs`
+//! reproduces the appendix B.1 comparison against `std::sync::mpsc`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Error returned by blocking receives when the queue is closed and empty.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// Queue closed (all producers done) and drained.
+    Closed,
+    /// Timed out waiting for a message.
+    Timeout,
+}
+
+struct Inner<T> {
+    ring: VecDeque<T>,
+    capacity: usize,
+}
+
+/// A bounded multi-producer multi-consumer FIFO.
+///
+/// Clone freely; all clones share the same ring.  `close()` wakes all
+/// blocked consumers; subsequent `pop` calls drain remaining items and then
+/// return [`RecvError::Closed`].
+pub struct Fifo<T> {
+    inner: Arc<Shared<T>>,
+}
+
+struct Shared<T> {
+    state: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    closed: AtomicBool,
+}
+
+impl<T> Clone for Fifo<T> {
+    fn clone(&self) -> Self {
+        Fifo { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "fifo capacity must be positive");
+        Fifo {
+            inner: Arc::new(Shared {
+                state: Mutex::new(Inner {
+                    ring: VecDeque::with_capacity(capacity),
+                    capacity,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.state.lock().unwrap().capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::Acquire)
+    }
+
+    /// Close the queue: consumers drain whatever remains, then get `Closed`.
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    /// Blocking push. Returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                return false;
+            }
+            if st.ring.len() < st.capacity {
+                st.ring.push_back(item);
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return true;
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking push; returns the item back on a full or closed queue.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        if self.is_closed() {
+            return Err(item);
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        if st.ring.len() < st.capacity {
+            st.ring.push_back(item);
+            drop(st);
+            self.inner.not_empty.notify_one();
+            Ok(())
+        } else {
+            Err(item)
+        }
+    }
+
+    /// Push a batch under one lock acquisition; blocks until all fit.
+    /// Returns `false` (dropping remaining items) if closed.
+    pub fn push_many(&self, items: &mut Vec<T>) -> bool {
+        while !items.is_empty() {
+            let mut st = self.inner.state.lock().unwrap();
+            if self.is_closed() {
+                return false;
+            }
+            while st.ring.len() < st.capacity && !items.is_empty() {
+                let it = items.remove(0);
+                st.ring.push_back(it);
+            }
+            let made_progress = st.ring.len() > 0;
+            drop(st);
+            if made_progress {
+                self.inner.not_empty.notify_all();
+            }
+            if items.is_empty() {
+                return true;
+            }
+            // Ring full: wait for room.
+            let st2 = self.inner.state.lock().unwrap();
+            if st2.ring.len() == st2.capacity {
+                let _ = self
+                    .inner
+                    .not_full
+                    .wait_timeout(st2, Duration::from_millis(50))
+                    .unwrap();
+            }
+        }
+        true
+    }
+
+    /// Blocking pop with timeout.
+    pub fn pop(&self, timeout: Duration) -> Result<T, RecvError> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.ring.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if self.is_closed() {
+                return Err(RecvError::Closed);
+            }
+            let (guard, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, timeout)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.ring.is_empty() {
+                return if self.is_closed() {
+                    Err(RecvError::Closed)
+                } else {
+                    Err(RecvError::Timeout)
+                };
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        let item = st.ring.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain up to `max` items into `out` under a single lock — the batched
+    /// consume that makes the many-producers/one-consumer pattern cheap.
+    /// Blocks (up to `timeout`) until at least one item is available.
+    pub fn pop_many(
+        &self,
+        out: &mut Vec<T>,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<usize, RecvError> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if !st.ring.is_empty() {
+                let n = max.min(st.ring.len());
+                out.extend(st.ring.drain(..n));
+                drop(st);
+                self.inner.not_full.notify_all();
+                return Ok(n);
+            }
+            if self.is_closed() {
+                return Err(RecvError::Closed);
+            }
+            let (guard, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, timeout)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.ring.is_empty() {
+                return if self.is_closed() {
+                    Err(RecvError::Closed)
+                } else {
+                    Err(RecvError::Timeout)
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    const T: Duration = Duration::from_secs(2);
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = Fifo::new(8);
+        for i in 0..8 {
+            assert!(q.push(i));
+        }
+        for i in 0..8 {
+            assert_eq!(q.pop(T).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn try_push_full_queue() {
+        let q = Fifo::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+    }
+
+    #[test]
+    fn close_wakes_consumer() {
+        let q: Fifo<u32> = Fifo::new(4);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop(Duration::from_secs(30)));
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn close_drains_remaining() {
+        let q = Fifo::new(4);
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert!(!q.push(3)); // push after close fails
+        assert_eq!(q.pop(T).unwrap(), 1);
+        assert_eq!(q.pop(T).unwrap(), 2);
+        assert_eq!(q.pop(T), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn pop_many_batches() {
+        let q = Fifo::new(64);
+        for i in 0..10 {
+            q.push(i);
+        }
+        let mut out = Vec::new();
+        let n = q.pop_many(&mut out, 4, T).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        let n = q.pop_many(&mut out, 100, T).unwrap();
+        assert_eq!(n, 6);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn mpmc_stress_no_loss_no_dup() {
+        let q: Fifo<u64> = Fifo::new(37); // deliberately awkward capacity
+        let producers = 4;
+        let per = 5_000u64;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    assert!(q.push(p as u64 * per + i));
+                }
+            }));
+        }
+        let consumers = 3;
+        let mut chandles = Vec::new();
+        for _ in 0..consumers {
+            let q = q.clone();
+            chandles.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                let mut buf = Vec::new();
+                loop {
+                    buf.clear();
+                    match q.pop_many(&mut buf, 16, Duration::from_millis(200)) {
+                        Ok(_) => got.extend_from_slice(&buf),
+                        Err(RecvError::Closed) => break,
+                        Err(RecvError::Timeout) => continue,
+                    }
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = Vec::new();
+        for h in chandles {
+            all.extend(h.join().unwrap());
+        }
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..producers as u64 * per).collect();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn push_many_delivers_all() {
+        let q: Fifo<u32> = Fifo::new(8);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            let mut items: Vec<u32> = (0..100).collect();
+            assert!(q2.push_many(&mut items));
+        });
+        let mut out = Vec::new();
+        while out.len() < 100 {
+            let mut buf = Vec::new();
+            match q.pop_many(&mut buf, 32, T) {
+                Ok(_) => out.extend_from_slice(&buf),
+                Err(_) => break,
+            }
+        }
+        h.join().unwrap();
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,20 @@
+//! Fast local communication between system components (paper §3.3, §B.1).
+//!
+//! Two pieces, mirroring the paper's protocol exactly:
+//!
+//! * [`fifo`] — a bounded circular-buffer FIFO with batched operations, the
+//!   analogue of the paper's custom C++ `faster-fifo` queue.  Messages are
+//!   tiny headers (slot indices), never payloads.
+//! * [`slab`] — pre-allocated shared trajectory buffers.  Rollout workers
+//!   write observations directly into slab memory; policy workers and the
+//!   learner read/write the same slots; only `u32` indices travel through
+//!   the queues.  **No serialization anywhere on the sample path** — at full
+//!   throttle the system moves >1 GB/s of observations and, as the paper
+//!   notes, even the fastest serializer would dominate the profile (the
+//!   `baselines::serialized` variant demonstrates precisely that).
+
+pub mod fifo;
+pub mod slab;
+
+pub use fifo::{Fifo, RecvError};
+pub use slab::{SlotIdx, TrajSlot, TrajStore, TrajStoreSpec};

@@ -1,0 +1,231 @@
+//! Pre-allocated shared trajectory buffers — the paper's "shared memory
+//! tensors" (§3.3).
+//!
+//! A [`TrajStore`] owns every trajectory buffer the system will ever use,
+//! allocated once up front.  Components exchange [`SlotIdx`] values through
+//! FIFO queues; the observation pixels, hidden states, actions, rewards and
+//! per-step policy versions live in the slots and are written in place:
+//!
+//! * the **rollout worker** renders observations *directly into* the slot
+//!   (the `Env` trait takes an output buffer — zero copies between the
+//!   simulator and the inference batch assembly),
+//! * the **policy worker** reads the newest observation + hidden state,
+//!   writes back actions / behaviour log-probs / values / the new hidden,
+//! * the **learner** consumes completed slots and recycles them through the
+//!   free queue.
+//!
+//! Exactly one component touches a slot at any time (ownership ping-pongs
+//! through the queues), so slots are guarded by a plain `Mutex` that is
+//! never contended in steady state; the perf pass measured the lock at <1%
+//! of the rollout loop (EXPERIMENTS.md §Perf).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use super::fifo::Fifo;
+
+/// Index of a trajectory slot in the store.
+pub type SlotIdx = u32;
+
+/// Static sizes for trajectory slots (derived from the model manifest).
+#[derive(Clone, Debug)]
+pub struct TrajStoreSpec {
+    /// Bytes per observation (H*W*C).
+    pub obs_len: usize,
+    /// Rollout length T.
+    pub rollout: usize,
+    /// Number of discrete action heads.
+    pub n_heads: usize,
+    /// GRU hidden size.
+    pub hidden: usize,
+    /// Total number of pre-allocated slots.
+    pub n_slots: usize,
+}
+
+/// One trajectory buffer: T steps plus the observation after the last step
+/// (needed for the V-trace bootstrap) and the hidden state carried across
+/// rollout boundaries.
+pub struct TrajSlot {
+    /// (T+1) * obs_len bytes; row t is the observation *before* action t.
+    pub obs: Vec<u8>,
+    /// Hidden state at the start of the rollout.
+    pub h0: Vec<f32>,
+    /// Hidden state after the most recent policy step (carried to the next
+    /// rollout's h0 when the slot is recycled).
+    pub h_cur: Vec<f32>,
+    /// T * n_heads action indices.
+    pub actions: Vec<i32>,
+    /// Behaviour-policy log prob (sum over heads) per step.
+    pub behavior_lp: Vec<f32>,
+    /// Value estimates from the policy worker (diagnostics only; the learner
+    /// recomputes values under the current policy for V-trace).
+    pub values: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<f32>,
+    /// Parameter version that generated each action — policy-lag accounting.
+    pub versions: Vec<u32>,
+    /// Steps filled so far (0..=T).
+    pub t: usize,
+    /// Which policy (PBT population member) this trajectory belongs to.
+    pub policy_id: u32,
+    /// Global env id that produced the trajectory.
+    pub env_id: u32,
+}
+
+impl TrajSlot {
+    fn new(spec: &TrajStoreSpec) -> Self {
+        TrajSlot {
+            obs: vec![0; (spec.rollout + 1) * spec.obs_len],
+            h0: vec![0.0; spec.hidden],
+            h_cur: vec![0.0; spec.hidden],
+            actions: vec![0; spec.rollout * spec.n_heads],
+            behavior_lp: vec![0.0; spec.rollout],
+            values: vec![0.0; spec.rollout],
+            rewards: vec![0.0; spec.rollout],
+            dones: vec![0.0; spec.rollout],
+            versions: vec![0; spec.rollout],
+            t: 0,
+            policy_id: 0,
+            env_id: 0,
+        }
+    }
+
+    /// Mutable view of the observation row for step `t`.
+    pub fn obs_row_mut(&mut self, t: usize, obs_len: usize) -> &mut [u8] {
+        &mut self.obs[t * obs_len..(t + 1) * obs_len]
+    }
+
+    /// Observation row for step `t`.
+    pub fn obs_row(&self, t: usize, obs_len: usize) -> &[u8] {
+        &self.obs[t * obs_len..(t + 1) * obs_len]
+    }
+
+    /// Reset fill state for reuse, carrying the hidden state across the
+    /// rollout boundary (truncated BPTT with carried initial state).
+    pub fn recycle(&mut self) {
+        self.h0.copy_from_slice(&self.h_cur);
+        self.t = 0;
+    }
+}
+
+/// The pre-allocated store plus its free-list.
+pub struct TrajStore {
+    spec: TrajStoreSpec,
+    slots: Vec<Mutex<TrajSlot>>,
+    free: Fifo<SlotIdx>,
+}
+
+impl TrajStore {
+    pub fn new(spec: TrajStoreSpec) -> Arc<Self> {
+        assert!(spec.n_slots > 0);
+        let slots = (0..spec.n_slots)
+            .map(|_| Mutex::new(TrajSlot::new(&spec)))
+            .collect();
+        let free = Fifo::new(spec.n_slots);
+        for i in 0..spec.n_slots as u32 {
+            assert!(free.push(i));
+        }
+        Arc::new(TrajStore { spec, slots, free })
+    }
+
+    pub fn spec(&self) -> &TrajStoreSpec {
+        &self.spec
+    }
+
+    /// Acquire a free slot, blocking until one is recycled.  Returns `None`
+    /// on shutdown.  Back-pressure lives here: if the learner falls behind,
+    /// rollout workers block on the empty free-list instead of growing
+    /// unbounded queues (the paper bounds policy lag the same way).
+    pub fn acquire(&self, timeout: Duration) -> Option<SlotIdx> {
+        loop {
+            match self.free.pop(timeout) {
+                Ok(idx) => return Some(idx),
+                Err(super::fifo::RecvError::Closed) => return None,
+                Err(super::fifo::RecvError::Timeout) => return None,
+            }
+        }
+    }
+
+    /// Return a consumed slot to the free-list.
+    pub fn release(&self, idx: SlotIdx) {
+        // Ignore failure during shutdown.
+        let _ = self.free.try_push(idx);
+    }
+
+    /// Number of slots currently free (diagnostics / tests).
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn close(&self) {
+        self.free.close();
+    }
+
+    /// Lock a slot. Steady-state access is uncontended (ownership is
+    /// transferred through queues); the lock exists to keep the design
+    /// 100% safe Rust.
+    pub fn slot(&self, idx: SlotIdx) -> MutexGuard<'_, TrajSlot> {
+        self.slots[idx as usize].lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TrajStoreSpec {
+        TrajStoreSpec { obs_len: 16, rollout: 4, n_heads: 2, hidden: 8, n_slots: 3 }
+    }
+
+    #[test]
+    fn acquire_release_cycle() {
+        let store = TrajStore::new(spec());
+        let a = store.acquire(Duration::from_millis(100)).unwrap();
+        let b = store.acquire(Duration::from_millis(100)).unwrap();
+        let c = store.acquire(Duration::from_millis(100)).unwrap();
+        assert_eq!(store.free_len(), 0);
+        // Exhausted: acquire times out (back-pressure).
+        assert!(store.acquire(Duration::from_millis(10)).is_none());
+        store.release(b);
+        let b2 = store.acquire(Duration::from_millis(100)).unwrap();
+        assert_eq!(b2, b);
+        store.release(a);
+        store.release(b2);
+        store.release(c);
+        assert_eq!(store.free_len(), 3);
+    }
+
+    #[test]
+    fn slot_sizes_match_spec() {
+        let store = TrajStore::new(spec());
+        let s = store.slot(0);
+        assert_eq!(s.obs.len(), 5 * 16);
+        assert_eq!(s.actions.len(), 4 * 2);
+        assert_eq!(s.h0.len(), 8);
+        assert_eq!(s.rewards.len(), 4);
+    }
+
+    #[test]
+    fn obs_rows_are_disjoint() {
+        let store = TrajStore::new(spec());
+        let mut s = store.slot(1);
+        s.obs_row_mut(0, 16).fill(1);
+        s.obs_row_mut(1, 16).fill(2);
+        s.obs_row_mut(4, 16).fill(9); // the bootstrap row
+        assert!(s.obs_row(0, 16).iter().all(|&b| b == 1));
+        assert!(s.obs_row(1, 16).iter().all(|&b| b == 2));
+        assert!(s.obs_row(4, 16).iter().all(|&b| b == 9));
+        assert!(s.obs_row(2, 16).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn recycle_carries_hidden_state() {
+        let store = TrajStore::new(spec());
+        let mut s = store.slot(0);
+        s.h_cur.iter_mut().enumerate().for_each(|(i, h)| *h = i as f32);
+        s.t = 4;
+        s.recycle();
+        assert_eq!(s.t, 0);
+        assert_eq!(s.h0, (0..8).map(|i| i as f32).collect::<Vec<_>>());
+    }
+}

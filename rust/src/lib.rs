@@ -1,0 +1,38 @@
+//! # Sample Factory — Rust + JAX + Pallas reproduction
+//!
+//! A from-scratch reproduction of *"Sample Factory: Egocentric 3D Control
+//! from Pixels at 100000 FPS with Asynchronous Reinforcement Learning"*
+//! (Petrenko et al., ICML 2020) as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the asynchronous coordinator: rollout
+//!   workers, policy workers, learners, index-passing IPC over a custom
+//!   FIFO queue, double-buffered sampling, policy-lag accounting,
+//!   population-based training and self-play ([`coordinator`], [`ipc`],
+//!   [`baselines`]).
+//! * **Layer 2 (JAX, build-time)** — the conv-GRU actor-critic and the
+//!   fused APPO train step, AOT-lowered to HLO text (`python/compile/`).
+//! * **Layer 1 (Pallas, build-time)** — V-trace and fused-GRU kernels
+//!   lowered into the same HLO (`python/compile/kernels/`).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (the `xla` crate) and executes them from the Rust hot path; Python is
+//! never on the sample path.
+//!
+//! Entry points: the `repro` binary (training + every paper bench), the
+//! `examples/` drivers, and the public [`coordinator::Trainer`] API.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod eval;
+pub mod ipc;
+pub mod json;
+pub mod render_dump;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+
+pub use config::Config;

@@ -1,0 +1,262 @@
+//! `repro` — the Sample Factory reproduction launcher.
+//!
+//! Subcommands:
+//!   train  [--preset NAME] [--key value ...]     train a run, print summary
+//!   bench  <exhibit> [--key value ...]           regenerate a paper exhibit
+//!          exhibits: throughput | table1 | walltime | scenarios | battle |
+//!                    pbt-duel | pbt-throughput | multitask | fifo | lag
+//!   eval   --ckpt F [--episodes N] [--greedy b]  evaluate a checkpoint
+//!   match  --ckpt-a A --ckpt-b B [--matches N]   1v1 duel between checkpoints
+//!   render [--ckpt F] --out DIR [--n N]          dump episode frames (PPM)
+//!   list                                          list presets/scenarios
+//!
+//! All configuration keys accepted by `--key value` are documented in
+//! `config::Config::set`; `--config file.toml` merges a config file.
+
+use sample_factory::bench;
+use sample_factory::config::{preset, Config};
+use sample_factory::coordinator::Trainer;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  repro train [--preset NAME] [--key value ...]\n  repro bench <exhibit> [--key value ...]\n  repro list"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    match args[0].as_str() {
+        "train" => cmd_train(&args[1..]),
+        "bench" => cmd_bench(&args[1..]),
+        "eval" => cmd_eval(&args[1..]),
+        "match" => cmd_match(&args[1..]),
+        "render" => cmd_render(&args[1..]),
+        "list" => cmd_list(),
+        _ => usage(),
+    }
+}
+
+/// Split off `--name value` pairs consumed by eval/match themselves.
+fn take_arg(args: &mut Vec<String>, name: &str) -> Option<String> {
+    let pos = args.iter().position(|a| a == name)?;
+    if pos + 1 >= args.len() {
+        usage();
+    }
+    let v = args[pos + 1].clone();
+    args.drain(pos..pos + 2);
+    Some(v)
+}
+
+fn cmd_eval(args: &[String]) {
+    let mut args = args.to_vec();
+    let ckpt = take_arg(&mut args, "--ckpt").unwrap_or_else(|| usage());
+    let episodes: usize = take_arg(&mut args, "--episodes")
+        .map(|s| s.parse().expect("bad --episodes"))
+        .unwrap_or(10);
+    let greedy = take_arg(&mut args, "--greedy")
+        .map(|s| s.parse().expect("bad --greedy"))
+        .unwrap_or(false);
+    let cfg = build_config(&args);
+
+    let rt = sample_factory::runtime::Runtime::cpu().expect("pjrt");
+    let progs =
+        sample_factory::runtime::ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)
+            .expect("artifacts");
+    let params = sample_factory::runtime::checkpoint::load(
+        std::path::Path::new(&ckpt),
+        &progs.manifest,
+    )
+    .expect("checkpoint");
+    let outcomes = sample_factory::eval::evaluate(
+        &progs, params, &cfg.spec, &cfg.scenario, episodes, cfg.frameskip, greedy, cfg.seed,
+    )
+    .expect("evaluation");
+    let agg = sample_factory::eval::summarize(&outcomes);
+    println!("== eval: {} episodes of {}/{} ==", episodes, cfg.spec, cfg.scenario);
+    println!(
+        "return mean {:.2} +- {:.2}  min {:.2}  max {:.2}",
+        agg.mean(),
+        agg.std(),
+        agg.min,
+        agg.max
+    );
+    for (i, o) in outcomes.iter().enumerate() {
+        println!("  episode {i:>3}: return {:>8.2}  len {}", o.ret, o.len);
+    }
+}
+
+fn cmd_match(args: &[String]) {
+    let mut args = args.to_vec();
+    let ckpt_a = take_arg(&mut args, "--ckpt-a").unwrap_or_else(|| usage());
+    let ckpt_b = take_arg(&mut args, "--ckpt-b").unwrap_or_else(|| usage());
+    let matches: usize = take_arg(&mut args, "--matches")
+        .map(|s| s.parse().expect("bad --matches"))
+        .unwrap_or(20);
+    let mut cfg = build_config(&args);
+    if cfg.spec == "doomish" {
+        cfg.spec = "doomish_full".into(); // duel needs the full action space
+    }
+
+    let rt = sample_factory::runtime::Runtime::cpu().expect("pjrt");
+    let progs =
+        sample_factory::runtime::ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)
+            .expect("artifacts");
+    let pa = sample_factory::runtime::checkpoint::load(
+        std::path::Path::new(&ckpt_a),
+        &progs.manifest,
+    )
+    .expect("ckpt-a");
+    let pb = sample_factory::runtime::checkpoint::load(
+        std::path::Path::new(&ckpt_b),
+        &progs.manifest,
+    )
+    .expect("ckpt-b");
+    let report = sample_factory::eval::play_match(
+        &progs, pa, pb, &cfg.spec, matches, 2, cfg.seed,
+    )
+    .expect("match series");
+    println!("== duel: {matches} matches, A vs B ==");
+    println!(
+        "A wins {}  B wins {}  ties {}",
+        report.wins_a, report.wins_b, report.ties
+    );
+    println!(
+        "mean match score: A {:+.2}  B {:+.2}",
+        report.mean_frags_a, report.mean_frags_b
+    );
+}
+
+fn build_config(args: &[String]) -> Config {
+    // --preset is handled first so later --key value overrides it.
+    let mut cfg = Config::default();
+    let mut rest: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--preset" {
+            let name = args.get(i + 1).unwrap_or_else(|| usage());
+            cfg = preset(name).unwrap_or_else(|| {
+                eprintln!("unknown preset '{name}'");
+                std::process::exit(2);
+            });
+            i += 2;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    if let Err(e) = cfg.apply_cli(&rest) {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    }
+    cfg
+}
+
+fn cmd_train(args: &[String]) {
+    let cfg = build_config(args);
+    eprintln!(
+        "[repro] method={} spec={} scenario={} workers={} envs/worker={} frames={}",
+        cfg.method.name(),
+        cfg.spec,
+        cfg.scenario,
+        cfg.num_workers,
+        cfg.envs_per_worker,
+        cfg.total_env_frames
+    );
+    match Trainer::run(&cfg) {
+        Ok(res) => {
+            println!("== training summary ==");
+            println!("frames            {}", res.frames);
+            println!("wall_s            {:.1}", res.wall_s);
+            println!("fps               {:.0}", res.fps);
+            println!("episodes          {}", res.episodes);
+            println!("sgd_steps         {}", res.learner_steps);
+            println!("mean_return       {:.3}", res.mean_return);
+            println!("policy_lag mean   {:.2} max {}", res.lag_mean, res.lag_max);
+            for (i, r) in res.per_policy_return.iter().enumerate() {
+                println!("policy[{i}] return {r:.3}");
+            }
+            for (name, r) in &res.per_task_return {
+                println!("task {name:<24} return {r:.3}");
+            }
+            if !res.pbt_events.is_empty() {
+                println!("pbt events        {}", res.pbt_events.len());
+            }
+        }
+        Err(e) => {
+            eprintln!("training failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_bench(args: &[String]) {
+    let Some(exhibit) = args.first() else { usage() };
+    let rest = &args[1..];
+    let r = match exhibit.as_str() {
+        "throughput" => bench::throughput::run_cli(rest),
+        "table1" => bench::throughput::run_table1_cli(rest),
+        "walltime" => bench::walltime::run_cli(rest),
+        "scenarios" => bench::scenarios::run_cli(rest),
+        "battle" => bench::battle::run_cli(rest),
+        "pbt-duel" => bench::pbt::run_duel_cli(rest),
+        "pbt-throughput" => bench::pbt::run_throughput_cli(rest),
+        "multitask" => bench::multitask::run_cli(rest),
+        "fifo" => bench::fifo::run_cli(rest),
+        "lag" => bench::lag::run_cli(rest),
+        _ => {
+            eprintln!("unknown exhibit '{exhibit}'");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_render(args: &[String]) {
+    let mut args = args.to_vec();
+    let out = take_arg(&mut args, "--out").unwrap_or_else(|| "frames".to_string());
+    let n: usize = take_arg(&mut args, "--n")
+        .map(|s| s.parse().expect("bad --n"))
+        .unwrap_or(50);
+    let ckpt = take_arg(&mut args, "--ckpt");
+    let cfg = build_config(&args);
+    let (progs, params);
+    let (progs_ref, params_val) = match ckpt {
+        Some(c) => {
+            let rt = sample_factory::runtime::Runtime::cpu().expect("pjrt");
+            progs = sample_factory::runtime::ModelPrograms::load(
+                &rt, &cfg.artifacts_dir, &cfg.spec,
+            )
+            .expect("artifacts");
+            params = sample_factory::runtime::checkpoint::load(
+                std::path::Path::new(&c),
+                &progs.manifest,
+            )
+            .expect("checkpoint");
+            (Some(&progs), Some(params))
+        }
+        None => (None, None),
+    };
+    let paths = sample_factory::render_dump::dump_episode(
+        &cfg.spec, &cfg.scenario, &out, n, cfg.frameskip, cfg.seed, progs_ref, params_val,
+    )
+    .expect("render dump");
+    println!("wrote {} frames to {out}/ (PPM)", paths.len());
+}
+
+fn cmd_list() {
+    println!("presets: tiny_smoke doom_basic doom_battle duel_pbt breakout gridlab multitask");
+    println!(
+        "scenarios: basic defend_center defend_line health_gathering my_way_home \
+         battle battle2 duel_bots deathmatch_bots duel deathmatch breakout \
+         collect_good_objects gridlab_task0..7 multitask"
+    );
+    println!("methods: appo sync serialized pure_sim");
+    println!("specs: tiny doomish doomish_full arcade gridlab");
+}

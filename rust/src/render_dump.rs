@@ -1,0 +1,168 @@
+//! Qualitative inspection: dump rendered episode frames to PPM images
+//! (`repro render`), the tool behind Fig 9-style behaviour analysis.
+//!
+//! Works for any scenario; optionally drives the agent from a checkpoint
+//! (otherwise random actions).  PPM (P6) needs no image dependencies and
+//! every viewer opens it.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::env::{make, AgentStep};
+use crate::eval::PolicyEval;
+use crate::runtime::{ModelPrograms, Tensors};
+use crate::util::Rng;
+
+/// Write one HWC u8 frame as PPM. Grayscale (c==1) and framestacked
+/// (c==4, newest channel) observations are expanded to RGB.
+pub fn write_ppm(path: &Path, obs: &[u8], h: usize, w: usize, c: usize) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    writeln!(f, "P6\n{w} {h}\n255")?;
+    for y in 0..h {
+        for x in 0..w {
+            let o = (y * w + x) * c;
+            let rgb = match c {
+                3 => [obs[o], obs[o + 1], obs[o + 2]],
+                1 => [obs[o]; 3],
+                // framestack: show the newest frame (last channel)
+                n => [obs[o + n - 1]; 3],
+            };
+            f.write_all(&rgb)?;
+        }
+    }
+    Ok(())
+}
+
+/// Dump `n_frames` frames (one per frameskip'd action) of a scenario into
+/// `out_dir/frame_00000.ppm ...`. Returns the written paths.
+#[allow(clippy::too_many_arguments)]
+pub fn dump_episode(
+    spec: &str,
+    scenario: &str,
+    out_dir: &str,
+    n_frames: usize,
+    frameskip: u32,
+    seed: u64,
+    progs: Option<&ModelPrograms>,
+    params: Option<Tensors>,
+) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut rng = Rng::new(seed);
+    let mut env = make(spec, scenario, &mut rng).map_err(|e| anyhow!(e))?;
+    let es = env.spec().clone();
+    let mut obs = vec![0u8; es.obs.len()];
+    let mut actions = vec![0i32; es.n_agents * es.action_heads.len()];
+    let mut out = vec![AgentStep::default(); es.n_agents];
+    let mut paths = Vec::with_capacity(n_frames);
+
+    let mut policy = match (progs, params) {
+        (Some(pr), Some(pa)) => {
+            if pr.manifest.action_heads != es.action_heads {
+                return Err(anyhow!("checkpoint/scenario action-head mismatch"));
+            }
+            Some(PolicyEval::new(pr, pa, false))
+        }
+        _ => None,
+    };
+
+    env.reset(seed);
+    for i in 0..n_frames {
+        env.render(0, &mut obs);
+        let path = Path::new(out_dir).join(format!("frame_{i:05}.ppm"));
+        write_ppm(&path, &obs, es.obs.h, es.obs.w, es.obs.c)?;
+        paths.push(path);
+
+        match &mut policy {
+            Some(p) => {
+                p.act(&obs, &mut rng, &mut actions[..es.action_heads.len()])?;
+                // Other agents (if any) act randomly.
+                for a in 1..es.n_agents {
+                    for (h, &n) in es.action_heads.iter().enumerate() {
+                        actions[a * es.action_heads.len() + h] = rng.below(n) as i32;
+                    }
+                }
+            }
+            None => {
+                for chunk in actions.chunks_mut(es.action_heads.len()) {
+                    for (h, &n) in es.action_heads.iter().enumerate() {
+                        chunk[h] = rng.below(n) as i32;
+                    }
+                }
+            }
+        }
+        for _ in 0..frameskip {
+            env.step(&actions, &mut out);
+            if out[0].done {
+                break;
+            }
+        }
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppm_roundtrip_header_and_size() {
+        let dir = std::env::temp_dir().join("sf_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.ppm");
+        let (h, w, c) = (4, 6, 3);
+        let obs: Vec<u8> = (0..h * w * c).map(|i| (i % 256) as u8).collect();
+        write_ppm(&path, &obs, h, w, c).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header = b"P6\n6 4\n255\n";
+        assert!(bytes.starts_with(header));
+        assert_eq!(bytes.len(), header.len() + h * w * 3);
+    }
+
+    #[test]
+    fn dump_episode_writes_frames() {
+        let dir = std::env::temp_dir().join("sf_dump_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = dump_episode(
+            "doomish",
+            "battle",
+            dir.to_str().unwrap(),
+            5,
+            4,
+            9,
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(paths.len(), 5);
+        for p in &paths {
+            assert!(p.exists());
+            assert!(std::fs::metadata(p).unwrap().len() > 1000);
+        }
+        // Frames should differ over time (the world moves).
+        let a = std::fs::read(&paths[0]).unwrap();
+        let b = std::fs::read(&paths[4]).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn framestack_obs_renders_newest_channel() {
+        let dir = std::env::temp_dir().join("sf_dump_arcade");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = dump_episode(
+            "arcade",
+            "breakout",
+            dir.to_str().unwrap(),
+            2,
+            4,
+            3,
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(paths.len(), 2);
+    }
+}

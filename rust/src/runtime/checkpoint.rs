@@ -1,0 +1,194 @@
+//! Checkpointing: parameter snapshots on disk.
+//!
+//! Format (little-endian, version-tagged):
+//!
+//! ```text
+//! magic "SFCKPT01" | u32 n_tensors |
+//!   per tensor: u32 name_len | name bytes | u32 ndims | u64 dims... |
+//!               u64 data_len_bytes | f32 data...
+//! ```
+//!
+//! Checkpoints are validated against the live manifest on load, so a
+//! checkpoint from a different spec (or a stale artifacts dir) fails fast
+//! with a descriptive error instead of feeding mis-shaped tensors to PJRT.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{lit_f32, Manifest, Tensors};
+
+const MAGIC: &[u8; 8] = b"SFCKPT01";
+
+/// Save a parameter set, creating parent directories.
+pub fn save(path: &Path, manifest: &Manifest, params: &Tensors) -> Result<()> {
+    if params.len() != manifest.n_params {
+        return Err(anyhow!(
+            "cannot save: {} tensors vs manifest {}",
+            params.len(),
+            manifest.n_params
+        ));
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(params.len() as u32).to_le_bytes())?;
+        for (def, lit) in manifest.params.iter().zip(params.iter()) {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("read {}: {e:?}", def.name))?;
+            f.write_all(&(def.name.len() as u32).to_le_bytes())?;
+            f.write_all(def.name.as_bytes())?;
+            f.write_all(&(def.shape.len() as u32).to_le_bytes())?;
+            for &d in &def.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            f.write_all(&((data.len() * 4) as u64).to_le_bytes())?;
+            for x in &data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    // Atomic-ish publish.
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Load a checkpoint, validating names and shapes against `manifest`.
+pub fn load(path: &Path, manifest: &Manifest) -> Result<Tensors> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(anyhow!("{path:?}: not a sample-factory checkpoint"));
+    }
+    let n = read_u32(&mut f)? as usize;
+    if n != manifest.n_params {
+        return Err(anyhow!(
+            "{path:?}: {n} tensors but spec '{}' expects {} — wrong spec?",
+            manifest.name,
+            manifest.n_params
+        ));
+    }
+    let mut out = Vec::with_capacity(n);
+    for def in &manifest.params {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            return Err(anyhow!("{path:?}: corrupt name length"));
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|_| anyhow!("corrupt name"))?;
+        if name != def.name {
+            return Err(anyhow!(
+                "{path:?}: tensor '{name}' where '{}' expected — checkpoint \
+                 from a different spec/ordering",
+                def.name
+            ));
+        }
+        let ndims = read_u32(&mut f)? as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(read_u64(&mut f)? as usize);
+        }
+        if dims != def.shape {
+            return Err(anyhow!(
+                "{path:?}: '{name}' shape {dims:?} != manifest {:?}",
+                def.shape
+            ));
+        }
+        let byte_len = read_u64(&mut f)? as usize;
+        let expect: usize = def.shape.iter().product::<usize>().max(1) * 4;
+        if byte_len != expect {
+            return Err(anyhow!("{path:?}: '{name}' has {byte_len} bytes, want {expect}"));
+        }
+        let mut bytes = vec![0u8; byte_len];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.push(lit_f32(&def.shape, &data)?);
+    }
+    Ok(Tensors(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::to_f32_vec;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"name":"t","obs_shape":[8,8,3],"action_heads":[3],
+                "hidden":4,"policy_batch":2,"train_batch":2,"rollout":4,
+                "params":[{"name":"a/w","shape":[2,3],"dtype":"f32"},
+                           {"name":"a/b","shape":[3],"dtype":"f32"}],
+                "n_params":2,
+                "hyper_names":["lr"],"hypers_default":[0.001],
+                "metric_names":["loss"]}"#,
+        )
+        .unwrap()
+    }
+
+    fn params() -> Tensors {
+        Tensors(vec![
+            lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap(),
+            lit_f32(&[3], &[-1.0, 0.5, 9.0]).unwrap(),
+        ])
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sf_ckpt_test");
+        let path = dir.join("p.ckpt");
+        let man = manifest();
+        save(&path, &man, &params()).unwrap();
+        let loaded = load(&path, &man).unwrap();
+        assert_eq!(
+            to_f32_vec(&loaded[0]).unwrap(),
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+        );
+        assert_eq!(to_f32_vec(&loaded[1]).unwrap(), vec![-1.0, 0.5, 9.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_manifest() {
+        let dir = std::env::temp_dir().join("sf_ckpt_test2");
+        let path = dir.join("p.ckpt");
+        let man = manifest();
+        save(&path, &man, &params()).unwrap();
+        let mut other = manifest();
+        other.params[0].shape = vec![3, 2];
+        let err = load(&path, &other).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("sf_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load(&path, &manifest()).is_err());
+    }
+}

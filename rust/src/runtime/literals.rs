@@ -1,0 +1,91 @@
+//! Literal construction/extraction helpers used on the hot paths.
+//!
+//! PJRT inputs are host literals; these helpers build them from plain
+//! slices without intermediate allocations beyond the literal itself, and
+//! read results back into reusable Vecs.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+fn as_bytes<T>(xs: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    }
+}
+
+/// f32 literal with the given dims (row-major).
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    let expect: usize = dims.iter().product::<usize>().max(1);
+    if data.len() != expect && !(dims.is_empty() && data.len() == 1) {
+        return Err(anyhow!("lit_f32: {} values for dims {dims:?}", data.len()));
+    }
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, as_bytes(data))
+        .map_err(|e| anyhow!("lit_f32: {e:?}"))
+}
+
+/// u8 literal (pixel observations).
+pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::U8, dims, data)
+        .map_err(|e| anyhow!("lit_u8: {e:?}"))
+}
+
+/// i32 literal (action indices).
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, as_bytes(data))
+        .map_err(|e| anyhow!("lit_i32: {e:?}"))
+}
+
+/// u32 scalar (seeds).
+pub fn lit_u32_scalar(v: u32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Copy a literal's f32 contents into a Vec.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_f32_vec: {e:?}"))
+}
+
+/// Copy a literal's f32 contents into an existing buffer (no allocation).
+pub fn read_f32_into(lit: &Literal, out: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to::<f32>(out).map_err(|e| anyhow!("read_f32_into: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn f32_scalar() {
+        let lit = lit_f32(&[], &[7.5]).unwrap();
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn u8_and_i32() {
+        let l = lit_u8(&[4], &[1, 2, 3, 255]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let l = lit_i32(&[2], &[-5, 9]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![-5, 9]);
+    }
+
+    #[test]
+    fn read_into_no_alloc() {
+        let lit = lit_f32(&[3], &[9.0, 8.0, 7.0]).unwrap();
+        let mut buf = [0f32; 3];
+        read_f32_into(&lit, &mut buf).unwrap();
+        assert_eq!(buf, [9.0, 8.0, 7.0]);
+    }
+}

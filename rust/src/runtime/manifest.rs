@@ -1,0 +1,233 @@
+//! The AOT contract: `artifacts/<spec>/manifest.json`, written by
+//! `python/compile/aot.py` and parsed here.  Every shape/ordering the Rust
+//! side relies on is checked against this file at startup, so a stale
+//! artifacts directory fails fast instead of feeding garbage to PJRT.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamDef {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    /// (H, W, C)
+    pub obs_shape: [usize; 3],
+    pub action_heads: Vec<usize>,
+    pub hidden: usize,
+    pub policy_batch: usize,
+    pub train_batch: usize,
+    pub rollout: usize,
+    pub params: Vec<ParamDef>,
+    pub n_params: usize,
+    pub hyper_names: Vec<String>,
+    pub hypers_default: Vec<f32>,
+    pub metric_names: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let req_usize = |k: &str| -> Result<usize> {
+            j.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("field '{k}' is not a number"))
+        };
+        let obs = j
+            .req("obs_shape")
+            .map_err(|e| anyhow!("{e}"))?
+            .usize_arr()
+            .ok_or_else(|| anyhow!("obs_shape malformed"))?;
+        if obs.len() != 3 {
+            return Err(anyhow!("obs_shape must have 3 dims, got {obs:?}"));
+        }
+        let params_json = j
+            .req("params")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params malformed"))?;
+        let mut params = Vec::with_capacity(params_json.len());
+        for p in params_json {
+            let name = p
+                .req("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("param name malformed"))?
+                .to_string();
+            let shape = p
+                .req("shape")
+                .map_err(|e| anyhow!("{e}"))?
+                .usize_arr()
+                .ok_or_else(|| anyhow!("param shape malformed"))?;
+            params.push(ParamDef { name, shape });
+        }
+        let man = Manifest {
+            name: j
+                .req("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("name malformed"))?
+                .to_string(),
+            obs_shape: [obs[0], obs[1], obs[2]],
+            action_heads: j
+                .req("action_heads")
+                .map_err(|e| anyhow!("{e}"))?
+                .usize_arr()
+                .ok_or_else(|| anyhow!("action_heads malformed"))?,
+            hidden: req_usize("hidden")?,
+            policy_batch: req_usize("policy_batch")?,
+            train_batch: req_usize("train_batch")?,
+            rollout: req_usize("rollout")?,
+            n_params: req_usize("n_params")?,
+            hyper_names: j
+                .req("hyper_names")
+                .map_err(|e| anyhow!("{e}"))?
+                .str_arr()
+                .ok_or_else(|| anyhow!("hyper_names malformed"))?,
+            hypers_default: j
+                .req("hypers_default")
+                .map_err(|e| anyhow!("{e}"))?
+                .f32_arr()
+                .ok_or_else(|| anyhow!("hypers_default malformed"))?,
+            metric_names: j
+                .req("metric_names")
+                .map_err(|e| anyhow!("{e}"))?
+                .str_arr()
+                .ok_or_else(|| anyhow!("metric_names malformed"))?,
+            params,
+        };
+        if man.params.len() != man.n_params {
+            return Err(anyhow!(
+                "n_params {} != params list length {}",
+                man.n_params,
+                man.params.len()
+            ));
+        }
+        if man.hyper_names.len() != man.hypers_default.len() {
+            return Err(anyhow!("hyper names/defaults length mismatch"));
+        }
+        Ok(man)
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+
+    pub fn total_actions(&self) -> usize {
+        self.action_heads.iter().sum()
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.action_heads.len()
+    }
+
+    /// Index of a hyperparameter by name.
+    pub fn hyper_index(&self, name: &str) -> Option<usize> {
+        self.hyper_names.iter().position(|n| n == name)
+    }
+
+    /// Default hypers with overrides applied.
+    pub fn hypers_with(
+        &self,
+        overrides: &std::collections::BTreeMap<String, f32>,
+    ) -> Result<Vec<f32>> {
+        let mut h = self.hypers_default.clone();
+        for (k, v) in overrides {
+            let i = self
+                .hyper_index(k)
+                .ok_or_else(|| anyhow!("unknown hyperparameter '{k}'"))?;
+            h[i] = *v;
+        }
+        Ok(h)
+    }
+
+    /// Index of a metric by name.
+    pub fn metric_index(&self, name: &str) -> Option<usize> {
+        self.metric_names.iter().position(|n| n == name)
+    }
+
+    /// Total parameter count (for logs).
+    pub fn total_param_elems(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "tiny", "obs_shape": [24, 32, 3], "action_heads": [3, 2],
+        "hidden": 32, "fc_dim": 32, "policy_batch": 8, "train_batch": 4,
+        "rollout": 8,
+        "params": [
+            {"name": "conv0/w", "shape": [4,4,3,8], "dtype": "f32"},
+            {"name": "conv0/b", "shape": [8], "dtype": "f32"}
+        ],
+        "n_params": 2,
+        "hyper_names": ["lr", "ent_coef"],
+        "hypers_default": [0.0001, 0.003],
+        "metric_names": ["total_loss"],
+        "programs": {}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.obs_len(), 24 * 32 * 3);
+        assert_eq!(m.total_actions(), 5);
+        assert_eq!(m.params[0].shape, vec![4, 4, 3, 8]);
+        assert_eq!(m.total_param_elems(), 4 * 4 * 3 * 8 + 8);
+        assert_eq!(m.hyper_index("ent_coef"), Some(1));
+        assert_eq!(m.hyper_index("nope"), None);
+    }
+
+    #[test]
+    fn hypers_with_overrides() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("lr".to_string(), 0.5f32);
+        let h = m.hypers_with(&o).unwrap();
+        assert_eq!(h, vec![0.5, 0.003]);
+        o.insert("bogus".to_string(), 1.0);
+        assert!(m.hypers_with(&o).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_counts() {
+        let bad = SAMPLE.replace("\"n_params\": 2", "\"n_params\": 3");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let path = Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/tiny/manifest.json"
+        ));
+        if path.exists() {
+            let m = Manifest::load(path).unwrap();
+            assert_eq!(m.name, "tiny");
+            assert_eq!(m.action_heads, vec![3, 2]);
+            assert_eq!(m.rollout, 8);
+            assert!(m.total_param_elems() > 10_000);
+        }
+    }
+}

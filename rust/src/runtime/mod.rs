@@ -1,0 +1,278 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + manifest) and executes
+//! them from the Rust hot path.  This is the only place the `xla` crate is
+//! touched; Python never runs after `make artifacts`.
+//!
+//! * [`manifest`] — the AOT-time contract (shapes/ordering) parsed from
+//!   `artifacts/<spec>/manifest.json`.
+//! * [`Runtime`] — a PJRT CPU client; compiles HLO text into executables.
+//! * [`ModelPrograms`] — the three programs (`init`, `policy`, `train`)
+//!   for one model spec.
+//! * [`params::ParamStore`] — the versioned published parameters: the
+//!   learner publishes, policy workers fetch on version change.  This is
+//!   the in-process analogue of the paper's "model in shared CUDA memory,
+//!   update <1 ms" (§3.4): publishing swaps an `Arc`, fetching clones it.
+
+pub mod checkpoint;
+pub mod literals;
+pub mod manifest;
+pub mod params;
+
+pub use literals::{lit_f32, lit_i32, lit_u32_scalar, lit_u8, read_f32_into, to_f32_vec};
+pub use manifest::Manifest;
+pub use params::{ParamStore, VersionedParams};
+
+use anyhow::{anyhow, Context, Result};
+use std::ops::{Deref, DerefMut};
+use std::path::Path;
+use std::sync::Arc;
+
+/// A batch of host tensors that can cross thread boundaries.
+///
+/// SAFETY: `xla::Literal` owns plain host memory (an `xla::Literal` on the
+/// C++ side) with no thread affinity; every API we use through `&self`
+/// (`to_vec`, `copy_raw_to`, `shape`, execute inputs) is read-only, and
+/// mutation (`copy_raw_from`) requires `&mut self`.  The raw pointer inside
+/// the crate's wrapper is the only reason it isn't auto-`Send`/`Sync`.
+pub struct Tensors(pub Vec<xla::Literal>);
+
+unsafe impl Send for Tensors {}
+unsafe impl Sync for Tensors {}
+
+impl Deref for Tensors {
+    type Target = Vec<xla::Literal>;
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+impl DerefMut for Tensors {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.0
+    }
+}
+
+impl Clone for Tensors {
+    fn clone(&self) -> Self {
+        Tensors(self.0.clone())
+    }
+}
+
+impl std::fmt::Debug for Tensors {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensors({} literals)", self.0.len())
+    }
+}
+
+/// A PJRT client plus compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client (the container has no accelerator).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text and compile it.  HLO *text* is the interchange format
+    /// (jax >= 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects;
+    /// the text parser reassigns ids — see DESIGN.md / aot.py).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable {
+            exe,
+            client: self.client.clone(),
+            name: path.display().to_string(),
+        })
+    }
+}
+
+/// A compiled program.  All our programs are lowered with
+/// `return_tuple=True`, so execution returns one tuple literal that we
+/// decompose into the per-output literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    name: String,
+}
+
+// SAFETY: PJRT loaded executables are documented thread-safe for Execute;
+// we only call `execute` through `&self`.  The client handle inside is
+// reference-counted on the C++ side.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+// SAFETY: the PJRT CPU client is thread-safe (it backs multi-threaded
+// jax/TF runtimes); we only compile through `&self`.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Executable {
+    /// Execute with host literals, returning the decomposed outputs.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal inputs): the crate's C++ shim uploads each input literal to
+    /// a device buffer it `release()`s and never frees — a per-call leak of
+    /// the whole input set (~hundreds of MB/min at our call rates).  We
+    /// upload through `buffer_from_host_literal` so Rust owns the buffers
+    /// (freed on drop) and dispatch via `execute_b`.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (i, l) in inputs.iter().enumerate() {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("upload input {i} of {}: {e:?}", self.name))?,
+            );
+        }
+        self.run_b(&bufs)
+    }
+
+    /// Execute with device-resident buffers (no host->device copies); used
+    /// by callers that cache e.g. parameter uploads across calls.
+    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&inputs.iter().collect::<Vec<_>>())
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let mut lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch outputs of {}: {e:?}", self.name))?;
+        lit.decompose_tuple()
+            .map_err(|e| anyhow!("untuple outputs of {}: {e:?}", self.name))
+    }
+
+    /// Execute with a cached device-buffer prefix (typically parameters,
+    /// re-uploaded only when the learner publishes) plus fresh host-literal
+    /// inputs.  §Perf: parameters dominate the input bytes of the policy
+    /// program; caching their upload cuts per-batch host->device traffic to
+    /// just the observation/hidden tensors.
+    pub fn run_cached(
+        &self,
+        cached: &[xla::PjRtBuffer],
+        fresh: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let fresh_bufs = self.upload(fresh)?;
+        let mut refs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(cached.len() + fresh_bufs.len());
+        refs.extend(cached.iter());
+        refs.extend(fresh_bufs.iter());
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let mut lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch outputs of {}: {e:?}", self.name))?;
+        lit.decompose_tuple()
+            .map_err(|e| anyhow!("untuple outputs of {}: {e:?}", self.name))
+    }
+
+    /// Number of raw output buffers one execution produces (diagnostic:
+    /// tells whether this PJRT build untuples results).
+    pub fn probe_output_buffers(&self, inputs: &[&xla::Literal]) -> Result<usize> {
+        let bufs = self.upload(inputs)?;
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs.iter().collect::<Vec<_>>())
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        Ok(outs[0].len())
+    }
+
+    /// Upload a set of host literals to device buffers (for `run_b`).
+    pub fn upload(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (i, l) in inputs.iter().enumerate() {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("upload {i} of {}: {e:?}", self.name))?,
+            );
+        }
+        Ok(bufs)
+    }
+}
+
+/// The three compiled programs for one model spec + its manifest.
+pub struct ModelPrograms {
+    pub manifest: Manifest,
+    pub init: Executable,
+    pub policy: Executable,
+    pub train: Executable,
+}
+
+impl ModelPrograms {
+    /// Load and compile everything for `spec` from `artifacts_dir`.
+    pub fn load(rt: &Runtime, artifacts_dir: &str, spec: &str) -> Result<Self> {
+        let dir = Path::new(artifacts_dir).join(spec);
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest for spec '{spec}'"))?;
+        let init = rt.load_hlo_text(&dir.join("init.hlo.txt"))?;
+        let policy = rt.load_hlo_text(&dir.join("policy.hlo.txt"))?;
+        let train = rt.load_hlo_text(&dir.join("train.hlo.txt"))?;
+        Ok(ModelPrograms { manifest, init, policy, train })
+    }
+
+    /// Run the init program: seed -> fresh parameters.
+    pub fn init_params(&self, seed: u32) -> Result<Tensors> {
+        let seed_lit = lit_u32_scalar(seed);
+        let out = self.init.run(&[&seed_lit])?;
+        if out.len() != self.manifest.n_params {
+            return Err(anyhow!(
+                "init returned {} tensors, manifest says {}",
+                out.len(),
+                self.manifest.n_params
+            ));
+        }
+        Ok(Tensors(out))
+    }
+
+    /// Fresh Adam state: zeroed m and v plus a zero step counter.
+    pub fn zero_opt_state(&self) -> Result<(Tensors, Tensors, Tensors)> {
+        let mut m = Vec::with_capacity(self.manifest.n_params);
+        let mut v = Vec::with_capacity(self.manifest.n_params);
+        for p in &self.manifest.params {
+            let n: usize = p.shape.iter().product::<usize>().max(1);
+            let zeros = vec![0f32; n];
+            m.push(lit_f32(&p.shape, &zeros)?);
+            v.push(lit_f32(&p.shape, &zeros)?);
+        }
+        let step = Tensors(vec![lit_f32(&[], &[0.0])?]);
+        Ok((Tensors(m), Tensors(v), step))
+    }
+}
+
+/// A fully initialised learner state (params + Adam state), owned by the
+/// learner thread and chained through consecutive train_step executions.
+pub struct LearnerState {
+    pub params: Tensors,
+    pub m: Tensors,
+    pub v: Tensors,
+    /// Single-element tensor: the Adam step counter.
+    pub step: Tensors,
+}
+
+impl LearnerState {
+    pub fn fresh(progs: &ModelPrograms, seed: u32) -> Result<Self> {
+        let params = progs.init_params(seed)?;
+        let (m, v, step) = progs.zero_opt_state()?;
+        Ok(LearnerState { params, m, v, step })
+    }
+
+    pub fn publish(&self) -> VersionedParams {
+        Arc::new(self.params.clone())
+    }
+}

@@ -1,0 +1,118 @@
+//! Versioned parameter publication: learner -> policy workers.
+//!
+//! The paper stores the master copy of the model in shared CUDA memory and
+//! has policy workers copy it in <1 ms as soon as the learner publishes an
+//! update (§3.4) — this is what keeps the *first* source of policy lag
+//! (acting with stale weights) negligible.  The in-process analogue: the
+//! learner swaps an `Arc<Vec<Literal>>` under an `RwLock`; policy workers
+//! poll the version counter (one atomic load) every batch and clone the
+//! `Arc` (not the tensors) when it changed.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::Tensors;
+
+pub type VersionedParams = Arc<Tensors>;
+
+/// Shared parameter store for one policy.
+pub struct ParamStore {
+    version: AtomicU32,
+    params: RwLock<VersionedParams>,
+}
+
+impl ParamStore {
+    pub fn new(initial: VersionedParams) -> Arc<Self> {
+        Arc::new(ParamStore {
+            version: AtomicU32::new(1),
+            params: RwLock::new(initial),
+        })
+    }
+
+    /// Current version (monotonically increasing from 1).
+    #[inline]
+    pub fn version(&self) -> u32 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Publish new parameters; returns the new version.
+    pub fn publish(&self, params: VersionedParams) -> u32 {
+        {
+            let mut guard = self.params.write().unwrap();
+            *guard = params;
+        }
+        // Bump after the swap so a reader that sees the new version also
+        // sees the new params.
+        self.version.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Fetch the current parameters (cheap Arc clone).
+    pub fn fetch(&self) -> (u32, VersionedParams) {
+        // Read version first: if a publish races us we may return the newer
+        // params with the older version number, which only *overestimates*
+        // policy lag — safe for accounting.
+        let v = self.version();
+        let p = self.params.read().unwrap().clone();
+        (v, p)
+    }
+
+    /// Fetch only if newer than `have`.
+    pub fn fetch_if_newer(&self, have: u32) -> Option<(u32, VersionedParams)> {
+        if self.version() > have {
+            Some(self.fetch())
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{lit_f32, Tensors};
+
+    fn params(v: f32) -> VersionedParams {
+        Arc::new(Tensors(vec![lit_f32(&[2], &[v, v]).unwrap()]))
+    }
+
+    #[test]
+    fn publish_bumps_version() {
+        let store = ParamStore::new(params(0.0));
+        assert_eq!(store.version(), 1);
+        assert_eq!(store.publish(params(1.0)), 2);
+        assert_eq!(store.version(), 2);
+    }
+
+    #[test]
+    fn fetch_if_newer_behaviour() {
+        let store = ParamStore::new(params(0.0));
+        let (v, _) = store.fetch();
+        assert_eq!(v, 1);
+        assert!(store.fetch_if_newer(1).is_none());
+        store.publish(params(2.0));
+        let (v2, p2) = store.fetch_if_newer(1).unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(p2[0].to_vec::<f32>().unwrap(), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn concurrent_publish_fetch_is_consistent() {
+        let store = ParamStore::new(params(0.0));
+        let s2 = store.clone();
+        let writer = std::thread::spawn(move || {
+            for i in 1..200 {
+                s2.publish(params(i as f32));
+            }
+        });
+        let mut last_v = 0;
+        for _ in 0..500 {
+            let (v, p) = store.fetch();
+            assert!(v >= last_v, "version went backwards");
+            last_v = v;
+            let vals = p[0].to_vec::<f32>().unwrap();
+            assert_eq!(vals[0], vals[1], "torn read");
+        }
+        writer.join().unwrap();
+        assert_eq!(store.version(), 200);
+    }
+}

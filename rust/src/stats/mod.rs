@@ -1,0 +1,262 @@
+//! Metrics: throughput meters, episode-return tracking, capped
+//! human-normalised scores (for the DMLab-30-style multitask experiment),
+//! and CSV/JSON writers for the bench harnesses.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Lock-free frame counter shared by all rollout workers; one instance per
+/// training run.  `fps()` reports over the window since the last call.
+pub struct ThroughputMeter {
+    frames: AtomicU64,
+    start: Instant,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter { frames: AtomicU64::new(0), start: Instant::now() }
+    }
+
+    /// Record `n` environment frames (frameskip-inclusive, matching the
+    /// paper's reporting convention).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.frames.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    /// Average FPS since construction.
+    pub fn fps(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.total() as f64 / dt
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Windowed interval meter for "FPS over the last N seconds" style readouts.
+pub struct WindowedRate {
+    samples: VecDeque<(f64, u64)>, // (t, cumulative count)
+    window_s: f64,
+}
+
+impl WindowedRate {
+    pub fn new(window_s: f64) -> Self {
+        WindowedRate { samples: VecDeque::new(), window_s }
+    }
+
+    pub fn record(&mut self, t_s: f64, cumulative: u64) {
+        self.samples.push_back((t_s, cumulative));
+        let cutoff = t_s - self.window_s;
+        while self.samples.len() > 2 && self.samples[0].0 < cutoff {
+            self.samples.pop_front();
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let (t0, c0) = self.samples[0];
+        let (t1, c1) = *self.samples.back().unwrap();
+        if t1 <= t0 {
+            return 0.0;
+        }
+        (c1 - c0) as f64 / (t1 - t0)
+    }
+}
+
+/// Running mean/std/min/max over streamed episode returns.
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    pub n: u64,
+    pub sum: f64,
+    pub sumsq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Aggregate {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+        self.sumsq += x * x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.n as f64 - m * m).max(0.0).sqrt()
+    }
+}
+
+/// Sliding-window episode-return tracker (mean over the last `cap` episodes
+/// — the convention used for every training curve in the paper).
+pub struct EpisodeTracker {
+    returns: VecDeque<f64>,
+    lengths: VecDeque<u64>,
+    cap: usize,
+    pub episodes: u64,
+}
+
+impl EpisodeTracker {
+    pub fn new(cap: usize) -> Self {
+        EpisodeTracker {
+            returns: VecDeque::with_capacity(cap),
+            lengths: VecDeque::with_capacity(cap),
+            cap,
+            episodes: 0,
+        }
+    }
+
+    pub fn push(&mut self, ret: f64, len: u64) {
+        if self.returns.len() == self.cap {
+            self.returns.pop_front();
+            self.lengths.pop_front();
+        }
+        self.returns.push_back(ret);
+        self.lengths.push_back(len);
+        self.episodes += 1;
+    }
+
+    pub fn mean_return(&self) -> f64 {
+        if self.returns.is_empty() {
+            return 0.0;
+        }
+        self.returns.iter().sum::<f64>() / self.returns.len() as f64
+    }
+
+    pub fn mean_length(&self) -> f64 {
+        if self.lengths.is_empty() {
+            return 0.0;
+        }
+        self.lengths.iter().sum::<u64>() as f64 / self.lengths.len() as f64
+    }
+}
+
+/// Capped human-normalised score (Espeholt et al. 2018, used by Fig 5):
+/// `min(100, 100 * (score - random) / (human - random))`.
+pub fn capped_human_normalized(score: f64, random: f64, human: f64) -> f64 {
+    if (human - random).abs() < 1e-9 {
+        return 0.0;
+    }
+    (100.0 * (score - random) / (human - random)).min(100.0)
+}
+
+/// Tiny CSV writer for bench outputs.
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: &str, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", fields.join(","))
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let s: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.row(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_meter_counts() {
+        let m = ThroughputMeter::new();
+        m.add(100);
+        m.add(50);
+        assert_eq!(m.total(), 150);
+        assert!(m.fps() > 0.0);
+    }
+
+    #[test]
+    fn windowed_rate_drops_old_samples() {
+        let mut w = WindowedRate::new(10.0);
+        w.record(0.0, 0);
+        w.record(5.0, 500);
+        w.record(20.0, 2000);
+        // Only samples within the window of t=20 matter: (5,500) .. (20,2000)
+        let r = w.rate();
+        assert!((r - 100.0).abs() < 1e-6, "r={r}");
+    }
+
+    #[test]
+    fn aggregate_moments() {
+        let mut a = Aggregate::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.push(x);
+        }
+        assert_eq!(a.mean(), 2.5);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 4.0);
+        assert!((a.std() - (1.25f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn episode_tracker_window() {
+        let mut t = EpisodeTracker::new(3);
+        for i in 0..10 {
+            t.push(i as f64, 100);
+        }
+        assert_eq!(t.episodes, 10);
+        assert_eq!(t.mean_return(), 8.0); // mean of 7,8,9
+        assert_eq!(t.mean_length(), 100.0);
+    }
+
+    #[test]
+    fn human_normalized_caps_at_100() {
+        assert_eq!(capped_human_normalized(200.0, 0.0, 100.0), 100.0);
+        assert_eq!(capped_human_normalized(50.0, 0.0, 100.0), 50.0);
+        assert_eq!(capped_human_normalized(0.0, 0.0, 0.0), 0.0);
+        assert!(capped_human_normalized(-10.0, 0.0, 100.0) < 0.0);
+    }
+
+    #[test]
+    fn csv_writer_writes() {
+        let path = std::env::temp_dir().join("sf_csv_test.csv");
+        let p = path.to_str().unwrap();
+        let mut w = CsvWriter::create(p, &["a", "b"]).unwrap();
+        w.row_f64(&[1.0, 2.5]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal property-based testing harness (offline stand-in for proptest).
+//!
+//! `check(cases, |g| { ... })` runs a closure against `cases` randomly
+//! generated inputs drawn through the [`Gen`] handle.  On failure it reruns
+//! with the same seed to confirm, then panics with the seed so the case is
+//! reproducible (`SF_TESTKIT_SEED=<seed>` pins the whole run).
+//!
+//! Used by the coordinator/env/ipc property suites (routing invariants,
+//! batching invariants, slot-reuse safety, env determinism...).
+
+use crate::util::Rng;
+
+/// Randomness handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of the current case (printed on failure).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_u8(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| (self.rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    /// Borrow the raw RNG (for shuffles etc.).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+fn root_seed() -> u64 {
+    match std::env::var("SF_TESTKIT_SEED") {
+        Ok(s) => s.parse().expect("SF_TESTKIT_SEED must be u64"),
+        Err(_) => 0x5afe_fac7_0123_4567,
+    }
+}
+
+/// Run `prop` against `cases` random inputs.
+pub fn check<F: FnMut(&mut Gen)>(cases: usize, mut prop: F) {
+    let mut root = Rng::new(root_seed());
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (seed {case_seed:#x}): {msg}\n\
+                 reproduce the full run with SF_TESTKIT_SEED={}",
+                root_seed()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(50, |g| {
+            let n = g.usize_in(1, 100);
+            let v = g.vec_f32(n, -1.0, 1.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures_with_seed() {
+        check(100, |g| {
+            // Fails for roughly half the cases.
+            assert!(g.bool(), "coin came up false");
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen { rng: Rng::new(7), case_seed: 7 };
+        let mut b = Gen { rng: Rng::new(7), case_seed: 7 };
+        for _ in 0..32 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

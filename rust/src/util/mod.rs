@@ -1,0 +1,135 @@
+//! Small self-contained utilities: RNG, timing, math helpers.
+//!
+//! The crate builds fully offline against a minimal vendored dependency set,
+//! so the RNG (xoshiro256++) and other helpers that would normally come from
+//! `rand`/`instant` are implemented here.
+
+pub mod rng;
+
+pub use rng::Rng;
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Seconds since the unix epoch as f64 (coarse wall-clock for logs).
+pub fn unix_time_s() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Clamp a float into `[lo, hi]`.
+#[inline]
+pub fn clampf(x: f32, lo: f32, hi: f32) -> f32 {
+    x.max(lo).min(hi)
+}
+
+/// Numerically-stable log-softmax over a slice; writes into `out`.
+///
+/// Used by the policy worker to turn head logits into per-action log-probs
+/// when sampling behaviour actions (the behaviour log-prob is stored in the
+/// trajectory and consumed by V-trace on the learner).
+pub fn log_softmax(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let mut max = f32::NEG_INFINITY;
+    for &v in logits {
+        if v > max {
+            max = v;
+        }
+    }
+    let mut sum = 0.0f32;
+    for (o, &v) in out.iter_mut().zip(logits) {
+        let e = v - max;
+        *o = e;
+        sum += e.exp();
+    }
+    let lse = sum.ln();
+    for o in out.iter_mut() {
+        *o -= lse;
+    }
+}
+
+/// Sample an index from a categorical distribution given *logits*.
+///
+/// Gumbel-max: argmax(logits + g) with g ~ Gumbel(0,1).  One pass, no
+/// normalisation, no allocation — this runs per head per agent per frame on
+/// the policy worker.
+#[inline]
+pub fn sample_categorical(rng: &mut Rng, logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        // u in (0,1]; -ln(-ln u) is Gumbel(0,1).
+        let u = rng.next_f32().max(1e-12);
+        let g = -(-(u.ln())).ln();
+        let v = l + g;
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalises() {
+        let logits = [1.0f32, 2.0, 3.0, -5.0];
+        let mut out = [0.0f32; 4];
+        log_softmax(&logits, &mut out);
+        let total: f32 = out.iter().map(|l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5, "sum={total}");
+        // Order-preserving.
+        assert!(out[2] > out[1] && out[1] > out[0] && out[0] > out[3]);
+    }
+
+    #[test]
+    fn log_softmax_handles_large_values() {
+        let logits = [1000.0f32, 1000.0, -1000.0];
+        let mut out = [0.0f32; 3];
+        log_softmax(&logits, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert!((out[0] - out[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn categorical_sampling_matches_distribution() {
+        let mut rng = Rng::new(42);
+        // logits -> probs [0.0321, 0.0871, 0.2369, 0.6439]
+        let logits = [0.0f32, 1.0, 2.0, 3.0];
+        let mut counts = [0usize; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[sample_categorical(&mut rng, &logits)] += 1;
+        }
+        let mut lsm = [0.0f32; 4];
+        log_softmax(&logits, &mut lsm);
+        for i in 0..4 {
+            let p_emp = counts[i] as f64 / n as f64;
+            let p_true = lsm[i].exp() as f64;
+            assert!(
+                (p_emp - p_true).abs() < 0.01,
+                "head {i}: emp {p_emp} vs true {p_true}"
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_degenerate_distribution() {
+        let mut rng = Rng::new(7);
+        let logits = [-1e9f32, 50.0, -1e9];
+        for _ in 0..100 {
+            assert_eq!(sample_categorical(&mut rng, &logits), 1);
+        }
+    }
+
+    #[test]
+    fn clampf_basic() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration: the PJRT runtime against the real `artifacts/tiny` AOT
+//! bundle — the cross-language contract (python/compile <-> rust/runtime).
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use sample_factory::runtime::{
+    lit_f32, lit_u8, to_f32_vec, LearnerState, ModelPrograms, Runtime,
+};
+
+fn progs() -> (Runtime, ModelPrograms) {
+    let rt = Runtime::cpu().expect("pjrt client");
+    let progs = ModelPrograms::load(&rt, "artifacts", "tiny")
+        .expect("artifacts/tiny missing — run `make artifacts`");
+    (rt, progs)
+}
+
+#[test]
+fn manifest_matches_rust_side_expectations() {
+    let (_rt, progs) = progs();
+    let man = &progs.manifest;
+    assert_eq!(man.name, "tiny");
+    assert_eq!(man.action_heads, vec![3, 2]);
+    assert_eq!(
+        man.obs_shape.to_vec(),
+        vec![24, 32, 3],
+        "tiny obs spec drifted between python SPECS and rust obs_for_spec"
+    );
+    assert_eq!(
+        sample_factory::env::heads_for_spec("tiny").unwrap(),
+        man.action_heads
+    );
+    assert!(man.hyper_index("lr").is_some());
+    assert!(man.metric_index("v_loss").is_some());
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let (_rt, progs) = progs();
+    let a = progs.init_params(7).unwrap();
+    let b = progs.init_params(7).unwrap();
+    let c = progs.init_params(8).unwrap();
+    let va = to_f32_vec(&a[0]).unwrap();
+    let vb = to_f32_vec(&b[0]).unwrap();
+    let vc = to_f32_vec(&c[0]).unwrap();
+    assert_eq!(va, vb, "same seed must give identical params");
+    assert_ne!(va, vc, "different seeds must differ");
+    assert!(va.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn policy_program_runs_and_produces_sane_outputs() {
+    let (_rt, progs) = progs();
+    let man = &progs.manifest;
+    let params = progs.init_params(1).unwrap();
+    let b = man.policy_batch;
+    let obs = lit_u8(
+        &[b, man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]],
+        &vec![128u8; b * man.obs_len()],
+    )
+    .unwrap();
+    let h = lit_f32(&[b, man.hidden], &vec![0f32; b * man.hidden]).unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&obs);
+    inputs.push(&h);
+    let outs = progs.policy.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 3);
+    let logits = to_f32_vec(&outs[0]).unwrap();
+    assert_eq!(logits.len(), b * man.total_actions());
+    assert!(logits.iter().all(|x| x.is_finite()));
+    let hidden = to_f32_vec(&outs[2]).unwrap();
+    assert_eq!(hidden.len(), b * man.hidden);
+    // GRU output is bounded by construction.
+    assert!(hidden.iter().all(|x| x.abs() <= 1.0 + 1e-5));
+    // Identical rows in -> identical rows out (the batch dim is pure).
+    let a_total = man.total_actions();
+    assert_eq!(logits[..a_total], logits[a_total..2 * a_total]);
+}
+
+#[test]
+fn train_program_updates_params_and_reports_metrics() {
+    let (_rt, progs) = progs();
+    let man = progs.manifest.clone();
+    let mut state = LearnerState::fresh(&progs, 3).unwrap();
+    let before = to_f32_vec(&state.params[0]).unwrap();
+
+    let (b, t) = (man.train_batch, man.rollout);
+    let hypers = man.hypers_default.clone();
+    let mut batch = sample_factory::baselines::common::HostBatch::new(&progs);
+    // Deterministic pseudo-random batch.
+    let mut rng = sample_factory::util::Rng::new(5);
+    for x in batch.obs.iter_mut() {
+        *x = (rng.next_u64() & 0xff) as u8;
+    }
+    for x in batch.rewards.iter_mut() {
+        *x = rng.range_f32(-1.0, 1.0);
+    }
+    for (i, a) in batch.actions.iter_mut().enumerate() {
+        *a = (i % 2) as i32;
+    }
+    for x in batch.blp.iter_mut() {
+        *x = -1.8; // ~ uniform logprob for heads [3,2]
+    }
+    let metrics =
+        sample_factory::baselines::common::train_once(&progs, &mut state, &hypers, &batch)
+            .unwrap();
+    assert_eq!(metrics.len(), man.metric_names.len());
+    assert!(metrics.iter().all(|m| m.is_finite()), "metrics: {metrics:?}");
+    let after = to_f32_vec(&state.params[0]).unwrap();
+    assert_ne!(before, after, "train step did not move the parameters");
+    assert_eq!(to_f32_vec(&state.step[0]).unwrap(), vec![1.0]);
+    let gnorm = metrics[man.metric_index("grad_norm").unwrap()];
+    assert!(gnorm > 0.0);
+    let _ = (b, t);
+}
+
+#[test]
+fn zero_lr_train_step_is_parameter_identity() {
+    let (_rt, progs) = progs();
+    let man = progs.manifest.clone();
+    let mut state = LearnerState::fresh(&progs, 9).unwrap();
+    let before: Vec<Vec<f32>> = state.params.iter().map(|p| to_f32_vec(p).unwrap()).collect();
+    let mut hypers = man.hypers_default.clone();
+    hypers[man.hyper_index("lr").unwrap()] = 0.0;
+    let batch = sample_factory::baselines::common::HostBatch::new(&progs);
+    sample_factory::baselines::common::train_once(&progs, &mut state, &hypers, &batch).unwrap();
+    for (b_, p) in before.iter().zip(state.params.iter()) {
+        let a = to_f32_vec(p).unwrap();
+        for (x, y) in b_.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-7, "params moved with lr=0");
+        }
+    }
+}
