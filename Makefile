@@ -1,0 +1,28 @@
+# Workflow wrappers.  `cargo build/test` need nothing beyond a Rust
+# toolchain (native backend); `artifacts` is only for the pjrt backend and
+# requires the python/ layer (jax).
+
+.PHONY: artifacts test test-pjrt bench clippy clean
+
+# Lower the JAX/Pallas programs to HLO text + manifest.json (pjrt backend).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+test:
+	cargo test -q
+
+# Compile-check the pjrt path too (executing it needs real xla-rs; see README).
+test-pjrt:
+	cargo test -q --features pjrt
+
+bench:
+	cargo bench
+
+clippy:
+	cargo clippy --all-targets -- -D warnings \
+		-A clippy::too_many_arguments -A clippy::needless_range_loop \
+		-A clippy::manual_div_ceil
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -1,5 +1,6 @@
-//! Dev probe: isolate memory growth in the PJRT execute path.
-use sample_factory::runtime::{lit_f32, lit_u8, ModelPrograms, Runtime};
+//! Dev probe: isolate memory growth in the runtime execute path (built for
+//! the PJRT leak hunt; works against any backend).
+use sample_factory::runtime::{lit_f32, lit_u8, Literal, ModelPrograms, Runtime};
 
 fn rss_mb() -> f64 {
     let s = std::fs::read_to_string("/proc/self/statm").unwrap();
@@ -27,7 +28,7 @@ fn main() {
                 let obs = lit_u8(&[b, man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]],
                                  &vec![7u8; b * man.obs_len()]).unwrap();
                 let h = lit_f32(&[b, man.hidden], &vec![0f32; b * man.hidden]).unwrap();
-                let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+                let mut inputs: Vec<&Literal> = params.iter().collect();
                 inputs.push(&obs);
                 inputs.push(&h);
                 let _outs = progs.policy.run(&inputs).unwrap();

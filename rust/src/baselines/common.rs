@@ -7,8 +7,8 @@
 use anyhow::Result;
 
 use crate::runtime::{
-    lit_f32, lit_i32, lit_u8, read_f32_into, to_f32_vec, LearnerState, ModelPrograms,
-    Tensors,
+    lit_f32, lit_i32, lit_u8, read_f32_into, to_f32_vec, LearnerState, Literal,
+    ModelPrograms, Tensors,
 };
 use crate::util::{log_softmax, sample_categorical, Rng};
 
@@ -36,7 +36,7 @@ pub fn infer(
         obs,
     )?;
     let h_lit = lit_f32(&[b, man.hidden], h)?;
-    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 2);
+    let mut inputs: Vec<&Literal> = Vec::with_capacity(params.len() + 2);
     inputs.extend(params.iter());
     inputs.push(&obs_lit);
     inputs.push(&h_lit);
@@ -122,7 +122,7 @@ pub fn train_once(
         lit_f32(&[b, t], &batch.dones)?,
     );
     let hypers_lit = lit_f32(&[hypers.len()], hypers)?;
-    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n_params + 9);
+    let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n_params + 9);
     inputs.extend(state.params.iter());
     inputs.extend(state.m.iter());
     inputs.extend(state.v.iter());

@@ -13,7 +13,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::ipc::{RecvError, SlotIdx};
-use crate::runtime::{lit_f32, lit_i32, lit_u8, to_f32_vec, LearnerState, ParamStore, Tensors};
+use crate::runtime::{
+    lit_f32, lit_i32, lit_u8, to_f32_vec, LearnerState, Literal, ParamStore, Tensors,
+};
 
 use super::msgs::{SharedCtx, StatMsg};
 
@@ -120,7 +122,7 @@ pub fn run_learner(
         );
         let hypers_lit = lit_f32(&[hypers_now.len()], &hypers_now).expect("hypers lit");
 
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n_params + 9);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n_params + 9);
         inputs.extend(state.params.iter());
         inputs.extend(state.m.iter());
         inputs.extend(state.v.iter());
@@ -139,9 +141,9 @@ pub fn run_learner(
         debug_assert_eq!(outs.len(), 3 * n_params + 2);
         let metrics_lit = outs.pop().unwrap();
         let step_lit = outs.pop().unwrap();
-        let v_new: Vec<xla::Literal> = outs.split_off(2 * n_params);
-        let m_new: Vec<xla::Literal> = outs.split_off(n_params);
-        let p_new: Vec<xla::Literal> = outs;
+        let v_new: Vec<Literal> = outs.split_off(2 * n_params);
+        let m_new: Vec<Literal> = outs.split_off(n_params);
+        let p_new: Vec<Literal> = outs;
         state.params = Tensors(p_new);
         state.m = Tensors(m_new);
         state.v = Tensors(v_new);

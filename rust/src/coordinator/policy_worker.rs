@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::ipc::RecvError;
-use crate::runtime::{lit_f32, lit_u8, read_f32_into, ParamStore};
+use crate::runtime::{lit_f32, lit_u8, read_f32_into, Literal, ParamStore};
 use crate::util::{log_softmax, sample_categorical, Rng};
 
 use super::msgs::{ActionReply, ActionRequest, SharedCtx};
@@ -121,7 +121,7 @@ pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWo
         // §Perf ablation switch for the device-resident cache.
         let outs = if std::env::var_os("SF_NO_PARAM_CACHE").is_some() {
             let p = &cur_params;
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(p.len() + 2);
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(p.len() + 2);
             inputs.extend(p.iter());
             inputs.push(&obs_lit);
             inputs.push(&h_lit);

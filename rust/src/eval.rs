@@ -12,7 +12,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::env::{make, AgentStep};
-use crate::runtime::{lit_f32, lit_u8, read_f32_into, ModelPrograms, Tensors};
+use crate::runtime::{lit_f32, lit_u8, read_f32_into, Literal, ModelPrograms, Tensors};
 use crate::stats::Aggregate;
 use crate::util::{log_softmax, sample_categorical, Rng};
 
@@ -72,7 +72,7 @@ impl<'a> PolicyEval<'a> {
             &self.obs_buf,
         )?;
         let h_lit = lit_f32(&[b, man.hidden], &h_full)?;
-        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        let mut inputs: Vec<&Literal> = self.params.iter().collect();
         inputs.push(&obs_lit);
         inputs.push(&h_lit);
         let outs = self.progs.policy.run(&inputs)?;

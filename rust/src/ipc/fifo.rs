@@ -10,7 +10,7 @@
 //! reproduces the appendix B.1 comparison against `std::sync::mpsc`.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -42,6 +42,9 @@ struct Shared<T> {
     not_empty: Condvar,
     not_full: Condvar,
     closed: AtomicBool,
+    /// Consumer wakeups issued by `push_many` (observability: the batched
+    /// producer must not wake consumers on iterations that pushed nothing).
+    push_wakeups: AtomicU64,
 }
 
 impl<T> Clone for Fifo<T> {
@@ -62,6 +65,7 @@ impl<T> Fifo<T> {
                 not_empty: Condvar::new(),
                 not_full: Condvar::new(),
                 closed: AtomicBool::new(false),
+                push_wakeups: AtomicU64::new(0),
             }),
         }
     }
@@ -83,8 +87,15 @@ impl<T> Fifo<T> {
     }
 
     /// Close the queue: consumers drain whatever remains, then get `Closed`.
+    ///
+    /// The flag is flipped while holding the state mutex so that every
+    /// push path checking `is_closed` under the same mutex observes a
+    /// strict before/after: once `close()` returns, no push can succeed.
     pub fn close(&self) {
-        self.inner.closed.store(true, Ordering::Release);
+        {
+            let _st = self.inner.state.lock().unwrap();
+            self.inner.closed.store(true, Ordering::Release);
+        }
         self.inner.not_empty.notify_all();
         self.inner.not_full.notify_all();
     }
@@ -108,10 +119,13 @@ impl<T> Fifo<T> {
 
     /// Non-blocking push; returns the item back on a full or closed queue.
     pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.state.lock().unwrap();
+        // Closed check must happen under the mutex (like `push`): checking
+        // before the lock raced `close()` and let a push succeed after
+        // close, stranding the item past the consumers' drain.
         if self.is_closed() {
             return Err(item);
         }
-        let mut st = self.inner.state.lock().unwrap();
         if st.ring.len() < st.capacity {
             st.ring.push_back(item);
             drop(st);
@@ -124,35 +138,48 @@ impl<T> Fifo<T> {
 
     /// Push a batch under one lock acquisition; blocks until all fit.
     /// Returns `false` (dropping remaining items) if closed.
+    ///
+    /// Consumers are woken only on iterations that actually pushed
+    /// something: the old `ring.len() > 0` check was true whenever the ring
+    /// held *anything* (e.g. stayed full under a slow consumer), turning
+    /// every 50 ms wait-timeout into a spurious `notify_all` broadcast.
     pub fn push_many(&self, items: &mut Vec<T>) -> bool {
         while !items.is_empty() {
             let mut st = self.inner.state.lock().unwrap();
             if self.is_closed() {
                 return false;
             }
-            while st.ring.len() < st.capacity && !items.is_empty() {
-                let it = items.remove(0);
-                st.ring.push_back(it);
-            }
-            let made_progress = st.ring.len() > 0;
-            drop(st);
-            if made_progress {
+            // Bulk move under one lock: O(n) front drain, not O(n^2)
+            // repeated `remove(0)`.
+            let room = st.capacity - st.ring.len();
+            let pushed = room.min(items.len());
+            if pushed > 0 {
+                st.ring.extend(items.drain(..pushed));
+                drop(st);
+                self.inner.push_wakeups.fetch_add(1, Ordering::Relaxed);
                 self.inner.not_empty.notify_all();
-            }
-            if items.is_empty() {
-                return true;
-            }
-            // Ring full: wait for room.
-            let st2 = self.inner.state.lock().unwrap();
-            if st2.ring.len() == st2.capacity {
-                let _ = self
+                if items.is_empty() {
+                    return true;
+                }
+            } else {
+                // Ring full and nothing pushed: wait for room without
+                // waking anyone.  Bounded wait so a concurrent close() is
+                // always observed.
+                let (guard, _timeout) = self
                     .inner
                     .not_full
-                    .wait_timeout(st2, Duration::from_millis(50))
+                    .wait_timeout(st, Duration::from_millis(50))
                     .unwrap();
+                drop(guard);
             }
         }
         true
+    }
+
+    /// Number of consumer wakeups `push_many` has issued (test/diagnostic
+    /// hook for the bounded-wakeup guarantee).
+    pub fn push_many_wakeups(&self) -> u64 {
+        self.inner.push_wakeups.load(Ordering::Relaxed)
     }
 
     /// Blocking pop with timeout.
@@ -340,6 +367,111 @@ mod tests {
         all.sort_unstable();
         let expect: Vec<u64> = (0..producers as u64 * per).collect();
         assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn push_many_slow_consumer_no_loss_bounded_wakeups() {
+        // Regression: a full ring + slow consumer must not lose items, and
+        // push_many must wake consumers at most once per productive
+        // iteration (<= one wakeup per item in the worst case) — the old
+        // code notified on every 50 ms stall round because it tested
+        // `ring.len() > 0` instead of "pushed this iteration".
+        let q: Fifo<u32> = Fifo::new(4);
+        let q2 = q.clone();
+        let total = 100u32;
+        let h = thread::spawn(move || {
+            let mut items: Vec<u32> = (0..total).collect();
+            assert!(q2.push_many(&mut items));
+        });
+        let mut got = Vec::new();
+        while got.len() < total as usize {
+            match q.pop(T) {
+                Ok(v) => {
+                    got.push(v);
+                    // Slow consumer: keep the ring mostly full.
+                    thread::sleep(Duration::from_micros(300));
+                }
+                Err(e) => panic!("consumer error: {e:?}"),
+            }
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..total).collect::<Vec<_>>(), "item loss/reorder");
+        let wakeups = q.push_many_wakeups();
+        assert!(
+            wakeups <= total as u64,
+            "unbounded wakeups: {wakeups} notifies for {total} items"
+        );
+    }
+
+    #[test]
+    fn push_many_stalled_consumer_is_quiet() {
+        // Regression: while the ring stays full and no consumer makes
+        // progress, push_many must not issue any wakeups at all (the old
+        // code broadcast every 50 ms).
+        let q: Fifo<u32> = Fifo::new(2);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            let mut items: Vec<u32> = (0..10).collect();
+            assert!(q2.push_many(&mut items));
+        });
+        // Let the producer fill the ring, consume one, then wait until the
+        // producer has refilled the freed slot (so its last productive push
+        // is behind us) before sampling the counter — sleeping alone would
+        // flake under CI scheduling delay.
+        assert!(q.pop(T).is_ok());
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while q.len() < 2 {
+            assert!(std::time::Instant::now() < deadline, "producer never refilled");
+            thread::sleep(Duration::from_millis(1));
+        }
+        thread::sleep(Duration::from_millis(150));
+        let w1 = q.push_many_wakeups();
+        thread::sleep(Duration::from_millis(250));
+        let w2 = q.push_many_wakeups();
+        assert_eq!(w2, w1, "push_many woke consumers while fully stalled");
+        // Drain the rest; nothing may be lost.
+        let mut got = 1usize;
+        while got < 10 {
+            q.pop(T).unwrap();
+            got += 1;
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn try_push_cannot_succeed_after_close() {
+        // Regression: try_push checked `is_closed` before taking the lock,
+        // so a push could slip in after close() completed and strand the
+        // item past the consumers' drain.  Invariant: every successful
+        // try_push is drained; drained == succeeded.
+        for round in 0..20 {
+            let q: Fifo<u64> = Fifo::new(64);
+            let q2 = q.clone();
+            let producer = thread::spawn(move || {
+                let mut ok = 0u64;
+                for i in 0..1_000_000u64 {
+                    if q2.try_push(i).is_ok() {
+                        ok += 1;
+                    } else if q2.is_closed() {
+                        break;
+                    }
+                }
+                ok
+            });
+            thread::sleep(Duration::from_millis(2));
+            q.close();
+            // After close() returns, the ring is frozen: drain and count.
+            let mut drained = 0u64;
+            loop {
+                match q.pop(Duration::from_millis(100)) {
+                    Ok(_) => drained += 1,
+                    Err(RecvError::Closed) => break,
+                    Err(RecvError::Timeout) => panic!("timeout draining closed queue"),
+                }
+            }
+            let ok = producer.join().unwrap();
+            assert_eq!(ok, drained, "round {round}: pushed {ok} but drained {drained}");
+        }
     }
 
     #[test]

@@ -14,9 +14,11 @@
 //! * **Layer 1 (Pallas, build-time)** — V-trace and fused-GRU kernels
 //!   lowered into the same HLO (`python/compile/kernels/`).
 //!
-//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (the `xla` crate) and executes them from the Rust hot path; Python is
-//! never on the sample path.
+//! The [`runtime`] module executes those programs behind a backend
+//! abstraction: the default pure-Rust `native` backend implements the same
+//! contract directly on f32 slices (no Python, no XLA, no artifacts), while
+//! the `pjrt` cargo feature loads the AOT artifacts through the PJRT C API
+//! (the `xla` crate).  Python is never on the sample path in either mode.
 //!
 //! Entry points: the `repro` binary (training + every paper bench), the
 //! `examples/` drivers, and the public [`coordinator::Trainer`] API.

@@ -62,10 +62,10 @@ fn cmd_eval(args: &[String]) {
         .unwrap_or(false);
     let cfg = build_config(&args);
 
-    let rt = sample_factory::runtime::Runtime::cpu().expect("pjrt");
+    let rt = sample_factory::runtime::Runtime::cpu().expect("runtime backend");
     let progs =
         sample_factory::runtime::ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)
-            .expect("artifacts");
+            .expect("load model");
     let params = sample_factory::runtime::checkpoint::load(
         std::path::Path::new(&ckpt),
         &progs.manifest,
@@ -101,10 +101,10 @@ fn cmd_match(args: &[String]) {
         cfg.spec = "doomish_full".into(); // duel needs the full action space
     }
 
-    let rt = sample_factory::runtime::Runtime::cpu().expect("pjrt");
+    let rt = sample_factory::runtime::Runtime::cpu().expect("runtime backend");
     let progs =
         sample_factory::runtime::ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)
-            .expect("artifacts");
+            .expect("load model");
     let pa = sample_factory::runtime::checkpoint::load(
         std::path::Path::new(&ckpt_a),
         &progs.manifest,
@@ -229,11 +229,11 @@ fn cmd_render(args: &[String]) {
     let (progs, params);
     let (progs_ref, params_val) = match ckpt {
         Some(c) => {
-            let rt = sample_factory::runtime::Runtime::cpu().expect("pjrt");
+            let rt = sample_factory::runtime::Runtime::cpu().expect("runtime backend");
             progs = sample_factory::runtime::ModelPrograms::load(
                 &rt, &cfg.artifacts_dir, &cfg.spec,
             )
-            .expect("artifacts");
+            .expect("load model");
             params = sample_factory::runtime::checkpoint::load(
                 std::path::Path::new(&c),
                 &progs.manifest,

@@ -1,0 +1,191 @@
+//! The backend-agnostic host tensor exchanged with runtime programs.
+//!
+//! Both backends speak [`Literal`]: the native backend computes on its
+//! slices directly; the PJRT backend converts to/from `xla::Literal` at the
+//! execute boundary.  A `Literal` is plain owned memory (typed `Vec` +
+//! row-major dims), so it is `Send + Sync` without any unsafe.
+
+use anyhow::{anyhow, Result};
+
+/// Element dtype of a [`Literal`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U8,
+    I32,
+    U32,
+}
+
+/// A host tensor: row-major data + dims.  Scalars have empty dims.
+#[derive(Clone)]
+pub enum Literal {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U32 { dims: Vec<usize>, data: Vec<u32> },
+}
+
+fn check_len(what: &str, dims: &[usize], len: usize) -> Result<()> {
+    let expect: usize = dims.iter().product::<usize>().max(1);
+    if len != expect {
+        return Err(anyhow!("{what}: {len} values for dims {dims:?}"));
+    }
+    Ok(())
+}
+
+impl Literal {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Result<Literal> {
+        check_len("Literal::f32", dims, data.len())?;
+        Ok(Literal::F32 { dims: dims.to_vec(), data })
+    }
+
+    pub fn u8(dims: &[usize], data: Vec<u8>) -> Result<Literal> {
+        check_len("Literal::u8", dims, data.len())?;
+        Ok(Literal::U8 { dims: dims.to_vec(), data })
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Result<Literal> {
+        check_len("Literal::i32", dims, data.len())?;
+        Ok(Literal::I32 { dims: dims.to_vec(), data })
+    }
+
+    pub fn u32_scalar(v: u32) -> Literal {
+        Literal::U32 { dims: Vec::new(), data: vec![v] }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Literal::F32 { .. } => DType::F32,
+            Literal::U8 { .. } => DType::U8,
+            Literal::I32 { .. } => DType::I32,
+            Literal::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Literal::F32 { dims, .. }
+            | Literal::U8 { dims, .. }
+            | Literal::I32 { dims, .. }
+            | Literal::U32 { dims, .. } => dims,
+        }
+    }
+
+    /// Number of elements (1 for scalars).
+    pub fn element_count(&self) -> usize {
+        self.dims().iter().product::<usize>().max(1)
+    }
+
+    /// Borrow the f32 contents, or error with the actual dtype.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Literal::F32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected f32 literal, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            Literal::U8 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected u8 literal, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Literal::I32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected i32 literal, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            Literal::U32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected u32 literal, got {:?}", other.dtype())),
+        }
+    }
+
+    /// Copy out as a typed `Vec` (xla-rs-compatible call shape).
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::slice_of(self).map(|s| s.to_vec())
+    }
+
+    /// Copy into an existing buffer without allocating.
+    pub fn copy_raw_to<T: Element>(&self, out: &mut [T]) -> Result<()> {
+        let src = T::slice_of(self)?;
+        if out.len() != src.len() {
+            return Err(anyhow!(
+                "copy_raw_to: literal has {} elements, buffer {}",
+                src.len(),
+                out.len()
+            ));
+        }
+        out.copy_from_slice(src);
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for Literal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Literal<{:?}>{:?}", self.dtype(), self.dims())
+    }
+}
+
+/// Element types a [`Literal`] can hold (sealed by construction).
+pub trait Element: Copy {
+    fn slice_of(lit: &Literal) -> Result<&[Self]>;
+}
+
+impl Element for f32 {
+    fn slice_of(lit: &Literal) -> Result<&[f32]> {
+        lit.as_f32()
+    }
+}
+
+impl Element for u8 {
+    fn slice_of(lit: &Literal) -> Result<&[u8]> {
+        lit.as_u8()
+    }
+}
+
+impl Element for i32 {
+    fn slice_of(lit: &Literal) -> Result<&[i32]> {
+        lit.as_i32()
+    }
+}
+
+impl Element for u32 {
+    fn slice_of(lit: &Literal) -> Result<&[u32]> {
+        lit.as_u32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_and_counts() {
+        let l = Literal::f32(&[2, 3], vec![0.0; 6]).unwrap();
+        assert_eq!(l.dims(), &[2, 3]);
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.dtype(), DType::F32);
+        let s = Literal::u32_scalar(7);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.as_u32().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let l = Literal::i32(&[2], vec![1, 2]).unwrap();
+        assert!(l.as_f32().is_err());
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn length_validation() {
+        assert!(Literal::f32(&[2, 2], vec![1.0]).is_err());
+        assert!(Literal::u8(&[3], vec![1, 2, 3]).is_ok());
+    }
+}

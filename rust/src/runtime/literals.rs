@@ -1,53 +1,42 @@
 //! Literal construction/extraction helpers used on the hot paths.
 //!
-//! PJRT inputs are host literals; these helpers build them from plain
-//! slices without intermediate allocations beyond the literal itself, and
-//! read results back into reusable Vecs.
+//! Program inputs are host [`Literal`]s; these helpers build them from plain
+//! slices (one copy into the literal's owned storage) and read results back
+//! into reusable Vecs.  They are backend-agnostic — see [`super::literal`].
 
 use anyhow::{anyhow, Result};
-use xla::{ElementType, Literal};
 
-fn as_bytes<T>(xs: &[T]) -> &[u8] {
-    unsafe {
-        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
-    }
-}
+use super::literal::Literal;
 
 /// f32 literal with the given dims (row-major).
 pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
-    let expect: usize = dims.iter().product::<usize>().max(1);
-    if data.len() != expect && !(dims.is_empty() && data.len() == 1) {
-        return Err(anyhow!("lit_f32: {} values for dims {dims:?}", data.len()));
-    }
-    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, as_bytes(data))
-        .map_err(|e| anyhow!("lit_f32: {e:?}"))
+    Literal::f32(dims, data.to_vec()).map_err(|e| anyhow!("lit_f32: {e:#}"))
 }
 
 /// u8 literal (pixel observations).
 pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<Literal> {
-    Literal::create_from_shape_and_untyped_data(ElementType::U8, dims, data)
-        .map_err(|e| anyhow!("lit_u8: {e:?}"))
+    Literal::u8(dims, data.to_vec()).map_err(|e| anyhow!("lit_u8: {e:#}"))
 }
 
 /// i32 literal (action indices).
 pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
-    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, as_bytes(data))
-        .map_err(|e| anyhow!("lit_i32: {e:?}"))
+    Literal::i32(dims, data.to_vec()).map_err(|e| anyhow!("lit_i32: {e:#}"))
 }
 
 /// u32 scalar (seeds).
 pub fn lit_u32_scalar(v: u32) -> Literal {
-    Literal::scalar(v)
+    Literal::u32_scalar(v)
 }
 
 /// Copy a literal's f32 contents into a Vec.
 pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_f32_vec: {e:?}"))
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_f32_vec: {e:#}"))
 }
 
 /// Copy a literal's f32 contents into an existing buffer (no allocation).
 pub fn read_f32_into(lit: &Literal, out: &mut [f32]) -> Result<()> {
-    lit.copy_raw_to::<f32>(out).map_err(|e| anyhow!("read_f32_into: {e:?}"))
+    lit.copy_raw_to::<f32>(out)
+        .map_err(|e| anyhow!("read_f32_into: {e:#}"))
 }
 
 #[cfg(test)]
@@ -87,5 +76,11 @@ mod tests {
         let mut buf = [0f32; 3];
         read_f32_into(&lit, &mut buf).unwrap();
         assert_eq!(buf, [9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn seed_scalar_is_u32() {
+        let lit = lit_u32_scalar(42);
+        assert_eq!(lit.as_u32().unwrap(), &[42]);
     }
 }

@@ -1,45 +1,64 @@
-//! PJRT runtime: loads the AOT artifacts (HLO text + manifest) and executes
-//! them from the Rust hot path.  This is the only place the `xla` crate is
-//! touched; Python never runs after `make artifacts`.
+//! The model runtime: a backend-abstracted executor for the three programs
+//! every model spec provides (`init`, `policy`, `train`).
 //!
-//! * [`manifest`] — the AOT-time contract (shapes/ordering) parsed from
-//!   `artifacts/<spec>/manifest.json`.
-//! * [`Runtime`] — a PJRT CPU client; compiles HLO text into executables.
-//! * [`ModelPrograms`] — the three programs (`init`, `policy`, `train`)
-//!   for one model spec.
+//! Two interchangeable [`Backend`] implementations sit behind the same
+//! [`Literal`]-in / [`Literal`]-out [`Program`] interface:
+//!
+//! * [`native`] (cargo feature `native`, default) — a pure-Rust execution
+//!   engine: conv-GRU forward, multi-discrete heads, and the full
+//!   APPO/V-trace train step with analytic gradients on f32 slices.  No
+//!   Python, no XLA, no artifacts directory — `ModelPrograms::load`
+//!   synthesizes the model from the built-in spec table, so a clean
+//!   checkout tests green (the EnvPool-style "self-contained engine"
+//!   argument; Weng et al., 2022).
+//! * [`pjrt`] (cargo feature `pjrt`) — the original AOT path: HLO text
+//!   lowered by `python/compile` (`make artifacts`) compiled and executed
+//!   through the PJRT C API via the `xla` crate.
+//!
+//! Shared infrastructure:
+//!
+//! * [`manifest`] — the model contract (shapes/ordering); parsed from
+//!   `artifacts/<spec>/manifest.json` on the PJRT path, synthesized by the
+//!   native backend.
 //! * [`params::ParamStore`] — the versioned published parameters: the
 //!   learner publishes, policy workers fetch on version change.  This is
 //!   the in-process analogue of the paper's "model in shared CUDA memory,
 //!   update <1 ms" (§3.4): publishing swaps an `Arc`, fetching clones it.
 
 pub mod checkpoint;
+pub mod literal;
 pub mod literals;
 pub mod manifest;
 pub mod params;
 
+#[cfg(feature = "native")]
+pub mod native;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+#[cfg(not(any(feature = "native", feature = "pjrt")))]
+compile_error!(
+    "enable at least one runtime backend feature: `native` (default) or `pjrt`"
+);
+
+pub use literal::{DType, Literal};
 pub use literals::{lit_f32, lit_i32, lit_u32_scalar, lit_u8, read_f32_into, to_f32_vec};
 pub use manifest::Manifest;
 pub use params::{ParamStore, VersionedParams};
 
 use anyhow::{anyhow, Context, Result};
 use std::ops::{Deref, DerefMut};
-use std::path::Path;
 use std::sync::Arc;
 
-/// A batch of host tensors that can cross thread boundaries.
-///
-/// SAFETY: `xla::Literal` owns plain host memory (an `xla::Literal` on the
-/// C++ side) with no thread affinity; every API we use through `&self`
-/// (`to_vec`, `copy_raw_to`, `shape`, execute inputs) is read-only, and
-/// mutation (`copy_raw_from`) requires `&mut self`.  The raw pointer inside
-/// the crate's wrapper is the only reason it isn't auto-`Send`/`Sync`.
-pub struct Tensors(pub Vec<xla::Literal>);
-
-unsafe impl Send for Tensors {}
-unsafe impl Sync for Tensors {}
+/// A batch of host tensors that can cross thread boundaries.  Plain owned
+/// memory — `Send + Sync` for free (the PJRT backend converts at its own
+/// boundary instead of leaking FFI handles into the coordinator).
+#[derive(Clone)]
+pub struct Tensors(pub Vec<Literal>);
 
 impl Deref for Tensors {
-    type Target = Vec<xla::Literal>;
+    type Target = Vec<Literal>;
     fn deref(&self) -> &Self::Target {
         &self.0
     }
@@ -51,162 +70,180 @@ impl DerefMut for Tensors {
     }
 }
 
-impl Clone for Tensors {
-    fn clone(&self) -> Self {
-        Tensors(self.0.clone())
-    }
-}
-
 impl std::fmt::Debug for Tensors {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "Tensors({} literals)", self.0.len())
     }
 }
 
-/// A PJRT client plus compile cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+/// Opaque backend-resident input cache returned by [`Executable::upload`]:
+/// device buffers on PJRT, a host-side snapshot on the native backend.
+pub struct DeviceBuffers(Box<dyn std::any::Any + Send + Sync>);
 
-impl Runtime {
-    /// Create the CPU PJRT client (the container has no accelerator).
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
-        Ok(Runtime { client })
+impl DeviceBuffers {
+    pub fn new<T: Send + Sync + 'static>(inner: T) -> DeviceBuffers {
+        DeviceBuffers(Box::new(inner))
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load HLO text and compile it.  HLO *text* is the interchange format
-    /// (jax >= 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects;
-    /// the text parser reassigns ids — see DESIGN.md / aot.py).
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        Ok(Executable {
-            exe,
-            client: self.client.clone(),
-            name: path.display().to_string(),
-        })
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.0.downcast_ref::<T>()
     }
 }
 
-/// A compiled program.  All our programs are lowered with
-/// `return_tuple=True`, so execution returns one tuple literal that we
-/// decompose into the per-output literals.
+/// The native backend's cache representation (also the default for any
+/// backend that has no device memory): cloned input literals.
+pub struct HostCache(pub Vec<Literal>);
+
+/// One executable program: host literals in, host literals out.
+pub trait Program: Send + Sync {
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
+
+    /// Cache a (typically parameter) input prefix backend-side; see
+    /// [`Program::run_cached`].  Default: host snapshot.
+    fn upload(&self, inputs: &[&Literal]) -> Result<DeviceBuffers> {
+        Ok(DeviceBuffers::new(HostCache(
+            inputs.iter().map(|l| (*l).clone()).collect(),
+        )))
+    }
+
+    /// Execute with a cached input prefix plus fresh inputs.  §Perf on the
+    /// PJRT backend: parameters dominate the input bytes of the policy
+    /// program; caching their upload cuts per-batch host->device traffic to
+    /// just the observation/hidden tensors.  The native backend reads host
+    /// memory either way — the default impl just re-assembles the list.
+    fn run_cached(&self, cached: &DeviceBuffers, fresh: &[&Literal]) -> Result<Vec<Literal>> {
+        let host = cached
+            .downcast_ref::<HostCache>()
+            .ok_or_else(|| anyhow!("input cache was created by a different backend"))?;
+        let mut refs: Vec<&Literal> = Vec::with_capacity(host.0.len() + fresh.len());
+        refs.extend(host.0.iter());
+        refs.extend_from_slice(fresh);
+        self.run(&refs)
+    }
+}
+
+/// A runtime backend: turns a (spec, artifacts dir) into the three
+/// executable programs plus the manifest describing their contract.
+pub trait Backend: Send + Sync {
+    fn platform(&self) -> String;
+    fn load_model(&self, artifacts_dir: &str, spec: &str) -> Result<LoadedModel>;
+}
+
+/// What [`Backend::load_model`] produces.
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    pub init: Executable,
+    pub policy: Executable,
+    pub train: Executable,
+}
+
+/// A compiled/loaded program with a display name for error messages.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    client: xla::PjRtClient,
+    prog: Box<dyn Program>,
     name: String,
 }
 
-// SAFETY: PJRT loaded executables are documented thread-safe for Execute;
-// we only call `execute` through `&self`.  The client handle inside is
-// reference-counted on the C++ side.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-// SAFETY: the PJRT CPU client is thread-safe (it backs multi-threaded
-// jax/TF runtimes); we only compile through `&self`.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
 impl Executable {
+    pub fn new(name: impl Into<String>, prog: Box<dyn Program>) -> Executable {
+        Executable { prog, name: name.into() }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
     /// Execute with host literals, returning the decomposed outputs.
-    ///
-    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
-    /// (literal inputs): the crate's C++ shim uploads each input literal to
-    /// a device buffer it `release()`s and never frees — a per-call leak of
-    /// the whole input set (~hundreds of MB/min at our call rates).  We
-    /// upload through `buffer_from_host_literal` so Rust owns the buffers
-    /// (freed on drop) and dispatch via `execute_b`.
-    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for (i, l) in inputs.iter().enumerate() {
-            bufs.push(
-                self.client
-                    .buffer_from_host_literal(None, l)
-                    .map_err(|e| anyhow!("upload input {i} of {}: {e:?}", self.name))?,
-            );
-        }
-        self.run_b(&bufs)
+    pub fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        self.prog
+            .run(inputs)
+            .with_context(|| format!("executing {}", self.name))
     }
 
-    /// Execute with device-resident buffers (no host->device copies); used
-    /// by callers that cache e.g. parameter uploads across calls.
-    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let outs = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&inputs.iter().collect::<Vec<_>>())
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let mut lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch outputs of {}: {e:?}", self.name))?;
-        lit.decompose_tuple()
-            .map_err(|e| anyhow!("untuple outputs of {}: {e:?}", self.name))
+    /// Cache an input prefix backend-side (typically parameters, refreshed
+    /// only when the learner publishes).
+    pub fn upload(&self, inputs: &[&Literal]) -> Result<DeviceBuffers> {
+        self.prog
+            .upload(inputs)
+            .with_context(|| format!("uploading inputs of {}", self.name))
     }
 
-    /// Execute with a cached device-buffer prefix (typically parameters,
-    /// re-uploaded only when the learner publishes) plus fresh host-literal
-    /// inputs.  §Perf: parameters dominate the input bytes of the policy
-    /// program; caching their upload cuts per-batch host->device traffic to
-    /// just the observation/hidden tensors.
+    /// Execute with a cached input prefix plus fresh host literals.
     pub fn run_cached(
         &self,
-        cached: &[xla::PjRtBuffer],
-        fresh: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let fresh_bufs = self.upload(fresh)?;
-        let mut refs: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(cached.len() + fresh_bufs.len());
-        refs.extend(cached.iter());
-        refs.extend(fresh_bufs.iter());
-        let outs = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&refs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let mut lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch outputs of {}: {e:?}", self.name))?;
-        lit.decompose_tuple()
-            .map_err(|e| anyhow!("untuple outputs of {}: {e:?}", self.name))
-    }
-
-    /// Number of raw output buffers one execution produces (diagnostic:
-    /// tells whether this PJRT build untuples results).
-    pub fn probe_output_buffers(&self, inputs: &[&xla::Literal]) -> Result<usize> {
-        let bufs = self.upload(inputs)?;
-        let outs = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&bufs.iter().collect::<Vec<_>>())
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        Ok(outs[0].len())
-    }
-
-    /// Upload a set of host literals to device buffers (for `run_b`).
-    pub fn upload(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut bufs = Vec::with_capacity(inputs.len());
-        for (i, l) in inputs.iter().enumerate() {
-            bufs.push(
-                self.client
-                    .buffer_from_host_literal(None, l)
-                    .map_err(|e| anyhow!("upload {i} of {}: {e:?}", self.name))?,
-            );
-        }
-        Ok(bufs)
+        cached: &DeviceBuffers,
+        fresh: &[&Literal],
+    ) -> Result<Vec<Literal>> {
+        self.prog
+            .run_cached(cached, fresh)
+            .with_context(|| format!("executing {}", self.name))
     }
 }
 
-/// The three compiled programs for one model spec + its manifest.
+/// The active backend behind a uniform handle.
+pub struct Runtime {
+    backend: Arc<dyn Backend>,
+}
+
+impl Runtime {
+    /// The default CPU runtime.  Picks the `native` backend when compiled
+    /// in (the default feature set); `SF_BACKEND=pjrt|native` overrides
+    /// when both backends are available.
+    pub fn cpu() -> Result<Runtime> {
+        match std::env::var("SF_BACKEND").unwrap_or_default().as_str() {
+            "" => Self::default_backend(),
+            "native" => Self::native(),
+            "pjrt" => Self::pjrt(),
+            other => Err(anyhow!(
+                "unknown SF_BACKEND '{other}' (expected 'native' or 'pjrt')"
+            )),
+        }
+    }
+
+    // The cfg-paired `return` statements below keep exactly one arm per
+    // feature combination; clippy's needless_return doesn't understand the
+    // pattern.
+    #[allow(clippy::needless_return)]
+    fn default_backend() -> Result<Runtime> {
+        #[cfg(feature = "native")]
+        return Self::native();
+        #[cfg(not(feature = "native"))]
+        return Self::pjrt();
+    }
+
+    /// The pure-Rust backend (requires the `native` feature).
+    #[allow(clippy::needless_return)]
+    pub fn native() -> Result<Runtime> {
+        #[cfg(feature = "native")]
+        return Ok(Runtime { backend: Arc::new(native::NativeBackend) });
+        #[cfg(not(feature = "native"))]
+        return Err(anyhow!(
+            "this build does not include the `native` backend (rebuild with \
+             --features native)"
+        ));
+    }
+
+    /// The PJRT/XLA backend (requires the `pjrt` feature + artifacts).
+    #[allow(clippy::needless_return)]
+    pub fn pjrt() -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        return Ok(Runtime { backend: Arc::new(pjrt::PjrtBackend::cpu()?) });
+        #[cfg(not(feature = "pjrt"))]
+        return Err(anyhow!(
+            "this build does not include the `pjrt` backend (rebuild with \
+             --features pjrt)"
+        ));
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+}
+
+/// The three programs for one model spec + its manifest.
 pub struct ModelPrograms {
     pub manifest: Manifest,
     pub init: Executable,
@@ -215,14 +252,14 @@ pub struct ModelPrograms {
 }
 
 impl ModelPrograms {
-    /// Load and compile everything for `spec` from `artifacts_dir`.
+    /// Load everything for `spec`.  On the native backend this synthesizes
+    /// the model from the built-in spec table (no `make artifacts` needed);
+    /// on PJRT it parses `artifacts_dir/<spec>/` and compiles the HLO.
     pub fn load(rt: &Runtime, artifacts_dir: &str, spec: &str) -> Result<Self> {
-        let dir = Path::new(artifacts_dir).join(spec);
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest for spec '{spec}'"))?;
-        let init = rt.load_hlo_text(&dir.join("init.hlo.txt"))?;
-        let policy = rt.load_hlo_text(&dir.join("policy.hlo.txt"))?;
-        let train = rt.load_hlo_text(&dir.join("train.hlo.txt"))?;
+        let LoadedModel { manifest, init, policy, train } = rt
+            .backend
+            .load_model(artifacts_dir, spec)
+            .with_context(|| format!("loading model for spec '{spec}'"))?;
         Ok(ModelPrograms { manifest, init, policy, train })
     }
 

@@ -1,0 +1,680 @@
+//! The pure-Rust `native` runtime backend (cargo feature `native`, default).
+//!
+//! Implements the manifest contract — conv encoder forward, GRU core,
+//! multi-discrete heads, value head, and the fused APPO/V-trace train step
+//! with analytic gradients — directly on f32 slices, so the full system
+//! builds and tests from a clean checkout with no Python, XLA, or artifacts
+//! directory.  The model architecture, parameter ordering, initialisation
+//! scheme, hyperparameter vector and metric layout all mirror
+//! `python/compile/model.py` (the source of truth for the PJRT backend); the
+//! built-in spec table below is the Rust twin of `model.SPECS`.
+//!
+//! Numerics note: training math follows `model.appo_loss`/`train_step`
+//! exactly (V-trace per `kernels/ref.py`, PPO clipping, entropy bonus,
+//! advantage normalisation, global-norm clip, bias-corrected Adam).  The
+//! backward pass is hand-derived backprop — no finite differences on the
+//! hot path (those appear only in unit tests, as the oracle).
+
+pub mod ops;
+mod train;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{Manifest, ParamDef};
+use super::{Backend, Executable, Literal, LoadedModel, Program};
+use crate::util::Rng;
+use ops::ConvGeom;
+
+/// Hyperparameter vector layout; mirrors `model.HYPER_NAMES` and is what
+/// PBT mutates without recompilation.
+pub const HYPER_NAMES: [&str; 11] = [
+    "lr", "ent_coef", "ppo_clip", "rho_clip", "c_clip", "vf_coef", "gamma",
+    "max_grad_norm", "adam_b1", "adam_b2", "adam_eps",
+];
+
+/// Paper defaults, Table A.5 (mirrors `model.DEFAULT_HYPERS`).
+pub const HYPERS_DEFAULT: [f32; 11] =
+    [1e-4, 0.003, 0.1, 1.0, 1.0, 0.5, 0.99, 4.0, 0.9, 0.999, 1e-6];
+
+pub const METRIC_NAMES: [&str; 8] = [
+    "total_loss", "pg_loss", "v_loss", "entropy", "approx_kl", "grad_norm",
+    "mean_rho", "mean_vs",
+];
+
+// Hyper vector indices (see HYPER_NAMES).
+pub(crate) const HYP_LR: usize = 0;
+pub(crate) const HYP_ENT: usize = 1;
+pub(crate) const HYP_CLIP: usize = 2;
+pub(crate) const HYP_VF: usize = 5;
+pub(crate) const HYP_GAMMA: usize = 6;
+pub(crate) const HYP_MAX_GN: usize = 7;
+pub(crate) const HYP_B1: usize = 8;
+pub(crate) const HYP_B2: usize = 9;
+pub(crate) const HYP_EPS: usize = 10;
+
+/// One conv layer: (out channels, square kernel, stride), SAME padding.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvSpec {
+    pub out_ch: usize,
+    pub k: usize,
+    pub stride: usize,
+}
+
+const fn c(out_ch: usize, k: usize, stride: usize) -> ConvSpec {
+    ConvSpec { out_ch, k, stride }
+}
+
+/// Static description of one spec's model, with resolved conv geometry.
+#[derive(Clone, Debug)]
+pub struct ModelDef {
+    pub name: String,
+    /// (H, W, C) uint8 pixels.
+    pub obs: [usize; 3],
+    pub heads: Vec<usize>,
+    pub conv: Vec<ConvSpec>,
+    pub fc_dim: usize,
+    pub hidden: usize,
+    pub policy_batch: usize,
+    pub train_batch: usize,
+    pub rollout: usize,
+    /// Resolved per-layer geometry (derived from `obs` + `conv`).
+    pub geoms: Vec<ConvGeom>,
+    /// Flattened size of the last conv output (the fc input).
+    pub flat: usize,
+}
+
+impl ModelDef {
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        name: &str,
+        obs: [usize; 3],
+        heads: &[usize],
+        conv: &[ConvSpec],
+        fc_dim: usize,
+        hidden: usize,
+        policy_batch: usize,
+        train_batch: usize,
+        rollout: usize,
+    ) -> ModelDef {
+        let mut geoms = Vec::with_capacity(conv.len());
+        let (mut h, mut w, mut ch) = (obs[0], obs[1], obs[2]);
+        for cs in conv {
+            let g = ConvGeom::same(h, w, ch, cs.out_ch, cs.k, cs.stride);
+            h = g.h_out;
+            w = g.w_out;
+            ch = g.c_out;
+            geoms.push(g);
+        }
+        ModelDef {
+            name: name.to_string(),
+            obs,
+            heads: heads.to_vec(),
+            conv: conv.to_vec(),
+            fc_dim,
+            hidden,
+            policy_batch,
+            train_batch,
+            rollout,
+            geoms,
+            flat: h * w * ch,
+        }
+    }
+
+    /// The built-in spec table — the Rust twin of `python model.SPECS`
+    /// (resolutions/widths scaled to the 1-core testbed; ratios mirror the
+    /// paper's setups).
+    pub fn builtin(spec: &str) -> Result<ModelDef> {
+        let doomish_conv = [c(16, 8, 4), c(32, 4, 2), c(32, 3, 2)];
+        Ok(match spec {
+            "tiny" => ModelDef::build(
+                "tiny", [24, 32, 3], &[3, 2],
+                &[c(8, 4, 2), c(8, 4, 2), c(8, 3, 1)],
+                32, 32, 8, 4, 8,
+            ),
+            "doomish" => ModelDef::build(
+                "doomish", [36, 64, 3], &[3, 3, 2, 21],
+                &doomish_conv, 128, 128, 32, 16, 32,
+            ),
+            "doomish_full" => ModelDef::build(
+                "doomish_full", [36, 64, 3], &[3, 3, 2, 2, 2, 8, 21],
+                &doomish_conv, 128, 128, 32, 16, 32,
+            ),
+            "arcade" => ModelDef::build(
+                "arcade", [84, 84, 4], &[4],
+                &[c(16, 8, 4), c(32, 4, 2), c(32, 3, 1)],
+                128, 128, 32, 16, 32,
+            ),
+            "gridlab" => ModelDef::build(
+                "gridlab", [72, 96, 3], &[7],
+                &doomish_conv, 128, 128, 32, 16, 32,
+            ),
+            other => return Err(anyhow!("native backend: unknown spec '{other}'")),
+        })
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs.iter().product()
+    }
+
+    pub fn total_actions(&self) -> usize {
+        self.heads.iter().sum()
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Ordered (name, shape) list — must match `python model.param_defs`.
+    pub fn param_defs(&self) -> Vec<(String, Vec<usize>)> {
+        let mut defs: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut ch = self.obs[2];
+        for (i, cs) in self.conv.iter().enumerate() {
+            defs.push((format!("conv{i}/w"), vec![cs.k, cs.k, ch, cs.out_ch]));
+            defs.push((format!("conv{i}/b"), vec![cs.out_ch]));
+            ch = cs.out_ch;
+        }
+        defs.push(("fc/w".into(), vec![self.flat, self.fc_dim]));
+        defs.push(("fc/b".into(), vec![self.fc_dim]));
+        defs.push(("gru/wx".into(), vec![self.fc_dim, 3 * self.hidden]));
+        defs.push(("gru/wh".into(), vec![self.hidden, 3 * self.hidden]));
+        defs.push(("gru/b".into(), vec![2, 3 * self.hidden]));
+        for (i, &n) in self.heads.iter().enumerate() {
+            defs.push((format!("head{i}/w"), vec![self.hidden, n]));
+            defs.push((format!("head{i}/b"), vec![n]));
+        }
+        defs.push(("value/w".into(), vec![self.hidden, 1]));
+        defs.push(("value/b".into(), vec![1]));
+        defs
+    }
+
+    pub fn n_params(&self) -> usize {
+        2 * self.conv.len() + 5 + 2 * self.heads.len() + 2
+    }
+
+    // Parameter indices in `param_defs` order.
+    pub(crate) fn idx_conv_w(&self, i: usize) -> usize {
+        2 * i
+    }
+    pub(crate) fn idx_conv_b(&self, i: usize) -> usize {
+        2 * i + 1
+    }
+    pub(crate) fn idx_fc_w(&self) -> usize {
+        2 * self.conv.len()
+    }
+    pub(crate) fn idx_fc_b(&self) -> usize {
+        self.idx_fc_w() + 1
+    }
+    pub(crate) fn idx_gru_wx(&self) -> usize {
+        self.idx_fc_w() + 2
+    }
+    pub(crate) fn idx_gru_wh(&self) -> usize {
+        self.idx_fc_w() + 3
+    }
+    pub(crate) fn idx_gru_b(&self) -> usize {
+        self.idx_fc_w() + 4
+    }
+    pub(crate) fn idx_head_w(&self, i: usize) -> usize {
+        self.idx_fc_w() + 5 + 2 * i
+    }
+    pub(crate) fn idx_head_b(&self, i: usize) -> usize {
+        self.idx_head_w(i) + 1
+    }
+    pub(crate) fn idx_value_w(&self) -> usize {
+        self.idx_fc_w() + 5 + 2 * self.heads.len()
+    }
+    pub(crate) fn idx_value_b(&self) -> usize {
+        self.idx_value_w() + 1
+    }
+
+    /// Synthesize the manifest this model satisfies (what `make artifacts`
+    /// would have written for the PJRT path).
+    pub fn manifest(&self) -> Manifest {
+        let params: Vec<ParamDef> = self
+            .param_defs()
+            .into_iter()
+            .map(|(name, shape)| ParamDef { name, shape })
+            .collect();
+        let n_params = params.len();
+        debug_assert_eq!(n_params, self.n_params());
+        Manifest {
+            name: self.name.clone(),
+            obs_shape: self.obs,
+            action_heads: self.heads.clone(),
+            hidden: self.hidden,
+            policy_batch: self.policy_batch,
+            train_batch: self.train_batch,
+            rollout: self.rollout,
+            params,
+            n_params,
+            hyper_names: HYPER_NAMES.iter().map(|s| s.to_string()).collect(),
+            hypers_default: HYPERS_DEFAULT.to_vec(),
+            metric_names: METRIC_NAMES.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Borrowed views of every parameter tensor, validated against the def.
+pub(crate) struct ParamView<'a> {
+    pub conv_w: Vec<&'a [f32]>,
+    pub conv_b: Vec<&'a [f32]>,
+    pub fc_w: &'a [f32],
+    pub fc_b: &'a [f32],
+    pub gru_wx: &'a [f32],
+    pub gru_wh: &'a [f32],
+    pub gru_b: &'a [f32],
+    pub head_w: Vec<&'a [f32]>,
+    pub head_b: Vec<&'a [f32]>,
+    pub value_w: &'a [f32],
+    pub value_b: &'a [f32],
+}
+
+impl<'a> ParamView<'a> {
+    /// Parse the first `def.n_params()` literals as the parameter set.
+    pub fn parse(def: &ModelDef, lits: &[&'a Literal]) -> Result<ParamView<'a>> {
+        let defs = def.param_defs();
+        if lits.len() < defs.len() {
+            return Err(anyhow!(
+                "native: {} parameter tensors supplied, model needs {}",
+                lits.len(),
+                defs.len()
+            ));
+        }
+        let mut flat: Vec<&'a [f32]> = Vec::with_capacity(defs.len());
+        for (i, (name, shape)) in defs.iter().enumerate() {
+            let data = lits[i].as_f32()?;
+            let want: usize = shape.iter().product::<usize>().max(1);
+            if data.len() != want {
+                return Err(anyhow!(
+                    "native: param '{name}' has {} elements, expected {want}",
+                    data.len()
+                ));
+            }
+            flat.push(data);
+        }
+        let nc = def.conv.len();
+        Ok(ParamView {
+            conv_w: (0..nc).map(|i| flat[def.idx_conv_w(i)]).collect(),
+            conv_b: (0..nc).map(|i| flat[def.idx_conv_b(i)]).collect(),
+            fc_w: flat[def.idx_fc_w()],
+            fc_b: flat[def.idx_fc_b()],
+            gru_wx: flat[def.idx_gru_wx()],
+            gru_wh: flat[def.idx_gru_wh()],
+            gru_b: flat[def.idx_gru_b()],
+            head_w: (0..def.n_heads()).map(|i| flat[def.idx_head_w(i)]).collect(),
+            head_b: (0..def.n_heads()).map(|i| flat[def.idx_head_b(i)]).collect(),
+            value_w: flat[def.idx_value_w()],
+            value_b: flat[def.idx_value_b()],
+        })
+    }
+}
+
+/// Per-frame encoder activations (reused across frames to avoid allocs).
+/// `layers[0]` is the normalized input; `layers[i+1]` the post-relu output
+/// of conv layer i; `emb` the post-relu fc output.
+pub(crate) struct FrameActs {
+    pub layers: Vec<Vec<f32>>,
+    pub emb: Vec<f32>,
+}
+
+impl FrameActs {
+    pub fn new(def: &ModelDef) -> FrameActs {
+        let mut layers = Vec::with_capacity(def.geoms.len() + 1);
+        layers.push(vec![0.0; def.obs_len()]);
+        for g in &def.geoms {
+            layers.push(vec![0.0; g.out_len()]);
+        }
+        FrameActs { layers, emb: vec![0.0; def.fc_dim] }
+    }
+}
+
+/// Conv encoder + fc projection for one u8 frame (`model.encode`).
+pub(crate) fn encode_frame(def: &ModelDef, pv: &ParamView, obs_u8: &[u8], acts: &mut FrameActs) {
+    debug_assert_eq!(obs_u8.len(), def.obs_len());
+    for (dst, &src) in acts.layers[0].iter_mut().zip(obs_u8) {
+        *dst = src as f32 * (1.0 / 255.0);
+    }
+    for (i, g) in def.geoms.iter().enumerate() {
+        let (prev, rest) = acts.layers.split_at_mut(i + 1);
+        ops::conv_forward(g, &prev[i], pv.conv_w[i], pv.conv_b[i], &mut rest[0]);
+        ops::relu(&mut rest[0]);
+    }
+    let last = def.geoms.len();
+    ops::linear_forward(&acts.layers[last], pv.fc_w, pv.fc_b, &mut acts.emb);
+    ops::relu(&mut acts.emb);
+}
+
+/// Scratch gradient buffers for [`backward_frame`].
+pub(crate) struct FrameGradScratch {
+    pub d_layers: Vec<Vec<f32>>,
+}
+
+impl FrameGradScratch {
+    pub fn new(def: &ModelDef) -> FrameGradScratch {
+        let mut d_layers = Vec::with_capacity(def.geoms.len() + 1);
+        d_layers.push(vec![0.0; def.obs_len()]);
+        for g in &def.geoms {
+            d_layers.push(vec![0.0; g.out_len()]);
+        }
+        FrameGradScratch { d_layers }
+    }
+}
+
+/// Backprop one frame's encoder: given `d_emb` (gradient wrt the post-relu
+/// fc output, consumed/overwritten), accumulate conv/fc parameter grads
+/// into `grads`.  The gradient wrt the input pixels is discarded.
+pub(crate) fn backward_frame(
+    def: &ModelDef,
+    pv: &ParamView,
+    acts: &FrameActs,
+    d_emb: &mut [f32],
+    grads: &mut Grads,
+    scratch: &mut FrameGradScratch,
+) {
+    // Relu mask on the fc output.
+    for (d, &a) in d_emb.iter_mut().zip(&acts.emb) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    let last = def.geoms.len();
+    scratch.d_layers[last].iter_mut().for_each(|v| *v = 0.0);
+    {
+        let (d_fc_w, d_fc_b) = grads.pair_mut(def.idx_fc_w(), def.idx_fc_b());
+        ops::linear_backward(
+            &acts.layers[last],
+            pv.fc_w,
+            d_emb,
+            d_fc_w,
+            d_fc_b,
+            Some(&mut scratch.d_layers[last]),
+        );
+    }
+    for i in (0..def.geoms.len()).rev() {
+        // Relu mask on this layer's output.
+        let (d_prev, d_rest) = scratch.d_layers.split_at_mut(i + 1);
+        let d_out = &mut d_rest[0];
+        for (d, &a) in d_out.iter_mut().zip(&acts.layers[i + 1]) {
+            if a <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let want_d_in = i > 0;
+        if want_d_in {
+            d_prev[i].iter_mut().for_each(|v| *v = 0.0);
+        }
+        let (d_w, d_b) = grads.pair_mut(def.idx_conv_w(i), def.idx_conv_b(i));
+        ops::conv_backward(
+            &def.geoms[i],
+            &acts.layers[i],
+            pv.conv_w[i],
+            d_out,
+            d_w,
+            d_b,
+            if want_d_in { Some(&mut d_prev[i]) } else { None },
+        );
+    }
+}
+
+/// Dense per-parameter gradient buffers in `param_defs` order.
+pub(crate) struct Grads(pub Vec<Vec<f32>>);
+
+impl Grads {
+    pub fn new(def: &ModelDef) -> Grads {
+        Grads(
+            def.param_defs()
+                .iter()
+                .map(|(_, shape)| vec![0.0f32; shape.iter().product::<usize>().max(1)])
+                .collect(),
+        )
+    }
+
+    /// Two distinct gradient buffers at once (split borrows).
+    pub fn pair_mut(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+        assert!(a < b, "pair_mut needs a < b");
+        let (lo, hi) = self.0.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    }
+
+    pub fn global_norm(&self) -> f32 {
+        let ss: f64 = self
+            .0
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|&v| (v as f64) * (v as f64))
+            .sum();
+        ((ss + 1e-12) as f32).sqrt()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for g in &mut self.0 {
+            for v in g.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+/// The pure-Rust backend.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn load_model(&self, artifacts_dir: &str, spec: &str) -> Result<LoadedModel> {
+        let def = Arc::new(ModelDef::builtin(spec)?);
+        let manifest = def.manifest();
+        // If a PJRT artifacts bundle exists for this spec, fail fast on
+        // contract drift rather than silently training a different model.
+        let man_path = std::path::Path::new(artifacts_dir)
+            .join(spec)
+            .join("manifest.json");
+        if man_path.exists() {
+            let disk = Manifest::load(&man_path)?;
+            let params_match = disk.params.len() == manifest.params.len()
+                && disk
+                    .params
+                    .iter()
+                    .zip(&manifest.params)
+                    .all(|(a, b)| a.name == b.name && a.shape == b.shape);
+            if disk.obs_shape != manifest.obs_shape
+                || disk.action_heads != manifest.action_heads
+                || disk.hidden != manifest.hidden
+                || disk.train_batch != manifest.train_batch
+                || disk.rollout != manifest.rollout
+                || !params_match
+                || disk.hyper_names != manifest.hyper_names
+                || disk.metric_names != manifest.metric_names
+            {
+                return Err(anyhow!(
+                    "artifacts manifest {man_path:?} disagrees with the native \
+                     spec table for '{spec}' — stale `make artifacts` output?"
+                ));
+            }
+        }
+        Ok(LoadedModel {
+            manifest,
+            init: Executable::new(
+                format!("native:{spec}/init"),
+                Box::new(InitProgram { def: def.clone() }),
+            ),
+            policy: Executable::new(
+                format!("native:{spec}/policy"),
+                Box::new(PolicyProgram { def: def.clone() }),
+            ),
+            train: Executable::new(
+                format!("native:{spec}/train"),
+                Box::new(train::TrainProgram { def }),
+            ),
+        })
+    }
+}
+
+/// `init`: u32 seed -> fresh parameters (He-style init, zero biases,
+/// small-scale head init; mirrors `model.init_params`).
+struct InitProgram {
+    def: Arc<ModelDef>,
+}
+
+impl Program for InitProgram {
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != 1 {
+            return Err(anyhow!("init takes exactly the seed, got {} inputs", inputs.len()));
+        }
+        let seed = inputs[0].as_u32()?[0];
+        let mut rng = Rng::new(0x5eed_0000_0000_0000 ^ seed as u64);
+        let mut out = Vec::with_capacity(self.def.n_params());
+        for (name, shape) in self.def.param_defs() {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let data: Vec<f32> = if name.ends_with("/b") {
+                vec![0.0; n]
+            } else if name.starts_with("head") {
+                // Small-scale policy head init stabilises early training.
+                (0..n).map(|_| 0.01 * rng.normal()).collect()
+            } else {
+                let fan_in: usize = shape[..shape.len() - 1].iter().product::<usize>().max(1);
+                let scale = (2.0 / fan_in as f32).sqrt();
+                (0..n).map(|_| scale * rng.normal()).collect()
+            };
+            out.push(Literal::f32(&shape, data)?);
+        }
+        Ok(out)
+    }
+}
+
+/// `policy`: params + u8 obs (B,H,W,C) + f32 h (B,hidden) ->
+/// (logits (B,A), value (B), h' (B,hidden)).  Mirrors `model.policy_step`.
+struct PolicyProgram {
+    def: Arc<ModelDef>,
+}
+
+impl Program for PolicyProgram {
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let def = &*self.def;
+        let n = def.n_params();
+        if inputs.len() != n + 2 {
+            return Err(anyhow!(
+                "policy takes params + obs + h ({} inputs), got {}",
+                n + 2,
+                inputs.len()
+            ));
+        }
+        let pv = ParamView::parse(def, &inputs[..n])?;
+        let obs = inputs[n].as_u8()?;
+        let h_in = inputs[n + 1].as_f32()?;
+        let obs_len = def.obs_len();
+        if obs.len() % obs_len != 0 {
+            return Err(anyhow!(
+                "policy obs has {} bytes, not a multiple of frame size {obs_len}",
+                obs.len()
+            ));
+        }
+        let b = obs.len() / obs_len;
+        let hidden = def.hidden;
+        if h_in.len() != b * hidden {
+            return Err(anyhow!(
+                "policy h has {} elements, expected {b} x {hidden}",
+                h_in.len()
+            ));
+        }
+        let total_actions = def.total_actions();
+        let mut logits = vec![0.0f32; b * total_actions];
+        let mut values = vec![0.0f32; b];
+        let mut h_out = vec![0.0f32; b * hidden];
+        let mut acts = FrameActs::new(def);
+        let mut scratch = vec![0.0f32; 6 * hidden];
+        let mut value1 = [0.0f32; 1];
+        for i in 0..b {
+            encode_frame(def, &pv, &obs[i * obs_len..(i + 1) * obs_len], &mut acts);
+            let h_row = &h_in[i * hidden..(i + 1) * hidden];
+            let h_new = &mut h_out[i * hidden..(i + 1) * hidden];
+            ops::gru_forward_row(
+                &acts.emb, h_row, pv.gru_wx, pv.gru_wh, pv.gru_b, h_new, &mut scratch,
+                None,
+            );
+            let row = &mut logits[i * total_actions..(i + 1) * total_actions];
+            let mut off = 0usize;
+            for (hd, &hn) in def.heads.iter().enumerate() {
+                ops::linear_forward(h_new, pv.head_w[hd], pv.head_b[hd], &mut row[off..off + hn]);
+                off += hn;
+            }
+            ops::linear_forward(h_new, pv.value_w, pv.value_b, &mut value1);
+            values[i] = value1[0];
+        }
+        Ok(vec![
+            Literal::f32(&[b, total_actions], logits)?,
+            Literal::f32(&[b], values)?,
+            Literal::f32(&[b, hidden], h_out)?,
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{lit_f32, lit_u8};
+
+    #[test]
+    fn builtin_specs_match_env_tables() {
+        for spec in ["tiny", "doomish", "doomish_full", "arcade", "gridlab"] {
+            let def = ModelDef::builtin(spec).unwrap();
+            let obs = crate::env::obs_for_spec(spec).unwrap();
+            assert_eq!(def.obs, [obs.h, obs.w, obs.c], "{spec} obs drifted");
+            assert_eq!(
+                def.heads,
+                crate::env::heads_for_spec(spec).unwrap(),
+                "{spec} heads drifted"
+            );
+        }
+        assert!(ModelDef::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_parser() {
+        // The synthesized manifest must satisfy the same invariants the
+        // JSON parser enforces for PJRT bundles.
+        let man = ModelDef::builtin("tiny").unwrap().manifest();
+        assert_eq!(man.params.len(), man.n_params);
+        assert_eq!(man.hyper_names.len(), man.hypers_default.len());
+        assert_eq!(man.total_actions(), 5);
+        assert_eq!(man.hyper_index("lr"), Some(0));
+        assert_eq!(man.metric_index("grad_norm"), Some(5));
+    }
+
+    #[test]
+    fn tiny_flat_dim_matches_python() {
+        // tiny: 24x32 -> 12x16 -> 6x8 -> 6x8 @ 8ch => flat 384.
+        let def = ModelDef::builtin("tiny").unwrap();
+        assert_eq!(def.flat, 6 * 8 * 8);
+        let defs = def.param_defs();
+        assert_eq!(defs[def.idx_fc_w()].1, vec![384, 32]);
+        assert_eq!(defs[def.idx_gru_b()].1, vec![2, 96]);
+        assert_eq!(defs.len(), def.n_params());
+    }
+
+    #[test]
+    fn policy_program_shapes_and_determinism() {
+        let def = Arc::new(ModelDef::builtin("tiny").unwrap());
+        let init = InitProgram { def: def.clone() };
+        let seed = Literal::u32_scalar(3);
+        let params = init.run(&[&seed]).unwrap();
+        let b = 2;
+        let obs = lit_u8(&[b, 24, 32, 3], &vec![77u8; b * def.obs_len()]).unwrap();
+        let h = lit_f32(&[b, def.hidden], &vec![0.0; b * def.hidden]).unwrap();
+        let pol = PolicyProgram { def: def.clone() };
+        let mut inputs: Vec<&Literal> = params.iter().collect();
+        inputs.push(&obs);
+        inputs.push(&h);
+        let out = pol.run(&inputs).unwrap();
+        assert_eq!(out.len(), 3);
+        let logits = out[0].as_f32().unwrap();
+        assert_eq!(logits.len(), b * 5);
+        // Identical rows in -> identical rows out.
+        assert_eq!(logits[..5], logits[5..10]);
+        let h_new = out[2].as_f32().unwrap();
+        assert!(h_new.iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+}

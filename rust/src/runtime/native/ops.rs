@@ -1,0 +1,486 @@
+//! Scalar f32 primitives for the native backend: strided SAME conv (NHWC /
+//! HWIO), dense layers, and the PyTorch-convention GRU cell — forward and
+//! analytic backward.  Loop nests keep the innermost dimension contiguous
+//! (output channels / output features) so LLVM can autovectorize; there is
+//! deliberately no unsafe and no architecture-specific code here.
+
+/// Geometry of one conv layer, fully resolved at model-build time.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeom {
+    pub h_in: usize,
+    pub w_in: usize,
+    pub c_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+}
+
+impl ConvGeom {
+    /// TF/XLA "SAME" geometry: `ceil(in/stride)` outputs, zero padding
+    /// split low-side-first.
+    pub fn same(h_in: usize, w_in: usize, c_in: usize, c_out: usize, k: usize, stride: usize) -> ConvGeom {
+        let h_out = (h_in + stride - 1) / stride;
+        let w_out = (w_in + stride - 1) / stride;
+        let pad_h = ((h_out - 1) * stride + k).saturating_sub(h_in);
+        let pad_w = ((w_out - 1) * stride + k).saturating_sub(w_in);
+        ConvGeom {
+            h_in,
+            w_in,
+            c_in,
+            h_out,
+            w_out,
+            c_out,
+            k,
+            stride,
+            pad_top: pad_h / 2,
+            pad_left: pad_w / 2,
+        }
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.h_in * self.w_in * self.c_in
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.h_out * self.w_out * self.c_out
+    }
+
+    pub fn w_len(&self) -> usize {
+        self.k * self.k * self.c_in * self.c_out
+    }
+}
+
+/// Forward conv (no activation): `out[ho,wo,co] = b[co] + sum inp*w`.
+/// `inp` is (H,W,Ci) row-major, `wgt` is (K,K,Ci,Co), `out` is (Ho,Wo,Co).
+pub fn conv_forward(g: &ConvGeom, inp: &[f32], wgt: &[f32], bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(inp.len(), g.in_len());
+    debug_assert_eq!(wgt.len(), g.w_len());
+    debug_assert_eq!(bias.len(), g.c_out);
+    debug_assert_eq!(out.len(), g.out_len());
+    let (ci, co, k) = (g.c_in, g.c_out, g.k);
+    for ho in 0..g.h_out {
+        for wo in 0..g.w_out {
+            let out_row = &mut out[(ho * g.w_out + wo) * co..][..co];
+            out_row.copy_from_slice(bias);
+            for ky in 0..k {
+                let y = (ho * g.stride + ky) as isize - g.pad_top as isize;
+                if y < 0 || y >= g.h_in as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let x = (wo * g.stride + kx) as isize - g.pad_left as isize;
+                    if x < 0 || x >= g.w_in as isize {
+                        continue;
+                    }
+                    let in_px = &inp[(y as usize * g.w_in + x as usize) * ci..][..ci];
+                    let w_base = (ky * k + kx) * ci * co;
+                    for (c, &v) in in_px.iter().enumerate() {
+                        if v == 0.0 {
+                            continue; // post-relu inputs are ~half zeros
+                        }
+                        let w_row = &wgt[w_base + c * co..][..co];
+                        for (o, &wv) in out_row.iter_mut().zip(w_row) {
+                            *o += v * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward conv: accumulates `d_wgt`, `d_bias` and (when `d_inp` is Some)
+/// the input gradient.  `d_out` must already include any activation
+/// derivative applied by the caller.
+pub fn conv_backward(
+    g: &ConvGeom,
+    inp: &[f32],
+    wgt: &[f32],
+    d_out: &[f32],
+    d_wgt: &mut [f32],
+    d_bias: &mut [f32],
+    mut d_inp: Option<&mut [f32]>,
+) {
+    debug_assert_eq!(inp.len(), g.in_len());
+    debug_assert_eq!(d_out.len(), g.out_len());
+    debug_assert_eq!(d_wgt.len(), g.w_len());
+    debug_assert_eq!(d_bias.len(), g.c_out);
+    let (ci, co, k) = (g.c_in, g.c_out, g.k);
+    for ho in 0..g.h_out {
+        for wo in 0..g.w_out {
+            let d_row = &d_out[(ho * g.w_out + wo) * co..][..co];
+            for (b, &d) in d_bias.iter_mut().zip(d_row) {
+                *b += d;
+            }
+            for ky in 0..k {
+                let y = (ho * g.stride + ky) as isize - g.pad_top as isize;
+                if y < 0 || y >= g.h_in as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let x = (wo * g.stride + kx) as isize - g.pad_left as isize;
+                    if x < 0 || x >= g.w_in as isize {
+                        continue;
+                    }
+                    let px = (y as usize * g.w_in + x as usize) * ci;
+                    let in_px = &inp[px..px + ci];
+                    let w_base = (ky * k + kx) * ci * co;
+                    for (c, &v) in in_px.iter().enumerate() {
+                        let dw_row = &mut d_wgt[w_base + c * co..][..co];
+                        for (dw, &d) in dw_row.iter_mut().zip(d_row) {
+                            *dw += v * d;
+                        }
+                        if let Some(di) = d_inp.as_deref_mut() {
+                            let w_row = &wgt[w_base + c * co..][..co];
+                            let mut acc = 0.0f32;
+                            for (&wv, &d) in w_row.iter().zip(d_row) {
+                                acc += wv * d;
+                            }
+                            di[px + c] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense forward: `out = x @ w + b` with `w` of shape (n_in, n_out).
+pub fn linear_forward(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+    let n_out = b.len();
+    debug_assert_eq!(w.len(), x.len() * n_out);
+    debug_assert_eq!(out.len(), n_out);
+    out.copy_from_slice(b);
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let w_row = &w[i * n_out..][..n_out];
+        for (o, &wv) in out.iter_mut().zip(w_row) {
+            *o += xv * wv;
+        }
+    }
+}
+
+/// Dense backward: accumulates `d_w`, `d_b`, and (when Some) `d_x`.
+pub fn linear_backward(
+    x: &[f32],
+    w: &[f32],
+    d_out: &[f32],
+    d_w: &mut [f32],
+    d_b: &mut [f32],
+    d_x: Option<&mut [f32]>,
+) {
+    let n_out = d_out.len();
+    debug_assert_eq!(w.len(), x.len() * n_out);
+    debug_assert_eq!(d_w.len(), w.len());
+    debug_assert_eq!(d_b.len(), n_out);
+    for (b, &d) in d_b.iter_mut().zip(d_out) {
+        *b += d;
+    }
+    for (i, &xv) in x.iter().enumerate() {
+        let dw_row = &mut d_w[i * n_out..][..n_out];
+        for (dw, &d) in dw_row.iter_mut().zip(d_out) {
+            *dw += xv * d;
+        }
+    }
+    if let Some(dx) = d_x {
+        debug_assert_eq!(dx.len(), x.len());
+        for (i, dxi) in dx.iter_mut().enumerate() {
+            let w_row = &w[i * n_out..][..n_out];
+            let mut acc = 0.0f32;
+            for (&wv, &d) in w_row.iter().zip(d_out) {
+                acc += wv * d;
+            }
+            *dxi += acc;
+        }
+    }
+}
+
+/// In-place ReLU; returns nothing — derivative is recovered from the
+/// post-activation sign (`a > 0`).
+pub fn relu(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Saved forward state of one GRU step for one batch row, needed by
+/// [`gru_backward_row`].
+#[derive(Clone, Default)]
+pub struct GruTrace {
+    /// Effective previous hidden state (after any done-reset mask).
+    pub h_prev: Vec<f32>,
+    pub r: Vec<f32>,
+    pub z: Vec<f32>,
+    pub n: Vec<f32>,
+    /// Pre-tanh hidden-side candidate gate `gh[2H..3H]` (needed for dr).
+    pub gh_n: Vec<f32>,
+}
+
+impl GruTrace {
+    pub fn new(hidden: usize) -> GruTrace {
+        GruTrace {
+            h_prev: vec![0.0; hidden],
+            r: vec![0.0; hidden],
+            z: vec![0.0; hidden],
+            n: vec![0.0; hidden],
+            gh_n: vec![0.0; hidden],
+        }
+    }
+}
+
+/// One GRU cell step for a single batch row, PyTorch gate convention
+/// (mirrors `python/compile/kernels/ref.py::gru_cell_ref`):
+///
+/// ```text
+/// gx = x @ wx + b[0];  gh = h @ wh + b[1]        (3H each: r | z | n)
+/// r = sigmoid(gx_r + gh_r);  z = sigmoid(gx_z + gh_z)
+/// n = tanh(gx_n + r * gh_n)
+/// h' = (1 - z) * n + z * h
+/// ```
+///
+/// `wx` is (F, 3H), `wh` is (H, 3H), `b` is (2, 3H) flattened.  When
+/// `trace` is Some, forward state is saved for BPTT; `scratch` must hold
+/// `6 * hidden` f32 and is overwritten.
+pub fn gru_forward_row(
+    x: &[f32],
+    h: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    b: &[f32],
+    h_new: &mut [f32],
+    scratch: &mut [f32],
+    mut trace: Option<&mut GruTrace>,
+) {
+    let hidden = h.len();
+    let g3 = 3 * hidden;
+    debug_assert_eq!(wx.len(), x.len() * g3);
+    debug_assert_eq!(wh.len(), hidden * g3);
+    debug_assert_eq!(b.len(), 2 * g3);
+    debug_assert!(scratch.len() >= 2 * g3);
+    let (gx, gh) = scratch.split_at_mut(g3);
+    linear_forward(x, wx, &b[..g3], gx);
+    linear_forward(h, wh, &b[g3..], gh);
+    if let Some(t) = trace.as_deref_mut() {
+        t.h_prev.copy_from_slice(h);
+        t.gh_n.copy_from_slice(&gh[2 * hidden..]);
+    }
+    for i in 0..hidden {
+        let r = sigmoid(gx[i] + gh[i]);
+        let z = sigmoid(gx[hidden + i] + gh[hidden + i]);
+        let n = (gx[2 * hidden + i] + r * gh[2 * hidden + i]).tanh();
+        h_new[i] = (1.0 - z) * n + z * h[i];
+        if let Some(t) = trace.as_deref_mut() {
+            t.r[i] = r;
+            t.z[i] = z;
+            t.n[i] = n;
+        }
+    }
+}
+
+/// Backward of [`gru_forward_row`] for one batch row.
+///
+/// `d_h_new` is the gradient flowing into the step output; on return
+/// `d_h_prev` holds the gradient wrt the (masked) previous hidden state and
+/// `d_x` the gradient wrt the input.  Parameter gradients accumulate into
+/// `d_wx`/`d_wh`/`d_b`.  `scratch` must hold `6 * hidden` f32.
+#[allow(clippy::too_many_arguments)]
+pub fn gru_backward_row(
+    x: &[f32],
+    trace: &GruTrace,
+    wx: &[f32],
+    wh: &[f32],
+    d_h_new: &[f32],
+    d_x: &mut [f32],
+    d_h_prev: &mut [f32],
+    d_wx: &mut [f32],
+    d_wh: &mut [f32],
+    d_b: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let hidden = d_h_new.len();
+    let g3 = 3 * hidden;
+    debug_assert!(scratch.len() >= 2 * g3);
+    let (dgx, dgh) = scratch.split_at_mut(g3);
+    for i in 0..hidden {
+        let (r, z, n) = (trace.r[i], trace.z[i], trace.n[i]);
+        let dh = d_h_new[i];
+        // h' = (1-z)*n + z*h_prev
+        let dz_pre = dh * (trace.h_prev[i] - n) * z * (1.0 - z);
+        let dn_pre = dh * (1.0 - z) * (1.0 - n * n);
+        let dr_pre = dn_pre * trace.gh_n[i] * r * (1.0 - r);
+        dgx[i] = dr_pre;
+        dgx[hidden + i] = dz_pre;
+        dgx[2 * hidden + i] = dn_pre;
+        dgh[i] = dr_pre;
+        dgh[hidden + i] = dz_pre;
+        dgh[2 * hidden + i] = dn_pre * r;
+        d_h_prev[i] = dh * z;
+    }
+    // d_h_prev += dgh @ wh^T ; d_x = dgx @ wx^T ; weight grads accumulate.
+    let (db_x, db_h) = d_b.split_at_mut(g3);
+    linear_backward(x, wx, dgx, d_wx, db_x, Some(d_x));
+    linear_backward(&trace.h_prev, wh, dgh, d_wh, db_h, Some(d_h_prev));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central finite difference of a scalar loss wrt one input slot.
+    fn fd<F: FnMut(&[f32]) -> f32>(xs: &mut [f32], i: usize, mut loss: F) -> f32 {
+        let eps = 1e-3f32;
+        let orig = xs[i];
+        xs[i] = orig + eps;
+        let up = loss(xs);
+        xs[i] = orig - eps;
+        let down = loss(xs);
+        xs[i] = orig;
+        (up - down) / (2.0 * eps)
+    }
+
+    #[test]
+    fn same_geometry_matches_tf_convention() {
+        // 24x32, k=4, s=2 -> 12x16 with 1 row/col pad on top/left.
+        let g = ConvGeom::same(24, 32, 3, 8, 4, 2);
+        assert_eq!((g.h_out, g.w_out), (12, 16));
+        assert_eq!((g.pad_top, g.pad_left), (1, 1));
+        // 6x8, k=3, s=1 -> 6x8, pad 1.
+        let g = ConvGeom::same(6, 8, 8, 8, 3, 1);
+        assert_eq!((g.h_out, g.w_out), (6, 8));
+        assert_eq!((g.pad_top, g.pad_left), (1, 1));
+        // Odd input: 9x12, k=4, s=2 -> 5x6 (ceil), pad_total = 4*2-2... check.
+        let g = ConvGeom::same(9, 12, 16, 32, 4, 2);
+        assert_eq!((g.h_out, g.w_out), (5, 6));
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel, identity weight, stride 1: output == input + bias.
+        let g = ConvGeom::same(3, 3, 1, 1, 1, 1);
+        let inp: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let wgt = vec![1.0f32];
+        let bias = vec![0.5f32];
+        let mut out = vec![0.0f32; 9];
+        conv_forward(&g, &inp, &wgt, &bias, &mut out);
+        for i in 0..9 {
+            assert!((out[i] - (i as f32 + 0.5)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv_gradients_match_finite_difference() {
+        let g = ConvGeom::same(5, 4, 2, 3, 3, 2);
+        let mut rng = crate::util::Rng::new(42);
+        let mut inp: Vec<f32> = (0..g.in_len()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut wgt: Vec<f32> = (0..g.w_len()).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let bias: Vec<f32> = (0..g.c_out).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        // Loss = weighted sum of outputs (fixed random weights).
+        let lw: Vec<f32> = (0..g.out_len()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let loss = |inp: &[f32], wgt: &[f32]| -> f32 {
+            let mut out = vec![0.0f32; g.out_len()];
+            conv_forward(&g, inp, wgt, &bias, &mut out);
+            out.iter().zip(&lw).map(|(o, w)| o * w).sum()
+        };
+        let mut d_wgt = vec![0.0f32; g.w_len()];
+        let mut d_bias = vec![0.0f32; g.c_out];
+        let mut d_inp = vec![0.0f32; g.in_len()];
+        conv_backward(&g, &inp, &wgt, &lw, &mut d_wgt, &mut d_bias, Some(&mut d_inp));
+        for i in (0..g.in_len()).step_by(7) {
+            let w_snapshot = wgt.clone();
+            let num = fd(&mut inp, i, |xs| loss(xs, &w_snapshot));
+            assert!((num - d_inp[i]).abs() < 2e-2, "d_inp[{i}]: fd {num} vs {}", d_inp[i]);
+        }
+        for i in (0..g.w_len()).step_by(11) {
+            let inp_snapshot = inp.clone();
+            let num = fd(&mut wgt, i, |ws| loss(&inp_snapshot, ws));
+            assert!((num - d_wgt[i]).abs() < 2e-2, "d_wgt[{i}]: fd {num} vs {}", d_wgt[i]);
+        }
+    }
+
+    #[test]
+    fn linear_matches_finite_difference() {
+        let (n_in, n_out) = (5, 4);
+        let mut rng = crate::util::Rng::new(3);
+        let mut x: Vec<f32> = (0..n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let lw: Vec<f32> = (0..n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let loss = |x: &[f32]| -> f32 {
+            let mut out = vec![0.0f32; n_out];
+            linear_forward(x, &w, &b, &mut out);
+            out.iter().zip(&lw).map(|(o, l)| o * l).sum()
+        };
+        let mut d_w = vec![0.0f32; w.len()];
+        let mut d_b = vec![0.0f32; n_out];
+        let mut d_x = vec![0.0f32; n_in];
+        linear_backward(&x, &w, &lw, &mut d_w, &mut d_b, Some(&mut d_x));
+        for i in 0..n_in {
+            let num = fd(&mut x, i, loss);
+            assert!((num - d_x[i]).abs() < 1e-2, "d_x[{i}]: fd {num} vs {}", d_x[i]);
+        }
+        assert_eq!(d_b, lw);
+    }
+
+    #[test]
+    fn gru_matches_finite_difference() {
+        let (f, h) = (4, 3);
+        let mut rng = crate::util::Rng::new(9);
+        let mut x: Vec<f32> = (0..f).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut hp: Vec<f32> = (0..h).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let wx: Vec<f32> = (0..f * 3 * h).map(|_| rng.range_f32(-0.7, 0.7)).collect();
+        let wh: Vec<f32> = (0..h * 3 * h).map(|_| rng.range_f32(-0.7, 0.7)).collect();
+        let b: Vec<f32> = (0..6 * h).map(|_| rng.range_f32(-0.3, 0.3)).collect();
+        let lw: Vec<f32> = (0..h).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let loss = |x: &[f32], hp: &[f32], wx: &[f32]| -> f32 {
+            let mut out = vec![0.0f32; h];
+            let mut scratch = vec![0.0f32; 6 * h];
+            gru_forward_row(x, hp, wx, &wh, &b, &mut out, &mut scratch, None);
+            out.iter().zip(&lw).map(|(o, l)| o * l).sum()
+        };
+        let mut out = vec![0.0f32; h];
+        let mut scratch = vec![0.0f32; 6 * h];
+        let mut trace = GruTrace::new(h);
+        gru_forward_row(&x, &hp, &wx, &wh, &b, &mut out, &mut scratch, Some(&mut trace));
+        let mut d_x = vec![0.0f32; f];
+        let mut d_hp = vec![0.0f32; h];
+        let mut d_wx = vec![0.0f32; wx.len()];
+        let mut d_wh = vec![0.0f32; wh.len()];
+        let mut d_b = vec![0.0f32; b.len()];
+        gru_backward_row(
+            &x, &trace, &wx, &wh, &lw, &mut d_x, &mut d_hp, &mut d_wx, &mut d_wh,
+            &mut d_b, &mut scratch,
+        );
+        for i in 0..f {
+            let (hp2, wx2) = (hp.clone(), wx.clone());
+            let num = fd(&mut x, i, |xs| loss(xs, &hp2, &wx2));
+            assert!((num - d_x[i]).abs() < 1e-2, "d_x[{i}]: fd {num} vs {}", d_x[i]);
+        }
+        for i in 0..h {
+            let (x2, wx2) = (x.clone(), wx.clone());
+            let num = fd(&mut hp, i, |hs| loss(&x2, hs, &wx2));
+            assert!((num - d_hp[i]).abs() < 1e-2, "d_hp[{i}]: fd {num} vs {}", d_hp[i]);
+        }
+        let mut wx_m = wx.clone();
+        for i in (0..wx.len()).step_by(5) {
+            let (x2, hp2) = (x.clone(), hp.clone());
+            let num = fd(&mut wx_m, i, |ws| loss(&x2, &hp2, ws));
+            assert!((num - d_wx[i]).abs() < 1e-2, "d_wx[{i}]: fd {num} vs {}", d_wx[i]);
+        }
+        // GRU output is a convex combination of tanh and h_prev: bounded
+        // when |h_prev| <= 1.
+        assert!(out.iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+}

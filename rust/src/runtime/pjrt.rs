@@ -1,0 +1,217 @@
+//! The PJRT/XLA backend (cargo feature `pjrt`): loads the AOT artifacts
+//! (HLO text + manifest, written by `python/compile` via `make artifacts`)
+//! and executes them through the PJRT C API.  This is the only place the
+//! `xla` crate is touched; Python never runs after `make artifacts`.
+//!
+//! HLO *text* is the interchange format (jax >= 0.5 emits 64-bit-id protos
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids — see
+//! DESIGN.md / aot.py).
+//!
+//! Offline builds compile against the stub in `third_party/xla-stub`, which
+//! fails at `PjRtClient::cpu()` with a pointer at the README; swap the path
+//! dependency for the real xla-rs crate to execute this backend.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{Backend, DeviceBuffers, Executable, Literal, LoadedModel, Manifest, Program};
+
+/// Convert a host [`Literal`] into an `xla::Literal` (one pre-sized copy).
+fn to_xla(lit: &Literal) -> Result<xla::Literal> {
+    fn le_bytes<T: Copy, const W: usize>(xs: &[T], to_le: impl Fn(T) -> [u8; W]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(xs.len() * W);
+        for &x in xs {
+            out.extend_from_slice(&to_le(x));
+        }
+        out
+    }
+    let (ty, bytes): (xla::ElementType, Vec<u8>) = match lit {
+        Literal::F32 { data, .. } => (xla::ElementType::F32, le_bytes(data, f32::to_le_bytes)),
+        Literal::U8 { data, .. } => (xla::ElementType::U8, data.clone()),
+        Literal::I32 { data, .. } => (xla::ElementType::S32, le_bytes(data, i32::to_le_bytes)),
+        Literal::U32 { data, .. } => (xla::ElementType::U32, le_bytes(data, u32::to_le_bytes)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, lit.dims(), &bytes)
+        .map_err(|e| anyhow!("to_xla: {e:?}"))
+}
+
+/// Convert a program output back into a host [`Literal`] (all dtypes the
+/// runtime exchanges pass through, like the pre-refactor path).
+fn from_xla(lit: &xla::Literal) -> Result<Literal> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().to_vec();
+    let read = |what: &str, e: xla::Error| anyhow!("read {what} output: {e:?}");
+    match shape.element_type() {
+        xla::ElementType::F32 => {
+            Literal::f32(&dims, lit.to_vec::<f32>().map_err(|e| read("f32", e))?)
+        }
+        xla::ElementType::U8 => {
+            Literal::u8(&dims, lit.to_vec::<u8>().map_err(|e| read("u8", e))?)
+        }
+        xla::ElementType::S32 => {
+            Literal::i32(&dims, lit.to_vec::<i32>().map_err(|e| read("i32", e))?)
+        }
+        xla::ElementType::U32 => {
+            let data = lit.to_vec::<u32>().map_err(|e| read("u32", e))?;
+            if dims.is_empty() && data.len() == 1 {
+                Ok(Literal::u32_scalar(data[0]))
+            } else {
+                Err(anyhow!("non-scalar u32 program output {dims:?} unsupported"))
+            }
+        }
+    }
+}
+
+/// A PJRT CPU client; compiles HLO text into executables.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe (it backs multi-threaded
+// jax/TF runtimes); we only compile through `&self`.  The raw pointer
+// inside the crate's wrapper is the only reason it isn't auto-Send/Sync.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Create the CPU PJRT client (the container has no accelerator).
+    pub fn cpu() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(PjrtBackend { client })
+    }
+
+    /// Load HLO text and compile it.
+    fn load_hlo_text(&self, path: &Path) -> Result<PjrtProgram> {
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(PjrtProgram {
+            exe,
+            client: self.client.clone(),
+            name: path.display().to_string(),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load_model(&self, artifacts_dir: &str, spec: &str) -> Result<LoadedModel> {
+        let dir = Path::new(artifacts_dir).join(spec);
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest for spec '{spec}'"))?;
+        let init = self.load_hlo_text(&dir.join("init.hlo.txt"))?;
+        let policy = self.load_hlo_text(&dir.join("policy.hlo.txt"))?;
+        let train = self.load_hlo_text(&dir.join("train.hlo.txt"))?;
+        Ok(LoadedModel {
+            manifest,
+            init: Executable::new(format!("pjrt:{spec}/init"), Box::new(init)),
+            policy: Executable::new(format!("pjrt:{spec}/policy"), Box::new(policy)),
+            train: Executable::new(format!("pjrt:{spec}/train"), Box::new(train)),
+        })
+    }
+}
+
+/// A compiled program.  All our programs are lowered with
+/// `return_tuple=True`, so execution returns one tuple literal that we
+/// decompose into the per-output literals.
+struct PjrtProgram {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    name: String,
+}
+
+// SAFETY: PJRT loaded executables are documented thread-safe for Execute;
+// we only call `execute_b` through `&self`.  The client handle inside is
+// reference-counted on the C++ side.
+unsafe impl Send for PjrtProgram {}
+unsafe impl Sync for PjrtProgram {}
+
+/// Device-resident input cache: the uploaded buffers plus the host
+/// literals backing them.
+///
+/// IMPORTANT: the host literals must stay alive as long as the buffers —
+/// PJRT's BufferFromHostLiteral may borrow the host memory until the
+/// (async) transfer completes.
+struct PjrtCache {
+    bufs: Vec<xla::PjRtBuffer>,
+    _host: Vec<xla::Literal>,
+}
+
+// SAFETY: device buffers are plain handles, thread-safe per the PJRT
+// contract; the host literals are only kept alive, never aliased.
+unsafe impl Send for PjrtCache {}
+unsafe impl Sync for PjrtCache {}
+
+impl PjrtProgram {
+    /// Upload host literals to device buffers, keeping the host copies
+    /// alive alongside.
+    fn upload_all(&self, inputs: &[&Literal]) -> Result<(Vec<xla::Literal>, Vec<xla::PjRtBuffer>)> {
+        let mut host = Vec::with_capacity(inputs.len());
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (i, l) in inputs.iter().enumerate() {
+            let xl = to_xla(l)?;
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, &xl)
+                    .map_err(|e| anyhow!("upload input {i} of {}: {e:?}", self.name))?,
+            );
+            host.push(xl);
+        }
+        Ok((host, bufs))
+    }
+
+    /// Dispatch on device buffers and decompose the tuple output.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal inputs): the crate's C++ shim uploads each input literal to
+    /// a device buffer it `release()`s and never frees — a per-call leak of
+    /// the whole input set (~hundreds of MB/min at our call rates).  We
+    /// upload through `buffer_from_host_literal` so Rust owns the buffers
+    /// (freed on drop) and dispatch via `execute_b`.
+    fn exec(&self, refs: &[&xla::PjRtBuffer]) -> Result<Vec<Literal>> {
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(refs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let mut lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch outputs of {}: {e:?}", self.name))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untuple outputs of {}: {e:?}", self.name))?;
+        parts.iter().map(from_xla).collect()
+    }
+}
+
+impl Program for PjrtProgram {
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let (_host, bufs) = self.upload_all(inputs)?;
+        self.exec(&bufs.iter().collect::<Vec<_>>())
+    }
+
+    fn upload(&self, inputs: &[&Literal]) -> Result<DeviceBuffers> {
+        let (host, bufs) = self.upload_all(inputs)?;
+        Ok(DeviceBuffers::new(PjrtCache { bufs, _host: host }))
+    }
+
+    fn run_cached(&self, cached: &DeviceBuffers, fresh: &[&Literal]) -> Result<Vec<Literal>> {
+        let cache = cached
+            .downcast_ref::<PjrtCache>()
+            .ok_or_else(|| anyhow!("input cache was not created by the pjrt backend"))?;
+        let (_host, fresh_bufs) = self.upload_all(fresh)?;
+        let mut refs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(cache.bufs.len() + fresh_bufs.len());
+        refs.extend(cache.bufs.iter());
+        refs.extend(fresh_bufs.iter());
+        self.exec(&refs)
+    }
+}

@@ -1,15 +1,18 @@
-//! Integration: the PJRT runtime against the real `artifacts/tiny` AOT
-//! bundle — the cross-language contract (python/compile <-> rust/runtime).
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Integration: the runtime contract for the `tiny` spec, against whichever
+//! backend `Runtime::cpu()` selects — the native backend synthesizes the
+//! model from the built-in spec table (no artifacts needed); with
+//! `SF_BACKEND=pjrt` (feature `pjrt`) the same assertions run against the
+//! real `artifacts/tiny` AOT bundle (`make artifacts`), making this the
+//! cross-language contract test (python/compile <-> rust/runtime).
 
 use sample_factory::runtime::{
-    lit_f32, lit_u8, to_f32_vec, LearnerState, ModelPrograms, Runtime,
+    lit_f32, lit_u8, to_f32_vec, LearnerState, Literal, ModelPrograms, Runtime,
 };
 
 fn progs() -> (Runtime, ModelPrograms) {
-    let rt = Runtime::cpu().expect("pjrt client");
+    let rt = Runtime::cpu().expect("runtime backend");
     let progs = ModelPrograms::load(&rt, "artifacts", "tiny")
-        .expect("artifacts/tiny missing — run `make artifacts`");
+        .expect("loading tiny model (pjrt backend additionally needs `make artifacts`)");
     (rt, progs)
 }
 
@@ -58,7 +61,7 @@ fn policy_program_runs_and_produces_sane_outputs() {
     )
     .unwrap();
     let h = lit_f32(&[b, man.hidden], &vec![0f32; b * man.hidden]).unwrap();
-    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    let mut inputs: Vec<&Literal> = params.iter().collect();
     inputs.push(&obs);
     inputs.push(&h);
     let outs = progs.policy.run(&inputs).unwrap();

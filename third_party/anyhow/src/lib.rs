@@ -1,0 +1,241 @@
+//! Vendored, API-compatible subset of the `anyhow` crate so the workspace
+//! builds with no network access.  Implements the surface this repository
+//! uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Semantics mirror upstream where it matters:
+//! * `Display` prints the outermost message; `{:#}` prints the whole
+//!   context chain joined by `": "`.
+//! * `Debug` (what `.unwrap()`/`.expect()` panics show) prints the chain as
+//!   an anyhow-style "Caused by" list.
+//! * `Error` deliberately does **not** implement `std::error::Error`, which
+//!   is what makes the blanket `From<E: std::error::Error>` impl coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a root cause plus a stack of human-readable context.
+pub struct Error {
+    /// Context frames, innermost first, outermost last.
+    context: Vec<String>,
+    root: Root,
+}
+
+enum Root {
+    Msg(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { context: Vec::new(), root: Root::Msg(message.to_string()) }
+    }
+
+    /// Wrap a standard error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { context: Vec::new(), root: Root::Boxed(Box::new(error)) }
+    }
+
+    /// Add a context frame (becomes the new outermost message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    fn root_msg(&self) -> String {
+        match &self.root {
+            Root::Msg(m) => m.clone(),
+            Root::Boxed(e) => e.to_string(),
+        }
+    }
+
+    /// Messages outermost-first: contexts in reverse, then the root cause,
+    /// then any `std::error::Error::source` chain under the root.
+    fn chain_msgs(&self) -> Vec<String> {
+        let mut msgs: Vec<String> = self.context.iter().rev().cloned().collect();
+        msgs.push(self.root_msg());
+        if let Root::Boxed(e) = &self.root {
+            let mut src = e.source();
+            while let Some(s) = src {
+                msgs.push(s.to_string());
+                src = s.source();
+            }
+        }
+        msgs
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_msgs();
+        if f.alternate() {
+            write!(f, "{}", msgs.join(": "))
+        } else {
+            write!(f, "{}", msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_msgs();
+        write!(f, "{}", msgs[0])?;
+        if msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`
+// (same trick as upstream anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+mod private {
+    /// Sealed conversion used by [`crate::Context`]; implemented for both
+    /// standard errors and [`crate::Error`] itself.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::new(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (`.context(...)` / `.with_context(|| ...)`).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or another error.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// `ensure!(cond, ...)`: bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("count {n} of {}", 7);
+        assert_eq!(b.to_string(), "count 3 of 7");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn context_chains_and_debug() {
+        let e = anyhow!("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        let d = format!("{e:?}");
+        assert!(d.contains("Caused by:"), "{d}");
+        assert!(d.contains("root"), "{d}");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let y: Option<u32> = Some(5);
+        assert_eq!(y.with_context(|| "unused").unwrap(), 5);
+    }
+}

@@ -1,0 +1,263 @@
+//! Compile-surface stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The real bindings link `libxla_extension` (hundreds of MB, fetched at
+//! build time), which this repository cannot depend on in an offline build.
+//! This stub keeps the `pjrt` feature *compiling* so the original
+//! HLO-via-PJRT runtime path stays maintained and reviewed; executing it
+//! requires swapping this path dependency for the real crate (README
+//! §Backends).
+//!
+//! Host-side `Literal` handling is implemented for real (it is plain
+//! memory); everything that would touch PJRT returns
+//! [`Error::Unimplemented`] — starting with [`PjRtClient::cpu`], so no
+//! later entry point is reachable in practice.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub enum Error {
+    Unimplemented(&'static str),
+    Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unimplemented(what) => write!(
+                f,
+                "xla stub: {what} requires the real xla-rs crate (see README §Backends)"
+            ),
+            Error::Msg(m) => write!(f, "xla stub: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes this repository exchanges with its programs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    U8,
+    S32,
+    U32,
+}
+
+impl ElementType {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
+}
+
+/// Plain-old-data element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+    fn write_le(&self, out: &mut Vec<u8>);
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn from_le(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("element width"))
+            }
+            fn write_le(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(i32, ElementType::S32);
+native!(u32, ElementType::U32);
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn from_le(bytes: &[u8]) -> Self {
+        bytes[0]
+    }
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.push(*self);
+    }
+}
+
+/// Array geometry of a literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<usize>,
+}
+
+impl ArrayShape {
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+}
+
+/// A host tensor: dtype + dims + row-major little-endian bytes.
+#[derive(Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != elems * ty.byte_size() {
+            return Err(Error::Msg(format!(
+                "literal: {} bytes for {elems} x {ty:?}",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut data = Vec::with_capacity(T::TY.byte_size());
+        v.write_le(&mut data);
+        Literal { ty: T::TY, dims: Vec::new(), data }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::Msg(format!("to_vec: literal is {:?}", self.ty)));
+        }
+        let w = self.ty.byte_size();
+        Ok(self.data.chunks_exact(w).map(T::from_le).collect())
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, out: &mut [T]) -> Result<()> {
+        if self.ty != T::TY {
+            return Err(Error::Msg(format!("copy_raw_to: literal is {:?}", self.ty)));
+        }
+        if out.len() != self.element_count() {
+            return Err(Error::Msg(format!(
+                "copy_raw_to: {} elements into buffer of {}",
+                self.element_count(),
+                out.len()
+            )));
+        }
+        let w = self.ty.byte_size();
+        for (o, chunk) in out.iter_mut().zip(self.data.chunks_exact(w)) {
+            *o = T::from_le(chunk);
+        }
+        Ok(())
+    }
+
+    /// Tuple outputs only exist on the PJRT side; the stub never builds one.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::Unimplemented("Literal::decompose_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unimplemented("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Entry point of the PJRT path; the stub fails here, so everything
+    /// downstream (`compile`, `execute_b`, ...) is unreachable in practice.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unimplemented("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unimplemented("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unimplemented("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unimplemented("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[1f32, 2.0, 3.0, 4.0]
+                .iter()
+                .flat_map(|x| x.to_le_bytes())
+                .collect::<Vec<u8>>(),
+        )
+        .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_point_is_gated() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
