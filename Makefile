@@ -2,7 +2,7 @@
 # toolchain (native backend); `artifacts` is only for the pjrt backend and
 # requires the python/ layer (jax).
 
-.PHONY: artifacts test test-pjrt bench clippy clean
+.PHONY: artifacts test test-pjrt bench bench-json clippy clean
 
 # Lower the JAX/Pallas programs to HLO text + manifest.json (pjrt backend).
 artifacts:
@@ -17,6 +17,13 @@ test-pjrt:
 
 bench:
 	cargo bench
+
+# Emit machine-readable perf records (BENCH_<name>.json at the repo root:
+# frames/sec, p50/p95 batch latency, config) so the perf trajectory across
+# PRs is recorded.  SF_BENCH_FRAMES scales the per-cell budget.
+bench-json:
+	cargo run --release --bin repro -- bench throughput --frames $(or $(SF_BENCH_FRAMES),20000)
+	cargo run --release --bin repro -- bench fifo --frames 50000
 
 clippy:
 	cargo clippy --all-targets -- -D warnings \

@@ -12,26 +12,29 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::ipc::{Fifo, RecvError};
+use crate::json::Json;
 
-use super::{parse_bench_args, print_table, write_csv};
+use super::{parse_bench_args, print_table, write_bench_json, write_csv};
 
+/// Default messages per producer; `--frames N` overrides (the generic
+/// per-cell budget knob, reused here so CI smoke runs stay short).
 const MSGS_PER_PRODUCER: usize = 100_000;
 
-fn bench_fifo(producers: usize, batched: bool) -> f64 {
+fn bench_fifo(producers: usize, batched: bool, msgs: usize) -> f64 {
     let q: Fifo<u64> = Fifo::new(4096);
     let start = Instant::now();
     let mut handles = Vec::new();
     for p in 0..producers {
         let q = q.clone();
         handles.push(thread::spawn(move || {
-            for i in 0..MSGS_PER_PRODUCER {
-                while q.try_push((p * MSGS_PER_PRODUCER + i) as u64).is_err() {
+            for i in 0..msgs {
+                while q.try_push((p * msgs + i) as u64).is_err() {
                     std::thread::yield_now();
                 }
             }
         }));
     }
-    let total = producers * MSGS_PER_PRODUCER;
+    let total = producers * msgs;
     let consumer = thread::spawn(move || {
         let mut got = 0usize;
         let mut buf = Vec::with_capacity(1024);
@@ -59,20 +62,20 @@ fn bench_fifo(producers: usize, batched: bool) -> f64 {
     total as f64 / start.elapsed().as_secs_f64()
 }
 
-fn bench_mpsc(producers: usize) -> f64 {
+fn bench_mpsc(producers: usize, msgs: usize) -> f64 {
     let (tx, rx) = mpsc::sync_channel::<u64>(4096);
     let start = Instant::now();
     let mut handles = Vec::new();
     for p in 0..producers {
         let tx = tx.clone();
         handles.push(thread::spawn(move || {
-            for i in 0..MSGS_PER_PRODUCER {
-                tx.send((p * MSGS_PER_PRODUCER + i) as u64).unwrap();
+            for i in 0..msgs {
+                tx.send((p * msgs + i) as u64).unwrap();
             }
         }));
     }
     drop(tx);
-    let total = producers * MSGS_PER_PRODUCER;
+    let total = producers * msgs;
     let consumer = thread::spawn(move || {
         let mut got = 0usize;
         while got < total {
@@ -90,13 +93,15 @@ fn bench_mpsc(producers: usize) -> f64 {
 }
 
 pub fn run_cli(args: &[String]) -> Result<()> {
-    let (_, _extra) = parse_bench_args(crate::config::Config::default(), args)?;
+    let (_, extra) = parse_bench_args(crate::config::Config::default(), args)?;
+    let msgs = extra.frames.map(|f| f as usize).unwrap_or(MSGS_PER_PRODUCER);
     println!("== Appendix B.1: FIFO queue throughput (msgs/s), many producers -> 1 consumer ==");
     let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
     for producers in [1usize, 2, 4, 8] {
-        let f_batched = bench_fifo(producers, true);
-        let f_single = bench_fifo(producers, false);
-        let m = bench_mpsc(producers);
+        let f_batched = bench_fifo(producers, true, msgs);
+        let f_single = bench_fifo(producers, false, msgs);
+        let m = bench_mpsc(producers, msgs);
         eprintln!(
             "  producers={producers}: fifo(batched)={f_batched:.0} fifo={f_single:.0} mpsc={m:.0}"
         );
@@ -107,6 +112,12 @@ pub fn run_cli(args: &[String]) -> Result<()> {
             format!("{m:.0}"),
             format!("{:.1}x", f_batched / m),
         ]);
+        json_rows.push(Json::obj(vec![
+            ("producers", Json::num(producers as f64)),
+            ("fifo_batched_msgs_per_s", Json::num(f_batched)),
+            ("fifo_msgs_per_s", Json::num(f_single)),
+            ("std_mpsc_msgs_per_s", Json::num(m)),
+        ]));
     }
     let header = [
         "producers",
@@ -117,5 +128,17 @@ pub fn run_cli(args: &[String]) -> Result<()> {
     ];
     print_table(&header, &rows);
     write_csv("bench_results/appB1_fifo.csv", &header, &rows)?;
+    write_bench_json(
+        "fifo",
+        Json::obj(vec![
+            ("bench", Json::str("fifo")),
+            ("unix_time", Json::num(crate::util::unix_time_s())),
+            (
+                "config",
+                Json::obj(vec![("msgs_per_producer", Json::num(msgs as f64))]),
+            ),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    )?;
     Ok(())
 }

@@ -55,6 +55,30 @@ pub struct BenchArgs {
     pub out: Option<String>,
 }
 
+/// Write `BENCH_<name>.json` at the repo root (the process cwd): the
+/// machine-readable perf record for this exhibit — frames/sec, batch
+/// latency percentiles, and the config that produced them — so the
+/// perf trajectory across PRs is recorded next to the code.  CI's bench
+/// smoke job uploads these as artifacts.
+pub fn write_bench_json(name: &str, payload: crate::json::Json) -> Result<()> {
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, payload.to_string() + "\n")?;
+    println!("  -> {path}");
+    Ok(())
+}
+
+/// p-th percentile (0..=100, nearest-rank on the sorted copy) of a
+/// sample set; 0.0 for an empty set.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
 /// Write a results CSV row-set and echo the path.
 pub fn write_csv(path: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
     let mut w = crate::stats::CsvWriter::create(path, header)?;

@@ -10,8 +10,9 @@ use anyhow::Result;
 
 use crate::config::{Config, Method};
 use crate::coordinator::Trainer;
+use crate::json::Json;
 
-use super::{parse_bench_args, print_table, write_csv, BenchArgs};
+use super::{parse_bench_args, percentile, print_table, write_bench_json, write_csv, BenchArgs};
 
 /// Envs-sampled sweep, scaled from the paper's 20..3000 to this testbed.
 const ENV_SWEEP: [usize; 4] = [4, 8, 16, 32];
@@ -38,7 +39,53 @@ fn measure(cfg: &Config) -> Result<f64> {
     Ok(res.fps)
 }
 
+/// Batched policy inference microbench: run the `policy` program on a
+/// synthetic `policy_batch` for `iters` timed iterations (after warmup)
+/// and report (frames/s, p50 batch latency ms, p95 batch latency ms,
+/// batch size).  This isolates the native backend's inference hot path —
+/// the exact code the policy workers run — from simulation and IPC.
+pub fn policy_inference_microbench(spec: &str, iters: usize) -> Result<(f64, f64, f64, usize)> {
+    use crate::runtime::{lit_f32, lit_u8, ModelPrograms, Runtime};
+    let rt = Runtime::cpu()?;
+    let progs = ModelPrograms::load(&rt, "artifacts", spec)?;
+    let man = &progs.manifest;
+    let b = man.policy_batch;
+    let obs_len = man.obs_len();
+    let mut rng = crate::util::Rng::new(0xbe9c);
+    let obs: Vec<u8> = (0..b * obs_len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+    let (hh, ww, cc) = (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
+    let obs_lit = lit_u8(&[b, hh, ww, cc], &obs)?;
+    let h_lit = lit_f32(&[b, man.hidden], &vec![0.0f32; b * man.hidden])?;
+    let params = progs.init_params(7)?;
+    let param_bufs = progs.policy.upload(&params.iter().collect::<Vec<_>>())?;
+    for _ in 0..3 {
+        progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])?;
+    }
+    let mut lat_ms = Vec::with_capacity(iters);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let s = std::time::Instant::now();
+        progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])?;
+        lat_ms.push(s.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let fps = (iters * b) as f64 / wall.max(1e-9);
+    Ok((fps, percentile(&lat_ms, 50.0), percentile(&lat_ms, 95.0), b))
+}
+
+/// Native-backend compute thread count, for the bench record.
+// cfg-paired returns, one arm per feature combination (see runtime/mod.rs).
+#[allow(clippy::needless_return)]
+fn native_threads() -> usize {
+    #[cfg(feature = "native")]
+    return crate::runtime::native::pool::default_threads();
+    #[cfg(not(feature = "native"))]
+    return 0;
+}
+
 /// Fig 3 / Table A.2: FPS vs number of envs, per method, per suite.
+/// Also runs the policy-inference microbench per suite and writes the
+/// whole record to `BENCH_throughput.json`.
 pub fn run_cli(args: &[String]) -> Result<()> {
     let (base, extra) = parse_bench_args(Config::default(), args)?;
     let frames = extra.frames.unwrap_or(if extra.full { 400_000 } else { 60_000 });
@@ -46,6 +93,7 @@ pub fn run_cli(args: &[String]) -> Result<()> {
     println!("   ({} frames per cell, 1-core container)", frames);
 
     let mut rows = Vec::new();
+    let mut cells_json = Vec::new();
     for (suite, spec, scenario) in SUITES {
         for method in METHODS {
             let mut cells = vec![suite.to_string(), method.name().to_string()];
@@ -61,6 +109,12 @@ pub fn run_cli(args: &[String]) -> Result<()> {
                     "  [{suite}/{}] envs={n_envs} fps={fps:.0}",
                     method.name()
                 );
+                cells_json.push(Json::obj(vec![
+                    ("suite", Json::str(suite)),
+                    ("method", Json::str(method.name())),
+                    ("envs", Json::num(n_envs as f64)),
+                    ("fps", Json::num(fps)),
+                ]));
             }
             rows.push(cells);
         }
@@ -72,10 +126,43 @@ pub fn run_cli(args: &[String]) -> Result<()> {
         .collect();
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     print_table(&header_refs, &rows);
-    write_csv(
-        &format!("bench_results/fig3_throughput.csv"),
-        &header_refs,
-        &rows,
+    write_csv("bench_results/fig3_throughput.csv", &header_refs, &rows)?;
+
+    // Policy-inference microbench (the batch-native kernel hot path).
+    println!("== policy inference (batched, synthetic obs) ==");
+    let iters = (frames / 1_000).clamp(30, 500) as usize;
+    let mut infer_json = Vec::new();
+    for (_, spec, _) in SUITES {
+        let (fps, p50, p95, b) = policy_inference_microbench(spec, iters)?;
+        println!(
+            "  [{spec}] batch={b} fps={fps:.0} p50={p50:.3}ms p95={p95:.3}ms"
+        );
+        infer_json.push(Json::obj(vec![
+            ("spec", Json::str(spec)),
+            ("batch", Json::num(b as f64)),
+            ("fps", Json::num(fps)),
+            ("p50_ms", Json::num(p50)),
+            ("p95_ms", Json::num(p95)),
+        ]));
+    }
+
+    write_bench_json(
+        "throughput",
+        Json::obj(vec![
+            ("bench", Json::str("throughput")),
+            ("unix_time", Json::num(crate::util::unix_time_s())),
+            (
+                "config",
+                Json::obj(vec![
+                    ("frames_per_cell", Json::num(frames as f64)),
+                    ("num_workers", Json::num(2.0)),
+                    ("native_threads", Json::num(native_threads() as f64)),
+                    ("infer_iters", Json::num(iters as f64)),
+                ]),
+            ),
+            ("fig3", Json::Arr(cells_json)),
+            ("policy_inference", Json::Arr(infer_json)),
+        ]),
     )?;
     Ok(())
 }

@@ -74,13 +74,22 @@ pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWo
             }
         }
         // Small linger lets more requests join the batch — bigger batches
-        // amortise the fixed PJRT dispatch cost (tunable; see §Perf).
+        // amortise the fixed dispatch cost (tunable; see §Perf).  The wait
+        // is a deadline-bounded *blocking* pop_many: while no requests are
+        // queued the worker sleeps on the queue condvar instead of burning
+        // a core on a try_pop/yield spin.
         if reqs.len() < b_max && !cfg.batch_linger.is_zero() {
             let deadline = std::time::Instant::now() + cfg.batch_linger;
-            while reqs.len() < b_max && std::time::Instant::now() < deadline {
-                match queue.try_pop() {
-                    Some(r) => reqs.push(r),
-                    None => std::thread::yield_now(),
+            while reqs.len() < b_max {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match queue.pop_many(&mut reqs, b_max - reqs.len(), deadline - now) {
+                    Ok(_) => {}
+                    // Closed: serve what we already collected; the outer
+                    // pop_many observes Closed on the next iteration.
+                    Err(RecvError::Closed) | Err(RecvError::Timeout) => break,
                 }
             }
         }

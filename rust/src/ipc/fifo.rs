@@ -12,7 +12,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Error returned by blocking receives when the queue is closed and empty.
 #[derive(Debug, PartialEq, Eq)]
@@ -182,8 +182,11 @@ impl<T> Fifo<T> {
         self.inner.push_wakeups.load(Ordering::Relaxed)
     }
 
-    /// Blocking pop with timeout.
+    /// Blocking pop with timeout.  `timeout` bounds the *total* wait: the
+    /// deadline is computed once, and each condvar wait uses the remaining
+    /// time, so spurious wakeups cannot extend the wait past it.
     pub fn pop(&self, timeout: Duration) -> Result<T, RecvError> {
+        let deadline = Instant::now() + timeout;
         let mut st = self.inner.state.lock().unwrap();
         loop {
             if let Some(item) = st.ring.pop_front() {
@@ -194,19 +197,16 @@ impl<T> Fifo<T> {
             if self.is_closed() {
                 return Err(RecvError::Closed);
             }
-            let (guard, res) = self
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, _res) = self
                 .inner
                 .not_empty
-                .wait_timeout(st, timeout)
+                .wait_timeout(st, deadline - now)
                 .unwrap();
             st = guard;
-            if res.timed_out() && st.ring.is_empty() {
-                return if self.is_closed() {
-                    Err(RecvError::Closed)
-                } else {
-                    Err(RecvError::Timeout)
-                };
-            }
         }
     }
 
@@ -223,13 +223,16 @@ impl<T> Fifo<T> {
 
     /// Drain up to `max` items into `out` under a single lock — the batched
     /// consume that makes the many-producers/one-consumer pattern cheap.
-    /// Blocks (up to `timeout`) until at least one item is available.
+    /// Blocks until at least one item is available.  `timeout` bounds the
+    /// *total* wait (deadline-based, like [`Fifo::pop`]): the policy
+    /// worker's batch linger relies on this being a hard deadline.
     pub fn pop_many(
         &self,
         out: &mut Vec<T>,
         max: usize,
         timeout: Duration,
     ) -> Result<usize, RecvError> {
+        let deadline = Instant::now() + timeout;
         let mut st = self.inner.state.lock().unwrap();
         loop {
             if !st.ring.is_empty() {
@@ -242,19 +245,16 @@ impl<T> Fifo<T> {
             if self.is_closed() {
                 return Err(RecvError::Closed);
             }
-            let (guard, res) = self
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, _res) = self
                 .inner
                 .not_empty
-                .wait_timeout(st, timeout)
+                .wait_timeout(st, deadline - now)
                 .unwrap();
             st = guard;
-            if res.timed_out() && st.ring.is_empty() {
-                return if self.is_closed() {
-                    Err(RecvError::Closed)
-                } else {
-                    Err(RecvError::Timeout)
-                };
-            }
         }
     }
 }

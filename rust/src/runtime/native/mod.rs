@@ -14,11 +14,20 @@
 //! advantage normalisation, global-norm clip, bias-corrected Adam).  The
 //! backward pass is hand-derived backprop — no finite differences on the
 //! hot path (those appear only in unit tests, as the oracle).
+//!
+//! Compute engine: the hot paths are **batch-native** — conv layers run
+//! as one im2col + cache-blocked GEMM over the whole inference/train
+//! batch ([`gemm`]), sharded across a scoped thread pool ([`pool`],
+//! `SF_NATIVE_THREADS` to pin).  The per-row scalar kernels in [`ops`]
+//! remain the reference implementation; `rust/tests/prop_kernels.rs`
+//! asserts the two paths agree to 1e-5 across every builtin geometry.
 
+pub mod gemm;
 pub mod ops;
+pub mod pool;
 mod train;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -26,6 +35,7 @@ use super::manifest::{Manifest, ParamDef};
 use super::{Backend, Executable, Literal, LoadedModel, Program};
 use crate::util::Rng;
 use ops::ConvGeom;
+use pool::NativePool;
 
 /// Hyperparameter vector layout; mirrors `model.HYPER_NAMES` and is what
 /// PBT mutates without recompilation.
@@ -256,7 +266,8 @@ impl ModelDef {
 }
 
 /// Borrowed views of every parameter tensor, validated against the def.
-pub(crate) struct ParamView<'a> {
+/// Public so the property tests can drive the reference path directly.
+pub struct ParamView<'a> {
     pub conv_w: Vec<&'a [f32]>,
     pub conv_b: Vec<&'a [f32]>,
     pub fc_w: &'a [f32],
@@ -313,7 +324,11 @@ impl<'a> ParamView<'a> {
 /// Per-frame encoder activations (reused across frames to avoid allocs).
 /// `layers[0]` is the normalized input; `layers[i+1]` the post-relu output
 /// of conv layer i; `emb` the post-relu fc output.
-pub(crate) struct FrameActs {
+///
+/// Part of the **scalar reference path** (see [`encode_frame`]): the
+/// production forward runs batched ([`encode_batch`]); this row-level
+/// twin is kept for the equivalence property tests.
+pub struct FrameActs {
     pub layers: Vec<Vec<f32>>,
     pub emb: Vec<f32>,
 }
@@ -329,8 +344,9 @@ impl FrameActs {
     }
 }
 
-/// Conv encoder + fc projection for one u8 frame (`model.encode`).
-pub(crate) fn encode_frame(def: &ModelDef, pv: &ParamView, obs_u8: &[u8], acts: &mut FrameActs) {
+/// Conv encoder + fc projection for one u8 frame (`model.encode`) —
+/// scalar reference twin of [`encode_batch`].
+pub fn encode_frame(def: &ModelDef, pv: &ParamView, obs_u8: &[u8], acts: &mut FrameActs) {
     debug_assert_eq!(obs_u8.len(), def.obs_len());
     for (dst, &src) in acts.layers[0].iter_mut().zip(obs_u8) {
         *dst = src as f32 * (1.0 / 255.0);
@@ -346,7 +362,7 @@ pub(crate) fn encode_frame(def: &ModelDef, pv: &ParamView, obs_u8: &[u8], acts: 
 }
 
 /// Scratch gradient buffers for [`backward_frame`].
-pub(crate) struct FrameGradScratch {
+pub struct FrameGradScratch {
     pub d_layers: Vec<Vec<f32>>,
 }
 
@@ -364,7 +380,8 @@ impl FrameGradScratch {
 /// Backprop one frame's encoder: given `d_emb` (gradient wrt the post-relu
 /// fc output, consumed/overwritten), accumulate conv/fc parameter grads
 /// into `grads`.  The gradient wrt the input pixels is discarded.
-pub(crate) fn backward_frame(
+/// Scalar reference twin of [`backward_batch`].
+pub fn backward_frame(
     def: &ModelDef,
     pv: &ParamView,
     acts: &FrameActs,
@@ -418,7 +435,7 @@ pub(crate) fn backward_frame(
 }
 
 /// Dense per-parameter gradient buffers in `param_defs` order.
-pub(crate) struct Grads(pub Vec<Vec<f32>>);
+pub struct Grads(pub Vec<Vec<f32>>);
 
 impl Grads {
     pub fn new(def: &ModelDef) -> Grads {
@@ -454,6 +471,187 @@ impl Grads {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Batch-native encoder (the production path)
+// ---------------------------------------------------------------------------
+
+/// Reusable buffers for [`encode_batch`]: the normalized input, every
+/// conv layer's post-relu activations, the post-relu fc embedding, and
+/// the shared im2col scratch.  All sized lazily, so one scratch serves
+/// any batch size without reallocation in steady state.
+#[derive(Default)]
+pub struct EncScratch {
+    /// `[nb, H*W*C]` normalized pixels (conv layer 0 input).
+    pub xs: Vec<f32>,
+    /// `acts[i]`: `[nb, out_len(i)]` post-relu output of conv layer i.
+    pub acts: Vec<Vec<f32>>,
+    /// `[nb, fc_dim]` post-relu fc output.
+    pub emb: Vec<f32>,
+    /// im2col packing buffer, shared across layers.
+    pub cols: Vec<f32>,
+}
+
+/// Conv encoder + fc projection for `nb` u8 frames at once: each conv
+/// layer is one im2col + GEMM over the whole batch, the fc projection a
+/// single GEMM.  Equivalent to [`encode_frame`] per row (property-tested).
+pub fn encode_batch(
+    def: &ModelDef,
+    pv: &ParamView,
+    pool: &NativePool,
+    obs_u8: &[u8],
+    nb: usize,
+    s: &mut EncScratch,
+) {
+    let obs_len = def.obs_len();
+    debug_assert_eq!(obs_u8.len(), nb * obs_len);
+    let EncScratch { xs, acts, emb, cols } = s;
+    xs.resize(nb * obs_len, 0.0);
+    for (dst, &src) in xs.iter_mut().zip(obs_u8) {
+        *dst = src as f32 * (1.0 / 255.0);
+    }
+    acts.resize(def.geoms.len(), Vec::new());
+    for (i, g) in def.geoms.iter().enumerate() {
+        let (prev, rest) = acts.split_at_mut(i);
+        let inp: &[f32] = if i == 0 { xs.as_slice() } else { &prev[i - 1] };
+        let out = &mut rest[0];
+        out.resize(nb * g.out_len(), 0.0);
+        gemm::conv_forward_batch(pool, g, nb, inp, pv.conv_w[i], pv.conv_b[i], cols, out);
+        gemm::relu_batch(pool, out);
+    }
+    emb.resize(nb * def.fc_dim, 0.0);
+    let last = &acts[def.geoms.len() - 1];
+    gemm::gemm_nn(pool, nb, def.flat, def.fc_dim, last, pv.fc_w, Some(pv.fc_b), emb, false);
+    gemm::relu_batch(pool, emb);
+}
+
+/// Zero the gradient wherever the forward activation was clamped by relu.
+pub(crate) fn relu_mask(d: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(d.len(), a.len());
+    for (dv, &av) in d.iter_mut().zip(a) {
+        if av <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+/// Per-call pre-transposed weights: input-gradient GEMMs (`dX = dY @ W^T`)
+/// run through the vector-friendly NN path against these.  `conv_wt[0]`
+/// stays empty — the pixel gradient is never needed.
+pub struct WeightsT {
+    pub conv_wt: Vec<Vec<f32>>,
+    pub fc_wt: Vec<f32>,
+}
+
+impl WeightsT {
+    pub fn build(def: &ModelDef, pv: &ParamView) -> WeightsT {
+        let mut conv_wt = vec![Vec::new(); def.geoms.len()];
+        for (i, g) in def.geoms.iter().enumerate().skip(1) {
+            let krow = gemm::im2col_row_len(g);
+            conv_wt[i] = vec![0.0f32; krow * g.c_out];
+            gemm::transpose(pv.conv_w[i], krow, g.c_out, &mut conv_wt[i]);
+        }
+        let mut fc_wt = vec![0.0f32; def.flat * def.fc_dim];
+        gemm::transpose(pv.fc_w, def.flat, def.fc_dim, &mut fc_wt);
+        WeightsT { conv_wt, fc_wt }
+    }
+}
+
+/// Gradient-side buffers for [`backward_batch`].
+#[derive(Default)]
+pub struct EncBwdScratch {
+    d_cols: Vec<f32>,
+    d_a: Vec<f32>,
+    d_b: Vec<f32>,
+}
+
+/// Batched encoder backward: given `d_emb` (`[nb, fc]`, gradient wrt the
+/// post-relu fc output; consumed/overwritten) and the *recomputed*
+/// forward activations in `enc`, accumulate conv/fc parameter gradients
+/// into `grads`.  dW and dX are GEMMs against the packed im2col buffer
+/// (rebuilt per layer from the stored activations); the pixel gradient
+/// is discarded.  Equivalent to [`backward_frame`] per row.
+pub fn backward_batch(
+    def: &ModelDef,
+    pv: &ParamView,
+    wt: &WeightsT,
+    pool: &NativePool,
+    nb: usize,
+    enc: &mut EncScratch,
+    d_emb: &mut [f32],
+    grads: &mut Grads,
+    bwd: &mut EncBwdScratch,
+) {
+    debug_assert_eq!(d_emb.len(), nb * def.fc_dim);
+    relu_mask(d_emb, &enc.emb);
+    let nc = def.geoms.len();
+    // fc: dW += flat^T d_emb ; db += colsum ; d_flat = d_emb @ fc_w^T.
+    bwd.d_a.resize(nb * def.flat, 0.0);
+    {
+        let last = &enc.acts[nc - 1];
+        let (d_fc_w, d_fc_b) = grads.pair_mut(def.idx_fc_w(), def.idx_fc_b());
+        gemm::gemm_tn(pool, nb, def.flat, def.fc_dim, last, d_emb, d_fc_w);
+        gemm::add_colsum(nb, def.fc_dim, d_emb, d_fc_b);
+        gemm::gemm_nn(pool, nb, def.fc_dim, def.flat, d_emb, &wt.fc_wt, None, &mut bwd.d_a, false);
+    }
+    // Conv stack, last to first.  `d_a` holds the gradient wrt the
+    // current layer's post-relu output; `d_b` receives the input grad.
+    for i in (0..nc).rev() {
+        let g = &def.geoms[i];
+        relu_mask(&mut bwd.d_a[..nb * g.out_len()], &enc.acts[i]);
+        let inp: &[f32] = if i == 0 { &enc.xs } else { &enc.acts[i - 1] };
+        let want_d_in = i > 0;
+        if want_d_in {
+            bwd.d_b.resize(nb * g.in_len(), 0.0);
+        }
+        let (d_w, d_bias) = grads.pair_mut(def.idx_conv_w(i), def.idx_conv_b(i));
+        gemm::conv_backward_batch(
+            pool,
+            g,
+            nb,
+            inp,
+            if want_d_in { Some(&wt.conv_wt[i]) } else { None },
+            &bwd.d_a[..nb * g.out_len()],
+            &mut enc.cols,
+            &mut bwd.d_cols,
+            d_w,
+            d_bias,
+            if want_d_in { Some(&mut bwd.d_b[..nb * g.in_len()]) } else { None },
+        );
+        std::mem::swap(&mut bwd.d_a, &mut bwd.d_b);
+    }
+}
+
+/// Pack the `n_heads` policy heads and the value head into one
+/// `(hidden, total_actions + 1)` weight matrix + bias so the output
+/// layer of a batch is a single GEMM.  Column order: head 0 logits |
+/// head 1 | ... | value (last column).
+pub(crate) fn pack_heads_value(
+    def: &ModelDef,
+    pv: &ParamView,
+    w_all: &mut Vec<f32>,
+    b_all: &mut Vec<f32>,
+) {
+    let ta1 = def.total_actions() + 1;
+    let hidden = def.hidden;
+    w_all.resize(hidden * ta1, 0.0);
+    b_all.resize(ta1, 0.0);
+    for r in 0..hidden {
+        let row = &mut w_all[r * ta1..][..ta1];
+        let mut off = 0usize;
+        for (hd, &hn) in def.heads.iter().enumerate() {
+            row[off..off + hn].copy_from_slice(&pv.head_w[hd][r * hn..(r + 1) * hn]);
+            off += hn;
+        }
+        row[off] = pv.value_w[r];
+    }
+    let mut off = 0usize;
+    for (hd, &hn) in def.heads.iter().enumerate() {
+        b_all[off..off + hn].copy_from_slice(pv.head_b[hd]);
+        off += hn;
+    }
+    b_all[off] = pv.value_b[0];
 }
 
 /// The pure-Rust backend.
@@ -503,11 +701,11 @@ impl Backend for NativeBackend {
             ),
             policy: Executable::new(
                 format!("native:{spec}/policy"),
-                Box::new(PolicyProgram { def: def.clone() }),
+                Box::new(PolicyProgram::new(def.clone())),
             ),
             train: Executable::new(
                 format!("native:{spec}/train"),
-                Box::new(train::TrainProgram { def }),
+                Box::new(train::TrainProgram::new(def)),
             ),
         })
     }
@@ -545,10 +743,35 @@ impl Program for InitProgram {
     }
 }
 
+/// Reusable scratch for one policy-program invocation.  Instances are
+/// checked out of [`PolicyProgram::scratch`] so concurrent policy workers
+/// each reuse their own buffers across batches (zero steady-state
+/// allocation in the compute core).
+#[derive(Default)]
+struct PolicyScratch {
+    enc: EncScratch,
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+    w_all: Vec<f32>,
+    b_all: Vec<f32>,
+    out_all: Vec<f32>,
+}
+
 /// `policy`: params + u8 obs (B,H,W,C) + f32 h (B,hidden) ->
 /// (logits (B,A), value (B), h' (B,hidden)).  Mirrors `model.policy_step`.
+///
+/// Batch-native: the conv encoder runs as im2col+GEMM over the whole
+/// batch, the GRU gate projections and the heads+value output layer as
+/// single GEMMs (heads and value are packed into one weight matrix).
 struct PolicyProgram {
     def: Arc<ModelDef>,
+    scratch: Mutex<Vec<PolicyScratch>>,
+}
+
+impl PolicyProgram {
+    fn new(def: Arc<ModelDef>) -> PolicyProgram {
+        PolicyProgram { def, scratch: Mutex::new(Vec::new()) }
+    }
 }
 
 impl Program for PolicyProgram {
@@ -580,32 +803,38 @@ impl Program for PolicyProgram {
                 h_in.len()
             ));
         }
-        let total_actions = def.total_actions();
-        let mut logits = vec![0.0f32; b * total_actions];
-        let mut values = vec![0.0f32; b];
+        let pool = NativePool::global();
+        let mut s = self.scratch.lock().unwrap().pop().unwrap_or_default();
+
+        // Encoder: conv stack + fc, whole batch at once.
+        encode_batch(def, &pv, pool, obs, b, &mut s.enc);
+
+        // GRU step for all rows (two gate GEMMs + elementwise gates).
         let mut h_out = vec![0.0f32; b * hidden];
-        let mut acts = FrameActs::new(def);
-        let mut scratch = vec![0.0f32; 6 * hidden];
-        let mut value1 = [0.0f32; 1];
+        gemm::gru_forward_batch(
+            pool, b, def.fc_dim, hidden, &s.enc.emb, h_in, pv.gru_wx, pv.gru_wh,
+            pv.gru_b, &mut h_out, &mut s.gx, &mut s.gh, None,
+        );
+
+        // Heads + value as one packed GEMM.
+        let ta = def.total_actions();
+        let ta1 = ta + 1;
+        pack_heads_value(def, &pv, &mut s.w_all, &mut s.b_all);
+        s.out_all.resize(b * ta1, 0.0);
+        gemm::gemm_nn(
+            pool, b, hidden, ta1, &h_out, &s.w_all, Some(&s.b_all), &mut s.out_all,
+            false,
+        );
+        let mut logits = vec![0.0f32; b * ta];
+        let mut values = vec![0.0f32; b];
         for i in 0..b {
-            encode_frame(def, &pv, &obs[i * obs_len..(i + 1) * obs_len], &mut acts);
-            let h_row = &h_in[i * hidden..(i + 1) * hidden];
-            let h_new = &mut h_out[i * hidden..(i + 1) * hidden];
-            ops::gru_forward_row(
-                &acts.emb, h_row, pv.gru_wx, pv.gru_wh, pv.gru_b, h_new, &mut scratch,
-                None,
-            );
-            let row = &mut logits[i * total_actions..(i + 1) * total_actions];
-            let mut off = 0usize;
-            for (hd, &hn) in def.heads.iter().enumerate() {
-                ops::linear_forward(h_new, pv.head_w[hd], pv.head_b[hd], &mut row[off..off + hn]);
-                off += hn;
-            }
-            ops::linear_forward(h_new, pv.value_w, pv.value_b, &mut value1);
-            values[i] = value1[0];
+            logits[i * ta..(i + 1) * ta]
+                .copy_from_slice(&s.out_all[i * ta1..i * ta1 + ta]);
+            values[i] = s.out_all[i * ta1 + ta];
         }
+        self.scratch.lock().unwrap().push(s);
         Ok(vec![
-            Literal::f32(&[b, total_actions], logits)?,
+            Literal::f32(&[b, ta], logits)?,
             Literal::f32(&[b], values)?,
             Literal::f32(&[b, hidden], h_out)?,
         ])
@@ -664,7 +893,7 @@ mod tests {
         let b = 2;
         let obs = lit_u8(&[b, 24, 32, 3], &vec![77u8; b * def.obs_len()]).unwrap();
         let h = lit_f32(&[b, def.hidden], &vec![0.0; b * def.hidden]).unwrap();
-        let pol = PolicyProgram { def: def.clone() };
+        let pol = PolicyProgram::new(def.clone());
         let mut inputs: Vec<&Literal> = params.iter().collect();
         inputs.push(&obs);
         inputs.push(&h);

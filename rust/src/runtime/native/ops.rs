@@ -3,6 +3,14 @@
 //! analytic backward.  Loop nests keep the innermost dimension contiguous
 //! (output channels / output features) so LLVM can autovectorize; there is
 //! deliberately no unsafe and no architecture-specific code here.
+//!
+//! Since the batch-native rewrite these row-level kernels are the
+//! **reference implementation**: the hot paths (policy inference and the
+//! train step) run the im2col+GEMM kernels in [`super::gemm`], and the
+//! property tests in `rust/tests/prop_kernels.rs` assert the batched
+//! results match these within 1e-5.  Keep the accumulation order here in
+//! sync with `gemm.rs` (ascending input index), and keep these branch-free
+//! in the inner loop — a data-dependent `continue` defeats vectorization.
 
 /// Geometry of one conv layer, fully resolved at model-build time.
 #[derive(Clone, Copy, Debug)]
@@ -79,9 +87,6 @@ pub fn conv_forward(g: &ConvGeom, inp: &[f32], wgt: &[f32], bias: &[f32], out: &
                     let in_px = &inp[(y as usize * g.w_in + x as usize) * ci..][..ci];
                     let w_base = (ky * k + kx) * ci * co;
                     for (c, &v) in in_px.iter().enumerate() {
-                        if v == 0.0 {
-                            continue; // post-relu inputs are ~half zeros
-                        }
                         let w_row = &wgt[w_base + c * co..][..co];
                         for (o, &wv) in out_row.iter_mut().zip(w_row) {
                             *o += v * wv;
@@ -156,9 +161,6 @@ pub fn linear_forward(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(out.len(), n_out);
     out.copy_from_slice(b);
     for (i, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
         let w_row = &w[i * n_out..][..n_out];
         for (o, &wv) in out.iter_mut().zip(w_row) {
             *o += xv * wv;

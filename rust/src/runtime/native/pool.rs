@@ -1,0 +1,354 @@
+//! A small dependency-free scoped thread pool for the native backend's
+//! batch kernels.
+//!
+//! Design constraints (see ISSUE 3 / the "Batch-native policy inference"
+//! ROADMAP item):
+//!
+//! * **std only, persistent workers** — workers are spawned once (lazily,
+//!   on first use of [`NativePool::global`]) and parked on a condvar, so
+//!   per-batch dispatch cost is one lock + one notify, not a thread spawn.
+//! * **Scoped** — [`NativePool::run`] accepts closures that borrow stack
+//!   data (GEMM row-panels are `split_at_mut` slices of the caller's
+//!   output buffer).  Soundness: `run` does not return until every
+//!   submitted job has finished executing, enforced by a per-scope
+//!   completion latch; the lifetime of the closures is erased only for
+//!   the duration of that call.
+//! * **Nested-safe** — the calling thread participates: it drains the
+//!   shared queue before blocking on its latch, so a job that itself
+//!   calls `run` (nested parallelism) always makes progress even when
+//!   every worker is busy.  Zero-job scopes return immediately.
+//! * **Deterministic** — the pool only distributes *disjoint* work items;
+//!   all kernels in [`super::gemm`] shard over output rows so every
+//!   output element is produced by exactly one task with a fixed
+//!   reduction order.  Results are bit-identical for any thread count
+//!   (covered by `rust/tests/prop_kernels.rs`).
+//!
+//! Thread count: `SF_NATIVE_THREADS` overrides; the default is
+//! `available_parallelism` capped at [`MAX_DEFAULT_THREADS`].  A value of
+//! 1 (or a 1-core machine) makes every `run` execute inline on the
+//! caller — no workers, no locks on the hot path.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Default cap on the implicit pool size: the batch kernels saturate
+/// memory bandwidth well before this many cores help.
+pub const MAX_DEFAULT_THREADS: usize = 16;
+
+/// A borrowed job: runs once, may capture references into the caller's
+/// stack frame (valid for the duration of the `run` call that submitted
+/// it).
+pub type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+struct Task {
+    job: Box<dyn FnOnce() + Send + 'static>,
+    scope: Arc<ScopeState>,
+}
+
+struct ScopeState {
+    state: Mutex<ScopeProgress>,
+    done: Condvar,
+}
+
+struct ScopeProgress {
+    pending: usize,
+    panicked: bool,
+}
+
+impl ScopeState {
+    fn new(pending: usize) -> ScopeState {
+        ScopeState {
+            state: Mutex::new(ScopeProgress { pending, panicked: false }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.pending -= 1;
+        st.panicked |= panicked;
+        if st.pending == 0 {
+            drop(st);
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job of this scope has completed; returns whether
+    /// any of them panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.panicked
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The scoped thread pool.  One global instance serves the whole process
+/// ([`NativePool::global`]); tests construct private instances to pin the
+/// thread count.
+pub struct NativePool {
+    shared: Arc<Shared>,
+    /// Total compute threads including the caller (workers = threads - 1).
+    threads: usize,
+}
+
+impl NativePool {
+    /// A pool with `threads` total compute threads (the caller counts as
+    /// one; `threads - 1` workers are spawned).  `threads == 0` is
+    /// treated as 1.
+    pub fn new(threads: usize) -> NativePool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        for _ in 1..threads {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("sf-native-pool".into())
+                .spawn(move || worker_loop(sh))
+                .expect("spawn native pool worker");
+        }
+        NativePool { shared, threads }
+    }
+
+    /// The process-wide pool, created on first use.  Size:
+    /// `SF_NATIVE_THREADS` if set, else `available_parallelism` capped at
+    /// [`MAX_DEFAULT_THREADS`].
+    pub fn global() -> &'static NativePool {
+        static POOL: OnceLock<NativePool> = OnceLock::new();
+        POOL.get_or_init(|| NativePool::new(default_threads()))
+    }
+
+    /// Total compute threads (callers of `run` count as one).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every job to completion, using the workers plus the calling
+    /// thread.  Returns only when all jobs have finished (this is what
+    /// makes borrowing caller data sound).  Panics (after all jobs have
+    /// settled) if any job panicked.
+    pub fn run<'scope>(&self, jobs: Vec<Job<'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if self.threads <= 1 || jobs.len() == 1 {
+            let mut panicked = false;
+            for job in jobs {
+                panicked |= catch_unwind(AssertUnwindSafe(job)).is_err();
+            }
+            if panicked {
+                panic!("native pool: a parallel task panicked");
+            }
+            return;
+        }
+        let scope = Arc::new(ScopeState::new(jobs.len()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for job in jobs {
+                // SAFETY: `run` blocks on `scope.wait()` until every job
+                // has executed, so the borrows captured by `job` outlive
+                // its execution; the 'static erasure never escapes this
+                // call.
+                let job: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(job) };
+                q.push_back(Task { job, scope: Arc::clone(&scope) });
+            }
+        }
+        self.shared.work.notify_all();
+        // Help drain the queue (any scope's tasks — executing a sibling
+        // scope's work is harmless and guarantees progress under nesting),
+        // then wait for stragglers running on other threads.  The lock is
+        // released at each `let` statement's end, never held across a job.
+        loop {
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            let Some(t) = task else { break };
+            let panicked = catch_unwind(AssertUnwindSafe(t.job)).is_err();
+            t.scope.complete(panicked);
+        }
+        if scope.wait() {
+            panic!("native pool: a parallel task panicked");
+        }
+    }
+
+    /// Convenience: split `data` into `chunk_len`-sized pieces and run
+    /// `f(chunk_index, chunk)` on each in parallel.  Chunks are disjoint
+    /// `&mut` slices, so `f` may write freely.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        if data.len() <= chunk_len || self.threads <= 1 {
+            for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                f(ci, chunk);
+            }
+            return;
+        }
+        let f = &f;
+        let mut jobs: Vec<Job<'_>> = Vec::with_capacity(data.len() / chunk_len + 1);
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            jobs.push(Box::new(move || f(ci, chunk)));
+        }
+        self.run(jobs);
+    }
+
+    /// Rows-per-task heuristic for sharding `rows` work items: about two
+    /// tasks per thread (load balancing) with a floor of `min_rows` so
+    /// tiny problems stay single-task.  Only affects *partitioning* —
+    /// never the per-row computation — so results are thread-count
+    /// independent.
+    pub fn rows_per_task(&self, rows: usize, min_rows: usize) -> usize {
+        let tasks = self.threads * 2;
+        ((rows + tasks - 1) / tasks).max(min_rows).max(1)
+    }
+}
+
+impl Drop for NativePool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work.notify_all();
+        // Workers exit on their own; handles are detached (the global pool
+        // lives for the process anyway, and test pools just need the
+        // threads to stop waiting).
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        let panicked = catch_unwind(AssertUnwindSafe(task.job)).is_err();
+        task.scope.complete(panicked);
+    }
+}
+
+/// `SF_NATIVE_THREADS` override, else `available_parallelism` capped.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("SF_NATIVE_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_DEFAULT_THREADS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn zero_jobs_and_empty_chunks_return_immediately() {
+        let pool = NativePool::new(3);
+        pool.run(Vec::new());
+        let mut empty: [u32; 0] = [];
+        pool.par_chunks_mut(&mut empty, 4, |_, _| {});
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let pool = NativePool::new(4);
+        let counter = AtomicUsize::new(0);
+        let mut jobs: Vec<Job<'_>> = Vec::new();
+        for _ in 0..100 {
+            jobs.push(Box::new(|| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.run(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn chunks_write_disjoint_slices() {
+        let pool = NativePool::new(3);
+        let mut data = vec![0u32; 1000];
+        pool.par_chunks_mut(&mut data, 7, |ci, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 7 + j) as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // Every outer job spawns an inner scope on the same (small) pool;
+        // caller participation guarantees progress.
+        let pool = Arc::new(NativePool::new(2));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut jobs: Vec<Job<'_>> = Vec::new();
+        for _ in 0..8 {
+            let pool2 = Arc::clone(&pool);
+            let c2 = Arc::clone(&counter);
+            jobs.push(Box::new(move || {
+                let mut inner: Vec<Job<'_>> = Vec::new();
+                for _ in 0..4 {
+                    let c3 = Arc::clone(&c2);
+                    inner.push(Box::new(move || {
+                        c3.fetch_add(1, Ordering::Relaxed);
+                    }));
+                }
+                pool2.run(inner);
+            }));
+        }
+        pool.run(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "a parallel task panicked")]
+    fn job_panic_propagates_without_deadlock() {
+        let pool = NativePool::new(3);
+        let mut jobs: Vec<Job<'_>> = Vec::new();
+        for i in 0..16 {
+            jobs.push(Box::new(move || {
+                if i == 7 {
+                    panic!("boom");
+                }
+            }));
+        }
+        pool.run(jobs);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = NativePool::new(1);
+        let mut sum = 0u64;
+        {
+            let sum_ref = &mut sum;
+            pool.run(vec![Box::new(move || {
+                *sum_ref = 42;
+            }) as Job<'_>]);
+        }
+        assert_eq!(sum, 42);
+    }
+}

@@ -6,9 +6,7 @@
 //!    c_bar = 1 as in Table A.5) with stop-gradient targets,
 //! 3. PPO-clipped policy gradient on normalised V-trace advantages +
 //!    value regression + entropy bonus,
-//! 4. analytic backprop (heads -> GRU BPTT -> fc/conv encoder; the conv
-//!    activations are recomputed per frame — activation checkpointing —
-//!    so memory stays O(one frame) instead of O(B*T frames)),
+//! 4. analytic backprop (heads -> GRU BPTT -> fc/conv encoder),
 //! 5. global-norm gradient clipping and an in-step bias-corrected Adam
 //!    update.
 //!
@@ -17,30 +15,93 @@
 //!          behavior_lp(B,T) | rewards(B,T) | dones(B,T)
 //! Outputs: params'[n] | m'[n] | v'[n] | step' | metrics[8]
 //!
+//! Compute engine (batch-native): the encoder runs as im2col+GEMM over
+//! fixed-size frame chunks ([`ENC_CHUNK`] frames — activation
+//! checkpointing, so the backward pass recomputes each chunk's
+//! activations and the im2col working set stays O(chunk), not O(B*T));
+//! conv dW/dX are GEMMs against the same packed buffer.  The GRU unroll
+//! and BPTT run two gate GEMMs per timestep over all B rows; the heads +
+//! value output layer is a single packed GEMM over all B*T cores, as is
+//! its backward.  Weight transposes (for the `dX = dY @ W^T` GEMMs) are
+//! computed once per call; all scratch is reused across calls via
+//! [`TrainProgram::scratch`].  Gradient accumulation order matches the
+//! old per-row path (ascending sample index), so metrics and descent
+//! behaviour are unchanged.
+//!
 //! The gradient of the bootstrap branch (`last_obs` encoder + final GRU
 //! step) is exactly zero because `v_boot` is stop-gradient in the loss, so
 //! that branch is forward-only here too.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use super::ops;
+use super::gemm::{self, GruBatchTrace};
+use super::pool::NativePool;
 use super::{
-    backward_frame, encode_frame, FrameActs, FrameGradScratch, Grads, ModelDef,
-    ParamView, HYP_B1, HYP_B2, HYP_CLIP, HYP_ENT, HYP_EPS, HYP_GAMMA, HYP_LR,
-    HYP_MAX_GN, HYP_VF,
+    backward_batch, encode_batch, pack_heads_value, EncBwdScratch, EncScratch,
+    Grads, ModelDef, ParamView, WeightsT, HYP_B1, HYP_B2, HYP_CLIP, HYP_ENT,
+    HYP_EPS, HYP_GAMMA, HYP_LR, HYP_MAX_GN, HYP_VF,
 };
 use crate::runtime::{Literal, Program};
 
+/// Frames per encoder chunk (forward and recomputed backward).  A fixed
+/// constant — never derived from the thread count — so results are
+/// bit-identical for any `SF_NATIVE_THREADS`.
+const ENC_CHUNK: usize = 64;
+
 pub(crate) struct TrainProgram {
     pub def: Arc<ModelDef>,
+    scratch: Mutex<Vec<TrainScratch>>,
+}
+
+impl TrainProgram {
+    pub fn new(def: Arc<ModelDef>) -> TrainProgram {
+        TrainProgram { def, scratch: Mutex::new(Vec::new()) }
+    }
 }
 
 impl Program for TrainProgram {
     fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
-        run_train(&self.def, inputs)
+        let mut s = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        let out = run_train(&self.def, inputs, &mut s);
+        self.scratch.lock().unwrap().push(s);
+        out
     }
+}
+
+/// Reusable buffers for one train-step invocation (see module docs).
+#[derive(Default)]
+struct TrainScratch {
+    enc: EncScratch,
+    bwd: EncBwdScratch,
+    /// `[t*bsz + b, fc]` — time-major, so each timestep's GRU input is
+    /// one contiguous GEMM operand.
+    emb: Vec<f32>,
+    emb_last: Vec<f32>,
+    h_seq: Vec<f32>,
+    h_masked: Vec<f32>,
+    h_boot: Vec<f32>,
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+    traces: Vec<GruBatchTrace>,
+    w_all: Vec<f32>,
+    b_all: Vec<f32>,
+    w_all_t: Vec<f32>,
+    out_all: Vec<f32>,
+    d_out_all: Vec<f32>,
+    d_w_all: Vec<f32>,
+    d_b_all: Vec<f32>,
+    d_cores: Vec<f32>,
+    dgx: Vec<f32>,
+    dgh: Vec<f32>,
+    dh_t: Vec<f32>,
+    d_h_prev: Vec<f32>,
+    dh_carry: Vec<f32>,
+    d_emb: Vec<f32>,
+    d_emb_chunk: Vec<f32>,
+    wx_t: Vec<f32>,
+    wh_t: Vec<f32>,
 }
 
 /// Split three consecutive GRU parameter-grad buffers out of `grads`.
@@ -55,7 +116,7 @@ fn gru_grads<'a>(
 }
 
 #[allow(clippy::needless_range_loop)]
-fn run_train(def: &ModelDef, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+fn run_train(def: &ModelDef, inputs: &[&Literal], s: &mut TrainScratch) -> Result<Vec<Literal>> {
     let n = def.n_params();
     if inputs.len() != 3 * n + 9 {
         return Err(anyhow!(
@@ -110,92 +171,83 @@ fn run_train(def: &ModelDef, inputs: &[&Literal]) -> Result<Vec<Literal>> {
     let (gamma, clip) = (hypers[HYP_GAMMA], hypers[HYP_CLIP]);
     let (ent_coef, vf_coef) = (hypers[HYP_ENT], hypers[HYP_VF]);
     let inv_n = 1.0f32 / nbt as f32;
+    let pool = NativePool::global();
 
-    // ---- 1. encode every frame (batch-major, like the obs tensor) --------
+    // ---- 1. encode every frame (chunked im2col+GEMM, scattered into the
+    //         time-major embedding buffer) ---------------------------------
     let fc = def.fc_dim;
-    let mut acts = FrameActs::new(def);
-    let mut emb = vec![0.0f32; nbt * fc]; // [b*T + t]
-    for i in 0..nbt {
-        encode_frame(def, &pv, &obs[i * obs_len..(i + 1) * obs_len], &mut acts);
-        emb[i * fc..(i + 1) * fc].copy_from_slice(&acts.emb);
+    s.emb.resize(nbt * fc, 0.0);
+    let mut f0 = 0usize;
+    while f0 < nbt {
+        let nb = ENC_CHUNK.min(nbt - f0);
+        encode_batch(def, &pv, pool, &obs[f0 * obs_len..(f0 + nb) * obs_len], nb, &mut s.enc);
+        for j in 0..nb {
+            let fi = f0 + j;
+            let (b, t) = (fi / t_len, fi % t_len);
+            s.emb[(t * bsz + b) * fc..(t * bsz + b + 1) * fc]
+                .copy_from_slice(&s.enc.emb[j * fc..(j + 1) * fc]);
+        }
+        f0 += nb;
     }
-    let mut emb_last = vec![0.0f32; bsz * fc];
-    for b in 0..bsz {
-        encode_frame(def, &pv, &last_obs[b * obs_len..(b + 1) * obs_len], &mut acts);
-        emb_last[b * fc..(b + 1) * fc].copy_from_slice(&acts.emb);
-    }
+    encode_batch(def, &pv, pool, last_obs, bsz, &mut s.enc);
+    s.emb_last.resize(bsz * fc, 0.0);
+    s.emb_last.copy_from_slice(&s.enc.emb[..bsz * fc]);
 
-    // ---- 2. GRU unroll with saved per-step traces (time-major) -----------
+    // ---- 2. GRU unroll, one batched step per timestep ---------------------
     // done *before* step t resets the hidden state (dones shifted right).
-    let mut traces: Vec<ops::GruTrace> =
-        (0..t_len * bsz).map(|_| ops::GruTrace::new(hid)).collect();
-    let mut h_seq = vec![0.0f32; t_len * bsz * hid]; // [t*bsz + b]
-    let mut gru_scratch = vec![0.0f32; 6 * hid];
-    let mut h_masked = vec![0.0f32; hid];
+    s.h_seq.resize(t_len * bsz * hid, 0.0);
+    s.h_masked.resize(bsz * hid, 0.0);
+    if s.traces.len() < t_len {
+        s.traces.resize_with(t_len, GruBatchTrace::default);
+    }
     for t in 0..t_len {
         for b in 0..bsz {
             let mask = if t == 0 { 1.0 } else { 1.0 - dones[b * t_len + t - 1] };
-            {
-                let h_prev: &[f32] = if t == 0 {
-                    &h0[b * hid..(b + 1) * hid]
-                } else {
-                    &h_seq[((t - 1) * bsz + b) * hid..((t - 1) * bsz + b + 1) * hid]
-                };
-                for (hm, &hp) in h_masked.iter_mut().zip(h_prev) {
-                    *hm = hp * mask;
-                }
+            let h_prev: &[f32] = if t == 0 {
+                &h0[b * hid..(b + 1) * hid]
+            } else {
+                &s.h_seq[((t - 1) * bsz + b) * hid..((t - 1) * bsz + b + 1) * hid]
+            };
+            for (hm, &hp) in s.h_masked[b * hid..(b + 1) * hid].iter_mut().zip(h_prev) {
+                *hm = hp * mask;
             }
-            let x = &emb[(b * t_len + t) * fc..(b * t_len + t + 1) * fc];
-            let idx = t * bsz + b;
-            // h_prev was already copied out into h_masked, so borrowing the
-            // output row mutably is fine.
-            let h_new = &mut h_seq[idx * hid..(idx + 1) * hid];
-            ops::gru_forward_row(
-                x, &h_masked, pv.gru_wx, pv.gru_wh, pv.gru_b, h_new, &mut gru_scratch,
-                Some(&mut traces[idx]),
-            );
         }
-    }
-
-    // ---- 3. heads + values over all cores ---------------------------------
-    let mut logits = vec![0.0f32; t_len * bsz * ta]; // [t*bsz + b]
-    let mut values = vec![0.0f32; t_len * bsz];
-    let mut v1 = [0.0f32; 1];
-    for i in 0..t_len * bsz {
-        let core = &h_seq[i * hid..(i + 1) * hid];
-        let row = &mut logits[i * ta..(i + 1) * ta];
-        let mut off = 0usize;
-        for hd in 0..n_heads {
-            ops::linear_forward(core, pv.head_w[hd], pv.head_b[hd], &mut row[off..off + def.heads[hd]]);
-            off += def.heads[hd];
-        }
-        ops::linear_forward(core, pv.value_w, pv.value_b, &mut v1);
-        values[i] = v1[0];
+        let x_t = &s.emb[t * bsz * fc..(t + 1) * bsz * fc];
+        let h_new = &mut s.h_seq[t * bsz * hid..(t + 1) * bsz * hid];
+        gemm::gru_forward_batch(
+            pool, bsz, fc, hid, x_t, &s.h_masked, pv.gru_wx, pv.gru_wh, pv.gru_b,
+            h_new, &mut s.gx, &mut s.gh, Some(&mut s.traces[t]),
+        );
     }
 
     // Bootstrap value for x_{T+1} (stop-gradient: forward only).
     let mut v_boot = vec![0.0f32; bsz];
     {
-        let mut h_boot = vec![0.0f32; hid];
         for b in 0..bsz {
             let mask = 1.0 - dones[b * t_len + t_len - 1];
-            let h_last = &h_seq[((t_len - 1) * bsz + b) * hid..((t_len - 1) * bsz + b + 1) * hid];
-            for (hm, &hp) in h_masked.iter_mut().zip(h_last) {
+            let h_last =
+                &s.h_seq[((t_len - 1) * bsz + b) * hid..((t_len - 1) * bsz + b + 1) * hid];
+            for (hm, &hp) in s.h_masked[b * hid..(b + 1) * hid].iter_mut().zip(h_last) {
                 *hm = hp * mask;
             }
-            ops::gru_forward_row(
-                &emb_last[b * fc..(b + 1) * fc],
-                &h_masked,
-                pv.gru_wx,
-                pv.gru_wh,
-                pv.gru_b,
-                &mut h_boot,
-                &mut gru_scratch,
-                None,
-            );
-            ops::linear_forward(&h_boot, pv.value_w, pv.value_b, &mut v1);
-            v_boot[b] = v1[0];
         }
+        s.h_boot.resize(bsz * hid, 0.0);
+        gemm::gru_forward_batch(
+            pool, bsz, fc, hid, &s.emb_last, &s.h_masked, pv.gru_wx, pv.gru_wh,
+            pv.gru_b, &mut s.h_boot, &mut s.gx, &mut s.gh, None,
+        );
+        gemm::gemm_nn(pool, bsz, hid, 1, &s.h_boot, pv.value_w, Some(pv.value_b), &mut v_boot, false);
+    }
+
+    // ---- 3. heads + value over all cores: one packed GEMM -----------------
+    let m_all = t_len * bsz;
+    let ta1 = ta + 1;
+    pack_heads_value(def, &pv, &mut s.w_all, &mut s.b_all);
+    s.out_all.resize(m_all * ta1, 0.0);
+    gemm::gemm_nn(pool, m_all, hid, ta1, &s.h_seq, &s.w_all, Some(&s.b_all), &mut s.out_all, false);
+    let mut values = vec![0.0f32; m_all];
+    for i in 0..m_all {
+        values[i] = s.out_all[i * ta1 + ta];
     }
 
     // ---- 4. log-probs, entropy, importance ratios -------------------------
@@ -207,7 +259,7 @@ fn run_train(def: &ModelDef, inputs: &[&Literal]) -> Result<Vec<Literal>> {
     for t in 0..t_len {
         for b in 0..bsz {
             let i = t * bsz + b;
-            let row = &logits[i * ta..(i + 1) * ta];
+            let row = &s.out_all[i * ta1..i * ta1 + ta];
             let a_row = &actions[(b * t_len + t) * n_heads..(b * t_len + t + 1) * n_heads];
             let (mut lp, mut ent) = (0.0f32, 0.0f32);
             let mut off = 0usize;
@@ -312,14 +364,14 @@ fn run_train(def: &ModelDef, inputs: &[&Literal]) -> Result<Vec<Literal>> {
     mean_vs /= nbt as f64;
     let total = pg_loss + vf_coef as f64 * v_loss - ent_coef as f64 * ent_mean;
 
-    // ---- 7. backprop into logits/values, then heads -> cores --------------
+    // ---- 7. backprop into logits/values, then the packed output layer -----
     let mut grads = Grads::new(def);
-    let mut d_cores = vec![0.0f32; t_len * bsz * hid];
-    let mut d_logits_row = vec![0.0f32; ta];
+    s.d_out_all.resize(m_all * ta1, 0.0);
     for t in 0..t_len {
         for b in 0..bsz {
             let i = t * bsz + b;
-            let row = &logits[i * ta..(i + 1) * ta];
+            let row = &s.out_all[i * ta1..i * ta1 + ta];
+            let d_row = &mut s.d_out_all[i * ta1..(i + 1) * ta1];
             let a_row = &actions[(b * t_len + t) * n_heads..(b * t_len + t + 1) * n_heads];
             let mut off = 0usize;
             for (hd, &hn) in def.heads.iter().enumerate() {
@@ -335,83 +387,101 @@ fn run_train(def: &ModelDef, inputs: &[&Literal]) -> Result<Vec<Literal>> {
                     let ind = if j == a { 1.0 } else { 0.0 };
                     // d total/d l_j = d_lp * (1{j=a} - p_j)
                     //               + ent_coef/N * p_j * (log p_j + H_head)
-                    d_logits_row[off + j] = d_lp[i] * (ind - p)
+                    d_row[off + j] = d_lp[i] * (ind - p)
                         + ent_coef * inv_n * p * (lsm[j] + h_head);
                 }
                 off += hn;
             }
-            let core = &h_seq[i * hid..(i + 1) * hid];
-            let d_core = &mut d_cores[i * hid..(i + 1) * hid];
-            let mut off = 0usize;
-            for (hd, &hn) in def.heads.iter().enumerate() {
-                let (d_w, d_b) = grads.pair_mut(def.idx_head_w(hd), def.idx_head_b(hd));
-                ops::linear_backward(
-                    core,
-                    pv.head_w[hd],
-                    &d_logits_row[off..off + hn],
-                    d_w,
-                    d_b,
-                    Some(&mut *d_core),
-                );
-                off += hn;
-            }
-            let (d_vw, d_vb) = grads.pair_mut(def.idx_value_w(), def.idx_value_b());
-            ops::linear_backward(core, pv.value_w, &[d_values[i]], d_vw, d_vb, Some(&mut *d_core));
+            d_row[ta] = d_values[i];
         }
     }
-
-    // ---- 8. BPTT through the GRU ------------------------------------------
-    let mut d_emb = vec![0.0f32; nbt * fc];
-    let mut dh_carry = vec![0.0f32; bsz * hid];
-    let mut dh_t = vec![0.0f32; hid];
-    let mut d_h_prev = vec![0.0f32; hid];
-    for t in (0..t_len).rev() {
-        for b in 0..bsz {
-            let i = t * bsz + b;
-            {
-                let carry = &dh_carry[b * hid..(b + 1) * hid];
-                let dc = &d_cores[i * hid..(i + 1) * hid];
-                for k in 0..hid {
-                    dh_t[k] = carry[k] + dc[k];
+    // Packed parameter gradients, then unpack into the per-head buffers.
+    s.d_w_all.resize(hid * ta1, 0.0);
+    s.d_w_all.iter_mut().for_each(|v| *v = 0.0);
+    s.d_b_all.resize(ta1, 0.0);
+    s.d_b_all.iter_mut().for_each(|v| *v = 0.0);
+    gemm::gemm_tn(pool, m_all, hid, ta1, &s.h_seq, &s.d_out_all, &mut s.d_w_all);
+    gemm::add_colsum(m_all, ta1, &s.d_out_all, &mut s.d_b_all);
+    {
+        let mut off = 0usize;
+        for (hd, &hn) in def.heads.iter().enumerate() {
+            let (d_w, d_b) = grads.pair_mut(def.idx_head_w(hd), def.idx_head_b(hd));
+            for r in 0..hid {
+                for j in 0..hn {
+                    d_w[r * hn + j] += s.d_w_all[r * ta1 + off + j];
                 }
             }
-            let x = &emb[(b * t_len + t) * fc..(b * t_len + t + 1) * fc];
-            let dx = &mut d_emb[(b * t_len + t) * fc..(b * t_len + t + 1) * fc];
+            for j in 0..hn {
+                d_b[j] += s.d_b_all[off + j];
+            }
+            off += hn;
+        }
+        let (d_vw, d_vb) = grads.pair_mut(def.idx_value_w(), def.idx_value_b());
+        for r in 0..hid {
+            d_vw[r] += s.d_w_all[r * ta1 + ta];
+        }
+        d_vb[0] += s.d_b_all[ta];
+    }
+    // d_cores = d_out_all @ W_all^T (one GEMM over all cores).
+    s.w_all_t.resize(ta1 * hid, 0.0);
+    gemm::transpose(&s.w_all, hid, ta1, &mut s.w_all_t);
+    s.d_cores.resize(m_all * hid, 0.0);
+    gemm::gemm_nn(pool, m_all, ta1, hid, &s.d_out_all, &s.w_all_t, None, &mut s.d_cores, false);
+
+    // ---- 8. BPTT through the GRU, one batched step per timestep -----------
+    s.wx_t.resize(fc * 3 * hid, 0.0);
+    gemm::transpose(pv.gru_wx, fc, 3 * hid, &mut s.wx_t);
+    s.wh_t.resize(hid * 3 * hid, 0.0);
+    gemm::transpose(pv.gru_wh, hid, 3 * hid, &mut s.wh_t);
+    s.d_emb.resize(nbt * fc, 0.0);
+    s.dh_carry.resize(bsz * hid, 0.0);
+    s.dh_carry.iter_mut().for_each(|v| *v = 0.0);
+    s.dh_t.resize(bsz * hid, 0.0);
+    s.d_h_prev.resize(bsz * hid, 0.0);
+    for t in (0..t_len).rev() {
+        for (idx, dt) in s.dh_t.iter_mut().enumerate() {
+            *dt = s.dh_carry[idx] + s.d_cores[t * bsz * hid + idx];
+        }
+        gemm::gru_backward_gates(
+            bsz, hid, &s.traces[t], &s.dh_t, &mut s.dgx, &mut s.dgh, &mut s.d_h_prev,
+        );
+        let x_t = &s.emb[t * bsz * fc..(t + 1) * bsz * fc];
+        {
             let (d_wx, d_wh, d_b) = gru_grads(&mut grads, def);
-            ops::gru_backward_row(
-                x,
-                &traces[i],
-                pv.gru_wx,
-                pv.gru_wh,
-                &dh_t,
-                dx,
-                &mut d_h_prev,
-                d_wx,
-                d_wh,
-                d_b,
-                &mut gru_scratch,
-            );
-            // Through the done-reset mask into the *raw* h_{t-1}.
+            gemm::gemm_tn(pool, bsz, fc, 3 * hid, x_t, &s.dgx, d_wx);
+            gemm::gemm_tn(pool, bsz, hid, 3 * hid, &s.traces[t].h_prev, &s.dgh, d_wh);
+            let (db_x, db_h) = d_b.split_at_mut(3 * hid);
+            gemm::add_colsum(bsz, 3 * hid, &s.dgx, db_x);
+            gemm::add_colsum(bsz, 3 * hid, &s.dgh, db_h);
+        }
+        let d_emb_t = &mut s.d_emb[t * bsz * fc..(t + 1) * bsz * fc];
+        gemm::gemm_nn(pool, bsz, 3 * hid, fc, &s.dgx, &s.wx_t, None, d_emb_t, false);
+        gemm::gemm_nn(pool, bsz, 3 * hid, hid, &s.dgh, &s.wh_t, None, &mut s.d_h_prev, true);
+        // Through the done-reset mask into the *raw* h_{t-1}.
+        for b in 0..bsz {
             let mask = if t == 0 { 1.0 } else { 1.0 - dones[b * t_len + t - 1] };
-            let carry = &mut dh_carry[b * hid..(b + 1) * hid];
             for k in 0..hid {
-                carry[k] = d_h_prev[k] * mask;
+                s.dh_carry[b * hid + k] = s.d_h_prev[b * hid + k] * mask;
             }
         }
     }
     // dh_carry now holds d/d h0 — unused (h0 is an input, not a parameter).
 
-    // ---- 9. encoder backward, frame by frame (recomputed activations) ----
-    let mut fscratch = FrameGradScratch::new(def);
-    let mut d_emb_row = vec![0.0f32; fc];
-    for i in 0..nbt {
-        let de = &d_emb[i * fc..(i + 1) * fc];
-        if de.iter().all(|&v| v == 0.0) {
-            continue;
+    // ---- 9. encoder backward, chunked (recomputed activations) ------------
+    let wt = WeightsT::build(def, &pv);
+    let mut f0 = 0usize;
+    while f0 < nbt {
+        let nb = ENC_CHUNK.min(nbt - f0);
+        s.d_emb_chunk.resize(nb * fc, 0.0);
+        for j in 0..nb {
+            let fi = f0 + j;
+            let (b, t) = (fi / t_len, fi % t_len);
+            s.d_emb_chunk[j * fc..(j + 1) * fc]
+                .copy_from_slice(&s.d_emb[(t * bsz + b) * fc..(t * bsz + b + 1) * fc]);
         }
-        d_emb_row.copy_from_slice(de);
-        encode_frame(def, &pv, &obs[i * obs_len..(i + 1) * obs_len], &mut acts);
-        backward_frame(def, &pv, &acts, &mut d_emb_row, &mut grads, &mut fscratch);
+        encode_batch(def, &pv, pool, &obs[f0 * obs_len..(f0 + nb) * obs_len], nb, &mut s.enc);
+        backward_batch(def, &pv, &wt, pool, nb, &mut s.enc, &mut s.d_emb_chunk, &mut grads, &mut s.bwd);
+        f0 += nb;
     }
 
     // ---- 10. global-norm clip + Adam --------------------------------------
@@ -517,6 +587,12 @@ mod tests {
     use super::*;
     use crate::runtime::{lit_f32, lit_i32, lit_u32_scalar, lit_u8};
 
+    fn run_once(def: &ModelDef, lits: &[Literal]) -> Vec<Literal> {
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let mut s = TrainScratch::default();
+        run_train(def, &refs, &mut s).unwrap()
+    }
+
     /// Build a full input set for the tiny spec with a reproducible batch.
     fn tiny_inputs(lr: f32) -> (Arc<ModelDef>, Vec<Literal>) {
         let def = Arc::new(ModelDef::builtin("tiny").unwrap());
@@ -562,8 +638,7 @@ mod tests {
     #[test]
     fn train_step_moves_params_and_reports_finite_metrics() {
         let (def, lits) = tiny_inputs(1e-3);
-        let refs: Vec<&Literal> = lits.iter().collect();
-        let out = run_train(&def, &refs).unwrap();
+        let out = run_once(&def, &lits);
         let n = def.n_params();
         assert_eq!(out.len(), 3 * n + 2);
         let before = lits[0].as_f32().unwrap();
@@ -580,8 +655,7 @@ mod tests {
     #[test]
     fn zero_lr_is_identity_on_params() {
         let (def, lits) = tiny_inputs(0.0);
-        let refs: Vec<&Literal> = lits.iter().collect();
-        let out = run_train(&def, &refs).unwrap();
+        let out = run_once(&def, &lits);
         for pi in 0..def.n_params() {
             let before = lits[pi].as_f32().unwrap();
             let after = out[pi].as_f32().unwrap();
@@ -589,6 +663,30 @@ mod tests {
                 assert!((x - y).abs() < 1e-7, "param {pi} moved with lr=0");
             }
         }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // Two runs through the same TrainProgram (second reuses the first's
+        // scratch buffers) must produce identical outputs.
+        let (def, lits) = tiny_inputs(1e-3);
+        let prog = TrainProgram::new(def.clone());
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let out1 = prog.run(&refs).unwrap();
+        let out2 = prog.run(&refs).unwrap();
+        let n = def.n_params();
+        for pi in 0..n {
+            assert_eq!(
+                out1[pi].as_f32().unwrap(),
+                out2[pi].as_f32().unwrap(),
+                "param {pi} differs across scratch reuse"
+            );
+        }
+        assert_eq!(
+            out1[3 * n + 1].as_f32().unwrap(),
+            out2[3 * n + 1].as_f32().unwrap(),
+            "metrics differ across scratch reuse"
+        );
     }
 
     #[test]
@@ -666,12 +764,13 @@ mod tests {
             hypers[super::super::HYP_ENT] = 0.0;
             lits[3 * n + 1] = lit_f32(&[11], &hypers).unwrap();
         }
+        let prog = TrainProgram::new(def.clone());
         let mut head = 0.0f32;
         let mut tail = 0.0f32;
         let steps = 40;
         for it in 0..steps {
             let refs: Vec<&Literal> = lits.iter().collect();
-            let out = run_train(&def, &refs).unwrap();
+            let out = prog.run(&refs).unwrap();
             drop(refs);
             let metrics = out[3 * n + 1].as_f32().unwrap();
             assert!(metrics.iter().all(|m| m.is_finite()), "step {it}: {metrics:?}");

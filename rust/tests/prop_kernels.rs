@@ -1,0 +1,355 @@
+//! Property suites for the batch-native compute kernels (ISSUE 3):
+//!
+//! * **Kernel equivalence** — the im2col+GEMM forward/backward in
+//!   `runtime::native::gemm` must match the scalar reference kernels in
+//!   `runtime::native::ops` within 1e-5 (relative, floored at 1.0) across
+//!   every builtin conv geometry — including the asymmetric SAME-padding
+//!   ones — and batch sizes 1, 3, and `policy_batch`.
+//! * **Thread-pool invariants** — results are bit-identical for any
+//!   thread count (so `SF_NATIVE_THREADS` is a pure perf knob), and the
+//!   pool survives nested and zero-sized work without deadlock.
+
+use sample_factory::runtime::native::gemm;
+use sample_factory::runtime::native::ops::{self, ConvGeom};
+use sample_factory::runtime::native::pool::NativePool;
+use sample_factory::runtime::native::{
+    backward_batch, backward_frame, encode_batch, encode_frame, EncBwdScratch,
+    EncScratch, FrameActs, FrameGradScratch, Grads, ModelDef, ParamView, WeightsT,
+};
+use sample_factory::runtime::{lit_f32, Literal};
+use sample_factory::testkit::check;
+use sample_factory::util::Rng;
+
+const SPECS: [&str; 5] = ["tiny", "doomish", "doomish_full", "arcade", "gridlab"];
+
+/// Relative closeness with a floor of 1.0: |a-b| <= tol * max(1, |a|, |b|).
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: batched {x} vs scalar {y}"
+        );
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-s, s)).collect()
+}
+
+/// Every distinct conv geometry used by the builtin spec table, plus two
+/// synthetic ones that force asymmetric SAME padding (odd input size with
+/// even kernel/stride -> pad split low-side-first).
+fn all_geometries() -> Vec<ConvGeom> {
+    let mut geoms: Vec<ConvGeom> = Vec::new();
+    for spec in SPECS {
+        let def = ModelDef::builtin(spec).unwrap();
+        for g in &def.geoms {
+            let dup = geoms.iter().any(|h| {
+                h.h_in == g.h_in
+                    && h.w_in == g.w_in
+                    && h.c_in == g.c_in
+                    && h.c_out == g.c_out
+                    && h.k == g.k
+                    && h.stride == g.stride
+            });
+            if !dup {
+                geoms.push(*g);
+            }
+        }
+    }
+    geoms.push(ConvGeom::same(9, 12, 2, 4, 4, 2));
+    geoms.push(ConvGeom::same(7, 5, 3, 6, 2, 2));
+    geoms
+}
+
+/// Batch sizes demanded by the issue: 1, 3, and the spec's policy batch
+/// (capped so the biggest geometries stay test-budget friendly).
+fn batch_sizes_for(g: &ConvGeom) -> Vec<usize> {
+    let policy_batch = ModelDef::builtin("doomish").unwrap().policy_batch;
+    let cap = if g.in_len() > 20_000 { 8 } else { policy_batch };
+    vec![1, 3, policy_batch.min(cap)]
+}
+
+#[test]
+fn prop_conv_forward_batch_matches_scalar_reference() {
+    let pool = NativePool::new(3);
+    let mut rng = Rng::new(0xc0de);
+    for g in all_geometries() {
+        for nb in batch_sizes_for(&g) {
+            let inp = rand_vec(&mut rng, nb * g.in_len(), 0.5);
+            let wgt = rand_vec(&mut rng, g.w_len(), 0.5);
+            let bias = rand_vec(&mut rng, g.c_out, 0.2);
+            let mut cols = Vec::new();
+            let mut out = vec![0.0f32; nb * g.out_len()];
+            gemm::conv_forward_batch(&pool, &g, nb, &inp, &wgt, &bias, &mut cols, &mut out);
+            let mut want = vec![0.0f32; g.out_len()];
+            for b in 0..nb {
+                ops::conv_forward(&g, &inp[b * g.in_len()..][..g.in_len()], &wgt, &bias, &mut want);
+                assert_close(
+                    &out[b * g.out_len()..][..g.out_len()],
+                    &want,
+                    1e-5,
+                    &format!("conv fwd {g:?} nb={nb} row={b}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_conv_backward_batch_matches_scalar_reference() {
+    let pool = NativePool::new(3);
+    let mut rng = Rng::new(0xdead);
+    for g in all_geometries() {
+        for nb in batch_sizes_for(&g) {
+            let inp = rand_vec(&mut rng, nb * g.in_len(), 0.5);
+            let wgt = rand_vec(&mut rng, g.w_len(), 0.5);
+            let d_out = rand_vec(&mut rng, nb * g.out_len(), 0.5);
+            let krow = gemm::im2col_row_len(&g);
+            let mut wgt_t = vec![0.0f32; g.w_len()];
+            gemm::transpose(&wgt, krow, g.c_out, &mut wgt_t);
+            let (mut cols, mut d_cols) = (Vec::new(), Vec::new());
+            let mut d_wgt = vec![0.0f32; g.w_len()];
+            let mut d_bias = vec![0.0f32; g.c_out];
+            let mut d_inp = vec![0.0f32; nb * g.in_len()];
+            gemm::conv_backward_batch(
+                &pool, &g, nb, &inp, Some(&wgt_t), &d_out, &mut cols, &mut d_cols,
+                &mut d_wgt, &mut d_bias, Some(&mut d_inp),
+            );
+            let mut w_dw = vec![0.0f32; g.w_len()];
+            let mut w_db = vec![0.0f32; g.c_out];
+            let mut w_di = vec![0.0f32; nb * g.in_len()];
+            for b in 0..nb {
+                ops::conv_backward(
+                    &g,
+                    &inp[b * g.in_len()..][..g.in_len()],
+                    &wgt,
+                    &d_out[b * g.out_len()..][..g.out_len()],
+                    &mut w_dw,
+                    &mut w_db,
+                    Some(&mut w_di[b * g.in_len()..(b + 1) * g.in_len()]),
+                );
+            }
+            let tag = format!("conv bwd {g:?} nb={nb}");
+            assert_close(&d_wgt, &w_dw, 1e-5, &format!("{tag} d_wgt"));
+            assert_close(&d_bias, &w_db, 1e-5, &format!("{tag} d_bias"));
+            assert_close(&d_inp, &w_di, 1e-5, &format!("{tag} d_inp"));
+        }
+    }
+}
+
+#[test]
+fn prop_gemm_linear_matches_scalar_rows() {
+    // gemm_nn against ops::linear_forward row by row, random shapes.
+    check(25, |g| {
+        let m = g.usize_in(1, 33);
+        let k = g.usize_in(1, 400);
+        let n = g.usize_in(1, 40);
+        let a = g.vec_f32(m * k, -0.5, 0.5);
+        let w = g.vec_f32(k * n, -0.5, 0.5);
+        let bias = g.vec_f32(n, -0.2, 0.2);
+        let pool = NativePool::new(g.usize_in(1, 4));
+        let mut out = vec![0.0f32; m * n];
+        gemm::gemm_nn(&pool, m, k, n, &a, &w, Some(&bias), &mut out, false);
+        let mut want = vec![0.0f32; n];
+        for i in 0..m {
+            ops::linear_forward(&a[i * k..][..k], &w, &bias, &mut want);
+            assert_close(&out[i * n..][..n], &want, 1e-5, "gemm vs linear_forward");
+        }
+    });
+}
+
+#[test]
+fn prop_gru_batch_matches_scalar_rows() {
+    check(15, |g| {
+        let nb = g.usize_in(1, 9);
+        let f = g.usize_in(1, 24);
+        let h = g.usize_in(1, 16);
+        let x = g.vec_f32(nb * f, -1.0, 1.0);
+        let hp = g.vec_f32(nb * h, -1.0, 1.0);
+        let wx = g.vec_f32(f * 3 * h, -0.7, 0.7);
+        let wh = g.vec_f32(h * 3 * h, -0.7, 0.7);
+        let b = g.vec_f32(6 * h, -0.3, 0.3);
+        let pool = NativePool::new(g.usize_in(1, 3));
+        let mut h_new = vec![0.0f32; nb * h];
+        let (mut gx, mut gh) = (Vec::new(), Vec::new());
+        gemm::gru_forward_batch(
+            &pool, nb, f, h, &x, &hp, &wx, &wh, &b, &mut h_new, &mut gx, &mut gh,
+            None,
+        );
+        let mut scratch = vec![0.0f32; 6 * h];
+        let mut want = vec![0.0f32; h];
+        for i in 0..nb {
+            ops::gru_forward_row(
+                &x[i * f..][..f], &hp[i * h..][..h], &wx, &wh, &b, &mut want,
+                &mut scratch, None,
+            );
+            assert_close(&h_new[i * h..][..h], &want, 1e-5, "gru batch vs row");
+        }
+    });
+}
+
+/// Scalar reference parameters for a spec, as literals (so ParamView can
+/// borrow them).
+fn random_params(def: &ModelDef, seed: u64) -> Vec<Literal> {
+    let mut rng = Rng::new(seed);
+    def.param_defs()
+        .into_iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let data: Vec<f32> = (0..n).map(|_| 0.3 * rng.normal()).collect();
+            lit_f32(&shape, &data).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_encoder_batch_matches_frame_reference() {
+    // Full encoder (conv stack + fc) batched vs per-frame scalar, tiny spec
+    // at batch sizes 1, 3, policy_batch.
+    let def = ModelDef::builtin("tiny").unwrap();
+    let params = random_params(&def, 42);
+    let refs: Vec<&Literal> = params.iter().collect();
+    let pv = ParamView::parse(&def, &refs).unwrap();
+    let pool = NativePool::new(3);
+    let mut rng = Rng::new(7);
+    for nb in [1usize, 3, def.policy_batch] {
+        let obs: Vec<u8> = (0..nb * def.obs_len())
+            .map(|_| (rng.next_u64() & 0xff) as u8)
+            .collect();
+        let mut enc = EncScratch::default();
+        encode_batch(&def, &pv, &pool, &obs, nb, &mut enc);
+        let mut acts = FrameActs::new(&def);
+        for i in 0..nb {
+            encode_frame(&def, &pv, &obs[i * def.obs_len()..(i + 1) * def.obs_len()], &mut acts);
+            assert_close(
+                &enc.emb[i * def.fc_dim..(i + 1) * def.fc_dim],
+                &acts.emb,
+                1e-5,
+                &format!("encoder emb nb={nb} row={i}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_encoder_backward_batch_matches_frame_reference() {
+    let def = ModelDef::builtin("tiny").unwrap();
+    let params = random_params(&def, 43);
+    let refs: Vec<&Literal> = params.iter().collect();
+    let pv = ParamView::parse(&def, &refs).unwrap();
+    let pool = NativePool::new(2);
+    let wt = WeightsT::build(&def, &pv);
+    let mut rng = Rng::new(8);
+    let nb = 5usize;
+    let obs: Vec<u8> = (0..nb * def.obs_len())
+        .map(|_| (rng.next_u64() & 0xff) as u8)
+        .collect();
+    let d_emb_src = rand_vec(&mut rng, nb * def.fc_dim, 1.0);
+
+    // Batched path.
+    let mut enc = EncScratch::default();
+    encode_batch(&def, &pv, &pool, &obs, nb, &mut enc);
+    let mut d_emb = d_emb_src.clone();
+    let mut grads = Grads::new(&def);
+    let mut bwd = EncBwdScratch::default();
+    backward_batch(&def, &pv, &wt, &pool, nb, &mut enc, &mut d_emb, &mut grads, &mut bwd);
+
+    // Scalar reference path.
+    let mut r_grads = Grads::new(&def);
+    let mut acts = FrameActs::new(&def);
+    let mut fscratch = FrameGradScratch::new(&def);
+    let mut d_row = vec![0.0f32; def.fc_dim];
+    for i in 0..nb {
+        encode_frame(&def, &pv, &obs[i * def.obs_len()..(i + 1) * def.obs_len()], &mut acts);
+        d_row.copy_from_slice(&d_emb_src[i * def.fc_dim..(i + 1) * def.fc_dim]);
+        backward_frame(&def, &pv, &acts, &mut d_row, &mut r_grads, &mut fscratch);
+    }
+    for (pi, (g, r)) in grads.0.iter().zip(&r_grads.0).enumerate() {
+        // Head/value/GRU grads are untouched (zero) in both paths; conv/fc
+        // grads must agree.
+        assert_close(g, r, 1e-5, &format!("encoder backward param {pi}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-pool invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_results_independent_of_thread_count() {
+    // The same GEMM + conv batch must be bit-identical across pool sizes
+    // (SF_NATIVE_THREADS is a pure perf knob, never a numerics knob).
+    let g = ConvGeom::same(9, 12, 3, 8, 4, 2);
+    let nb = 6usize;
+    let mut rng = Rng::new(0xf00d);
+    let inp = rand_vec(&mut rng, nb * g.in_len(), 0.5);
+    let wgt = rand_vec(&mut rng, g.w_len(), 0.5);
+    let bias = rand_vec(&mut rng, g.c_out, 0.2);
+    let d_out = rand_vec(&mut rng, nb * g.out_len(), 0.5);
+    let krow = gemm::im2col_row_len(&g);
+    let mut wgt_t = vec![0.0f32; g.w_len()];
+    gemm::transpose(&wgt, krow, g.c_out, &mut wgt_t);
+
+    let run_with = |threads: usize| {
+        let pool = NativePool::new(threads);
+        let mut cols = Vec::new();
+        let mut out = vec![0.0f32; nb * g.out_len()];
+        gemm::conv_forward_batch(&pool, &g, nb, &inp, &wgt, &bias, &mut cols, &mut out);
+        let mut d_cols = Vec::new();
+        let mut d_wgt = vec![0.0f32; g.w_len()];
+        let mut d_bias = vec![0.0f32; g.c_out];
+        let mut d_inp = vec![0.0f32; nb * g.in_len()];
+        gemm::conv_backward_batch(
+            &pool, &g, nb, &inp, Some(&wgt_t), &d_out, &mut cols, &mut d_cols,
+            &mut d_wgt, &mut d_bias, Some(&mut d_inp),
+        );
+        (out, d_wgt, d_bias, d_inp)
+    };
+    let base = run_with(1);
+    for threads in [2usize, 3, 5] {
+        let got = run_with(threads);
+        assert_eq!(base.0, got.0, "forward differs at {threads} threads");
+        assert_eq!(base.1, got.1, "d_wgt differs at {threads} threads");
+        assert_eq!(base.2, got.2, "d_bias differs at {threads} threads");
+        assert_eq!(base.3, got.3, "d_inp differs at {threads} threads");
+    }
+}
+
+#[test]
+fn prop_pool_zero_sized_and_nested_work_no_deadlock() {
+    check(10, |g| {
+        let pool = std::sync::Arc::new(NativePool::new(g.usize_in(1, 4)));
+        // Zero-sized work: empty job lists and empty chunk targets.
+        pool.run(Vec::new());
+        let mut nothing: Vec<f32> = Vec::new();
+        pool.par_chunks_mut(&mut nothing, 8, |_, _| {});
+        // Nested work: outer tasks spawn inner scopes on the same pool.
+        let outer = g.usize_in(1, 6);
+        let inner = g.usize_in(1, 5);
+        let counter = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut jobs: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+        for _ in 0..outer {
+            let pool2 = std::sync::Arc::clone(&pool);
+            let c2 = std::sync::Arc::clone(&counter);
+            jobs.push(Box::new(move || {
+                let mut inner_jobs: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+                for _ in 0..inner {
+                    let c3 = std::sync::Arc::clone(&c2);
+                    inner_jobs.push(Box::new(move || {
+                        c3.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }));
+                }
+                pool2.run(inner_jobs);
+            }));
+        }
+        pool.run(jobs);
+        assert_eq!(
+            counter.load(std::sync::atomic::Ordering::Relaxed),
+            outer * inner,
+            "nested scope lost work"
+        );
+    });
+}
