@@ -24,6 +24,7 @@ bench:
 bench-json:
 	cargo run --release --bin repro -- bench throughput --frames $(or $(SF_BENCH_FRAMES),20000)
 	cargo run --release --bin repro -- bench fifo --frames 50000
+	cargo run --release --bin repro -- bench scenarios --frames $(or $(SF_BENCH_FRAMES),5000)
 
 clippy:
 	cargo clippy --all-targets -- -D warnings \

@@ -1,41 +1,55 @@
-//! Fig 6: training curves on the standard (VizDoom-distribution) scenarios.
-//! Trains APPO on each and dumps the (frames, return) curve + final score.
+//! Fig 6: training curves on the scenario suite.  Sweeps the *scenario
+//! registry* — every registered single-agent raycast scenario, including
+//! the procedural `*_gen` families — rather than a hard-coded list, trains
+//! APPO on each, and dumps the (frames, return) curves plus a
+//! `BENCH_scenarios.json` with per-scenario fps so the env-layer perf
+//! trajectory is tracked per PR alongside the throughput exhibits.
 
 use anyhow::Result;
 
 use crate::config::Config;
 use crate::coordinator::Trainer;
+use crate::env::registry::{self, Builder, ScenarioDef};
+use crate::json::Json;
 
-use super::{parse_bench_args, print_table, write_csv};
+use super::{parse_bench_args, print_table, write_bench_json, write_csv};
 
-pub const SCENARIOS: [&str; 5] = [
-    "basic",
-    "defend_center",
-    "defend_line",
-    "health_gathering",
-    "my_way_home",
-];
+/// The sweep set: every registered single-agent raycast scenario.  The
+/// multi-agent match modes need the self-play harness (`bench pbt-duel`),
+/// and arcade/gridlab have their own exhibits.
+pub fn sweep() -> Vec<ScenarioDef> {
+    registry::all()
+        .into_iter()
+        .filter(|d| matches!(d.builder, Builder::Raycast(_)) && d.n_agents() == 1)
+        .collect()
+}
 
 pub fn run_cli(args: &[String]) -> Result<()> {
     let (base, extra) = parse_bench_args(Config::default(), args)?;
     let frames = extra.frames.unwrap_or(if extra.full { 2_000_000 } else { 200_000 });
-    println!("== Fig 6: standard scenarios, APPO, {frames} frames each ==");
+    let defs = sweep();
+    println!(
+        "== Fig 6: registry sweep, APPO, {} scenarios x {frames} frames ==",
+        defs.len()
+    );
 
     let mut rows = Vec::new();
     let mut curves = Vec::new();
-    for scenario in SCENARIOS {
+    let mut cells = Vec::new();
+    for def in &defs {
         let mut cfg = base.clone();
-        cfg.spec = "doomish".into();
-        cfg.scenario = scenario.into();
+        cfg.spec = def.spec.into();
+        cfg.scenario = def.name.into();
         cfg.total_env_frames = frames;
         cfg.log_interval_s = 0.0;
         let res = Trainer::run(&cfg)?;
         eprintln!(
-            "  [{scenario}] return {:.2} after {} episodes ({:.0} fps)",
-            res.mean_return, res.episodes, res.fps
+            "  [{}] return {:.2} after {} episodes ({:.0} fps, {} map)",
+            def.name, res.mean_return, res.episodes, res.fps, def.map_kind()
         );
         rows.push(vec![
-            scenario.to_string(),
+            def.name.to_string(),
+            def.map_kind().to_string(),
             format!("{:.2}", res.mean_return),
             format!("{}", res.episodes),
             format!("{:.0}", res.fps),
@@ -43,14 +57,22 @@ pub fn run_cli(args: &[String]) -> Result<()> {
         ]);
         for p in &res.curve {
             curves.push(vec![
-                scenario.to_string(),
+                def.name.to_string(),
                 format!("{}", p.frames),
                 format!("{:.2}", p.wall_s),
                 format!("{:.3}", p.mean_return),
             ]);
         }
+        cells.push(Json::obj(vec![
+            ("scenario", Json::str(def.name)),
+            ("spec", Json::str(def.spec)),
+            ("map", Json::str(def.map_kind())),
+            ("fps", Json::num(res.fps)),
+            ("final_return", Json::num(res.mean_return)),
+            ("episodes", Json::num(res.episodes as f64)),
+        ]));
     }
-    let header = ["scenario", "final_return", "episodes", "fps", "lag"];
+    let header = ["scenario", "map", "final_return", "episodes", "fps", "lag"];
     print_table(&header, &rows);
     write_csv("bench_results/fig6_scenarios.csv", &header, &rows)?;
     write_csv(
@@ -58,5 +80,30 @@ pub fn run_cli(args: &[String]) -> Result<()> {
         &["scenario", "frames", "wall_s", "return"],
         &curves,
     )?;
+    write_bench_json(
+        "scenarios",
+        Json::obj(vec![
+            ("frames_per_scenario", Json::num(frames as f64)),
+            ("n_scenarios", Json::num(cells.len() as f64)),
+            ("scenarios", Json::Arr(cells)),
+        ]),
+    )?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_the_registry() {
+        let defs = sweep();
+        assert!(defs.len() >= 14, "sweep shrank to {} scenarios", defs.len());
+        let names: Vec<&str> = defs.iter().map(|d| d.name).collect();
+        for must in ["basic", "battle", "battle_gen", "caves_gen", "deadly_corridor"] {
+            assert!(names.contains(&must), "sweep lost {must}");
+        }
+        // Match modes are excluded (they need the self-play harness).
+        assert!(!names.contains(&"duel"));
+    }
 }

@@ -88,9 +88,10 @@ impl Default for PbtConfig {
 pub struct Config {
     /// Model spec / artifacts subdirectory: tiny|doomish|doomish_full|arcade|gridlab.
     pub spec: String,
-    /// Environment scenario (see `env::make`): basic, defend_center,
-    /// health_gathering, defend_line, my_way_home, battle, battle2, duel,
-    /// deathmatch, breakout, collect_good_objects, multitask...
+    /// Environment scenario, resolved through the scenario registry
+    /// (`repro envs` prints the full table).  Accepts `?key=value`
+    /// overrides, e.g. `battle?monsters=20` or `maze_gen?size=11x9`.
+    /// `multitask` fans rollout workers across the GridLab-8 suite.
     pub scenario: String,
     pub artifacts_dir: String,
     pub method: Method,
@@ -276,7 +277,27 @@ impl Config {
     }
 }
 
-/// Named experiment presets (the configurations the paper's figures use).
+/// Every preset name, for listings and tests.
+pub const PRESET_NAMES: [&str; 15] = [
+    "tiny_smoke",
+    "doom_basic",
+    "doom_battle",
+    "doom_deadly_corridor",
+    "doom_take_cover",
+    "doom_predict_position",
+    "doom_health_supreme",
+    "battle_gen",
+    "caves_gen",
+    "maze_gen",
+    "duel_pbt",
+    "duel_gen_pbt",
+    "breakout",
+    "gridlab",
+    "multitask",
+];
+
+/// Named experiment presets (the configurations the paper's figures use,
+/// plus one per registered procedural/extended scenario).
 pub fn preset(name: &str) -> Option<Config> {
     let mut c = Config::default();
     match name {
@@ -297,9 +318,45 @@ pub fn preset(name: &str) -> Option<Config> {
             c.scenario = "battle".into();
             c.total_env_frames = 4_000_000;
         }
+        "doom_deadly_corridor" => {
+            c.scenario = "deadly_corridor".into();
+            c.total_env_frames = 2_000_000;
+        }
+        "doom_take_cover" => {
+            c.scenario = "take_cover".into();
+            c.total_env_frames = 2_000_000;
+        }
+        "doom_predict_position" => {
+            c.scenario = "predict_position".into();
+            c.total_env_frames = 2_000_000;
+        }
+        "doom_health_supreme" => {
+            c.scenario = "health_gathering_supreme".into();
+            c.total_env_frames = 2_000_000;
+        }
+        "battle_gen" => {
+            c.scenario = "battle_gen".into();
+            c.total_env_frames = 4_000_000;
+        }
+        "caves_gen" => {
+            c.scenario = "caves_gen".into();
+            c.total_env_frames = 4_000_000;
+        }
+        "maze_gen" => {
+            c.scenario = "maze_gen".into();
+            c.total_env_frames = 2_000_000;
+        }
         "duel_pbt" => {
             c.spec = "doomish_full".into();
             c.scenario = "duel".into();
+            c.frameskip = 2;
+            c.pbt.population = 4;
+            c.hyper_overrides.insert("gamma".into(), 0.995);
+            c.total_env_frames = 4_000_000;
+        }
+        "duel_gen_pbt" => {
+            c.spec = "doomish_full".into();
+            c.scenario = "duel_gen".into();
             c.frameskip = 2;
             c.pbt.population = 4;
             c.hyper_overrides.insert("gamma".into(), 0.995);
@@ -374,11 +431,25 @@ mod tests {
 
     #[test]
     fn presets_resolve() {
-        for p in ["tiny_smoke", "doom_basic", "doom_battle", "duel_pbt",
-                  "breakout", "gridlab", "multitask"] {
+        for p in PRESET_NAMES {
             assert!(preset(p).is_some(), "{p}");
         }
         assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn preset_scenarios_exist_in_registry() {
+        for p in PRESET_NAMES {
+            let c = preset(p).unwrap();
+            if c.scenario == "multitask" {
+                continue; // trainer-level fan-out, not a single registry env
+            }
+            assert!(
+                crate::env::registry::get(&c.scenario).is_some(),
+                "preset {p} names unregistered scenario '{}'",
+                c.scenario
+            );
+        }
     }
 
     #[test]

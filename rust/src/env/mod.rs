@@ -4,14 +4,16 @@
 //! equivalent of each from scratch (DESIGN.md lists the substitutions):
 //!
 //! * [`raycast`] — a DDA raycasting 3D engine with monsters, weapons,
-//!   pickups, doors and scripted bots: the VizDoom stand-in.  Scenarios:
-//!   `basic`, `defend_center`, `defend_line`, `health_gathering`,
-//!   `my_way_home`, `battle`, `battle2`, `duel`, `deathmatch`.
+//!   pickups, doors and scripted bots: the VizDoom stand-in.
 //! * [`arcade`] — a Breakout implementation at 84x84 grayscale with
 //!   4-framestack: the Atari stand-in.
 //! * [`gridlab`] — collect-good-objects on the raycast engine with
 //!   deliberately heavier rendering: the DeepMind-Lab stand-in, plus the
 //!   [`multitask`] GridLab-8 suite standing in for DMLab-30.
+//!
+//! Every scenario is a declarative entry in the [`registry`] (`repro envs`
+//! prints the table); [`make`] resolves names — including `?key=value`
+//! parameter overrides like `battle?monsters=20` — through it.
 //!
 //! Everything implements the uniform multi-agent [`Env`] trait; single-agent
 //! environments report `n_agents == 1`.  Observations are rendered directly
@@ -23,9 +25,45 @@ pub mod arcade;
 pub mod gridlab;
 pub mod multitask;
 pub mod raycast;
+pub mod registry;
 pub mod vec_env;
 
 use crate::util::Rng;
+
+/// Shared parsing helpers for `?key=value` scenario overrides — one
+/// implementation for every override surface (registry, raycast defs,
+/// map sources), so error wording cannot drift.
+pub(crate) mod params {
+    /// Parse one typed override value.
+    pub fn value<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, String> {
+        val.parse::<T>().map_err(|_| format!("bad value '{val}' for {key}"))
+    }
+
+    /// Parse a count-like override with an inclusive sanity cap — a typo'd
+    /// huge value must be a parameter error, not a multi-GB allocation.
+    pub fn count(key: &str, val: &str, max: usize) -> Result<usize, String> {
+        let v: usize = value(key, val)?;
+        if v > max {
+            return Err(format!("{key}={v} exceeds the sanity cap of {max}"));
+        }
+        Ok(v)
+    }
+
+    /// Parse a `WxH` pair (e.g. `11x9`); both sides must be in 2..=101
+    /// (the largest map any scenario plausibly wants, and small enough
+    /// that generators/flood fills stay cheap).
+    pub fn size(val: &str) -> Result<(usize, usize), String> {
+        let (a, b) = val
+            .split_once('x')
+            .ok_or_else(|| format!("bad size '{val}' (expected WxH, e.g. 11x9)"))?;
+        let w = count("size", a, 101)?;
+        let h = count("size", b, 101)?;
+        if w < 2 || h < 2 {
+            return Err(format!("size '{val}' too small"));
+        }
+        Ok((w, h))
+    }
+}
 
 /// Observation geometry; byte length is `h * w * c` (u8 pixels, HWC).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,49 +153,19 @@ impl EpisodeMonitor {
     }
 }
 
-/// Construct an environment by scenario name.
+/// Construct an environment by scenario name, resolved through the
+/// [`registry`] (so `?key=value` overrides work everywhere an env is made).
 ///
 /// `spec_name` selects the model/obs configuration (the artifacts dir);
-/// `scenario` the gameplay.  Seeds are applied on `reset`.
+/// `scenario` the gameplay.  The spec's action-head layout is validated
+/// against the scenario up front — a mismatch (e.g. `duel` without the
+/// full 7-head spec) is a clear construction error, not a mid-rollout
+/// panic.  Seeds are applied on `reset`.
 pub fn make(spec_name: &str, scenario: &str, rng: &mut Rng) -> Result<Box<dyn Env>, String> {
     let obs = obs_for_spec(spec_name)?;
-    let mut e: Box<dyn Env> = match scenario {
-        "basic" => Box::new(raycast::scenarios::build(raycast::scenarios::Kind::Basic, obs)),
-        "defend_center" => {
-            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DefendCenter, obs))
-        }
-        "defend_line" => {
-            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DefendLine, obs))
-        }
-        "health_gathering" => {
-            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::HealthGathering, obs))
-        }
-        "my_way_home" => {
-            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::MyWayHome, obs))
-        }
-        "battle" => Box::new(raycast::scenarios::build(raycast::scenarios::Kind::Battle, obs)),
-        "battle2" => Box::new(raycast::scenarios::build(raycast::scenarios::Kind::Battle2, obs)),
-        "duel_bots" => {
-            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DuelBots, obs))
-        }
-        "deathmatch_bots" => {
-            Box::new(raycast::scenarios::build(raycast::scenarios::Kind::DeathmatchBots, obs))
-        }
-        "duel" => Box::new(raycast::scenarios::build_multi(
-            raycast::scenarios::MultiKind::Duel, obs)),
-        "deathmatch" => Box::new(raycast::scenarios::build_multi(
-            raycast::scenarios::MultiKind::Deathmatch, obs)),
-        "breakout" => Box::new(arcade::Breakout::new(obs)),
-        "collect_good_objects" => Box::new(gridlab::Collect::new(obs, gridlab::Task::default())),
-        name if name.starts_with("gridlab_task") => {
-            let idx: usize = name["gridlab_task".len()..]
-                .parse()
-                .map_err(|_| format!("bad gridlab task '{name}'"))?;
-            let task = multitask::task(idx).ok_or(format!("no gridlab task {idx}"))?;
-            Box::new(gridlab::Collect::new(obs, task))
-        }
-        other => return Err(format!("unknown scenario '{other}'")),
-    };
+    let heads = heads_for_spec(spec_name)?;
+    let def = registry::resolve(scenario)?;
+    let mut e = registry::instantiate(def, obs, &heads)?;
     // Give each instance an independent starting seed.
     e.reset(rng.next_u64());
     Ok(e)
@@ -212,6 +220,20 @@ mod tests {
         assert_eq!(obs_for_spec("arcade").unwrap().len(), 84 * 84 * 4);
         assert_eq!(obs_for_spec("tiny").unwrap().len(), 24 * 32 * 3);
         assert!(obs_for_spec("nope").is_err());
+    }
+
+    #[test]
+    fn make_resolves_through_registry() {
+        let mut rng = Rng::new(1);
+        assert!(make("doomish", "battle?monsters=3", &mut rng).is_ok());
+        assert!(make("tiny", "basic", &mut rng).is_ok());
+        // duel needs the full 7-head layout: clear up-front error.
+        assert!(make("doomish", "duel", &mut rng).is_err());
+        assert!(make("doomish_full", "duel", &mut rng).is_ok());
+        assert!(make("doomish", "nope", &mut rng).is_err());
+        // spec/scenario head mismatch across substrates is also up-front.
+        assert!(make("doomish", "breakout", &mut rng).is_err());
+        assert!(make("arcade", "breakout", &mut rng).is_ok());
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! Following the paper (§A.2) the multitask trainer gives every task the
 //! same amount of *compute* (one rollout-worker share per task), not the
 //! same number of samples.
+//!
+//! Each suite task is also registered individually in the scenario
+//! registry (`env::registry`) under its own name, and the trainer's
+//! per-worker alias `gridlab_task<N>` resolves through the registry too —
+//! so `repro train --spec gridlab --scenario avoid_poison?bad=20` works
+//! like any other scenario.
 
 use super::gridlab::Task;
 

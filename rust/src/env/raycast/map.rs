@@ -128,15 +128,21 @@ impl GridMap {
             }
         }
         // Vary wall textures by position for visual structure.
-        for y in 0..gh {
-            for x in 0..gw {
-                if m.cell(x, y) == 1 {
+        m.texture_walls();
+        m
+    }
+
+    /// Vary plain (texture-1) walls by position for visual structure; the
+    /// one texturing scheme every generator (maze, BSP, caves) shares.
+    pub fn texture_walls(&mut self) {
+        for y in 0..self.h {
+            for x in 0..self.w {
+                if self.cell(x, y) == 1 {
                     let tex = 1 + ((x / 3 + y / 3) % 4) as u8;
-                    m.set(x, y, tex);
+                    self.set(x, y, tex);
                 }
             }
         }
-        m
     }
 
     #[inline]

@@ -1,0 +1,730 @@
+//! Procedural map generation: the content half of the scenario registry.
+//!
+//! Three generator families beyond the recursive-backtracker maze in
+//! `map.rs`:
+//!
+//! * [`bsp_rooms`] — rooms-and-corridors via binary space partition
+//!   (deadly-corridor / battle-style layouts), optionally door-gated.
+//! * [`caves`] — cellular-automata caverns (organic battle arenas).
+//! * [`arena`] — mirror-symmetric duel arenas with paired spawn points and
+//!   mirrored pickup spots, so self-play matches start fair.
+//!
+//! Every generator is fully seeded (a fresh map per episode comes for free
+//! from the episode seed stream) and connectivity-validated: a flood fill
+//! over walkable cells runs before the map is returned, and disconnected
+//! pockets are either re-joined ([`ensure_connected`]) or filled in
+//! (`caves` keeps only the largest cavern).  Doors count as walkable for
+//! connectivity — they are openable, walls are not.
+
+use crate::util::Rng;
+
+use super::map::{GridMap, DOOR_CLOSED, DOOR_OPEN, EMPTY};
+
+/// A generated map plus placement hints the scenario layer may use.
+#[derive(Clone, Debug)]
+pub struct GeneratedMap {
+    pub grid: GridMap,
+    /// Suggested player spawn points (mirror-symmetric pairs for arenas,
+    /// room centers for BSP).  May be empty: callers fall back to
+    /// `GridMap::random_spawn`.
+    pub spawns: Vec<(f32, f32)>,
+    /// Suggested pickup spots.  For arenas these come as consecutive
+    /// mirrored pairs, so placing an even count of a pickup kind in list
+    /// order yields a symmetric (fair) item layout.
+    pub pickups: Vec<(f32, f32)>,
+}
+
+impl GeneratedMap {
+    pub fn plain(grid: GridMap) -> Self {
+        GeneratedMap { grid, spawns: Vec::new(), pickups: Vec::new() }
+    }
+}
+
+/// Where a scenario's per-episode map comes from.  Declarative, so the
+/// registry can print it and `?key=value` overrides can retune it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MapSource {
+    /// Hand-authored fixed layout.
+    Ascii(&'static str),
+    /// Recursive-backtracker maze (`GridMap::maze`).
+    Maze { mw: usize, mh: usize, scale: usize, loop_p: f32 },
+    /// BSP rooms-and-corridors.
+    BspRooms { w: usize, h: usize, min_room: usize, doors: bool },
+    /// Cellular-automata caves.
+    Caves { w: usize, h: usize, fill_p: f32, steps: usize },
+    /// Mirror-symmetric duel arena.
+    Arena { w: usize, h: usize, pillars: usize, doors: bool },
+}
+
+impl MapSource {
+    /// Build one map instance from the given seed stream.
+    pub fn build(&self, rng: &mut Rng) -> GeneratedMap {
+        match *self {
+            MapSource::Ascii(art) => GeneratedMap::plain(GridMap::from_ascii(art)),
+            MapSource::Maze { mw, mh, scale, loop_p } => {
+                GeneratedMap::plain(GridMap::maze(mw, mh, scale, loop_p, rng))
+            }
+            MapSource::BspRooms { w, h, min_room, doors } => {
+                bsp_rooms(w, h, min_room, doors, rng)
+            }
+            MapSource::Caves { w, h, fill_p, steps } => caves(w, h, fill_p, steps, rng),
+            MapSource::Arena { w, h, pillars, doors } => arena(w, h, pillars, doors, rng),
+        }
+    }
+
+    /// Short tag for registry listings.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            MapSource::Ascii(_) => "ascii",
+            MapSource::Maze { .. } => "maze",
+            MapSource::BspRooms { .. } => "bsp",
+            MapSource::Caves { .. } => "caves",
+            MapSource::Arena { .. } => "arena",
+        }
+    }
+
+    /// True when every episode draws a fresh layout from the seed stream.
+    pub fn is_procedural(&self) -> bool {
+        !matches!(self, MapSource::Ascii(_))
+    }
+
+    /// True when maps from this source can contain closed doors — which
+    /// only the 7-head layout's interact head can open.
+    pub fn has_doors(&self) -> bool {
+        match self {
+            MapSource::Ascii(art) => art.contains('D'),
+            MapSource::BspRooms { doors, .. } | MapSource::Arena { doors, .. } => *doors,
+            _ => false,
+        }
+    }
+
+    /// Apply a `size=WxH` override (maze: logical cells, others: grid cells).
+    pub fn set_size(&mut self, val: &str) -> Result<(), String> {
+        let (pw, ph) = crate::env::params::size(val)?;
+        match self {
+            MapSource::Ascii(_) => {
+                return Err("fixed ascii maps have no size parameter".to_string())
+            }
+            MapSource::Maze { mw, mh, .. } => {
+                *mw = pw;
+                *mh = ph;
+            }
+            MapSource::BspRooms { w, h, .. }
+            | MapSource::Caves { w, h, .. }
+            | MapSource::Arena { w, h, .. } => {
+                *w = pw;
+                *h = ph;
+            }
+        }
+        Ok(())
+    }
+
+    /// Default-sized instance of each family — the single source of truth
+    /// shared by the registry entries and the `map=` override.
+    pub fn default_maze() -> MapSource {
+        MapSource::Maze { mw: 6, mh: 5, scale: 3, loop_p: 0.3 }
+    }
+
+    pub fn default_bsp() -> MapSource {
+        MapSource::BspRooms { w: 27, h: 19, min_room: 4, doors: false }
+    }
+
+    pub fn default_caves() -> MapSource {
+        MapSource::Caves { w: 27, h: 19, fill_p: 0.44, steps: 4 }
+    }
+
+    pub fn default_arena() -> MapSource {
+        MapSource::Arena { w: 21, h: 15, pillars: 10, doors: true }
+    }
+
+    /// A `map=<kind>` override: replace the source with a default-sized
+    /// generator of the named family (then `size=`/`doors=`... retune it).
+    pub fn switched(kind: &str) -> Result<MapSource, String> {
+        Ok(match kind {
+            "maze" => MapSource::default_maze(),
+            "bsp" => MapSource::default_bsp(),
+            "caves" => MapSource::default_caves(),
+            "arena" => MapSource::default_arena(),
+            other => {
+                return Err(format!(
+                    "unknown map kind '{other}' (maze|bsp|caves|arena)"
+                ))
+            }
+        })
+    }
+}
+
+/// Walkable for connectivity purposes: doors are openable, walls are not.
+#[inline]
+fn walkable(c: u8) -> bool {
+    c == EMPTY || c == DOOR_CLOSED || c == DOOR_OPEN
+}
+
+/// True iff the walkable cells form exactly one component (4-connectivity;
+/// false for a map with no walkable cells at all).
+pub fn is_connected(m: &GridMap) -> bool {
+    components(m).len() == 1
+}
+
+/// (size, member cells) of one walkable component.
+type Component = (usize, Vec<(usize, usize)>);
+
+/// Label walkable components; returns the cell sets, largest first.
+fn components(m: &GridMap) -> Vec<Component> {
+    let mut seen = vec![false; m.w * m.h];
+    let mut comps: Vec<Component> = Vec::new();
+    for sy in 0..m.h {
+        for sx in 0..m.w {
+            if !walkable(m.cell(sx, sy)) || seen[sy * m.w + sx] {
+                continue;
+            }
+            let mut cells = Vec::new();
+            let mut stack = vec![(sx, sy)];
+            seen[sy * m.w + sx] = true;
+            while let Some((x, y)) = stack.pop() {
+                cells.push((x, y));
+                for (dx, dy) in [(1i64, 0i64), (-1, 0), (0, 1), (0, -1)] {
+                    let nx = x as i64 + dx;
+                    let ny = y as i64 + dy;
+                    if nx < 0 || ny < 0 || nx as usize >= m.w || ny as usize >= m.h {
+                        continue;
+                    }
+                    let (nx, ny) = (nx as usize, ny as usize);
+                    if walkable(m.cell(nx, ny)) && !seen[ny * m.w + nx] {
+                        seen[ny * m.w + nx] = true;
+                        stack.push((nx, ny));
+                    }
+                }
+            }
+            comps.push((cells.len(), cells));
+        }
+    }
+    comps.sort_by(|a, b| b.0.cmp(&a.0));
+    comps
+}
+
+/// Join every walkable component to the largest one by carving straight
+/// L-corridors between component representatives.  Deterministic, and
+/// guaranteed to terminate (see the loop invariant below).
+pub fn ensure_connected(m: &mut GridMap) {
+    // Carving only removes walls, so every pass strictly reduces the
+    // component count: the loop terminates for any map size (`?size=`
+    // overrides are unbounded, so no fixed pass budget is safe).
+    loop {
+        let comps = components(m);
+        if comps.len() <= 1 {
+            return;
+        }
+        let (_, main) = &comps[0];
+        let (_, other) = &comps[1];
+        let a = main[main.len() / 2];
+        let b = other[other.len() / 2];
+        carve_l_corridor(m, a, b, false, &mut Rng::new(0));
+    }
+}
+
+/// Farthest walkable cell (BFS hops over EMPTY cells only, so a goal is
+/// never placed behind a closed door) from the cell containing `(fx, fy)`.
+pub fn farthest_cell(m: &GridMap, fx: f32, fy: f32) -> (f32, f32) {
+    let start = (fx as usize, fy as usize);
+    let mut dist = vec![usize::MAX; m.w * m.h];
+    let mut queue = std::collections::VecDeque::new();
+    if start.0 < m.w && start.1 < m.h && m.cell(start.0, start.1) == EMPTY {
+        dist[start.1 * m.w + start.0] = 0;
+        queue.push_back(start);
+    }
+    let mut best = (start, 0usize);
+    while let Some((x, y)) = queue.pop_front() {
+        let d = dist[y * m.w + x];
+        if d > best.1 {
+            best = ((x, y), d);
+        }
+        for (dx, dy) in [(1i64, 0i64), (-1, 0), (0, 1), (0, -1)] {
+            let nx = x as i64 + dx;
+            let ny = y as i64 + dy;
+            if nx < 0 || ny < 0 || nx as usize >= m.w || ny as usize >= m.h {
+                continue;
+            }
+            let (nx, ny) = (nx as usize, ny as usize);
+            if m.cell(nx, ny) == EMPTY && dist[ny * m.w + nx] == usize::MAX {
+                dist[ny * m.w + nx] = d + 1;
+                queue.push_back((nx, ny));
+            }
+        }
+    }
+    ((best.0).0 as f32 + 0.5, (best.0).1 as f32 + 0.5)
+}
+
+// ---------------------------------------------------------------- BSP rooms
+
+#[derive(Clone, Copy, Debug)]
+struct Rect {
+    x: usize,
+    y: usize,
+    w: usize,
+    h: usize,
+}
+
+impl Rect {
+    fn center(&self) -> (usize, usize) {
+        (self.x + self.w / 2, self.y + self.h / 2)
+    }
+}
+
+/// Rooms-and-corridors via binary space partition: recursively split the
+/// interior, place one room per leaf, chain-connect rooms with L-corridors.
+/// With `doors` on, some corridor chokepoints get a closed door.
+pub fn bsp_rooms(
+    w: usize,
+    h: usize,
+    min_room: usize,
+    doors: bool,
+    rng: &mut Rng,
+) -> GeneratedMap {
+    let w = w.max(13);
+    let h = h.max(9);
+    // Rooms must fit the interior even when the caller asks for huge ones.
+    let min_room = min_room.clamp(2, 8).min(w - 2).min(h - 2);
+    let mut m = GridMap::new(w, h, 1);
+
+    let mut leaves = Vec::new();
+    split_rect(
+        &mut leaves,
+        Rect { x: 1, y: 1, w: w - 2, h: h - 2 },
+        min_room + 1,
+        rng,
+    );
+
+    // One room per leaf, with a margin inside the leaf when it fits.
+    let mut rooms = Vec::with_capacity(leaves.len());
+    for leaf in &leaves {
+        let rw = min_room + rng.below(leaf.w - min_room + 1);
+        let rh = min_room + rng.below(leaf.h - min_room + 1);
+        let rx = leaf.x + rng.below(leaf.w - rw + 1);
+        let ry = leaf.y + rng.below(leaf.h - rh + 1);
+        let room = Rect { x: rx, y: ry, w: rw, h: rh };
+        for y in room.y..room.y + room.h {
+            for x in room.x..room.x + room.w {
+                m.set(x, y, EMPTY);
+            }
+        }
+        rooms.push(room);
+    }
+
+    // Chain-connect rooms left-to-right (guarantees one walkable component).
+    rooms.sort_by_key(|r| (r.center().0, r.center().1));
+    for i in 1..rooms.len() {
+        carve_l_corridor(&mut m, rooms[i - 1].center(), rooms[i].center(), doors, rng);
+    }
+    // A later corridor can carve away an earlier door's chokepoint walls;
+    // demote any door that no longer gates a passage.
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            if m.cell(x, y) == DOOR_CLOSED {
+                let gates_h = !walkable(m.cell(x, y - 1)) && !walkable(m.cell(x, y + 1));
+                let gates_v = !walkable(m.cell(x - 1, y)) && !walkable(m.cell(x + 1, y));
+                if !gates_h && !gates_v {
+                    m.set(x, y, EMPTY);
+                }
+            }
+        }
+    }
+    m.texture_walls();
+    ensure_connected(&mut m);
+
+    let spawns = rooms
+        .iter()
+        .map(|r| (r.center().0 as f32 + 0.5, r.center().1 as f32 + 0.5))
+        .collect();
+    let mut pickups = Vec::with_capacity(rooms.len());
+    for r in &rooms {
+        let px = r.x + rng.below(r.w);
+        let py = r.y + rng.below(r.h);
+        pickups.push((px as f32 + 0.5, py as f32 + 0.5));
+    }
+    GeneratedMap { grid: m, spawns, pickups }
+}
+
+fn split_rect(out: &mut Vec<Rect>, r: Rect, min_leaf: usize, rng: &mut Rng) {
+    let can_h = r.w >= 2 * min_leaf + 1;
+    let can_v = r.h >= 2 * min_leaf + 1;
+    if !can_h && !can_v {
+        out.push(r);
+        return;
+    }
+    // Prefer splitting the long axis so rooms stay roughly square.
+    let horiz = if can_h && can_v { r.w >= r.h || rng.chance(0.25) } else { can_h };
+    if horiz {
+        let cut = min_leaf + rng.below(r.w - 2 * min_leaf);
+        split_rect(out, Rect { x: r.x, y: r.y, w: cut, h: r.h }, min_leaf, rng);
+        split_rect(
+            out,
+            Rect { x: r.x + cut + 1, y: r.y, w: r.w - cut - 1, h: r.h },
+            min_leaf,
+            rng,
+        );
+    } else {
+        let cut = min_leaf + rng.below(r.h - 2 * min_leaf);
+        split_rect(out, Rect { x: r.x, y: r.y, w: r.w, h: cut }, min_leaf, rng);
+        split_rect(
+            out,
+            Rect { x: r.x, y: r.y + cut + 1, w: r.w, h: r.h - cut - 1 },
+            min_leaf,
+            rng,
+        );
+    }
+}
+
+/// Carve an axis-aligned L corridor between two interior points.  With
+/// `doors` on, at most one carved chokepoint (wall above and below / left
+/// and right) per corridor becomes a closed door.
+fn carve_l_corridor(
+    m: &mut GridMap,
+    a: (usize, usize),
+    b: (usize, usize),
+    doors: bool,
+    rng: &mut Rng,
+) {
+    let mid = if rng.chance(0.5) { (b.0, a.1) } else { (a.0, b.1) };
+    let mut door_budget = if doors && rng.chance(0.6) { 1 } else { 0 };
+    carve_line(m, a, mid, &mut door_budget, rng);
+    carve_line(m, mid, b, &mut door_budget, rng);
+}
+
+fn carve_line(
+    m: &mut GridMap,
+    from: (usize, usize),
+    to: (usize, usize),
+    door_budget: &mut usize,
+    rng: &mut Rng,
+) {
+    let horizontal = from.1 == to.1;
+    let (lo, hi, fixed) = if horizontal {
+        (from.0.min(to.0), from.0.max(to.0), from.1)
+    } else {
+        (from.1.min(to.1), from.1.max(to.1), from.0)
+    };
+    for v in lo..=hi {
+        let (x, y) = if horizontal { (v, fixed) } else { (fixed, v) };
+        if m.cell(x, y) != EMPTY {
+            // A chokepoint has solid cells on both perpendicular sides and
+            // sits strictly inside the border — the natural door spot.
+            let choke = x >= 1
+                && y >= 1
+                && x + 1 < m.w
+                && y + 1 < m.h
+                && if horizontal {
+                    !walkable(m.cell(x, y - 1)) && !walkable(m.cell(x, y + 1))
+                } else {
+                    !walkable(m.cell(x - 1, y)) && !walkable(m.cell(x + 1, y))
+                };
+            if *door_budget > 0 && choke && rng.chance(0.5) {
+                m.set(x, y, DOOR_CLOSED);
+                *door_budget -= 1;
+            } else {
+                m.set(x, y, EMPTY);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------- caves
+
+/// Cellular-automata caves: random fill, a few smoothing steps (a cell is
+/// wall when ≥5 of its 3x3 neighborhood are walls), then keep only the
+/// largest cavern so the result is connected by construction.
+pub fn caves(w: usize, h: usize, fill_p: f32, steps: usize, rng: &mut Rng) -> GeneratedMap {
+    let w = w.max(11);
+    let h = h.max(9);
+    let fill_p = fill_p.clamp(0.05, 0.7);
+    let mut wall = vec![false; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            wall[y * w + x] =
+                x == 0 || y == 0 || x == w - 1 || y == h - 1 || rng.chance(fill_p);
+        }
+    }
+    let mut next = wall.clone();
+    for _ in 0..steps.min(8) {
+        for y in 1..h - 1 {
+            for x in 1..w - 1 {
+                let mut n = 0;
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        if wall[(y + dy - 1) * w + (x + dx - 1)] {
+                            n += 1;
+                        }
+                    }
+                }
+                next[y * w + x] = n >= 5;
+            }
+        }
+        std::mem::swap(&mut wall, &mut next);
+    }
+    let mut m = GridMap::new(w, h, 1);
+    for y in 0..h {
+        for x in 0..w {
+            if !wall[y * w + x] {
+                m.set(x, y, EMPTY);
+            }
+        }
+    }
+    // Keep only the largest cavern; fill the rest back in.
+    let comps = components(&m);
+    let min_open = (w * h) / 6;
+    match comps.first() {
+        Some((size, _)) if *size >= min_open.max(12) => {
+            for (_, other) in comps.iter().skip(1) {
+                for &(x, y) in other {
+                    m.set(x, y, 1);
+                }
+            }
+        }
+        _ => {
+            // Degenerate smoothing outcome: carve a fallback chamber.
+            for y in h / 4..h - h / 4 {
+                for x in w / 4..w - w / 4 {
+                    m.set(x, y, EMPTY);
+                }
+            }
+        }
+    }
+    // No-op on the largest-cavern path; joins any leftover pockets to the
+    // fallback chamber on the degenerate path.
+    ensure_connected(&mut m);
+    m.texture_walls();
+    GeneratedMap::plain(m)
+}
+
+// -------------------------------------------------------------------- arena
+
+/// Mirror-symmetric duel arena: pillars are placed in the left half and
+/// mirrored across the vertical axis (each placement is rejected if it
+/// would disconnect the floor), an optional door-gated center wall splits
+/// the halves, and spawn/pickup hints come in mirrored pairs so both
+/// players face identical geometry and item access.
+pub fn arena(w: usize, h: usize, pillars: usize, doors: bool, rng: &mut Rng) -> GeneratedMap {
+    let w = w.max(13) | 1; // odd width: a real center column to mirror across
+    let h = h.max(9);
+    let mut m = GridMap::new(w, h, 1);
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            m.set(x, y, EMPTY);
+        }
+    }
+    let half = w / 2;
+
+    // Optional center wall with a door per gap, splitting the arena into two
+    // mirror halves joined through openable doors plus open flanks.
+    if doors {
+        let gap = 1 + rng.below(h / 3);
+        for y in 1 + gap..h - 1 - gap {
+            m.set(half, y, 1);
+        }
+        let door_y = 1 + gap + rng.below((h - 2 - 2 * gap).max(1));
+        m.set(half, door_y, DOOR_CLOSED);
+    }
+
+    // Pillars: random blocks in the left half (clear of the spawn column),
+    // mirrored; reject any placement that disconnects the floor.  Oversized
+    // draws are clamped to what fits so a small arena still spends its full
+    // pillar budget rather than bailing on the first bad draw.
+    for _ in 0..pillars {
+        if half < 6 || h < 6 {
+            break; // not even a 1x1 pillar fits clear of the spawn columns
+        }
+        let bw = (1 + rng.below(2)).min(half - 5);
+        let bh = (1 + rng.below(3)).min(h - 5);
+        let bx = 4 + rng.below(half - bw - 4);
+        let by = 2 + rng.below(h - 3 - bh);
+        let tex = 2 + rng.below(4) as u8;
+        let mut placed = Vec::new();
+        for y in by..by + bh {
+            for x in bx..bx + bw {
+                let mx = w - 1 - x;
+                if m.cell(x, y) == EMPTY && m.cell(mx, y) == EMPTY {
+                    m.set(x, y, tex);
+                    m.set(mx, y, tex);
+                    placed.push((x, y));
+                }
+            }
+        }
+        if !is_connected(&m) {
+            for (x, y) in placed {
+                m.set(x, y, EMPTY);
+                m.set(w - 1 - x, y, EMPTY);
+            }
+        }
+    }
+
+    // Spawn hints: mirrored pairs along the flank columns.
+    let mut spawns = Vec::new();
+    for frac in [2usize, 3, 1] {
+        let y = (h * frac) / 4;
+        let y = y.clamp(1, h - 2) as f32 + 0.5;
+        spawns.push((2.5, y));
+        spawns.push((w as f32 - 2.5, y));
+    }
+
+    // Pickup hints: mirrored pairs sampled from empty left-half cells, then
+    // a couple of contested spots on the center column.
+    let mut left_empty: Vec<(usize, usize)> = Vec::new();
+    for y in 1..h - 1 {
+        for x in 3..half {
+            if m.cell(x, y) == EMPTY {
+                left_empty.push((x, y));
+            }
+        }
+    }
+    rng.shuffle(&mut left_empty);
+    let mut pickups = Vec::new();
+    for &(x, y) in left_empty.iter().take(8) {
+        pickups.push((x as f32 + 0.5, y as f32 + 0.5));
+        pickups.push((w as f32 - 1.0 - x as f32 + 0.5, y as f32 + 0.5));
+    }
+    for y in 1..h - 1 {
+        if m.cell(half, y) == EMPTY && pickups.len() < 20 && y % 3 == 0 {
+            pickups.push((half as f32 + 0.5, y as f32 + 0.5));
+        }
+    }
+    ensure_connected(&mut m);
+    GeneratedMap { grid: m, spawns, pickups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_count(m: &GridMap) -> usize {
+        m.empty_cells().len()
+    }
+
+    #[test]
+    fn bsp_connected_and_roomy() {
+        for seed in 0..16 {
+            let mut rng = Rng::new(seed);
+            let g = bsp_rooms(33, 19, 4, false, &mut rng);
+            assert!(is_connected(&g.grid), "seed {seed} disconnected");
+            assert!(empty_count(&g.grid) > 40, "seed {seed} too cramped");
+            assert!(!g.spawns.is_empty());
+        }
+    }
+
+    #[test]
+    fn bsp_doors_sit_on_chokepoints() {
+        let mut found_any = false;
+        for seed in 0..24 {
+            let mut rng = Rng::new(seed);
+            let g = bsp_rooms(33, 19, 4, true, &mut rng);
+            assert!(is_connected(&g.grid), "doors must stay openable: seed {seed}");
+            for y in 0..g.grid.h {
+                for x in 0..g.grid.w {
+                    if g.grid.cell(x, y) == DOOR_CLOSED {
+                        found_any = true;
+                        let horiz_ok = !walkable(g.grid.cell(x, y - 1))
+                            && !walkable(g.grid.cell(x, y + 1));
+                        let vert_ok = !walkable(g.grid.cell(x - 1, y))
+                            && !walkable(g.grid.cell(x + 1, y));
+                        assert!(horiz_ok || vert_ok, "floating door at {x},{y}");
+                    }
+                }
+            }
+        }
+        assert!(found_any, "no door generated across 24 seeds");
+    }
+
+    #[test]
+    fn caves_connected_with_open_floor() {
+        for seed in 0..16 {
+            let mut rng = Rng::new(seed + 100);
+            let g = caves(27, 19, 0.44, 4, &mut rng);
+            assert!(is_connected(&g.grid), "seed {seed} disconnected");
+            assert!(empty_count(&g.grid) >= 12, "seed {seed} too small");
+        }
+    }
+
+    #[test]
+    fn arena_is_mirror_symmetric() {
+        for seed in 0..16 {
+            let mut rng = Rng::new(seed + 7);
+            let g = arena(21, 15, 10, false, &mut rng);
+            let m = &g.grid;
+            assert!(is_connected(m), "seed {seed} disconnected");
+            for y in 0..m.h {
+                for x in 0..m.w {
+                    let a = m.cell(x, y) == EMPTY;
+                    let b = m.cell(m.w - 1 - x, y) == EMPTY;
+                    assert_eq!(a, b, "asymmetry at {x},{y} (seed {seed})");
+                }
+            }
+            // Spawn + pickup hints come in mirrored pairs.
+            assert!(g.spawns.len() >= 2);
+            let (lx, ly) = g.spawns[0];
+            let (rx, ry) = g.spawns[1];
+            assert_eq!(ly, ry);
+            assert!((lx + rx - m.w as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn arena_doors_reachable() {
+        for seed in 0..8 {
+            let mut rng = Rng::new(seed + 31);
+            let g = arena(21, 15, 8, true, &mut rng);
+            assert!(is_connected(&g.grid), "seed {seed} door split the arena");
+        }
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let pair = |f: &dyn Fn(&mut Rng) -> GeneratedMap| {
+            let a = f(&mut Rng::new(5));
+            let b = f(&mut Rng::new(5));
+            for y in 0..a.grid.h {
+                for x in 0..a.grid.w {
+                    assert_eq!(a.grid.cell(x, y), b.grid.cell(x, y));
+                }
+            }
+            assert_eq!(a.spawns, b.spawns);
+            assert_eq!(a.pickups, b.pickups);
+        };
+        pair(&|rng| bsp_rooms(27, 19, 4, true, rng));
+        pair(&|rng| caves(27, 19, 0.44, 4, rng));
+        pair(&|rng| arena(21, 15, 10, true, rng));
+    }
+
+    #[test]
+    fn ensure_connected_joins_pockets() {
+        let mut m = GridMap::from_ascii(
+            "#########\n\
+             #..#....#\n\
+             #..#....#\n\
+             #########",
+        );
+        assert!(!is_connected(&m));
+        ensure_connected(&mut m);
+        assert!(is_connected(&m));
+    }
+
+    #[test]
+    fn farthest_cell_is_far() {
+        let m = GridMap::from_ascii(
+            "##########\n\
+             #........#\n\
+             ##########",
+        );
+        let (x, _) = farthest_cell(&m, 1.5, 1.5);
+        assert!(x > 7.0, "farthest cell x={x}");
+    }
+
+    #[test]
+    fn map_source_overrides() {
+        let mut s = MapSource::Maze { mw: 5, mh: 4, scale: 2, loop_p: 0.1 };
+        s.set_size("11x9").unwrap();
+        assert_eq!(s, MapSource::Maze { mw: 11, mh: 9, scale: 2, loop_p: 0.1 });
+        assert!(s.set_size("11").is_err());
+        assert!(MapSource::Ascii("###").set_size("5x5").is_err());
+        assert!(MapSource::switched("caves").unwrap().kind_name() == "caves");
+        assert!(MapSource::switched("warp").is_err());
+    }
+}

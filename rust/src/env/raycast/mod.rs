@@ -1,12 +1,17 @@
 //! The VizDoom-substitute: a from-scratch egocentric 3D engine.
 //!
 //! * [`map`] — grid maps: ASCII layouts + procedural mazes.
+//! * [`mapgen`] — procedural generators: BSP rooms-and-corridors, cellular
+//!   caves, mirror-symmetric duel arenas (seeded + connectivity-validated).
 //! * [`world`] — simulation: players, monsters, hitscan combat, pickups,
 //!   doors, scripted-bot AI, per-tick event stream.
 //! * [`render`] — DDA raycast renderer with sprites, depth buffer, HUD.
-//! * [`scenarios`] — the paper's nine scenarios wired up as [`crate::env::Env`]s.
+//! * [`scenarios`] — the declarative scenario runtime ([`scenarios::RaycastDef`]
+//!   interpreted per episode); the definitions live in
+//!   [`crate::env::registry`].
 
 pub mod map;
+pub mod mapgen;
 pub mod render;
 pub mod scenarios;
 pub mod world;

@@ -1,12 +1,13 @@
-//! Scenario definitions: the paper's VizDoom environments rebuilt on the
-//! raycast engine (§4.3 and Fig 6/7/8).
+//! The raycast scenario runtime: a declarative [`RaycastDef`] (map source,
+//! monster/pickup tables, loadout, episode rules) interpreted by
+//! [`RaycastEnv`] each episode.
 //!
-//! Single-player: `basic`, `defend_center`, `defend_line`,
-//! `health_gathering`, `my_way_home`, `battle`, `battle2`, plus
-//! `duel_bots`/`deathmatch_bots` (agent vs scripted bots, the paper's
-//! single-player match modes).  Multi-agent: `duel` (1v1 self-play) and
-//! `deathmatch` (2 agents + 2 bots) for the population/self-play
-//! experiments.
+//! The definitions themselves live in the scenario registry
+//! (`crate::env::registry`): the paper's VizDoom suite (`basic` →
+//! `battle`/`battle2` → `duel`/`deathmatch`, §4.3), the remaining standard
+//! scenarios (`deadly_corridor`, `predict_position`, `take_cover`,
+//! `health_gathering_supreme`), and the procedural `*_gen` family that
+//! draws a fresh map per episode from the seed stream.
 //!
 //! Reward structures follow appendix A.3: game score (kills/frags) plus
 //! small shaping for pickups and damage, penalties for dying and for
@@ -15,34 +16,12 @@
 use crate::env::{AgentStep, Env, EnvSpec, ObsSpec};
 use crate::util::Rng;
 
-use super::map::GridMap;
+use super::map::{GridMap, EMPTY};
+use super::mapgen::{self, MapSource};
 use super::render::{render, RenderScratch};
 use super::world::{
     Entity, EntityKind, Intent, MonsterKind, Player, World, WorldCfg,
 };
-
-/// Single-player scenario kinds.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Kind {
-    Basic,
-    DefendCenter,
-    DefendLine,
-    HealthGathering,
-    MyWayHome,
-    Battle,
-    Battle2,
-    DuelBots,
-    DeathmatchBots,
-}
-
-/// Multi-agent scenario kinds (self-play experiments).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum MultiKind {
-    /// 1v1: two policy-controlled players.
-    Duel,
-    /// 2 policy players + 2 scripted bots.
-    Deathmatch,
-}
 
 /// Reward shaping weights (appendix A.3).
 #[derive(Clone, Copy, Debug)]
@@ -84,15 +63,16 @@ impl Default for Rewards {
     }
 }
 
+/// Episode rules: when it ends, who plays, what is rewarded.
 #[derive(Clone, Debug)]
 pub struct ScenarioCfg {
     pub kind_name: &'static str,
     pub episode_ticks: u32,
     pub rewards: Rewards,
     pub end_on_death: bool,
-    /// Episode ends when every monster is dead (basic).
+    /// Episode ends when every monster is dead (basic, predict_position).
     pub end_on_clear: bool,
-    /// Episode ends on goal-object pickup (my_way_home).
+    /// Episode ends on goal-object pickup (my_way_home, deadly_corridor).
     pub end_on_goal: bool,
     /// Player cannot translate (defend_center).
     pub frozen_position: bool,
@@ -101,16 +81,246 @@ pub struct ScenarioCfg {
     pub n_bots: usize,
 }
 
-/// Decode the per-spec multi-discrete action heads into an [`Intent`].
+impl ScenarioCfg {
+    /// Baseline single-agent config; the registry tweaks from here.
+    pub fn new(name: &'static str) -> Self {
+        ScenarioCfg {
+            kind_name: name,
+            episode_ticks: 2100,
+            rewards: Rewards::default(),
+            end_on_death: true,
+            end_on_clear: false,
+            end_on_goal: false,
+            frozen_position: false,
+            heavy_render: false,
+            n_agents: 1,
+            n_bots: 0,
+        }
+    }
+}
+
+/// Where the policy-controlled players start each episode.
+#[derive(Clone, Copy, Debug)]
+pub enum PlayerPlacement {
+    /// Anywhere walkable, random heading.
+    Random,
+    /// Against the west wall at a random height, facing east (basic,
+    /// corridor runs).  On generated maps that do not reach column 1 this
+    /// falls back to the westmost open column, keeping the task direction.
+    WestEdge,
+    /// The fixed west post (2.0, h/2) facing east (defend_line).
+    WestPost,
+    /// Map center; `heading` is fixed (defend_center faces its ring at
+    /// 0.0) or random when `None` (health_gathering).
+    Center { heading: Option<f32> },
+    /// Generator spawn hints when available (mirrored arena pairs),
+    /// otherwise random spawns at least this far from player 0.
+    Spread(f32),
+}
+
+/// Where monsters start.
+#[derive(Clone, Copy, Debug)]
+pub enum MonsterPlacement {
+    /// Anywhere walkable, at least `avoid_player` from agent 0 (0 = anywhere).
+    Random { avoid_player: f32 },
+    /// Along the east wall: random y for a single monster, an even vertical
+    /// spread for more (basic, defend_line, take_cover, predict_position).
+    EastEdge,
+    /// A ring around the map center (defend_center).
+    Ring,
+}
+
+/// Monster population for one episode.
+#[derive(Clone, Copy, Debug)]
+pub struct MonsterTable {
+    pub n: usize,
+    /// Monster `i` is a hitscan shooter when
+    /// `(i + shooter_phase) % shooter_period == 0`; the rest are melee
+    /// chasers.  Period 0 = all chasers, 1 = all shooters.
+    pub shooter_period: usize,
+    /// Offsets which indices shoot (defend_line's shooters stand on the
+    /// odd rows, as in the pre-registry layout).
+    pub shooter_phase: usize,
+    pub placement: MonsterPlacement,
+    /// Override the per-kind default hit points (basic's one-shot target).
+    pub hp: Option<f32>,
+}
+
+impl MonsterTable {
+    pub fn none() -> Self {
+        MonsterTable {
+            n: 0,
+            shooter_period: 0,
+            shooter_phase: 0,
+            placement: MonsterPlacement::Random { avoid_player: 0.0 },
+            hp: None,
+        }
+    }
+}
+
+/// One pickup category: how many, and the respawn delay (0 = consumed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PickupSpec {
+    pub n: usize,
+    pub respawn: u32,
+}
+
+impl PickupSpec {
+    pub fn new(n: usize, respawn: u32) -> Self {
+        PickupSpec { n, respawn }
+    }
+}
+
+/// Item layout for one episode.  On generated arena maps the categories
+/// consume the generator's mirrored pickup spots in placement order —
+/// weapons, then armor, health, ammo — so even counts land symmetrically
+/// (fair self-play).
+#[derive(Clone, Debug, Default)]
+pub struct PickupTable {
+    pub health: PickupSpec,
+    pub ammo: PickupSpec,
+    pub armor: PickupSpec,
+    /// (weapon slot, spec) pairs.
+    pub weapons: Vec<(usize, PickupSpec)>,
+}
+
+/// Starting weapon/ammo.  The stock loadout is a pistol with 50 rounds;
+/// `pistol_ammo` governs the sidearm independently so a scenario handing
+/// out a special weapon can also disarm the fallback (predict_position's
+/// one rocket must stay one rocket even under the weapon-switch head).
+#[derive(Clone, Copy, Debug)]
+pub struct Loadout {
+    pub weapon: usize,
+    pub ammo: u32,
+    pub pistol_ammo: u32,
+}
+
+impl Default for Loadout {
+    fn default() -> Self {
+        Loadout { weapon: 1, ammo: 50, pistol_ammo: 50 }
+    }
+}
+
+/// Goal-object placement (the `end_on_goal` target).
+#[derive(Clone, Copy, Debug)]
+pub enum GoalCfg {
+    None,
+    Object {
+        /// Minimum distance from the player spawn (random placement).
+        min_player_dist: f32,
+        /// Place at the BFS-farthest reachable cell instead (deadly_corridor).
+        far: bool,
+    },
+}
+
+/// A complete declarative raycast scenario: everything [`RaycastEnv`] needs
+/// to stage an episode.  Registry entries are values of this type; the
+/// `name?key=value` override syntax mutates them via [`RaycastDef::set_param`].
+#[derive(Clone, Debug)]
+pub struct RaycastDef {
+    pub cfg: ScenarioCfg,
+    pub map: MapSource,
+    pub world: WorldCfg,
+    pub monsters: MonsterTable,
+    pub pickups: PickupTable,
+    pub loadout: Loadout,
+    pub goal: GoalCfg,
+    pub players: PlayerPlacement,
+    /// Match modes need the weapon-switch/interact heads: require the full
+    /// 7-head layout (doomish_full) at construction time.
+    pub needs_full_heads: bool,
+}
+
+impl RaycastDef {
+    /// Minimal valid definition; the registry fills in the interesting parts.
+    pub fn new(cfg: ScenarioCfg, map: MapSource) -> Self {
+        RaycastDef {
+            cfg,
+            map,
+            world: WorldCfg::default(),
+            monsters: MonsterTable::none(),
+            pickups: PickupTable::default(),
+            loadout: Loadout::default(),
+            goal: GoalCfg::None,
+            players: PlayerPlacement::Random,
+            needs_full_heads: false,
+        }
+    }
+
+    /// Apply one `key=value` override from the `name?key=value` syntax.
+    /// Count-like keys carry sanity caps: a typo'd huge value is a clean
+    /// parameter error, not an OOM-killed process.
+    pub fn set_param(&mut self, key: &str, val: &str) -> Result<(), String> {
+        use crate::env::params::{count, value as p};
+        match key {
+            "monsters" => self.monsters.n = count(key, val, 1024)?,
+            "hp" => self.monsters.hp = Some(p(key, val)?),
+            "respawn" => self.world.monster_respawn_ticks = p(key, val)?,
+            "health" => self.pickups.health.n = count(key, val, 1024)?,
+            "ammo" => self.pickups.ammo.n = count(key, val, 1024)?,
+            "armor" => self.pickups.armor.n = count(key, val, 1024)?,
+            "bots" => self.cfg.n_bots = count(key, val, 8)?,
+            "ticks" => self.cfg.episode_ticks = p::<u32>(key, val)?.max(1),
+            "map" => {
+                self.map = MapSource::switched(val)?;
+            }
+            "size" => self.map.set_size(val)?,
+            "scale" => match &mut self.map {
+                MapSource::Maze { scale, .. } => *scale = count(key, val, 8)?.max(1),
+                _ => return Err(format!("'{key}' only applies to maze maps")),
+            },
+            "loop_p" => match &mut self.map {
+                MapSource::Maze { loop_p, .. } => *loop_p = p(key, val)?,
+                _ => return Err(format!("'{key}' only applies to maze maps")),
+            },
+            "fill" => match &mut self.map {
+                MapSource::Caves { fill_p, .. } => *fill_p = p(key, val)?,
+                _ => return Err(format!("'{key}' only applies to caves maps")),
+            },
+            "doors" => match &mut self.map {
+                MapSource::BspRooms { doors, .. } | MapSource::Arena { doors, .. } => {
+                    *doors = p(key, val)?
+                }
+                _ => return Err(format!("'{key}' only applies to bsp/arena maps")),
+            },
+            "pillars" => match &mut self.map {
+                MapSource::Arena { pillars, .. } => *pillars = count(key, val, 256)?,
+                _ => return Err(format!("'{key}' only applies to arena maps")),
+            },
+            _ => {
+                return Err(format!(
+                    "unknown scenario parameter '{key}' (try monsters, hp, respawn, \
+                     health, ammo, armor, bots, ticks, map, size, scale, loop_p, \
+                     fill, doors, pillars)"
+                ))
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The discrete action-head layouts the decoder understands.
 ///
 /// Layouts (must match `env::heads_for_spec` and the python model specs):
-/// * 2 heads `[3,2]` (tiny): move/turn combo + attack.
-/// * 4 heads `[3,3,2,21]` (doomish): move, strafe, attack, aim.
-/// * 7 heads `[3,3,2,2,2,8,21]` (doomish_full): + sprint, interact, weapon.
-/// * 1 head `[7]` (gridlab): noop/fwd/back/strafeL/strafeR/turnL/turnR.
+/// * `[3, 2]` (tiny): move/turn combo + attack.
+/// * `[3, 3, 2, 21]` (doomish): move, strafe, attack, aim.
+/// * `[3, 3, 2, 2, 2, 8, 21]` (doomish_full): + sprint, interact, weapon.
+/// * `[7]` (gridlab): noop/fwd/back/strafeL/strafeR/turnL/turnR.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadLayout {
+    Tiny2,
+    Doomish4,
+    Full7,
+    Single7,
+}
+
+/// Decode the per-spec multi-discrete action heads into an [`Intent`].
+/// Construction fails on an unknown layout, so a bad registry entry or
+/// spec/scenario pairing errors at build time, not mid-rollout.
 #[derive(Clone, Copy, Debug)]
 pub struct ActionDecoder {
-    pub n_heads: usize,
+    layout: HeadLayout,
+    n_heads: usize,
 }
 
 /// Aim head: 21 discrete turn rates between -12.5 and +12.5 degrees in
@@ -118,6 +328,20 @@ pub struct ActionDecoder {
 #[inline]
 fn aim_to_radians(a: i32) -> f32 {
     ((a - 10) as f32) * 1.25f32.to_radians()
+}
+
+/// A random open cell in the westmost column that has any open floor —
+/// the WestEdge placement on generated maps whose layouts need not touch
+/// column 1.
+fn westmost_spawn(map: &GridMap, rng: &mut Rng) -> (f32, f32) {
+    for x in 0..map.w {
+        let open: Vec<usize> = (0..map.h).filter(|&y| map.cell(x, y) == EMPTY).collect();
+        if !open.is_empty() {
+            let y = open[rng.below(open.len())];
+            return (x as f32 + 0.5, y as f32 + 0.5);
+        }
+    }
+    map.random_spawn(rng, None)
 }
 
 #[inline]
@@ -131,12 +355,37 @@ fn tri(a: i32) -> f32 {
 }
 
 impl ActionDecoder {
+    pub fn new(heads: &[usize]) -> Result<ActionDecoder, String> {
+        let layout = match heads {
+            [3, 2] => HeadLayout::Tiny2,
+            [3, 3, 2, 21] => HeadLayout::Doomish4,
+            [3, 3, 2, 2, 2, 8, 21] => HeadLayout::Full7,
+            [7] => HeadLayout::Single7,
+            other => {
+                return Err(format!(
+                    "unsupported action-head layout {other:?}; the raycast engine \
+                     understands [3,2] (tiny), [3,3,2,21] (doomish), \
+                     [3,3,2,2,2,8,21] (doomish_full) and [7] (gridlab)"
+                ))
+            }
+        };
+        Ok(ActionDecoder { layout, n_heads: heads.len() })
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn layout(&self) -> HeadLayout {
+        self.layout
+    }
+
     pub fn decode(&self, a: &[i32]) -> Intent {
         debug_assert_eq!(a.len(), self.n_heads);
         let mut it = Intent::default();
-        match self.n_heads {
-            2 => {
-                // tiny: head0 0=turnL 1=turnR 2=forward; head1 attack
+        match self.layout {
+            HeadLayout::Tiny2 => {
+                // head0 0=turnL 1=turnR 2=forward; head1 attack
                 match a[0] {
                     0 => it.turn = -6.0f32.to_radians(),
                     1 => it.turn = 6.0f32.to_radians(),
@@ -144,46 +393,42 @@ impl ActionDecoder {
                 }
                 it.attack = a[1] == 1;
             }
-            4 => {
+            HeadLayout::Doomish4 => {
                 it.mv = tri(a[0]);
                 it.strafe = tri(a[1]);
                 it.attack = a[2] == 1;
                 it.turn = aim_to_radians(a[3]);
             }
-            7 => {
-                if self.n_heads == 7 {
-                    it.mv = tri(a[0]);
-                    it.strafe = tri(a[1]);
-                    it.attack = a[2] == 1;
-                    it.sprint = a[3] == 1;
-                    it.interact = a[4] == 1;
-                    if a[5] > 0 {
-                        it.weapon = Some(a[5] as usize);
-                    }
-                    it.turn = aim_to_radians(a[6]);
+            HeadLayout::Full7 => {
+                it.mv = tri(a[0]);
+                it.strafe = tri(a[1]);
+                it.attack = a[2] == 1;
+                it.sprint = a[3] == 1;
+                it.interact = a[4] == 1;
+                if a[5] > 0 {
+                    it.weapon = Some(a[5] as usize);
                 }
+                it.turn = aim_to_radians(a[6]);
             }
-            1 => {
-                match a[0] {
-                    1 => it.mv = 1.0,
-                    2 => it.mv = -1.0,
-                    3 => it.strafe = -1.0,
-                    4 => it.strafe = 1.0,
-                    5 => it.turn = -8.0f32.to_radians(),
-                    6 => it.turn = 8.0f32.to_radians(),
-                    _ => {}
-                }
-            }
-            n => panic!("unsupported action head layout: {n} heads"),
+            HeadLayout::Single7 => match a[0] {
+                1 => it.mv = 1.0,
+                2 => it.mv = -1.0,
+                3 => it.strafe = -1.0,
+                4 => it.strafe = 1.0,
+                5 => it.turn = -8.0f32.to_radians(),
+                6 => it.turn = 8.0f32.to_radians(),
+                _ => {}
+            },
         }
         it
     }
 }
 
-/// A raycast-engine scenario exposed through the [`Env`] trait.
+/// A raycast-engine scenario exposed through the [`Env`] trait: interprets
+/// a [`RaycastDef`] to stage each episode.
 pub struct RaycastEnv {
     spec: EnvSpec,
-    cfg: ScenarioCfg,
+    def: RaycastDef,
     world: World,
     scratch: RenderScratch,
     decoder: ActionDecoder,
@@ -193,410 +438,267 @@ pub struct RaycastEnv {
     tick_in_ep: u32,
     episode_seed: u64,
     intents: Vec<Intent>,
-    kind: KindOrMulti,
 }
-
-#[derive(Clone, Copy, Debug)]
-enum KindOrMulti {
-    Single(Kind),
-    Multi(MultiKind),
-}
-
-pub fn build(kind: Kind, obs: ObsSpec) -> RaycastEnv {
-    let cfg = single_cfg(kind);
-    RaycastEnv::new(KindOrMulti::Single(kind), cfg, obs)
-}
-
-pub fn build_multi(kind: MultiKind, obs: ObsSpec) -> RaycastEnv {
-    let cfg = multi_cfg(kind);
-    RaycastEnv::new(KindOrMulti::Multi(kind), cfg, obs)
-}
-
-fn single_cfg(kind: Kind) -> ScenarioCfg {
-    let mut c = ScenarioCfg {
-        kind_name: "?",
-        episode_ticks: 2100,
-        rewards: Rewards::default(),
-        end_on_death: true,
-        end_on_clear: false,
-        end_on_goal: false,
-        frozen_position: false,
-        heavy_render: false,
-        n_agents: 1,
-        n_bots: 0,
-    };
-    match kind {
-        Kind::Basic => {
-            c.kind_name = "basic";
-            c.episode_ticks = 300;
-            c.end_on_clear = true;
-            c.rewards.monster_kill = 100.0;
-            c.rewards.shot = -1.0; // discourage spray without burying the kill signal
-            c.rewards.step = -0.25; // -1 per 4-frameskip action, as VizDoom
-        }
-        Kind::DefendCenter => {
-            c.kind_name = "defend_center";
-            c.frozen_position = true;
-            c.rewards.monster_kill = 1.0;
-            c.rewards.death = -1.0;
-        }
-        Kind::DefendLine => {
-            c.kind_name = "defend_line";
-            c.rewards.monster_kill = 1.0;
-            c.rewards.death = -1.0;
-        }
-        Kind::HealthGathering => {
-            c.kind_name = "health_gathering";
-            c.rewards.step = 0.25; // +1 per action alive
-            c.rewards.death = -1.0;
-        }
-        Kind::MyWayHome => {
-            c.kind_name = "my_way_home";
-            c.end_on_goal = true;
-            c.end_on_death = false;
-            c.rewards.goal = 1.0;
-            c.rewards.step = -0.0001;
-        }
-        Kind::Battle => {
-            c.kind_name = "battle";
-            c.rewards.monster_kill = 1.0;
-            c.rewards.death = -1.0;
-            c.rewards.health_pickup = 0.2;
-            c.rewards.ammo_pickup = 0.2;
-            c.rewards.damage = 0.01;
-        }
-        Kind::Battle2 => {
-            c.kind_name = "battle2";
-            c.rewards.monster_kill = 1.0;
-            c.rewards.death = -1.0;
-            c.rewards.health_pickup = 0.2;
-            c.rewards.ammo_pickup = 0.2;
-            c.rewards.damage = 0.01;
-        }
-        Kind::DuelBots => {
-            c.kind_name = "duel_bots";
-            c.end_on_death = false; // respawn, match runs to the timer
-            c.n_bots = 1;
-            c.rewards = match_rewards();
-        }
-        Kind::DeathmatchBots => {
-            c.kind_name = "deathmatch_bots";
-            c.end_on_death = false;
-            c.n_bots = 3;
-            c.rewards = match_rewards();
-        }
-    }
-    c
-}
-
-fn match_rewards() -> Rewards {
-    Rewards {
-        player_kill: 1.0,
-        death: -1.0,
-        damage: 0.01,
-        weapon_pickup: 0.2,
-        health_pickup: 0.05,
-        armor_pickup: 0.05,
-        ammo_pickup: 0.05,
-        weapon_switch: -0.05,
-        ..Rewards::default()
-    }
-}
-
-fn multi_cfg(kind: MultiKind) -> ScenarioCfg {
-    let (name, n_agents, n_bots) = match kind {
-        MultiKind::Duel => ("duel", 2, 0),
-        MultiKind::Deathmatch => ("deathmatch", 2, 2),
-    };
-    ScenarioCfg {
-        kind_name: name,
-        episode_ticks: 2100,
-        rewards: match_rewards(),
-        end_on_death: false,
-        end_on_clear: false,
-        end_on_goal: false,
-        frozen_position: false,
-        heavy_render: false,
-        n_agents,
-        n_bots,
-    }
-}
-
-/// The hand-authored duel arena: pillars for cover, weapon pickups in the
-/// middle, armor behind a door (the paper's agents learn to open it).
-const ARENA: &str = "\
-####################
-#........##........#
-#.2#..............4#
-#..#..####..####...#
-#..........2.......#
-#...##........##...#
-#...#..........#...#
-#........##........#
-#...#..........#...#
-#...##........##...#
-#.......4..........#
-#..#..####..####...#
-#.3#..............5#
-#........D.........#
-####################";
 
 impl RaycastEnv {
-    fn new(kind: KindOrMulti, cfg: ScenarioCfg, obs: ObsSpec) -> Self {
-        let n_heads = match obs {
-            // tiny spec drives basic with 2 heads; real specs pass via env::make
-            _ if obs.h == 24 => 2,
-            _ if obs.h == 72 => 1, // gridlab geometry is handled by gridlab.rs
-            _ => match kind {
-                KindOrMulti::Single(Kind::DuelBots)
-                | KindOrMulti::Single(Kind::DeathmatchBots)
-                | KindOrMulti::Multi(_) => 7,
-                _ => 4,
-            },
-        };
-        let heads = match n_heads {
-            2 => vec![3, 2],
-            4 => vec![3, 3, 2, 21],
-            7 => vec![3, 3, 2, 2, 2, 8, 21],
-            1 => vec![7],
-            _ => unreachable!(),
-        };
+    /// Build from a definition.  `heads` is the action-head layout of the
+    /// model spec driving this env (see `env::heads_for_spec`) — no more
+    /// inferring the layout from observation geometry.
+    pub fn from_def(
+        def: RaycastDef,
+        obs: ObsSpec,
+        heads: &[usize],
+    ) -> Result<RaycastEnv, String> {
+        let decoder = ActionDecoder::new(heads)?;
+        if def.needs_full_heads && decoder.layout() != HeadLayout::Full7 {
+            return Err(format!(
+                "scenario '{}' needs the full 7-head layout \
+                 [3,3,2,2,2,8,21] (spec doomish_full) for weapon switching \
+                 and doors; the selected spec provides {heads:?}",
+                def.cfg.kind_name
+            ));
+        }
+        // Door-gated maps are unplayable without the interact head: a goal
+        // or pickup behind a door the agent cannot open would silently
+        // time every episode out.  Reject at construction instead.
+        if def.map.has_doors() && decoder.layout() != HeadLayout::Full7 {
+            return Err(format!(
+                "scenario '{}' generates door-gated maps, but the {heads:?} \
+                 layout has no interact head to open them; use spec \
+                 doomish_full or disable doors (?doors=false)",
+                def.cfg.kind_name
+            ));
+        }
         let spec = EnvSpec {
-            name: cfg.kind_name.to_string(),
+            name: def.cfg.kind_name.to_string(),
             obs,
-            action_heads: heads,
-            n_agents: cfg.n_agents,
+            action_heads: heads.to_vec(),
+            n_agents: def.cfg.n_agents,
         };
         let world = World::new(GridMap::new(3, 3, 1), WorldCfg::default(), 0);
         let mut env = RaycastEnv {
             spec,
-            cfg,
+            def,
             world,
             scratch: RenderScratch::new(obs.w),
-            decoder: ActionDecoder { n_heads },
+            decoder,
             agent_players: Vec::new(),
             bot_players: Vec::new(),
             tick_in_ep: 0,
             episode_seed: 0,
             intents: Vec::new(),
-            kind,
         };
         env.start_episode(12345);
-        env
+        Ok(env)
     }
 
-    /// (Re)build the world for a fresh episode.
+    /// (Re)build the world for a fresh episode: draw the map from the
+    /// definition's map source, then place players, monsters, pickups and
+    /// the goal object per the declarative tables.
     fn start_episode(&mut self, seed: u64) {
         self.episode_seed = seed;
         let mut rng = Rng::new(seed);
-        let kind = self.kind;
-        let cfg = &self.cfg;
-        let mut wcfg = WorldCfg::default();
-        let (map, players, entities): (GridMap, Vec<Player>, Vec<Entity>) = match kind {
-            KindOrMulti::Single(Kind::Basic) => {
-                let map = GridMap::from_ascii(
-                    "##############\n\
-                     #............#\n\
-                     #............#\n\
-                     #............#\n\
-                     #............#\n\
-                     #............#\n\
-                     ##############",
-                );
-                wcfg.passive_monsters = true; // the basic target never fights back
-                let py = 1.5 + rng.next_f32() * 4.0;
-                let my = 1.5 + rng.next_f32() * 4.0;
-                let p = Player::new(1.5, py, 0.0);
-                let mut m =
-                    Entity::new(EntityKind::Monster(MonsterKind::Shooter), 12.5, my);
-                m.hp = 10.0; // dies to a single hit, as in VizDoom basic
-                (map, vec![p], vec![m])
-            }
-            KindOrMulti::Single(Kind::DefendCenter) => {
-                let map = GridMap::from_ascii(
-                    "###############\n\
-                     #.............#\n\
-                     #.............#\n\
-                     #.............#\n\
-                     #.............#\n\
-                     #.............#\n\
-                     #.............#\n\
-                     #.............#\n\
-                     ###############",
-                );
-                wcfg.monster_respawn_ticks = 120;
-                let mut p = Player::new(7.5, 4.5, 0.0);
-                p.ammo[1] = 26; // limited ammo, as in VizDoom
-                let mut ents = Vec::new();
-                for i in 0..5 {
-                    let a = i as f32 * 1.26;
-                    let (x, y) = (7.5 + a.cos() * 5.5, 4.5 + a.sin() * 3.0);
-                    ents.push(Entity::new(
-                        EntityKind::Monster(MonsterKind::Chaser),
-                        x.clamp(1.5, 13.5),
-                        y.clamp(1.5, 7.5),
-                    ));
-                }
-                (map, vec![p], ents)
-            }
-            KindOrMulti::Single(Kind::DefendLine) => {
-                let map = GridMap::from_ascii(
-                    "####################\n\
-                     #..................#\n\
-                     #..................#\n\
-                     #..................#\n\
-                     #..................#\n\
-                     #..................#\n\
-                     ####################",
-                );
-                wcfg.monster_respawn_ticks = 150;
-                let p = Player::new(2.0, 3.5, 0.0);
-                let mut ents = Vec::new();
-                for i in 0..6 {
-                    let y = 1.5 + (i as f32) * 0.8;
-                    let kind = if i % 2 == 0 {
-                        MonsterKind::Chaser
+        // Disjoint-field borrow: the definition is read-only here while the
+        // writes below touch world/agent_players/intents — no clone needed.
+        let def = &self.def;
+        let cfg = &def.cfg;
+        let gen = def.map.build(&mut rng);
+        let map = gen.grid;
+
+        // ---- players ----------------------------------------------------
+        let total = cfg.n_agents + cfg.n_bots;
+        let mut players: Vec<Player> = Vec::with_capacity(total);
+        for i in 0..total {
+            let (x, y, angle) = match def.players {
+                PlayerPlacement::WestEdge => {
+                    let y = 1.5 + rng.next_f32() * (map.h as f32 - 3.0).max(0.0);
+                    if map.is_solid(1.5, y) {
+                        // Generated maps rarely reach column 1: keep the
+                        // west-to-east task by starting in the westmost
+                        // open column instead of anywhere at random.
+                        let (x, y) = westmost_spawn(&map, &mut rng);
+                        (x, y, 0.0)
                     } else {
-                        MonsterKind::Shooter
-                    };
-                    ents.push(Entity::new(EntityKind::Monster(kind), 17.5, y));
-                }
-                (map, vec![p], ents)
-            }
-            KindOrMulti::Single(Kind::HealthGathering) => {
-                let map = GridMap::from_ascii(
-                    "################\n\
-                     #..............#\n\
-                     #..............#\n\
-                     #..............#\n\
-                     #..............#\n\
-                     #..............#\n\
-                     #..............#\n\
-                     #..............#\n\
-                     ################",
-                );
-                wcfg.floor_damage = 0.23; // ~8 hp/s at 35 ticks/s, VizDoom-like
-                let p = Player::new(8.0, 4.5, rng.range_f32(-3.14, 3.14));
-                let mut ents = Vec::new();
-                for _ in 0..10 {
-                    let (x, y) = map.random_spawn(&mut rng, None);
-                    ents.push(Entity::new(EntityKind::HealthPack, x, y).with_respawn(220));
-                }
-                (map, vec![p], ents)
-            }
-            KindOrMulti::Single(Kind::MyWayHome) => {
-                let map = GridMap::maze(5, 4, 2, 0.12, &mut rng);
-                let (gx, gy) = map.random_spawn(&mut rng, None);
-                let goal = Entity::new(EntityKind::Object { good: true }, gx, gy);
-                let (px, py) = map.random_spawn(&mut rng, Some((gx, gy, 5.0)));
-                let p = Player::new(px, py, rng.range_f32(-3.14, 3.14));
-                (map, vec![p], vec![goal])
-            }
-            KindOrMulti::Single(Kind::Battle) | KindOrMulti::Single(Kind::Battle2) => {
-                let battle2 = matches!(kind, KindOrMulti::Single(Kind::Battle2));
-                let map = if battle2 {
-                    GridMap::maze(9, 7, 2, 0.12, &mut rng)
-                } else {
-                    GridMap::maze(6, 5, 3, 0.3, &mut rng)
-                };
-                wcfg.monster_respawn_ticks = 220;
-                let (px, py) = map.random_spawn(&mut rng, None);
-                let mut p = Player::new(px, py, rng.range_f32(-3.14, 3.14));
-                p.weapons_owned |= 1 << 3; // chaingun, the battle loadout
-                p.weapon = 3;
-                p.ammo[3] = 60;
-                let mut ents = Vec::new();
-                let n_monsters = if battle2 { 14 } else { 10 };
-                for i in 0..n_monsters {
-                    let (x, y) = map.random_spawn(&mut rng, Some((px, py, 4.0)));
-                    let kindm = if i % 3 == 0 {
-                        MonsterKind::Shooter
-                    } else {
-                        MonsterKind::Chaser
-                    };
-                    ents.push(Entity::new(EntityKind::Monster(kindm), x, y));
-                }
-                let (n_hp, n_ammo) = if battle2 { (3, 3) } else { (6, 6) };
-                for _ in 0..n_hp {
-                    let (x, y) = map.random_spawn(&mut rng, None);
-                    ents.push(Entity::new(EntityKind::HealthPack, x, y).with_respawn(350));
-                }
-                for _ in 0..n_ammo {
-                    let (x, y) = map.random_spawn(&mut rng, None);
-                    ents.push(Entity::new(EntityKind::AmmoPack, x, y).with_respawn(350));
-                }
-                (map, vec![p], ents)
-            }
-            KindOrMulti::Single(Kind::DuelBots)
-            | KindOrMulti::Single(Kind::DeathmatchBots)
-            | KindOrMulti::Multi(_) => {
-                let map = GridMap::from_ascii(ARENA);
-                wcfg.player_respawn_ticks = 70;
-                let total = cfg.n_agents + cfg.n_bots;
-                let mut players = Vec::new();
-                for i in 0..total {
-                    let avoid = players.first().map(|q: &Player| (q.x, q.y, 6.0));
-                    let (x, y) = map.random_spawn(&mut rng, avoid);
-                    let mut p = Player::new(x, y, rng.range_f32(-3.14, 3.14));
-                    p.is_bot = i >= cfg.n_agents;
-                    players.push(p);
-                }
-                let mut ents = Vec::new();
-                // Weapon pickups: shotgun, chaingun, plasma; armor; health.
-                for (slot, n) in [(2usize, 2), (3, 2), (5, 1)] {
-                    for _ in 0..n {
-                        let (x, y) = map.random_spawn(&mut rng, None);
-                        ents.push(
-                            Entity::new(EntityKind::WeaponPickup(slot), x, y)
-                                .with_respawn(400),
-                        );
+                        (1.5, y, 0.0)
                     }
                 }
-                for _ in 0..3 {
+                PlayerPlacement::WestPost => (2.0, map.h as f32 / 2.0, 0.0),
+                PlayerPlacement::Center { heading } => (
+                    map.w as f32 / 2.0,
+                    map.h as f32 / 2.0,
+                    heading.unwrap_or_else(|| rng.range_f32(-3.14, 3.14)),
+                ),
+                PlayerPlacement::Random => {
                     let (x, y) = map.random_spawn(&mut rng, None);
-                    ents.push(Entity::new(EntityKind::HealthPack, x, y).with_respawn(300));
+                    (x, y, rng.range_f32(-3.14, 3.14))
                 }
-                for _ in 0..2 {
-                    let (x, y) = map.random_spawn(&mut rng, None);
-                    ents.push(Entity::new(EntityKind::ArmorPack, x, y).with_respawn(500));
+                PlayerPlacement::Spread(d) => {
+                    let hint = (total <= gen.spawns.len())
+                        .then(|| gen.spawns[i])
+                        .filter(|&(x, y)| !map.is_solid(x, y));
+                    let (x, y) = match hint {
+                        Some(p) => p,
+                        None => {
+                            let avoid =
+                                players.first().map(|q: &Player| (q.x, q.y, d));
+                            map.random_spawn(&mut rng, avoid)
+                        }
+                    };
+                    (x, y, rng.range_f32(-3.14, 3.14))
                 }
-                for _ in 0..3 {
-                    let (x, y) = map.random_spawn(&mut rng, None);
-                    ents.push(Entity::new(EntityKind::AmmoPack, x, y).with_respawn(250));
-                }
-                (map, players, ents)
+            };
+            // Fixed placements can land in walls under `?map=` overrides.
+            let (x, y) = if map.is_solid(x, y) {
+                map.random_spawn(&mut rng, None)
+            } else {
+                (x, y)
+            };
+            let mut p = Player::new(x, y, angle);
+            let lo = def.loadout;
+            p.ammo[1] = lo.pistol_ammo;
+            if lo.weapon != 1 && lo.weapon < 8 {
+                p.weapons_owned |= 1 << lo.weapon;
+                p.weapon = lo.weapon;
             }
-        };
+            p.ammo[p.weapon] = lo.ammo;
+            p.is_bot = i >= cfg.n_agents;
+            players.push(p);
+        }
+        let (px0, py0) = (players[0].x, players[0].y);
 
-        let mut world = World::new(map, wcfg, rng.next_u64());
+        // ---- monsters ---------------------------------------------------
+        let mut ents: Vec<Entity> = Vec::new();
+        let mt = def.monsters;
+        for i in 0..mt.n {
+            let shoots =
+                mt.shooter_period > 0 && (i + mt.shooter_phase) % mt.shooter_period == 0;
+            let mkind = if shoots { MonsterKind::Shooter } else { MonsterKind::Chaser };
+            let (x, y) = match mt.placement {
+                MonsterPlacement::Random { avoid_player } => {
+                    let avoid = (avoid_player > 0.0).then_some((px0, py0, avoid_player));
+                    map.random_spawn(&mut rng, avoid)
+                }
+                MonsterPlacement::EastEdge => {
+                    // A single target hugs the east wall (basic's 12.5 on
+                    // the 14-wide room); a line stands one cell off it
+                    // (defend_line's 17.5 on the 20-wide room).
+                    let (x, y) = if mt.n == 1 {
+                        (
+                            (map.w as f32 - 1.5).max(1.5),
+                            1.5 + rng.next_f32() * (map.h as f32 - 3.0).max(0.0),
+                        )
+                    } else {
+                        (
+                            (map.w as f32 - 2.5).max(1.5),
+                            1.5 + i as f32 * (map.h as f32 - 3.0).max(0.0)
+                                / (mt.n - 1) as f32,
+                        )
+                    };
+                    (x, y)
+                }
+                MonsterPlacement::Ring => {
+                    let (cx, cy) = (map.w as f32 / 2.0, map.h as f32 / 2.0);
+                    let a = i as f32 * std::f32::consts::TAU / mt.n as f32;
+                    let x = (cx + a.cos() * (cx - 2.0)).clamp(1.5, map.w as f32 - 1.5);
+                    let y = (cy + a.sin() * (cy - 1.5)).clamp(1.5, map.h as f32 - 1.5);
+                    (x, y)
+                }
+            };
+            let (x, y) = if map.is_solid(x, y) {
+                map.random_spawn(&mut rng, Some((px0, py0, 2.0)))
+            } else {
+                (x, y)
+            };
+            let mut mo = Entity::new(EntityKind::Monster(mkind), x, y);
+            if let Some(hp) = mt.hp {
+                mo.hp = hp;
+            }
+            ents.push(mo);
+        }
+
+        // ---- pickups ----------------------------------------------------
+        // Generator pickup hints (mirrored pairs on arenas) are consumed in
+        // placement order — weapons, armor, health, ammo — before falling
+        // back to random spawns, so even counts land symmetrically in
+        // self-play.
+        {
+            let map_ref = &map;
+            let mut spots = gen.pickups.into_iter();
+            let mut place = |rng: &mut Rng| -> (f32, f32) {
+                for s in spots.by_ref() {
+                    if !map_ref.is_solid(s.0, s.1) {
+                        return s;
+                    }
+                }
+                map_ref.random_spawn(rng, None)
+            };
+            let pk = &def.pickups;
+            for &(slot, ps) in &pk.weapons {
+                for _ in 0..ps.n {
+                    let (x, y) = place(&mut rng);
+                    ents.push(
+                        Entity::new(EntityKind::WeaponPickup(slot), x, y)
+                            .with_respawn(ps.respawn),
+                    );
+                }
+            }
+            for _ in 0..pk.armor.n {
+                let (x, y) = place(&mut rng);
+                ents.push(
+                    Entity::new(EntityKind::ArmorPack, x, y).with_respawn(pk.armor.respawn),
+                );
+            }
+            for _ in 0..pk.health.n {
+                let (x, y) = place(&mut rng);
+                ents.push(
+                    Entity::new(EntityKind::HealthPack, x, y)
+                        .with_respawn(pk.health.respawn),
+                );
+            }
+            for _ in 0..pk.ammo.n {
+                let (x, y) = place(&mut rng);
+                ents.push(
+                    Entity::new(EntityKind::AmmoPack, x, y).with_respawn(pk.ammo.respawn),
+                );
+            }
+        }
+
+        // ---- goal object ------------------------------------------------
+        if let GoalCfg::Object { min_player_dist, far } = def.goal {
+            let (gx, gy) = if far {
+                mapgen::farthest_cell(&map, px0, py0)
+            } else {
+                map.random_spawn(&mut rng, Some((px0, py0, min_player_dist)))
+            };
+            ents.push(Entity::new(EntityKind::Object { good: true }, gx, gy));
+        }
+
+        let mut world = World::new(map, def.world.clone(), rng.next_u64());
         world.players = players;
-        world.entities = entities;
-        self.agent_players = (0..self.cfg.n_agents).collect();
-        self.bot_players = (self.cfg.n_agents..world.players.len()).collect();
+        world.entities = ents;
+        self.agent_players = (0..cfg.n_agents).collect();
+        self.bot_players = (cfg.n_agents..world.players.len()).collect();
         self.world = world;
         self.tick_in_ep = 0;
         self.intents.clear();
-        self.intents.resize(
-            self.agent_players.len() + self.bot_players.len(),
-            Intent::default(),
-        );
+        self.intents.resize(total, Intent::default());
     }
 
     fn episode_done(&self) -> bool {
-        if self.tick_in_ep >= self.cfg.episode_ticks {
+        if self.tick_in_ep >= self.def.cfg.episode_ticks {
             return true;
         }
-        if self.cfg.end_on_death
+        if self.def.cfg.end_on_death
             && self.agent_players.iter().any(|&i| !self.world.players[i].alive)
         {
             return true;
         }
-        if self.cfg.end_on_clear
+        if self.def.cfg.end_on_clear
             && !self.world.entities.iter().any(|e| e.alive && e.is_monster())
         {
             return true;
         }
-        if self.cfg.end_on_goal && !self.world.events.objects.is_empty() {
+        if self.def.cfg.end_on_goal && !self.world.events.objects.is_empty() {
             return true;
         }
         false
@@ -619,21 +721,24 @@ impl Env for RaycastEnv {
     }
 
     fn step(&mut self, actions: &[i32], out: &mut [AgentStep]) {
-        let n_heads = self.decoder.n_heads;
-        debug_assert_eq!(actions.len(), self.cfg.n_agents * n_heads);
-        debug_assert_eq!(out.len(), self.cfg.n_agents);
+        let n_heads = self.decoder.n_heads();
+        debug_assert_eq!(actions.len(), self.def.cfg.n_agents * n_heads);
+        debug_assert_eq!(out.len(), self.def.cfg.n_agents);
 
         // Decode agent intents; ask the scripted policy for bot intents.
-        for (a, &pi) in self.agent_players.clone().iter().enumerate() {
+        // (Index loops: this runs every env step, so no per-step clones.)
+        for a in 0..self.agent_players.len() {
+            let pi = self.agent_players[a];
             let mut intent = self.decoder.decode(&actions[a * n_heads..(a + 1) * n_heads]);
-            if self.cfg.frozen_position {
+            if self.def.cfg.frozen_position {
                 intent.mv = 0.0;
                 intent.strafe = 0.0;
                 intent.sprint = false;
             }
             self.intents[pi] = intent;
         }
-        for &pi in &self.bot_players.clone() {
+        for b in 0..self.bot_players.len() {
+            let pi = self.bot_players[b];
             self.intents[pi] = self.world.bot_intent(pi);
         }
 
@@ -643,7 +748,7 @@ impl Env for RaycastEnv {
         self.tick_in_ep += 1;
 
         // Rewards from the event stream.
-        let rw = self.cfg.rewards;
+        let rw = self.def.cfg.rewards;
         for (a, &pi) in self.agent_players.iter().enumerate() {
             let mut r = rw.step;
             let ev = &self.world.events;
@@ -673,7 +778,7 @@ impl Env for RaycastEnv {
             }
             for &(p, good) in &ev.objects {
                 if p == pi {
-                    r += if self.cfg.end_on_goal {
+                    r += if self.def.cfg.end_on_goal {
                         rw.goal
                     } else if good {
                         rw.good_object
@@ -703,7 +808,7 @@ impl Env for RaycastEnv {
             &self.world,
             self.agent_players[agent],
             self.spec.obs,
-            self.cfg.heavy_render,
+            self.def.cfg.heavy_render,
             &mut self.scratch,
             obs,
         );
@@ -713,8 +818,19 @@ impl Env for RaycastEnv {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::env::registry::{self, Builder};
 
     const DOOM_OBS: ObsSpec = ObsSpec { h: 36, w: 64, c: 3 };
+    const DOOM_HEADS: [usize; 4] = [3, 3, 2, 21];
+    const FULL_HEADS: [usize; 7] = [3, 3, 2, 2, 2, 8, 21];
+
+    fn build(name: &str, heads: &[usize]) -> RaycastEnv {
+        let def = registry::get(name).unwrap_or_else(|| panic!("no scenario {name}"));
+        let Builder::Raycast(r) = def.builder else {
+            panic!("{name} is not a raycast scenario")
+        };
+        RaycastEnv::from_def(*r, DOOM_OBS, heads).unwrap()
+    }
 
     fn run_random(env: &mut RaycastEnv, steps: usize, seed: u64) -> (f64, usize) {
         let mut rng = Rng::new(seed);
@@ -743,18 +859,23 @@ mod tests {
 
     #[test]
     fn all_single_scenarios_run() {
-        for kind in [
-            Kind::Basic,
-            Kind::DefendCenter,
-            Kind::DefendLine,
-            Kind::HealthGathering,
-            Kind::MyWayHome,
-            Kind::Battle,
-            Kind::Battle2,
-            Kind::DuelBots,
-            Kind::DeathmatchBots,
+        for name in [
+            "basic",
+            "defend_center",
+            "defend_line",
+            "health_gathering",
+            "health_gathering_supreme",
+            "my_way_home",
+            "deadly_corridor",
+            "predict_position",
+            "take_cover",
+            "battle",
+            "battle2",
+            "battle_gen",
+            "caves_gen",
+            "maze_gen",
         ] {
-            let mut env = build(kind, DOOM_OBS);
+            let mut env = build(name, &DOOM_HEADS);
             env.reset(7);
             let (_, _) = run_random(&mut env, 800, 99);
         }
@@ -762,8 +883,8 @@ mod tests {
 
     #[test]
     fn multi_scenarios_have_two_agents() {
-        for kind in [MultiKind::Duel, MultiKind::Deathmatch] {
-            let mut env = build_multi(kind, DOOM_OBS);
+        for name in ["duel", "deathmatch", "duel_gen"] {
+            let mut env = build(name, &FULL_HEADS);
             env.reset(3);
             assert_eq!(env.spec().n_agents, 2);
             assert_eq!(env.spec().action_heads.len(), 7);
@@ -772,8 +893,37 @@ mod tests {
     }
 
     #[test]
+    fn match_scenarios_reject_partial_head_layouts() {
+        let def = registry::get("duel").unwrap();
+        let Builder::Raycast(r) = def.builder else { panic!() };
+        let err = RaycastEnv::from_def(*r, DOOM_OBS, &DOOM_HEADS).unwrap_err();
+        assert!(err.contains("7-head"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn door_maps_require_the_interact_head() {
+        let base = registry::get("battle").unwrap();
+        let Builder::Raycast(mut r) = base.builder else { panic!() };
+        r.set_param("map", "bsp").unwrap();
+        r.set_param("doors", "true").unwrap();
+        let err =
+            RaycastEnv::from_def((*r).clone(), DOOM_OBS, &DOOM_HEADS).unwrap_err();
+        assert!(err.contains("interact"), "unhelpful error: {err}");
+        // The same definition is fine with the full layout.
+        assert!(RaycastEnv::from_def(*r, DOOM_OBS, &FULL_HEADS).is_ok());
+    }
+
+    #[test]
+    fn decoder_rejects_unknown_layouts() {
+        assert!(ActionDecoder::new(&[3, 3, 2, 21]).is_ok());
+        assert!(ActionDecoder::new(&[7]).is_ok());
+        let err = ActionDecoder::new(&[5, 5]).unwrap_err();
+        assert!(err.contains("[5, 5]"), "layout missing from error: {err}");
+    }
+
+    #[test]
     fn basic_timeout_ends_episode() {
-        let mut env = build(Kind::Basic, DOOM_OBS);
+        let mut env = build("basic", &DOOM_HEADS);
         env.reset(1);
         // Never fires: episode must end by timeout at 300 ticks.
         let mut out = [AgentStep::default()];
@@ -794,7 +944,7 @@ mod tests {
         // Aim straight ahead and shoot: the monster is in line (same y
         // within spawn randomness won't guarantee), so steer by scanning:
         // turn until the shot lands, which must eventually kill it.
-        let mut env = build(Kind::Basic, DOOM_OBS);
+        let mut env = build("basic", &DOOM_HEADS);
         env.reset(11);
         let mut out = [AgentStep::default()];
         let mut best_step_reward = f32::NEG_INFINITY;
@@ -820,7 +970,7 @@ mod tests {
 
     #[test]
     fn health_gathering_rewards_survival() {
-        let mut env = build(Kind::HealthGathering, DOOM_OBS);
+        let mut env = build("health_gathering", &DOOM_HEADS);
         env.reset(2);
         let mut out = [AgentStep::default()];
         let mut ticks_alive = 0;
@@ -839,7 +989,7 @@ mod tests {
 
     #[test]
     fn duel_bots_episode_is_fixed_length_match() {
-        let mut env = build(Kind::DuelBots, DOOM_OBS);
+        let mut env = build("duel_bots", &FULL_HEADS);
         env.reset(5);
         assert_eq!(env.spec().action_heads.len(), 7);
         let mut out = [AgentStep::default()];
@@ -857,14 +1007,53 @@ mod tests {
     }
 
     #[test]
+    fn deadly_corridor_goal_ends_episode_far_from_spawn() {
+        let mut env = build("deadly_corridor", &DOOM_HEADS);
+        env.reset(9);
+        let goal = env
+            .world
+            .entities
+            .iter()
+            .find(|e| matches!(e.kind, EntityKind::Object { .. }))
+            .expect("deadly_corridor has a goal object");
+        let p = &env.world.players[0];
+        let d = (goal.x - p.x).hypot(goal.y - p.y);
+        assert!(d > 6.0, "goal only {d:.1} cells from spawn");
+    }
+
+    #[test]
+    fn predict_position_has_one_rocket_and_no_sidearm() {
+        // Built with the full layout: the weapon-switch head must not offer
+        // a loaded fallback pistol.
+        let env = build("predict_position", &FULL_HEADS);
+        let p = &env.world.players[0];
+        assert_eq!(p.weapon, 4, "starts with the rocket launcher");
+        assert!(p.owns(4));
+        assert_eq!(p.ammo[4], 4, "exactly one rocket (cost 4)");
+        assert_eq!(p.ammo[1], 0, "the sidearm must be dry");
+    }
+
+    #[test]
     fn deterministic_episode_given_seed() {
         let run = |seed: u64| {
-            let mut env = build(Kind::Battle, DOOM_OBS);
+            let mut env = build("battle", &DOOM_HEADS);
             env.reset(seed);
             run_random(&mut env, 600, 1234)
         };
         assert_eq!(run(10), run(10));
         assert_ne!(run(10), run(11));
+    }
+
+    #[test]
+    fn generated_scenarios_draw_fresh_maps_per_episode() {
+        let mut env = build("battle_gen", &DOOM_HEADS);
+        env.reset(21);
+        let first: Vec<(f32, f32)> =
+            env.world.entities.iter().map(|e| (e.x, e.y)).collect();
+        env.reset(22);
+        let second: Vec<(f32, f32)> =
+            env.world.entities.iter().map(|e| (e.x, e.y)).collect();
+        assert_ne!(first, second, "fresh seed must produce a fresh layout");
     }
 
     #[test]
@@ -877,7 +1066,7 @@ mod tests {
 
     #[test]
     fn frozen_position_blocks_movement() {
-        let mut env = build(Kind::DefendCenter, DOOM_OBS);
+        let mut env = build("defend_center", &DOOM_HEADS);
         env.reset(4);
         let (x0, y0) = (env.world.players[0].x, env.world.players[0].y);
         let mut out = [AgentStep::default()];
@@ -889,5 +1078,24 @@ mod tests {
         }
         let p = &env.world.players[0];
         assert_eq!((p.x, p.y), (x0, y0));
+    }
+
+    #[test]
+    fn param_overrides_change_the_episode() {
+        let base = registry::get("battle").unwrap();
+        let Builder::Raycast(mut r) = base.builder else { panic!() };
+        r.set_param("monsters", "20").unwrap();
+        r.set_param("health", "0").unwrap();
+        let env = RaycastEnv::from_def(*r, DOOM_OBS, &DOOM_HEADS).unwrap();
+        let monsters =
+            env.world.entities.iter().filter(|e| e.is_monster()).count();
+        let medkits = env
+            .world
+            .entities
+            .iter()
+            .filter(|e| matches!(e.kind, EntityKind::HealthPack))
+            .count();
+        assert_eq!(monsters, 20);
+        assert_eq!(medkits, 0);
     }
 }

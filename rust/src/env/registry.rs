@@ -1,0 +1,784 @@
+//! The scenario registry: a data-driven env zoo.
+//!
+//! Every runnable environment is a declarative [`ScenarioDef`] — name,
+//! default model spec, builder payload (a raycast definition, the arcade
+//! game, or a gridlab task) — registered in one table.  `env::make`,
+//! config presets, the multitask suite and `bench scenarios` all resolve
+//! scenario names through here; nothing else hard-codes a scenario list.
+//!
+//! Names accept `?key=value` parameter overrides, EnvPool-style:
+//!
+//! ```text
+//! battle?monsters=20            # crank the monster count
+//! maze_gen?size=11x9&scale=2    # bigger procedural maze
+//! duel?bots=2                   # duel plus two scripted bots
+//! ```
+//!
+//! Unknown names and unknown parameters are hard errors listing the
+//! alternatives — silent fallback scenarios is how training runs lie.
+
+use super::arcade::Breakout;
+use super::gridlab::{Collect, Task};
+use super::multitask;
+use super::raycast::mapgen::MapSource;
+use super::raycast::scenarios::{
+    GoalCfg, Loadout, MonsterPlacement, MonsterTable, PickupSpec, PickupTable,
+    PlayerPlacement, RaycastDef, RaycastEnv, Rewards, ScenarioCfg,
+};
+use super::{Env, ObsSpec};
+
+/// One registered scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioDef {
+    pub name: &'static str,
+    /// Canonical model spec (`env::obs_for_spec` / `env::heads_for_spec`):
+    /// the artifacts this scenario is normally trained with.  Other
+    /// compatible specs still work through `env::make`.
+    pub spec: &'static str,
+    pub doc: &'static str,
+    pub builder: Builder,
+}
+
+/// The substrate-specific payload.  The raycast definition is boxed: it is
+/// by far the largest payload and defs are cloned around freely.
+#[derive(Clone, Debug)]
+pub enum Builder {
+    Raycast(Box<RaycastDef>),
+    Arcade,
+    Gridlab(Task),
+}
+
+impl ScenarioDef {
+    pub fn n_agents(&self) -> usize {
+        match &self.builder {
+            Builder::Raycast(r) => r.cfg.n_agents,
+            _ => 1,
+        }
+    }
+
+    pub fn n_bots(&self) -> usize {
+        match &self.builder {
+            Builder::Raycast(r) => r.cfg.n_bots,
+            _ => 0,
+        }
+    }
+
+    /// Action-head layout of the canonical spec.  Panics on an invalid
+    /// `spec` field: a typo'd registry entry should fail the listing and
+    /// the tests immediately, not surface as a train-time mystery.
+    pub fn heads(&self) -> Vec<usize> {
+        super::heads_for_spec(self.spec)
+            .unwrap_or_else(|e| panic!("registry entry '{}': {e}", self.name))
+    }
+
+    /// Map-source tag for listings: ascii | maze | bsp | caves | arena | -.
+    pub fn map_kind(&self) -> &'static str {
+        match &self.builder {
+            Builder::Raycast(r) => r.map.kind_name(),
+            Builder::Arcade => "-",
+            Builder::Gridlab(_) => "maze",
+        }
+    }
+
+    /// Apply one `key=value` override.
+    pub fn set_param(&mut self, key: &str, val: &str) -> Result<(), String> {
+        use super::params::{count, value as p};
+        match &mut self.builder {
+            Builder::Raycast(def) => def.set_param(key, val),
+            Builder::Gridlab(task) => {
+                match key {
+                    "good" => task.n_good = count(key, val, 1024)?,
+                    "bad" => task.n_bad = count(key, val, 1024)?,
+                    "ticks" => task.episode_ticks = p::<u32>(key, val)?.max(1),
+                    "respawn" => task.respawn_ticks = p(key, val)?,
+                    "scale" => task.maze.2 = count(key, val, 8)?.max(1),
+                    "loop_p" => task.loop_p = p(key, val)?,
+                    "size" => {
+                        let (mw, mh) = super::params::size(val)?;
+                        task.maze.0 = mw;
+                        task.maze.1 = mh;
+                    }
+                    _ => {
+                        return Err(format!(
+                            "unknown gridlab parameter '{key}' (try good, bad, ticks, \
+                             respawn, size, scale, loop_p)"
+                        ))
+                    }
+                }
+                Ok(())
+            }
+            Builder::Arcade => {
+                Err(format!("scenario '{}' takes no parameters", self.name))
+            }
+        }
+    }
+}
+
+/// Split `name?key=value&key=value` into name + overrides, look the name up
+/// and apply the overrides.  The one entry point every consumer uses.
+pub fn resolve(scenario: &str) -> Result<ScenarioDef, String> {
+    let (name, params) = match scenario.split_once('?') {
+        Some((n, p)) => (n, p),
+        None => (scenario, ""),
+    };
+    let mut def = get(name).ok_or_else(|| {
+        format!("unknown scenario '{name}' — `repro envs` lists the registry")
+    })?;
+    if !params.is_empty() {
+        let mut kvs = Vec::new();
+        for kv in params.split('&') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("bad parameter '{kv}' (expected key=value)"))?;
+            kvs.push((k, v));
+        }
+        // `map=` replaces the whole map source, so it must win over any
+        // map-shape parameter regardless of where it appears in the query —
+        // `battle?size=31x21&map=caves` means 31x21 caves, not default caves.
+        kvs.sort_by_key(|&(k, _)| (k != "map") as u8);
+        for (k, v) in kvs {
+            def.set_param(k, v)?;
+        }
+    }
+    Ok(def)
+}
+
+/// Look up a registered scenario by bare name (no parameters).  The
+/// multitask worker alias `gridlab_task<N>` resolves to the N-th suite task.
+pub fn get(name: &str) -> Option<ScenarioDef> {
+    if let Some(idx) = name.strip_prefix("gridlab_task") {
+        let idx: usize = idx.parse().ok()?;
+        let task = multitask::task(idx)?;
+        return Some(gridlab_entry(task));
+    }
+    table().iter().find(|d| d.name == name).cloned()
+}
+
+/// The table is built once per process; lookups clone only their entry
+/// (trainer startup makes one env::make call per environment instance).
+fn table() -> &'static [ScenarioDef] {
+    static TABLE: std::sync::OnceLock<Vec<ScenarioDef>> = std::sync::OnceLock::new();
+    TABLE.get_or_init(build_table)
+}
+
+/// Instantiate a resolved definition for a model spec's observation
+/// geometry and action-head layout.  Head-layout compatibility is checked
+/// here, up front — not inferred from observation height mid-rollout.
+pub fn instantiate(
+    def: ScenarioDef,
+    obs: ObsSpec,
+    heads: &[usize],
+) -> Result<Box<dyn Env>, String> {
+    match def.builder {
+        Builder::Raycast(r) => Ok(Box::new(RaycastEnv::from_def(*r, obs, heads)?)),
+        Builder::Arcade => match heads {
+            [4] => Ok(Box::new(Breakout::new(obs))),
+            other => Err(format!(
+                "scenario '{}' needs the arcade head layout [4] (spec 'arcade'); \
+                 the selected spec provides {other:?}",
+                def.name
+            )),
+        },
+        Builder::Gridlab(task) => match heads {
+            [7] => Ok(Box::new(Collect::new(obs, task))),
+            other => Err(format!(
+                "scenario '{}' needs the gridlab head layout [7] (spec 'gridlab'); \
+                 the selected spec provides {other:?}",
+                def.name
+            )),
+        },
+    }
+}
+
+// ------------------------------------------------------------- the registry
+
+/// The full scenario table (a fresh, mutable copy — see [`table`] for the
+/// cached instance behind [`get`]).  Order is the listing order of
+/// `repro envs`.
+pub fn all() -> Vec<ScenarioDef> {
+    table().to_vec()
+}
+
+fn build_table() -> Vec<ScenarioDef> {
+    let mut defs = vec![
+        basic(),
+        defend_center(),
+        defend_line(),
+        health_gathering(),
+        health_gathering_supreme(),
+        my_way_home(),
+        deadly_corridor(),
+        predict_position(),
+        take_cover(),
+        raycast_entry(
+            "battle",
+            "doomish",
+            "kill monsters, manage health/ammo in a maze (paper Fig 7)",
+            battle_def("battle", MapSource::default_maze(), 10, 6),
+        ),
+        raycast_entry(
+            "battle2",
+            "doomish",
+            "battle in a larger, sparser maze (paper Fig 7)",
+            battle_def("battle2", MapSource::Maze { mw: 9, mh: 7, scale: 2, loop_p: 0.12 }, 14, 3),
+        ),
+        raycast_entry(
+            "battle_gen",
+            "doomish",
+            "battle on a fresh BSP rooms-and-corridors map every episode",
+            battle_def("battle_gen", MapSource::default_bsp(), 10, 6),
+        ),
+        raycast_entry(
+            "caves_gen",
+            "doomish",
+            "battle in fresh cellular-automata caverns every episode",
+            battle_def("caves_gen", MapSource::default_caves(), 10, 6),
+        ),
+        raycast_entry(
+            "maze_gen",
+            "doomish",
+            "find the goal in a parameterizable fresh maze (size=WxH, scale=)",
+            nav_def("maze_gen", MapSource::Maze { mw: 7, mh: 5, scale: 2, loop_p: 0.15 }),
+        ),
+        duel_bots(),
+        deathmatch_bots(),
+        duel(),
+        deathmatch(),
+        duel_gen(),
+        ScenarioDef {
+            name: "breakout",
+            spec: "arcade",
+            doc: "Breakout at 84x84x4 grayscale framestack (the Atari stand-in)",
+            builder: Builder::Arcade,
+        },
+    ];
+    for i in 0..multitask::n_tasks() {
+        defs.push(gridlab_entry(multitask::task(i).expect("suite task")));
+    }
+    defs
+}
+
+fn raycast_entry(
+    name: &'static str,
+    spec: &'static str,
+    doc: &'static str,
+    def: RaycastDef,
+) -> ScenarioDef {
+    ScenarioDef { name, spec, doc, builder: Builder::Raycast(Box::new(def)) }
+}
+
+fn gridlab_entry(task: Task) -> ScenarioDef {
+    ScenarioDef {
+        name: task.name,
+        spec: "gridlab",
+        doc: "GridLab-8 multitask suite task (heavy render, the DMLab stand-in)",
+        builder: Builder::Gridlab(task),
+    }
+}
+
+fn match_rewards() -> Rewards {
+    Rewards {
+        player_kill: 1.0,
+        death: -1.0,
+        damage: 0.01,
+        weapon_pickup: 0.2,
+        health_pickup: 0.05,
+        armor_pickup: 0.05,
+        ammo_pickup: 0.05,
+        weapon_switch: -0.05,
+        ..Rewards::default()
+    }
+}
+
+// ---- hand-authored layouts ------------------------------------------------
+
+const BASIC_MAP: &str = "\
+##############
+#............#
+#............#
+#............#
+#............#
+#............#
+##############";
+
+const DEFEND_CENTER_MAP: &str = "\
+###############
+#.............#
+#.............#
+#.............#
+#.............#
+#.............#
+#.............#
+#.............#
+###############";
+
+const DEFEND_LINE_MAP: &str = "\
+####################
+#..................#
+#..................#
+#..................#
+#..................#
+#..................#
+####################";
+
+const HEALTH_MAP: &str = "\
+################
+#..............#
+#..............#
+#..............#
+#..............#
+#..............#
+#..............#
+#..............#
+################";
+
+const WIDE_ROOM: &str = "\
+#################
+#...............#
+#...............#
+#...............#
+#...............#
+#...............#
+#...............#
+#...............#
+#################";
+
+/// The hand-authored duel arena: pillars for cover, weapon pickups in the
+/// middle, armor behind a door (the paper's agents learn to open it).
+const ARENA: &str = "\
+####################
+#........##........#
+#.2#..............4#
+#..#..####..####...#
+#..........2.......#
+#...##........##...#
+#...#..........#...#
+#........##........#
+#...#..........#...#
+#...##........##...#
+#.......4..........#
+#..#..####..####...#
+#.3#..............5#
+#........D.........#
+####################";
+
+// ---- single-player definitions -------------------------------------------
+
+fn basic() -> ScenarioDef {
+    let mut cfg = ScenarioCfg::new("basic");
+    cfg.episode_ticks = 300;
+    cfg.end_on_clear = true;
+    cfg.rewards.monster_kill = 100.0;
+    cfg.rewards.shot = -1.0; // discourage spray without burying the kill signal
+    cfg.rewards.step = -0.25; // -1 per 4-frameskip action, as VizDoom
+    let mut def = RaycastDef::new(cfg, MapSource::Ascii(BASIC_MAP));
+    def.world.passive_monsters = true; // the basic target never fights back
+    def.players = PlayerPlacement::WestEdge;
+    def.monsters = MonsterTable {
+        n: 1,
+        shooter_period: 1,
+        shooter_phase: 0,
+        placement: MonsterPlacement::EastEdge,
+        hp: Some(10.0), // dies to a single hit, as in VizDoom basic
+    };
+    raycast_entry(
+        "basic",
+        "doomish",
+        "shoot the one passive monster across the room (paper Fig 6)",
+        def,
+    )
+}
+
+fn defend_center() -> ScenarioDef {
+    let mut cfg = ScenarioCfg::new("defend_center");
+    cfg.frozen_position = true;
+    let mut def = RaycastDef::new(cfg, MapSource::Ascii(DEFEND_CENTER_MAP));
+    def.world.monster_respawn_ticks = 120;
+    // Fixed heading, as pre-registry: the aim task starts facing east.
+    def.players = PlayerPlacement::Center { heading: Some(0.0) };
+    // limited ammo, as in VizDoom
+    def.loadout = Loadout { weapon: 1, ammo: 26, ..Loadout::default() };
+    def.monsters = MonsterTable {
+        n: 5,
+        shooter_period: 0,
+        shooter_phase: 0,
+        placement: MonsterPlacement::Ring,
+        hp: None,
+    };
+    raycast_entry(
+        "defend_center",
+        "doomish",
+        "turret defense: aim-only against a respawning ring of chasers (Fig 6)",
+        def,
+    )
+}
+
+fn defend_line() -> ScenarioDef {
+    let cfg = ScenarioCfg::new("defend_line");
+    let mut def = RaycastDef::new(cfg, MapSource::Ascii(DEFEND_LINE_MAP));
+    def.world.monster_respawn_ticks = 150;
+    def.players = PlayerPlacement::WestPost;
+    def.monsters = MonsterTable {
+        n: 6,
+        shooter_period: 2,
+        shooter_phase: 1,
+        placement: MonsterPlacement::EastEdge,
+        hp: None,
+    };
+    raycast_entry(
+        "defend_line",
+        "doomish",
+        "hold the line against a respawning monster wave (paper Fig 6)",
+        def,
+    )
+}
+
+fn health_gathering() -> ScenarioDef {
+    let mut cfg = ScenarioCfg::new("health_gathering");
+    cfg.rewards.step = 0.25; // +1 per action alive
+    let mut def = RaycastDef::new(cfg, MapSource::Ascii(HEALTH_MAP));
+    def.world.floor_damage = 0.23; // ~8 hp/s at 35 ticks/s, VizDoom-like
+    def.players = PlayerPlacement::Center { heading: None };
+    def.pickups.health = PickupSpec::new(10, 220);
+    raycast_entry(
+        "health_gathering",
+        "doomish",
+        "survive the acid floor by collecting medkits (paper Fig 6)",
+        def,
+    )
+}
+
+fn health_gathering_supreme() -> ScenarioDef {
+    let mut cfg = ScenarioCfg::new("health_gathering_supreme");
+    cfg.rewards.step = 0.25;
+    let mut def =
+        RaycastDef::new(cfg, MapSource::Maze { mw: 5, mh: 4, scale: 3, loop_p: 0.4 });
+    def.world.floor_damage = 0.23;
+    def.pickups.health = PickupSpec::new(12, 200);
+    raycast_entry(
+        "health_gathering_supreme",
+        "doomish",
+        "health gathering in a fresh procedural maze every episode",
+        def,
+    )
+}
+
+fn my_way_home() -> ScenarioDef {
+    nav_entry(
+        "my_way_home",
+        "navigate a maze to the goal object (paper Fig 6)",
+        MapSource::Maze { mw: 5, mh: 4, scale: 2, loop_p: 0.12 },
+    )
+}
+
+fn nav_entry(
+    name: &'static str,
+    doc: &'static str,
+    map: MapSource,
+) -> ScenarioDef {
+    raycast_entry(name, "doomish", doc, nav_def(name, map))
+}
+
+fn nav_def(name: &'static str, map: MapSource) -> RaycastDef {
+    let mut cfg = ScenarioCfg::new(name);
+    cfg.end_on_goal = true;
+    cfg.end_on_death = false;
+    cfg.rewards.goal = 1.0;
+    cfg.rewards.step = -0.0001;
+    let mut def = RaycastDef::new(cfg, map);
+    def.goal = GoalCfg::Object { min_player_dist: 5.0, far: false };
+    def
+}
+
+fn deadly_corridor() -> ScenarioDef {
+    let mut cfg = ScenarioCfg::new("deadly_corridor");
+    cfg.episode_ticks = 1500;
+    cfg.end_on_goal = true;
+    cfg.rewards.goal = 10.0;
+    cfg.rewards.death = -5.0;
+    cfg.rewards.monster_kill = 1.0;
+    cfg.rewards.step = -0.005;
+    let mut def = RaycastDef::new(
+        cfg,
+        MapSource::BspRooms { w: 35, h: 9, min_room: 3, doors: false },
+    );
+    def.players = PlayerPlacement::WestEdge;
+    def.monsters = MonsterTable {
+        n: 6,
+        shooter_period: 1,
+        shooter_phase: 0,
+        placement: MonsterPlacement::Random { avoid_player: 4.0 },
+        hp: None,
+    };
+    def.goal = GoalCfg::Object { min_player_dist: 0.0, far: true };
+    raycast_entry(
+        "deadly_corridor",
+        "doomish",
+        "run a guarded BSP corridor to the vest at the far end",
+        def,
+    )
+}
+
+fn predict_position() -> ScenarioDef {
+    let mut cfg = ScenarioCfg::new("predict_position");
+    cfg.episode_ticks = 300;
+    cfg.end_on_clear = true;
+    cfg.rewards.monster_kill = 1.0;
+    cfg.rewards.step = -0.001;
+    let mut def = RaycastDef::new(cfg, MapSource::Ascii(WIDE_ROOM));
+    def.players = PlayerPlacement::WestEdge;
+    // one rocket (cost 4), and no sidearm rounds to fall back on
+    def.loadout = Loadout { weapon: 4, ammo: 4, pistol_ammo: 0 };
+    def.monsters = MonsterTable {
+        n: 1,
+        shooter_period: 0,
+        shooter_phase: 0,
+        placement: MonsterPlacement::EastEdge,
+        hp: None,
+    };
+    raycast_entry(
+        "predict_position",
+        "doomish",
+        "one rocket, one moving target: time the shot before it closes in",
+        def,
+    )
+}
+
+fn take_cover() -> ScenarioDef {
+    let mut cfg = ScenarioCfg::new("take_cover");
+    cfg.rewards.step = 0.25; // +1 per action alive
+    let mut def = RaycastDef::new(cfg, MapSource::Ascii(WIDE_ROOM));
+    def.players = PlayerPlacement::WestEdge;
+    // unarmed: dodge, don't fight
+    def.loadout = Loadout { weapon: 1, ammo: 0, pistol_ammo: 0 };
+    def.monsters = MonsterTable {
+        n: 4,
+        shooter_period: 1,
+        shooter_phase: 0,
+        placement: MonsterPlacement::EastEdge,
+        hp: None,
+    };
+    raycast_entry(
+        "take_cover",
+        "doomish",
+        "unarmed dodge: survive a wall of hitscan shooters",
+        def,
+    )
+}
+
+fn battle_def(
+    name: &'static str,
+    map: MapSource,
+    n_monsters: usize,
+    n_packs: usize,
+) -> RaycastDef {
+    let mut cfg = ScenarioCfg::new(name);
+    cfg.rewards.health_pickup = 0.2;
+    cfg.rewards.ammo_pickup = 0.2;
+    cfg.rewards.damage = 0.01;
+    let mut def = RaycastDef::new(cfg, map);
+    def.world.monster_respawn_ticks = 220;
+    // chaingun, the battle loadout (stock pistol kept, as pre-registry)
+    def.loadout = Loadout { weapon: 3, ammo: 60, ..Loadout::default() };
+    def.monsters = MonsterTable {
+        n: n_monsters,
+        shooter_period: 3,
+        shooter_phase: 0,
+        placement: MonsterPlacement::Random { avoid_player: 4.0 },
+        hp: None,
+    };
+    def.pickups.health = PickupSpec::new(n_packs, 350);
+    def.pickups.ammo = PickupSpec::new(n_packs, 350);
+    def
+}
+
+// ---- match modes ----------------------------------------------------------
+
+fn match_def(
+    name: &'static str,
+    n_agents: usize,
+    n_bots: usize,
+    map: MapSource,
+) -> RaycastDef {
+    let mut cfg = ScenarioCfg::new(name);
+    cfg.rewards = match_rewards();
+    cfg.end_on_death = false; // respawn, match runs to the timer
+    cfg.n_agents = n_agents;
+    cfg.n_bots = n_bots;
+    let mut def = RaycastDef::new(cfg, map);
+    def.world.player_respawn_ticks = 70;
+    def.players = PlayerPlacement::Spread(6.0);
+    def.needs_full_heads = true;
+    def.pickups = PickupTable {
+        health: PickupSpec::new(3, 300),
+        ammo: PickupSpec::new(3, 250),
+        armor: PickupSpec::new(2, 500),
+        // shotgun, chaingun, plasma
+        weapons: vec![
+            (2, PickupSpec::new(2, 400)),
+            (3, PickupSpec::new(2, 400)),
+            (5, PickupSpec::new(1, 400)),
+        ],
+    };
+    def
+}
+
+fn duel_bots() -> ScenarioDef {
+    raycast_entry(
+        "duel_bots",
+        "doomish_full",
+        "1v1 against a scripted bot in the arena (paper Fig 8)",
+        match_def("duel_bots", 1, 1, MapSource::Ascii(ARENA)),
+    )
+}
+
+fn deathmatch_bots() -> ScenarioDef {
+    raycast_entry(
+        "deathmatch_bots",
+        "doomish_full",
+        "free-for-all against three scripted bots (paper Fig 8)",
+        match_def("deathmatch_bots", 1, 3, MapSource::Ascii(ARENA)),
+    )
+}
+
+fn duel() -> ScenarioDef {
+    raycast_entry(
+        "duel",
+        "doomish_full",
+        "1v1 self-play: two policy-controlled players (paper §4.3)",
+        match_def("duel", 2, 0, MapSource::Ascii(ARENA)),
+    )
+}
+
+fn deathmatch() -> ScenarioDef {
+    raycast_entry(
+        "deathmatch",
+        "doomish_full",
+        "2 policy players + 2 scripted bots (paper §4.3)",
+        match_def("deathmatch", 2, 2, MapSource::Ascii(ARENA)),
+    )
+}
+
+fn duel_gen() -> ScenarioDef {
+    let mut def = match_def("duel_gen", 2, 0, MapSource::default_arena());
+    // Even counts only: the arena generator hands out mirrored spot pairs,
+    // so both players see an identical item layout.
+    def.pickups = PickupTable {
+        health: PickupSpec::new(4, 300),
+        ammo: PickupSpec::new(4, 250),
+        armor: PickupSpec::new(2, 500),
+        weapons: vec![
+            (2, PickupSpec::new(2, 400)),
+            (3, PickupSpec::new(2, 400)),
+            (5, PickupSpec::new(2, 400)),
+        ],
+    };
+    raycast_entry(
+        "duel_gen",
+        "doomish_full",
+        "self-play duel on a fresh mirror-symmetric arena every episode",
+        def,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_big_and_unique() {
+        let defs = all();
+        assert!(defs.len() >= 16, "only {} scenarios registered", defs.len());
+        let names: std::collections::HashSet<_> = defs.iter().map(|d| d.name).collect();
+        assert_eq!(names.len(), defs.len(), "duplicate scenario names");
+        // Every canonical spec must itself resolve.
+        for d in &defs {
+            assert!(
+                super::super::heads_for_spec(d.spec).is_ok(),
+                "{}: bad spec {}",
+                d.name,
+                d.spec
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_and_aliases() {
+        assert!(get("battle").is_some());
+        assert!(get("nope").is_none());
+        let t3 = get("gridlab_task3").unwrap();
+        assert_eq!(t3.name, multitask::task(3).unwrap().name);
+        assert!(get("gridlab_task99").is_none());
+    }
+
+    #[test]
+    fn param_override_syntax() {
+        let def = resolve("battle?monsters=20&ticks=500").unwrap();
+        let Builder::Raycast(r) = def.builder else { panic!() };
+        assert_eq!(r.monsters.n, 20);
+        assert_eq!(r.cfg.episode_ticks, 500);
+
+        let def = resolve("maze_gen?size=11x9").unwrap();
+        let Builder::Raycast(r) = def.builder else { panic!() };
+        assert_eq!(r.map, MapSource::Maze { mw: 11, mh: 9, scale: 2, loop_p: 0.15 });
+
+        let def = resolve("collect_good_objects?good=3&bad=0").unwrap();
+        let Builder::Gridlab(t) = def.builder else { panic!() };
+        assert_eq!((t.n_good, t.n_bad), (3, 0));
+
+        assert!(resolve("battle?warp=1").is_err());
+        assert!(resolve("battle?monsters").is_err());
+        assert!(resolve("breakout?monsters=2").is_err());
+        assert!(resolve("ghost_town").is_err());
+    }
+
+    #[test]
+    fn count_overrides_have_sanity_caps() {
+        // Typo'd huge values are parameter errors, not OOM kills.
+        for bad in [
+            "maze_gen?size=9999x9999",
+            "battle?monsters=100000000",
+            "maze_gen?scale=1000",
+            "duel?bots=1000",
+            "duel_gen?pillars=100000",
+            "collect_good_objects?good=100000000",
+        ] {
+            let err = resolve(bad).unwrap_err();
+            assert!(err.contains("cap"), "{bad}: {err}");
+        }
+        // The caps leave every realistic value usable.
+        assert!(resolve("maze_gen?size=21x15&scale=4").is_ok());
+        assert!(resolve("battle?monsters=200").is_ok());
+    }
+
+    #[test]
+    fn map_switch_override() {
+        let def = resolve("battle?map=caves&size=31x21").unwrap();
+        let Builder::Raycast(r) = def.builder else { panic!() };
+        assert_eq!(r.map.kind_name(), "caves");
+        assert_eq!(r.map, MapSource::Caves { w: 31, h: 21, fill_p: 0.44, steps: 4 });
+        // `map=` wins regardless of parameter order: size applies to the
+        // switched source, not the (replaced) original maze.
+        let def = resolve("battle?size=31x21&map=caves").unwrap();
+        let Builder::Raycast(r) = def.builder else { panic!() };
+        assert_eq!(r.map, MapSource::Caves { w: 31, h: 21, fill_p: 0.44, steps: 4 });
+    }
+
+    #[test]
+    fn instantiate_validates_heads() {
+        let obs = ObsSpec { h: 36, w: 64, c: 3 };
+        // battle with the doomish layout: fine.
+        assert!(instantiate(get("battle").unwrap(), obs, &[3, 3, 2, 21]).is_ok());
+        // duel with the 4-head layout: clear up-front error.
+        let err = instantiate(get("duel").unwrap(), obs, &[3, 3, 2, 21]).unwrap_err();
+        assert!(err.contains("doomish_full"), "{err}");
+        // gridlab task with a raycast layout: clear error.
+        let err = instantiate(
+            get("collect_good_objects").unwrap(),
+            ObsSpec { h: 72, w: 96, c: 3 },
+            &[3, 3, 2, 21],
+        )
+        .unwrap_err();
+        assert!(err.contains("[7]"), "{err}");
+    }
+}

@@ -8,6 +8,7 @@
 //!   eval   --ckpt F [--episodes N] [--greedy b]  evaluate a checkpoint
 //!   match  --ckpt-a A --ckpt-b B [--matches N]   1v1 duel between checkpoints
 //!   render [--ckpt F] --out DIR [--n N]          dump episode frames (PPM)
+//!   envs                                          print the scenario registry
 //!   list                                          list presets/scenarios
 //!
 //! All configuration keys accepted by `--key value` are documented in
@@ -19,7 +20,7 @@ use sample_factory::coordinator::Trainer;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  repro train [--preset NAME] [--key value ...]\n  repro bench <exhibit> [--key value ...]\n  repro list"
+        "usage:\n  repro train [--preset NAME] [--key value ...]\n  repro bench <exhibit> [--key value ...]\n  repro envs\n  repro list"
     );
     std::process::exit(2)
 }
@@ -35,6 +36,7 @@ fn main() {
         "eval" => cmd_eval(&args[1..]),
         "match" => cmd_match(&args[1..]),
         "render" => cmd_render(&args[1..]),
+        "envs" => cmd_envs(),
         "list" => cmd_list(),
         _ => usage(),
     }
@@ -250,13 +252,50 @@ fn cmd_render(args: &[String]) {
     println!("wrote {} frames to {out}/ (PPM)", paths.len());
 }
 
-fn cmd_list() {
-    println!("presets: tiny_smoke doom_basic doom_battle duel_pbt breakout gridlab multitask");
-    println!(
-        "scenarios: basic defend_center defend_line health_gathering my_way_home \
-         battle battle2 duel_bots deathmatch_bots duel deathmatch breakout \
-         collect_good_objects gridlab_task0..7 multitask"
+/// Print the scenario registry as a table: the data-driven env zoo.
+fn cmd_envs() {
+    let defs = sample_factory::env::registry::all();
+    let mut rows = Vec::new();
+    for d in &defs {
+        let heads = d
+            .heads()
+            .iter()
+            .map(|h| h.to_string())
+            .collect::<Vec<_>>()
+            .join("-");
+        rows.push(vec![
+            d.name.to_string(),
+            d.spec.to_string(),
+            format!("{}", d.n_agents()),
+            format!("{}", d.n_bots()),
+            heads,
+            d.map_kind().to_string(),
+            d.doc.to_string(),
+        ]);
+    }
+    sample_factory::bench::print_table(
+        &["scenario", "spec", "agents", "bots", "heads", "map", "description"],
+        &rows,
     );
+    println!();
+    println!(
+        "{} scenarios.  Any name accepts ?key=value overrides, e.g. \
+         battle?monsters=20, 'maze_gen?size=11x9&scale=2' (quote '&' for \
+         the shell), duel?bots=2.",
+        defs.len()
+    );
+}
+
+fn cmd_list() {
+    println!(
+        "presets: {}",
+        sample_factory::config::PRESET_NAMES.join(" ")
+    );
+    let scenarios: Vec<String> = sample_factory::env::registry::all()
+        .iter()
+        .map(|d| d.name.to_string())
+        .collect();
+    println!("scenarios: {} multitask (see `repro envs`)", scenarios.join(" "));
     println!("methods: appo sync serialized pure_sim");
     println!("specs: tiny doomish doomish_full arcade gridlab");
 }

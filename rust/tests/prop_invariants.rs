@@ -99,7 +99,7 @@ fn prop_action_decoder_total_on_valid_inputs() {
     ];
     check(200, |g| {
         let heads = g.choose(&layouts).clone();
-        let dec = ActionDecoder { n_heads: heads.len() };
+        let dec = ActionDecoder::new(&heads).expect("builtin layout");
         let a: Vec<i32> = heads.iter().map(|&n| g.usize_in(0, n - 1) as i32).collect();
         let it = dec.decode(&a);
         assert!(it.mv.abs() <= 1.0 && it.strafe.abs() <= 1.0);
