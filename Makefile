@@ -19,7 +19,8 @@ bench:
 	cargo bench
 
 # Emit machine-readable perf records (BENCH_<name>.json at the repo root:
-# frames/sec, p50/p95 batch latency, config) so the perf trajectory across
+# frames/sec, p50/p95 batch latency, transport msgs/sec per producer count,
+# learner assembly/train overlap, config) so the perf trajectory across
 # PRs is recorded.  SF_BENCH_FRAMES scales the per-cell budget.
 bench-json:
 	cargo run --release --bin repro -- bench throughput --frames $(or $(SF_BENCH_FRAMES),20000)

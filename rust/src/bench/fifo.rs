@@ -1,9 +1,19 @@
-//! Appendix B.1: the custom FIFO queue vs the standard library channel in
-//! the many-producers / one-consumer configuration that dominates the
-//! sampler (every rollout worker pushes action requests to few policy
-//! workers).  The paper's C++ faster-fifo reports 20-30x over Python's
-//! multiprocessing.Queue; here the baseline is `std::sync::mpsc` and the
-//! win comes from batched consumption under one lock.
+//! Appendix B.1 + the tier-2 transport: queue throughput in the
+//! many-producers / one-consumer configuration that dominates the sampler
+//! (every rollout worker pushes action requests to few policy workers).
+//!
+//! Three contenders per producer count:
+//! * `mutex_ring` — [`Fifo`], the paper-faithful batched mutex ring (the
+//!   reference implementation),
+//! * `sharded` — [`ShardedQueue`], one lock-free SPSC shard per producer
+//!   with a combining consumer (the transport the trainer now runs on),
+//! * `std_mpsc` — `std::sync::mpsc::sync_channel`, the stdlib baseline
+//!   (the paper's C++ faster-fifo reports 20-30x over Python's
+//!   multiprocessing.Queue in the same role).
+//!
+//! Also measures the pipelined learner's assembly/train overlap on a short
+//! tiny-spec APPO run, and writes everything to `BENCH_transport.json` —
+//! the machine-readable record CI's bench-smoke job uploads per PR.
 
 use std::sync::mpsc;
 use std::thread;
@@ -11,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::ipc::{Fifo, RecvError};
+use crate::ipc::{Fifo, RecvError, ShardedQueue};
 use crate::json::Json;
 
 use super::{parse_bench_args, print_table, write_bench_json, write_csv};
@@ -19,6 +29,10 @@ use super::{parse_bench_args, print_table, write_bench_json, write_csv};
 /// Default messages per producer; `--frames N` overrides (the generic
 /// per-cell budget knob, reused here so CI smoke runs stay short).
 const MSGS_PER_PRODUCER: usize = 100_000;
+
+/// Producer-count sweep: past ~8 producers is where single-lock designs
+/// fall over (EnvPool makes the same observation).
+const PRODUCER_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 
 fn bench_fifo(producers: usize, batched: bool, msgs: usize) -> f64 {
     let q: Fifo<u64> = Fifo::new(4096);
@@ -62,6 +76,41 @@ fn bench_fifo(producers: usize, batched: bool, msgs: usize) -> f64 {
     total as f64 / start.elapsed().as_secs_f64()
 }
 
+/// The sharded transport in the identical role: same total buffering
+/// (4096 split across shards), same batched consumer.
+fn bench_sharded(producers: usize, msgs: usize) -> f64 {
+    let shard_cap = (4096 / producers).max(64);
+    let q: ShardedQueue<u64> = ShardedQueue::new(producers, shard_cap);
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let mut tx = q.claim_producer(p).expect("shard claimed once");
+        handles.push(thread::spawn(move || {
+            for i in 0..msgs {
+                assert!(tx.push((p * msgs + i) as u64));
+            }
+        }));
+    }
+    let total = producers * msgs;
+    let consumer = thread::spawn(move || {
+        let mut got = 0usize;
+        let mut buf = Vec::with_capacity(1024);
+        while got < total {
+            buf.clear();
+            match q.pop_many(&mut buf, 1024, Duration::from_millis(100)) {
+                Ok(n) => got += n,
+                Err(RecvError::Closed) => break,
+                Err(RecvError::Timeout) => {}
+            }
+        }
+    });
+    for h in handles {
+        h.join().unwrap();
+    }
+    consumer.join().unwrap();
+    total as f64 / start.elapsed().as_secs_f64()
+}
+
 fn bench_mpsc(producers: usize, msgs: usize) -> f64 {
     let (tx, rx) = mpsc::sync_channel::<u64>(4096);
     let start = Instant::now();
@@ -92,52 +141,100 @@ fn bench_mpsc(producers: usize, msgs: usize) -> f64 {
     total as f64 / start.elapsed().as_secs_f64()
 }
 
+/// Pipelined-learner overlap on a short tiny-spec APPO run: busy seconds
+/// of the assembly stage (minibatch memcpy, overlapped) vs the train
+/// stage, and their ratio — 1.0 means assembly is fully hidden behind
+/// training; > 1.0 means assembly is the pipeline bottleneck.
+fn learner_overlap(frames: u64) -> Result<(f64, f64, f64)> {
+    let mut cfg = crate::config::preset("tiny_smoke").expect("tiny_smoke preset");
+    cfg.total_env_frames = frames;
+    cfg.log_interval_s = 0.0;
+    let res = crate::coordinator::Trainer::run(&cfg)?;
+    let util = if res.learner_train_s > 0.0 {
+        res.learner_assembly_s / res.learner_train_s
+    } else {
+        0.0
+    };
+    Ok((res.learner_assembly_s, res.learner_train_s, util))
+}
+
 pub fn run_cli(args: &[String]) -> Result<()> {
     let (_, extra) = parse_bench_args(crate::config::Config::default(), args)?;
     let msgs = extra.frames.map(|f| f as usize).unwrap_or(MSGS_PER_PRODUCER);
-    println!("== Appendix B.1: FIFO queue throughput (msgs/s), many producers -> 1 consumer ==");
+    println!(
+        "== transport: queue throughput (msgs/s), many producers -> 1 batched consumer =="
+    );
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
-    for producers in [1usize, 2, 4, 8] {
+    for producers in PRODUCER_SWEEP {
         let f_batched = bench_fifo(producers, true, msgs);
+        let sharded = bench_sharded(producers, msgs);
         let f_single = bench_fifo(producers, false, msgs);
         let m = bench_mpsc(producers, msgs);
         eprintln!(
-            "  producers={producers}: fifo(batched)={f_batched:.0} fifo={f_single:.0} mpsc={m:.0}"
+            "  producers={producers}: sharded={sharded:.0} mutex_ring={f_batched:.0} \
+             fifo(unbatched)={f_single:.0} mpsc={m:.0}"
         );
         rows.push(vec![
             format!("{producers}"),
+            format!("{sharded:.0}"),
             format!("{f_batched:.0}"),
             format!("{f_single:.0}"),
             format!("{m:.0}"),
-            format!("{:.1}x", f_batched / m),
+            format!("{:.1}x", sharded / f_batched),
         ]);
         json_rows.push(Json::obj(vec![
             ("producers", Json::num(producers as f64)),
-            ("fifo_batched_msgs_per_s", Json::num(f_batched)),
-            ("fifo_msgs_per_s", Json::num(f_single)),
+            ("sharded_msgs_per_s", Json::num(sharded)),
+            ("mutex_ring_msgs_per_s", Json::num(f_batched)),
+            ("fifo_unbatched_msgs_per_s", Json::num(f_single)),
             ("std_mpsc_msgs_per_s", Json::num(m)),
+            ("sharded_vs_mutex", Json::num(sharded / f_batched)),
         ]));
     }
     let header = [
         "producers",
-        "fifo_batched_msgs/s",
-        "fifo_msgs/s",
+        "sharded_msgs/s",
+        "mutex_ring_msgs/s",
+        "fifo_unbatched_msgs/s",
         "std_mpsc_msgs/s",
-        "batched_vs_mpsc",
+        "sharded_vs_mutex",
     ];
     print_table(&header, &rows);
     write_csv("bench_results/appB1_fifo.csv", &header, &rows)?;
+
+    // Pipelined-learner overlap (short end-to-end run on the tiny spec).
+    // A failure here must not discard the sweep above — the transport
+    // numbers were already measured; record the overlap as null instead.
+    let overlap_frames = (msgs as u64 / 4).clamp(5_000, 60_000);
+    let overlap_json = match learner_overlap(overlap_frames) {
+        Ok((assembly_s, train_s, util)) => {
+            println!(
+                "learner pipeline: assembly busy {assembly_s:.3}s  \
+                 train busy {train_s:.3}s  assembly/train {util:.3}"
+            );
+            super::learner_overlap_json(assembly_s, train_s)
+        }
+        Err(e) => {
+            eprintln!("  learner-overlap run failed (sweep results kept): {e:#}");
+            Json::Null
+        }
+    };
+
     write_bench_json(
-        "fifo",
+        "transport",
         Json::obj(vec![
-            ("bench", Json::str("fifo")),
+            ("bench", Json::str("transport")),
             ("unix_time", Json::num(crate::util::unix_time_s())),
             (
                 "config",
-                Json::obj(vec![("msgs_per_producer", Json::num(msgs as f64))]),
+                Json::obj(vec![
+                    ("msgs_per_producer", Json::num(msgs as f64)),
+                    ("overlap_frames", Json::num(overlap_frames as f64)),
+                ]),
             ),
             ("rows", Json::Arr(json_rows)),
+            ("learner_overlap", overlap_json),
         ]),
     )?;
     Ok(())

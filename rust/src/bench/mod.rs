@@ -67,6 +67,23 @@ pub fn write_bench_json(name: &str, payload: crate::json::Json) -> Result<()> {
     Ok(())
 }
 
+/// The pipelined learner's overlap record, shared by `BENCH_transport.json`
+/// and `BENCH_throughput.json`: busy seconds of the assembly stage
+/// (overlapped minibatch memcpy) vs the train stage, plus their ratio —
+/// 1.0 means assembly exactly fills the train step's shadow; > 1.0 means
+/// assembly is the pipeline bottleneck.
+pub fn learner_overlap_json(assembly_s: f64, train_s: f64) -> crate::json::Json {
+    use crate::json::Json;
+    Json::obj(vec![
+        ("assembly_busy_s", Json::num(assembly_s)),
+        ("train_busy_s", Json::num(train_s)),
+        (
+            "assembly_over_train",
+            Json::num(if train_s > 0.0 { assembly_s / train_s } else { 0.0 }),
+        ),
+    ])
+}
+
 /// p-th percentile (0..=100, nearest-rank on the sorted copy) of a
 /// sample set; 0.0 for an empty set.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {

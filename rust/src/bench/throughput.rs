@@ -94,6 +94,9 @@ pub fn run_cli(args: &[String]) -> Result<()> {
 
     let mut rows = Vec::new();
     let mut cells_json = Vec::new();
+    // Pipelined-learner overlap, accumulated over the APPO cells: busy
+    // seconds of the assembly stage (overlapped memcpy) vs the train stage.
+    let (mut assembly_s, mut train_s) = (0f64, 0f64);
     for (suite, spec, scenario) in SUITES {
         for method in METHODS {
             let mut cells = vec![suite.to_string(), method.name().to_string()];
@@ -103,7 +106,12 @@ pub fn run_cli(args: &[String]) -> Result<()> {
                 cfg.total_env_frames = frames;
                 cfg.num_workers = 2;
                 cfg.envs_per_worker = (n_envs / cfg.num_workers).max(1);
-                let fps = measure(&cfg)?;
+                let res = Trainer::run(&cfg)?;
+                let fps = res.fps;
+                if method == Method::Appo {
+                    assembly_s += res.learner_assembly_s;
+                    train_s += res.learner_train_s;
+                }
                 cells.push(format!("{fps:.0}"));
                 eprintln!(
                     "  [{suite}/{}] envs={n_envs} fps={fps:.0}",
@@ -162,6 +170,10 @@ pub fn run_cli(args: &[String]) -> Result<()> {
             ),
             ("fig3", Json::Arr(cells_json)),
             ("policy_inference", Json::Arr(infer_json)),
+            (
+                "learner_overlap",
+                super::learner_overlap_json(assembly_s, train_s),
+            ),
         ]),
     )?;
     Ok(())

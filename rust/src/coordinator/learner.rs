@@ -1,18 +1,30 @@
-//! Learner (§3.1, §3.4): consumes completed trajectory slots, assembles the
-//! SGD minibatch, executes the fused APPO train_step (V-trace Pallas kernel
-//! + PPO clipping + Adam, one HLO program) through PJRT, publishes the new
-//! parameters, and recycles the slots.
+//! Learner (§3.1, §3.4), pipelined: an **assembly stage** drains completed
+//! trajectory slots from the sharded learner queue and memcpy-fills the
+//! next SGD minibatch while a **train stage** executes the fused APPO
+//! train_step (V-trace + PPO clipping + Adam) on the previous one,
+//! publishes the new parameters, and recycles the consumed slots.
+//!
+//! The two stages exchange a pair of [`BatchBufs`] through tiny
+//! handoff FIFOs (double buffering, Large-Batch-Simulation style): batch
+//! N+1 is assembled strictly concurrently with batch N's gradient step,
+//! so the train stage never stalls on minibatch memcpy.  Slots are
+//! recycled only *after* their batch is trained — policy-lag accounting
+//! (versions are read at train time, against the version actually being
+//! trained) and back-pressure through the finite slot store are exactly
+//! those of the serial learner; the pipeline just keeps one extra batch
+//! in flight.
 //!
 //! Policy-lag accounting: every step of every trajectory carries the param
 //! version that generated it; lag = (version being trained) - (version that
 //! acted).  The paper reports 5-10 SGD steps of average lag as the stable
 //! regime — the monitor prints the same statistic and the integration tests
-//! assert it stays bounded (back-pressure through the finite slot store).
+//! assert it stays bounded (back-pressure through the slot store).
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::ipc::{RecvError, SlotIdx};
+use crate::ipc::{Fifo, RecvError, SlotIdx};
 use crate::runtime::{
     lit_f32, lit_i32, lit_u8, to_f32_vec, LearnerState, Literal, ParamStore, Tensors,
 };
@@ -28,7 +40,10 @@ pub struct LearnerCfg {
     pub copy_from: Arc<std::sync::Mutex<Option<crate::runtime::VersionedParams>>>,
 }
 
-/// Reusable minibatch assembly buffers.
+/// One assembled minibatch in flight between the stages: the input
+/// tensors, the per-step behaviour versions (for lag accounting at train
+/// time), and the slots it was built from (recycled by the train stage
+/// once the batch is consumed).
 struct BatchBufs {
     obs: Vec<u8>,
     last_obs: Vec<u8>,
@@ -37,9 +52,109 @@ struct BatchBufs {
     blp: Vec<f32>,
     rewards: Vec<f32>,
     dones: Vec<f32>,
+    versions: Vec<u32>,
+    slots: Vec<SlotIdx>,
 }
 
-/// Body of a learner thread (one per policy).
+impl BatchBufs {
+    fn new(b: usize, t: usize, obs_len: usize, hidden: usize, n_heads: usize) -> Self {
+        BatchBufs {
+            obs: vec![0u8; b * t * obs_len],
+            last_obs: vec![0u8; b * obs_len],
+            h0: vec![0f32; b * hidden],
+            actions: vec![0i32; b * t * n_heads],
+            blp: vec![0f32; b * t],
+            rewards: vec![0f32; b * t],
+            dones: vec![0f32; b * t],
+            versions: vec![0u32; b * t],
+            slots: Vec::with_capacity(b),
+        }
+    }
+}
+
+/// Assembly stage: copy `slots` into the batch tensors.  Pure memcpy —
+/// this is the work that now overlaps the previous batch's train step.
+fn fill_batch(ctx: &SharedCtx, slots: &[SlotIdx], bufs: &mut BatchBufs) {
+    let man = &ctx.progs.manifest;
+    let t = man.rollout;
+    let obs_len = man.obs_len();
+    let hidden = man.hidden;
+    let n_heads = man.n_heads();
+    for (i, &sl) in slots.iter().enumerate() {
+        let slot = ctx.store.slot(sl);
+        bufs.obs[i * t * obs_len..(i + 1) * t * obs_len]
+            .copy_from_slice(&slot.obs[..t * obs_len]);
+        bufs.last_obs[i * obs_len..(i + 1) * obs_len]
+            .copy_from_slice(slot.obs_row(t, obs_len));
+        bufs.h0[i * hidden..(i + 1) * hidden].copy_from_slice(&slot.h0);
+        bufs.actions[i * t * n_heads..(i + 1) * t * n_heads]
+            .copy_from_slice(&slot.actions[..t * n_heads]);
+        bufs.blp[i * t..(i + 1) * t].copy_from_slice(&slot.behavior_lp[..t]);
+        bufs.rewards[i * t..(i + 1) * t].copy_from_slice(&slot.rewards[..t]);
+        bufs.dones[i * t..(i + 1) * t].copy_from_slice(&slot.dones[..t]);
+        bufs.versions[i * t..(i + 1) * t].copy_from_slice(&slot.versions[..t]);
+    }
+    bufs.slots.clear();
+    bufs.slots.extend_from_slice(slots);
+}
+
+/// Body of the assembly-stage thread: pop an empty buffer, gather a full
+/// batch of trajectory slots, fill, hand off.  Exits on shutdown/close,
+/// releasing any slots it still holds so the store can drain.
+fn run_assembly(
+    ctx: &SharedCtx,
+    policy_id: u32,
+    b: usize,
+    free: &Fifo<BatchBufs>,
+    filled: &Fifo<BatchBufs>,
+) {
+    let queue = ctx.learner_queues[policy_id as usize].clone();
+    let mut slots: Vec<SlotIdx> = Vec::with_capacity(b);
+    'outer: loop {
+        let mut bufs = loop {
+            match free.pop(Duration::from_millis(100)) {
+                Ok(bf) => break bf,
+                Err(RecvError::Closed) => break 'outer,
+                Err(RecvError::Timeout) => {
+                    if ctx.should_stop() {
+                        break 'outer;
+                    }
+                }
+            }
+        };
+        while slots.len() < b {
+            match queue.pop_many(&mut slots, b - slots.len(), Duration::from_millis(100))
+            {
+                Ok(_) => {}
+                Err(RecvError::Closed) => break 'outer,
+                Err(RecvError::Timeout) => {
+                    if ctx.should_stop() {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        let t0 = Instant::now();
+        fill_batch(ctx, &slots, &mut bufs);
+        ctx.assembly_busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if !filled.push(bufs) {
+            // Closed mid-handoff (shutdown): the batch was dropped with its
+            // slot list — the local `slots` copy below returns them.
+            break;
+        }
+        slots.clear();
+    }
+    // Shutdown: hand incomplete gathers back to the store (not recycled —
+    // they were never trained; release alone keeps the free-list whole).
+    for &sl in &slots {
+        ctx.store.release(sl);
+    }
+    filled.close();
+}
+
+/// Body of a learner thread (one per policy): spawns its assembly stage
+/// and runs the train stage in place.
 pub fn run_learner(
     ctx: &SharedCtx,
     params_store: Arc<ParamStore>,
@@ -53,125 +168,143 @@ pub fn run_learner(
     let hidden = man.hidden;
     let n_heads = man.n_heads();
     let n_params = man.n_params;
-    let queue = ctx.learner_queues[cfg.policy_id as usize].clone();
 
-    let mut bufs = BatchBufs {
-        obs: vec![0u8; b * t * obs_len],
-        last_obs: vec![0u8; b * obs_len],
-        h0: vec![0f32; b * hidden],
-        actions: vec![0i32; b * t * n_heads],
-        blp: vec![0f32; b * t],
-        rewards: vec![0f32; b * t],
-        dones: vec![0f32; b * t],
-    };
-    let mut slots: Vec<SlotIdx> = Vec::with_capacity(b);
+    // Double buffering: two batch buffers ping-pong through the handoff
+    // FIFOs, so assembly of batch N+1 overlaps training of batch N.  The
+    // FIFOs are mutex rings, but they carry 2 messages per SGD step — the
+    // sharded transport stays where the fan-in is.
+    let free: Fifo<BatchBufs> = Fifo::new(2);
+    let filled: Fifo<BatchBufs> = Fifo::new(2);
+    assert!(free.push(BatchBufs::new(b, t, obs_len, hidden, n_heads)));
+    assert!(free.push(BatchBufs::new(b, t, obs_len, hidden, n_heads)));
 
-    loop {
-        // ---- gather a full minibatch of trajectories --------------------
-        while slots.len() < b {
-            let want = b - slots.len();
-            match queue.pop_many(&mut slots, want, Duration::from_millis(100)) {
-                Ok(_) => {}
-                Err(RecvError::Closed) => return,
+    std::thread::scope(|s| {
+        let assembly = {
+            let free = free.clone();
+            let filled = filled.clone();
+            let policy_id = cfg.policy_id;
+            std::thread::Builder::new()
+                .name(format!("assembly-{policy_id}"))
+                .spawn_scoped(s, move || {
+                    run_assembly(ctx, policy_id, b, &free, &filled)
+                })
+                .expect("spawn assembly stage")
+        };
+
+        loop {
+            let mut bufs = match filled.pop(Duration::from_millis(100)) {
+                Ok(bf) => bf,
+                Err(RecvError::Closed) => break,
                 Err(RecvError::Timeout) => {
                     if ctx.should_stop() {
-                        return;
+                        break;
                     }
+                    continue;
                 }
+            };
+
+            // ---- PBT weight exchange (cheap: swap the literals) ---------
+            if let Some(src) = cfg.copy_from.lock().unwrap().take() {
+                state.params = Tensors(src.0.clone());
             }
-        }
 
-        // ---- PBT weight exchange (cheap: swap the literals) -------------
-        if let Some(src) = cfg.copy_from.lock().unwrap().take() {
-            state.params = Tensors(src.0.clone());
-        }
-
-        // ---- assemble ----------------------------------------------------
-        let mut lag_sum = 0u64;
-        let mut lag_max = 0u32;
-        let train_version = params_store.version();
-        for (i, &sl) in slots.iter().enumerate() {
-            let slot = ctx.store.slot(sl);
-            bufs.obs[i * t * obs_len..(i + 1) * t * obs_len]
-                .copy_from_slice(&slot.obs[..t * obs_len]);
-            bufs.last_obs[i * obs_len..(i + 1) * obs_len]
-                .copy_from_slice(slot.obs_row(t, obs_len));
-            bufs.h0[i * hidden..(i + 1) * hidden].copy_from_slice(&slot.h0);
-            bufs.actions[i * t * n_heads..(i + 1) * t * n_heads]
-                .copy_from_slice(&slot.actions[..t * n_heads]);
-            bufs.blp[i * t..(i + 1) * t].copy_from_slice(&slot.behavior_lp[..t]);
-            bufs.rewards[i * t..(i + 1) * t].copy_from_slice(&slot.rewards[..t]);
-            bufs.dones[i * t..(i + 1) * t].copy_from_slice(&slot.dones[..t]);
-            for &v in &slot.versions[..t] {
+            // ---- policy-lag accounting, against the version being
+            // trained *now* (not the version current at assembly time) ----
+            let mut lag_sum = 0u64;
+            let mut lag_max = 0u32;
+            let train_version = params_store.version();
+            for &v in &bufs.versions {
                 let lag = train_version.saturating_sub(v);
                 lag_sum += lag as u64;
                 lag_max = lag_max.max(lag);
             }
+
+            let (hh, ww, cc) = (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
+            let hypers_now = cfg.hypers.read().unwrap().clone();
+            let lits = (
+                lit_u8(&[b, t, hh, ww, cc], &bufs.obs).expect("obs lit"),
+                lit_u8(&[b, hh, ww, cc], &bufs.last_obs).expect("last_obs lit"),
+                lit_f32(&[b, hidden], &bufs.h0).expect("h0 lit"),
+                lit_i32(&[b, t, n_heads], &bufs.actions).expect("actions lit"),
+                lit_f32(&[b, t], &bufs.blp).expect("blp lit"),
+                lit_f32(&[b, t], &bufs.rewards).expect("rewards lit"),
+                lit_f32(&[b, t], &bufs.dones).expect("dones lit"),
+            );
+            let hypers_lit =
+                lit_f32(&[hypers_now.len()], &hypers_now).expect("hypers lit");
+
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n_params + 9);
+            inputs.extend(state.params.iter());
+            inputs.extend(state.m.iter());
+            inputs.extend(state.v.iter());
+            inputs.push(&state.step[0]);
+            inputs.push(&hypers_lit);
+            inputs.push(&lits.0);
+            inputs.push(&lits.1);
+            inputs.push(&lits.2);
+            inputs.push(&lits.3);
+            inputs.push(&lits.4);
+            inputs.push(&lits.5);
+            inputs.push(&lits.6);
+
+            // ---- the fused train step -----------------------------------
+            let t0 = Instant::now();
+            let mut outs = ctx.progs.train.run(&inputs).expect("train step failed");
+            ctx.train_busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            debug_assert_eq!(outs.len(), 3 * n_params + 2);
+            let metrics_lit = outs.pop().unwrap();
+            let step_lit = outs.pop().unwrap();
+            let v_new: Vec<Literal> = outs.split_off(2 * n_params);
+            let m_new: Vec<Literal> = outs.split_off(n_params);
+            let p_new: Vec<Literal> = outs;
+            state.params = Tensors(p_new);
+            state.m = Tensors(m_new);
+            state.v = Tensors(v_new);
+            state.step = Tensors(vec![step_lit]);
+
+            // ---- publish to the policy workers (§3.4: immediately) ------
+            let version = params_store.publish(state.publish());
+
+            let metrics = to_f32_vec(&metrics_lit).expect("metrics read");
+            let samples = (b * t) as u64;
+            ctx.push_stat(StatMsg::Train {
+                policy: cfg.policy_id,
+                version,
+                metrics,
+                lag_mean: lag_sum as f64 / samples as f64,
+                lag_max,
+                samples,
+            });
+
+            // ---- recycle the slots: only now, after the batch is
+            // consumed, so slot back-pressure sees the true in-flight set -
+            for &sl in &bufs.slots {
+                ctx.store.slot(sl).recycle();
+                ctx.store.release(sl);
+            }
+            bufs.slots.clear();
+            // Return the buffer; capacity 2 with 2 buffers circulating can
+            // never block.  Closed (shutdown) is fine — the buffer drops.
+            let _ = free.push(bufs);
+
+            if ctx.should_stop() {
+                break;
+            }
         }
 
-        let (hh, ww, cc) = (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
-        let hypers_now = cfg.hypers.read().unwrap().clone();
-        let lits = (
-            lit_u8(&[b, t, hh, ww, cc], &bufs.obs).expect("obs lit"),
-            lit_u8(&[b, hh, ww, cc], &bufs.last_obs).expect("last_obs lit"),
-            lit_f32(&[b, hidden], &bufs.h0).expect("h0 lit"),
-            lit_i32(&[b, t, n_heads], &bufs.actions).expect("actions lit"),
-            lit_f32(&[b, t], &bufs.blp).expect("blp lit"),
-            lit_f32(&[b, t], &bufs.rewards).expect("rewards lit"),
-            lit_f32(&[b, t], &bufs.dones).expect("dones lit"),
-        );
-        let hypers_lit = lit_f32(&[hypers_now.len()], &hypers_now).expect("hypers lit");
-
-        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n_params + 9);
-        inputs.extend(state.params.iter());
-        inputs.extend(state.m.iter());
-        inputs.extend(state.v.iter());
-        inputs.push(&state.step[0]);
-        inputs.push(&hypers_lit);
-        inputs.push(&lits.0);
-        inputs.push(&lits.1);
-        inputs.push(&lits.2);
-        inputs.push(&lits.3);
-        inputs.push(&lits.4);
-        inputs.push(&lits.5);
-        inputs.push(&lits.6);
-
-        // ---- the fused train step ---------------------------------------
-        let mut outs = ctx.progs.train.run(&inputs).expect("train step failed");
-        debug_assert_eq!(outs.len(), 3 * n_params + 2);
-        let metrics_lit = outs.pop().unwrap();
-        let step_lit = outs.pop().unwrap();
-        let v_new: Vec<Literal> = outs.split_off(2 * n_params);
-        let m_new: Vec<Literal> = outs.split_off(n_params);
-        let p_new: Vec<Literal> = outs;
-        state.params = Tensors(p_new);
-        state.m = Tensors(m_new);
-        state.v = Tensors(v_new);
-        state.step = Tensors(vec![step_lit]);
-
-        // ---- publish to the policy workers (§3.4: immediately) ----------
-        let version = params_store.publish(state.publish());
-
-        let metrics = to_f32_vec(&metrics_lit).expect("metrics read");
-        let samples = (b * t) as u64;
-        let _ = ctx.stats.try_push(StatMsg::Train {
-            policy: cfg.policy_id,
-            version,
-            metrics,
-            lag_mean: lag_sum as f64 / samples as f64,
-            lag_max,
-            samples,
-        });
-
-        // ---- recycle the slots -------------------------------------------
-        for &sl in &slots {
-            ctx.store.slot(sl).recycle();
-            ctx.store.release(sl);
+        // Unblock the assembly stage (it may be waiting on `free`), then
+        // release the slots of any batch it already handed off — assembled
+        // but never trained.
+        free.close();
+        filled.close();
+        let mut leftover = Vec::new();
+        while filled.pop_many(&mut leftover, 2, Duration::from_millis(0)).is_ok() {}
+        for bufs in &leftover {
+            for &sl in &bufs.slots {
+                ctx.store.release(sl);
+            }
         }
-        slots.clear();
-
-        if ctx.should_stop() {
-            return;
-        }
-    }
+        let _ = assembly.join();
+    });
 }

@@ -20,7 +20,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{Config, Method};
 use crate::env::vec_env::VecEnv;
 use crate::env::{heads_for_spec, multitask};
-use crate::ipc::{Fifo, TrajStore, TrajStoreSpec};
+use crate::ipc::{Fifo, ShardedQueue, TrajStore, TrajStoreSpec};
 use crate::runtime::{LearnerState, ModelPrograms, ParamStore, Runtime};
 use crate::stats::{EpisodeTracker, ThroughputMeter};
 use crate::util::Rng;
@@ -60,6 +60,15 @@ pub struct TrainResult {
     pub pbt_events: Vec<String>,
     /// Saved checkpoint paths (when `save_ckpt` is on), one per policy.
     pub ckpt_paths: Vec<String>,
+    /// Stat messages dropped because the monitor fell behind (0 = the
+    /// episode/lag accounting above is complete).
+    pub stat_drops: u64,
+    /// Busy seconds of the pipelined learner's two stages, summed across
+    /// policies: minibatch assembly (memcpy from slots, overlapped with
+    /// training) and the train step itself.  `assembly/train` is the
+    /// overlap-utilization ratio the transport bench reports.
+    pub learner_assembly_s: f64,
+    pub learner_train_s: f64,
 }
 
 impl TrainResult {
@@ -123,7 +132,11 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
     let agents_per_env = probe.spec().n_agents;
     drop(probe);
     let total_streams = cfg.total_envs() * agents_per_env;
-    let n_slots = ((total_streams + 2 * man.train_batch * n_policies) as f32
+    // 3 batches of headroom per policy: one being trained, one assembled
+    // ahead by the pipelined learner, one queuing behind them.  Back-
+    // pressure is unchanged in kind — rollout workers still block on an
+    // empty free-list — the pipeline just holds one more batch in flight.
+    let n_slots = ((total_streams + 3 * man.train_batch * n_policies) as f32
         * cfg.slot_slack)
         .ceil() as usize
         + 2;
@@ -136,13 +149,27 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
     });
 
     // ---- queues + shared context ----------------------------------------
+    // The two high-fan-in paths are sharded per rollout worker (tier-2
+    // transport): each worker claims its exclusive SPSC shard below, so
+    // pushes never contend with other producers or the consumer.  A shard
+    // only ever holds what its worker can have outstanding: one action
+    // request per stream; up to every slot for trajectories (a single
+    // worker can in principle own the whole slot budget).
+    let streams_per_worker = (cfg.envs_per_worker * agents_per_env).max(16);
     let ctx = Arc::new(SharedCtx {
-        policy_queues: (0..n_policies).map(|_| Fifo::new(total_streams.max(64))).collect(),
+        policy_queues: (0..n_policies)
+            .map(|_| ShardedQueue::new(cfg.num_workers, streams_per_worker))
+            .collect(),
         reply_queues: (0..cfg.num_workers)
             .map(|_| Fifo::new((cfg.envs_per_worker * agents_per_env).max(16)))
             .collect(),
-        learner_queues: (0..n_policies).map(|_| Fifo::new(n_slots)).collect(),
+        learner_queues: (0..n_policies)
+            .map(|_| ShardedQueue::new(cfg.num_workers, n_slots))
+            .collect(),
         stats: Fifo::new(4096),
+        stat_drops: AtomicU64::new(0),
+        assembly_busy_ns: AtomicU64::new(0),
+        train_busy_ns: AtomicU64::new(0),
         store,
         progs: progs.clone(),
         meter: Arc::new(ThroughputMeter::new()),
@@ -206,10 +233,25 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
             seed: root_rng.next_u64(),
             task_id,
         };
+        // Claim this worker's exclusive transport shards (one per policy
+        // queue and per learner queue) before the thread exists — a double
+        // claim is a topology bug and fails loudly here, at spawn.
+        let producers = rollout::RolloutProducers {
+            policy: ctx
+                .policy_queues
+                .iter()
+                .map(|q| q.claim_producer(w).expect("policy shard already claimed"))
+                .collect(),
+            learner: ctx
+                .learner_queues
+                .iter()
+                .map(|q| q.claim_producer(w).expect("learner shard already claimed"))
+                .collect(),
+        };
         let ctx = ctx.clone();
         threads.push(std::thread::Builder::new()
             .name(format!("rollout-{w}"))
-            .spawn(move || rollout::run_rollout_worker(&ctx, venv, rcfg))
+            .spawn(move || rollout::run_rollout_worker(&ctx, venv, producers, rcfg))
             .expect("spawn rollout worker"));
     }
 
@@ -296,10 +338,11 @@ fn monitor_loop(
             last_log = Instant::now();
             let fps = frames as f64 / elapsed.max(1e-9);
             let best = scores.iter().cloned().fold(f64::MIN, f64::max);
+            let drops = ctx.stat_drops.load(std::sync::atomic::Ordering::Relaxed);
             eprintln!(
                 "[{elapsed:7.1}s] frames {frames:>10}  fps {fps:>9.0}  \
                  episodes {episodes:>6}  sgd {learner_steps:>5}  \
-                 return {best:>8.2}  lag {:.1}",
+                 return {best:>8.2}  lag {:.1}  stat_drops {drops}",
                 if lag_n > 0 { lag_sum / lag_n as f64 } else { 0.0 },
             );
         }
@@ -356,5 +399,13 @@ fn monitor_loop(
         final_metrics,
         pbt_events: pbt.events,
         ckpt_paths: Vec::new(),
+        stat_drops: ctx.stat_drops.load(std::sync::atomic::Ordering::Relaxed),
+        learner_assembly_s: ctx
+            .assembly_busy_ns
+            .load(std::sync::atomic::Ordering::Relaxed) as f64
+            / 1e9,
+        learner_train_s: ctx.train_busy_ns.load(std::sync::atomic::Ordering::Relaxed)
+            as f64
+            / 1e9,
     })
 }

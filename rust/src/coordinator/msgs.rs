@@ -3,11 +3,19 @@
 //! Everything that crosses a thread boundary is a few bytes: slot indices
 //! and stream ids.  Observations, hidden states, actions and rewards stay
 //! in the shared trajectory slab (`ipc::slab`).
+//!
+//! Queue topology: the two high-fan-in paths — action requests
+//! (every rollout worker -> few policy workers) and completed trajectories
+//! (every rollout worker -> one learner per policy) — ride the sharded
+//! lock-free transport ([`crate::ipc::ShardedQueue`], one SPSC shard per
+//! rollout worker, claimed at spawn).  Replies (one producer group per
+//! *consumer* rather than per queue) and stats (many sporadic producers,
+//! monitor consumer) stay on the mutex-ring [`Fifo`].
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::ipc::{Fifo, SlotIdx, TrajStore};
+use crate::ipc::{Fifo, ShardedQueue, SlotIdx, TrajStore};
 use crate::runtime::ModelPrograms;
 use crate::stats::ThroughputMeter;
 
@@ -55,13 +63,24 @@ pub enum StatMsg {
 
 /// All queues + shared state for one training run.
 pub struct SharedCtx {
-    /// One request queue per policy (population member).
-    pub policy_queues: Vec<Fifo<ActionRequest>>,
+    /// One request queue per policy (population member), sharded per
+    /// rollout worker (producer handles claimed at spawn).
+    pub policy_queues: Vec<ShardedQueue<ActionRequest>>,
     /// One reply queue per rollout worker.
     pub reply_queues: Vec<Fifo<ActionReply>>,
-    /// One trajectory queue per policy (rollout -> learner).
-    pub learner_queues: Vec<Fifo<SlotIdx>>,
+    /// One trajectory queue per policy (rollout -> learner assembly),
+    /// sharded per rollout worker.
+    pub learner_queues: Vec<ShardedQueue<SlotIdx>>,
     pub stats: Fifo<StatMsg>,
+    /// `StatMsg`s dropped because the monitor fell behind (`push_stat`).
+    /// Surfaced in `TrainResult::stat_drops` and the monitor log line so
+    /// throughput runs can't quietly lose episode/lag data.
+    pub stat_drops: AtomicU64,
+    /// Nanoseconds the learner assembly stages spent filling batch
+    /// buffers, and the train stages spent in `train.run` — the
+    /// pipelined-learner overlap diagnostics (summed across policies).
+    pub assembly_busy_ns: AtomicU64,
+    pub train_busy_ns: AtomicU64,
     pub store: Arc<TrajStore>,
     pub progs: Arc<ModelPrograms>,
     pub meter: Arc<ThroughputMeter>,
@@ -76,6 +95,15 @@ impl SharedCtx {
     pub fn should_stop(&self) -> bool {
         self.shutdown.load(Ordering::Acquire)
             || self.frames.load(Ordering::Relaxed) >= self.frame_budget
+    }
+
+    /// Best-effort stat delivery: never blocks the hot path, but a dropped
+    /// message is *counted* — silent loss is how lag/episode accounting
+    /// lies during throughput runs.
+    pub fn push_stat(&self, msg: StatMsg) {
+        if self.stats.try_push(msg).is_err() {
+            self.stat_drops.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn request_shutdown(&self) {

@@ -37,6 +37,11 @@ pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWo
     let n_heads = heads.len();
 
     let mut rng = Rng::new(cfg.seed);
+    // The sharded transport exposes the same pop_many-with-deadline /
+    // close() contract as the old mutex ring, so the batch-collection and
+    // linger logic below is unchanged: the combining consumer drains every
+    // rollout worker's SPSC shard round-robin under one (uncontended)
+    // consumer-side lock.
     let queue = ctx.policy_queues[cfg.policy_id as usize].clone();
 
     // Reusable buffers: zero allocation in steady state.

@@ -14,10 +14,20 @@ use std::time::Duration;
 
 use crate::env::vec_env::VecEnv;
 use crate::env::{AgentStep, EpisodeMonitor};
-use crate::ipc::{RecvError, SlotIdx};
+use crate::ipc::{RecvError, ShardedProducer, SlotIdx};
 use crate::util::Rng;
 
 use super::msgs::{ActionRequest, SharedCtx, StatMsg};
+
+/// This worker's exclusive transport shards, claimed at spawn: one SPSC
+/// producer endpoint per policy queue (action requests) and per learner
+/// queue (completed trajectories).  Pushes through these never contend
+/// with other rollout workers — the old design funneled every worker
+/// through one mutex per queue.
+pub struct RolloutProducers {
+    pub policy: Vec<ShardedProducer<ActionRequest>>,
+    pub learner: Vec<ShardedProducer<SlotIdx>>,
+}
 
 /// One (env, agent) sample stream: the unit of trajectory production.
 struct Stream {
@@ -46,7 +56,12 @@ pub struct RolloutWorkerCfg {
 }
 
 /// Body of a rollout worker thread.
-pub fn run_rollout_worker(ctx: &SharedCtx, mut venv: VecEnv, cfg: RolloutWorkerCfg) {
+pub fn run_rollout_worker(
+    ctx: &SharedCtx,
+    mut venv: VecEnv,
+    mut producers: RolloutProducers,
+    cfg: RolloutWorkerCfg,
+) {
     let spec = ctx.store.spec().clone();
     let obs_len = spec.obs_len;
     let t_max = spec.rollout;
@@ -106,7 +121,7 @@ pub fn run_rollout_worker(ctx: &SharedCtx, mut venv: VecEnv, cfg: RolloutWorkerC
     for (g, members) in groups.iter().enumerate() {
         for &si in members {
             render_into_slot(ctx, &mut venv, &mut streams[si], obs_len);
-            send_request(ctx, &streams[si], cfg.worker_id, si as u32);
+            send_request(&mut producers, &streams[si], cfg.worker_id, si as u32);
             pending[g] += 1;
         }
     }
@@ -188,7 +203,7 @@ pub fn run_rollout_worker(ctx: &SharedCtx, mut venv: VecEnv, cfg: RolloutWorkerC
                     }
                     if let Some((ret, len)) = monitors[env_idx].record(a, &acc[a]) {
                         let frags = 0; // env-level frag queries happen in PBT mode
-                        let _ = ctx.stats.try_push(StatMsg::Episode {
+                        ctx.push_stat(StatMsg::Episode {
                             policy: st.policy,
                             ret,
                             len: len * cfg.frameskip as u64,
@@ -207,6 +222,7 @@ pub fn run_rollout_worker(ctx: &SharedCtx, mut venv: VecEnv, cfg: RolloutWorkerC
                         // the first observation of the next trajectory.
                         if !finalize_trajectory(
                             ctx,
+                            &mut producers,
                             &mut streams[si],
                             &mut rng,
                             cfg.n_policies,
@@ -215,7 +231,7 @@ pub fn run_rollout_worker(ctx: &SharedCtx, mut venv: VecEnv, cfg: RolloutWorkerC
                             break 'outer;
                         }
                     }
-                    send_request(ctx, &streams[si], cfg.worker_id, si as u32);
+                    send_request(&mut producers, &streams[si], cfg.worker_id, si as u32);
                     pending[g] += 1;
                 }
             }
@@ -247,14 +263,17 @@ fn render_into_slot(
     venv.envs[st.env_idx].render(st.agent_idx, row);
 }
 
-fn send_request(ctx: &SharedCtx, st: &Stream, worker_id: u16, stream: u32) {
+fn send_request(producers: &mut RolloutProducers, st: &Stream, worker_id: u16, stream: u32) {
     let req = ActionRequest {
         slot: st.slot,
         t: st.t as u16,
         reply_to: worker_id,
         stream,
     };
-    let _ = ctx.policy_queues[st.policy as usize].push(req);
+    // Wait-free in steady state: this worker's private SPSC shard.  A full
+    // shard (policy worker far behind) blocks with backoff, the same
+    // back-pressure the mutex ring applied.
+    let _ = producers.policy[st.policy as usize].push(req);
 }
 
 /// Trajectory complete (`st.t == T`, bootstrap row rendered): ship the slot
@@ -263,6 +282,7 @@ fn send_request(ctx: &SharedCtx, st: &Stream, worker_id: u16, stream: u32) {
 /// Returns false when the run is shutting down.
 fn finalize_trajectory(
     ctx: &SharedCtx,
+    producers: &mut RolloutProducers,
     st: &mut Stream,
     rng: &mut Rng,
     n_policies: u32,
@@ -295,7 +315,7 @@ fn finalize_trajectory(
         slot.h_cur.copy_from_slice(&h_carry);
         slot.obs_row_mut(0, obs_len).copy_from_slice(&obs_carry);
     }
-    let _ = ctx.learner_queues[st.policy as usize].push(old_slot);
+    let _ = producers.learner[st.policy as usize].push(old_slot);
 
     st.slot = new_slot;
     st.t = 0;

@@ -80,6 +80,33 @@ impl ScenarioDef {
         }
     }
 
+    /// `?key=value` parameters this scenario accepts, given its current
+    /// map source (map-shape keys only apply to the map kinds that have
+    /// them — the same dispatch as [`ScenarioDef::set_param`]).  Drives
+    /// the machine-readable `repro envs --json` listing.
+    pub fn param_names(&self) -> Vec<&'static str> {
+        match &self.builder {
+            Builder::Raycast(r) => {
+                let mut keys = vec![
+                    "monsters", "hp", "respawn", "health", "ammo", "armor", "bots",
+                    "ticks", "map",
+                ];
+                match r.map {
+                    MapSource::Ascii(_) => {}
+                    MapSource::Maze { .. } => keys.extend(["size", "scale", "loop_p"]),
+                    MapSource::Caves { .. } => keys.extend(["size", "fill"]),
+                    MapSource::BspRooms { .. } => keys.extend(["size", "doors"]),
+                    MapSource::Arena { .. } => keys.extend(["size", "doors", "pillars"]),
+                }
+                keys
+            }
+            Builder::Gridlab(_) => {
+                vec!["good", "bad", "ticks", "respawn", "size", "scale", "loop_p"]
+            }
+            Builder::Arcade => Vec::new(),
+        }
+    }
+
     /// Apply one `key=value` override.
     pub fn set_param(&mut self, key: &str, val: &str) -> Result<(), String> {
         use super::params::{count, value as p};
@@ -197,6 +224,50 @@ pub fn instantiate(
 /// `repro envs`.
 pub fn all() -> Vec<ScenarioDef> {
     table().to_vec()
+}
+
+/// Machine-readable registry listing (`repro envs --json`): one object per
+/// scenario with name, canonical spec, observation shape, action heads,
+/// agent/bot counts, map kind, the overridable `?key=value` parameters,
+/// and the doc string.  Reuses the bench-results [`Json`] writer.
+pub fn registry_json() -> crate::json::Json {
+    use crate::json::Json;
+    let defs = all();
+    let entries = defs
+        .iter()
+        .map(|d| {
+            let obs = super::obs_for_spec(d.spec)
+                .unwrap_or_else(|e| panic!("registry entry '{}': {e}", d.name));
+            Json::obj(vec![
+                ("name", Json::str(d.name)),
+                ("spec", Json::str(d.spec)),
+                (
+                    "obs_shape",
+                    Json::Arr(vec![
+                        Json::num(obs.h as f64),
+                        Json::num(obs.w as f64),
+                        Json::num(obs.c as f64),
+                    ]),
+                ),
+                (
+                    "action_heads",
+                    Json::Arr(d.heads().iter().map(|&h| Json::num(h as f64)).collect()),
+                ),
+                ("agents", Json::num(d.n_agents() as f64)),
+                ("bots", Json::num(d.n_bots() as f64)),
+                ("map", Json::str(d.map_kind())),
+                (
+                    "params",
+                    Json::Arr(d.param_names().iter().map(|p| Json::str(p)).collect()),
+                ),
+                ("doc", Json::str(d.doc)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenarios", Json::Arr(entries)),
+        ("count", Json::num(defs.len() as f64)),
+    ])
 }
 
 fn build_table() -> Vec<ScenarioDef> {

@@ -1,10 +1,23 @@
 //! Fast local communication between system components (paper §3.3, §B.1).
 //!
-//! Two pieces, mirroring the paper's protocol exactly:
+//! The transport is two-tier on the hot path, with the original mutex ring
+//! kept as the reference implementation:
 //!
-//! * [`fifo`] — a bounded circular-buffer FIFO with batched operations, the
-//!   analogue of the paper's custom C++ `faster-fifo` queue.  Messages are
-//!   tiny headers (slot indices), never payloads.
+//! * [`spsc`] — tier 1: a bounded lock-free single-producer /
+//!   single-consumer ring (std atomics, cache-line-padded head/tail,
+//!   batched `push_many`/`pop_many`).
+//! * [`sharded`] — tier 2: [`sharded::ShardedQueue`], one SPSC shard per
+//!   registered producer plus condvar sleep/wake for the combining
+//!   consumer.  This carries the high-fan-in queues (`policy_queues`,
+//!   `learner_queues`), where per-producer sharding removes the one lock
+//!   every rollout worker used to contend on.
+//! * [`fifo`] — a bounded mutex-ring MPMC FIFO with batched operations,
+//!   the direct analogue of the paper's custom C++ `faster-fifo` queue.
+//!   Still used where no single producer group exists (`reply_queues`,
+//!   `stats`, the slab free-list) and kept as the property-tested
+//!   reference the sharded transport is validated against
+//!   (`rust/tests/prop_transport.rs`), mirroring the `ops.rs`-vs-`gemm.rs`
+//!   pattern in the native backend.
 //! * [`slab`] — pre-allocated shared trajectory buffers.  Rollout workers
 //!   write observations directly into slab memory; policy workers and the
 //!   learner read/write the same slots; only `u32` indices travel through
@@ -14,7 +27,10 @@
 //!   `baselines::serialized` variant demonstrates precisely that).
 
 pub mod fifo;
+pub mod sharded;
 pub mod slab;
+pub mod spsc;
 
 pub use fifo::{Fifo, RecvError};
+pub use sharded::{ShardedProducer, ShardedQueue};
 pub use slab::{SlotIdx, TrajSlot, TrajStore, TrajStoreSpec};

@@ -1,0 +1,417 @@
+//! Sharded lock-free transport (tier 2): one SPSC ring per registered
+//! producer, combined behind a single batched consumer interface.
+//!
+//! The mutex ring in [`super::fifo`] reproduces the paper's batched-drain
+//! design but funnels every producer through one lock: at 8+ rollout
+//! workers the `policy_queues[p]` mutex itself becomes the bottleneck
+//! (EnvPool makes the same observation and shards per producer).  Here each
+//! producer owns a private [`super::spsc`] ring — pushes are wait-free and
+//! touch no shared line except on wake — and the consumer drains all shards
+//! round-robin under one consumer-side mutex, preserving the consumer-side
+//! `Fifo` contract the policy worker's batch-linger loop relies on:
+//!
+//! * [`ShardedQueue::pop_many`] blocks with a **hard deadline** (spurious
+//!   wakeups never extend the total wait),
+//! * [`ShardedQueue::close`] wakes every blocked consumer; consumers drain
+//!   whatever remains, then observe [`RecvError::Closed`].
+//!
+//! One deliberate departure from `Fifo`: producers have no lock for
+//! `close()` to flip the flag under, so "no push can succeed once
+//! `close()` returns" does **not** hold here — a push racing `close()`
+//! may land its item in the ring after the last consumer has observed
+//! `Closed`, where it sits until the queue drops.  That is the same
+//! outcome as `Fifo::push` returning `false` and discarding the item in
+//! that race window (either way the message is not delivered), and in
+//! this system pushes race `close()` only during shutdown, when undrained
+//! slot indices are torn down with the store anyway.  Items whose push
+//! completed before `close()` began are always delivered: consumers
+//! drain dry before reporting `Closed`.
+//!
+//! Producer handles are claimed once per producer thread at spawn
+//! ([`ShardedQueue::claim_producer`]); the handle is `Send` but not
+//! clonable, so the single-producer discipline of each shard is enforced
+//! by ownership.  Consumers need no registration — any number of threads
+//! may call `pop_many` (they serialize on the combiner mutex, which is
+//! uncontended in the common one-consumer-per-queue topology).
+//!
+//! Sleep/wake: the consumer parks on a condvar only after publishing
+//! itself in `sleepers` and re-draining (so a concurrent push cannot be
+//! missed); producers check `sleepers` after their release-push — with a
+//! `SeqCst` fence pairing the two sides — and only then touch the mutex to
+//! notify.  In steady state (consumer busy), pushes are pure SPSC ring
+//! writes: no lock, no syscall, no shared-line contention.
+//!
+//! Ordering: FIFO per producer (the SPSC ring), round-robin across
+//! producers.  Cross-producer order was never meaningful — the mutex ring
+//! interleaved producers by lock-acquisition luck.
+
+use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::fifo::RecvError;
+use super::spsc;
+
+/// Round-robin combining state; owning the mutex = being *the* consumer.
+struct Combiner<T> {
+    shards: Vec<spsc::Consumer<T>>,
+    /// Next shard to drain first — rotated so a chatty producer cannot
+    /// starve the others out of a bounded `pop_many`.
+    cursor: usize,
+}
+
+struct Shared<T> {
+    combiner: Mutex<Combiner<T>>,
+    not_empty: Condvar,
+    /// Consumers currently in the sleep path (between publishing
+    /// themselves and returning from the condvar wait).
+    sleepers: AtomicUsize,
+    closed: AtomicBool,
+    /// Unclaimed producer endpoints, indexed by producer id.
+    producers: Mutex<Vec<Option<spsc::Producer<T>>>>,
+    shard_cap: usize,
+}
+
+/// The consumer/owner handle: clone freely (all clones share state).
+pub struct ShardedQueue<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for ShardedQueue<T> {
+    fn clone(&self) -> Self {
+        ShardedQueue { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T: Send> ShardedQueue<T> {
+    /// A queue with `n_producers` SPSC shards of `shard_capacity` each.
+    pub fn new(n_producers: usize, shard_capacity: usize) -> Self {
+        assert!(n_producers > 0, "sharded queue needs at least one producer");
+        let mut consumers = Vec::with_capacity(n_producers);
+        let mut producers = Vec::with_capacity(n_producers);
+        for _ in 0..n_producers {
+            let (tx, rx) = spsc::ring(shard_capacity);
+            producers.push(Some(tx));
+            consumers.push(rx);
+        }
+        ShardedQueue {
+            shared: Arc::new(Shared {
+                combiner: Mutex::new(Combiner { shards: consumers, cursor: 0 }),
+                not_empty: Condvar::new(),
+                sleepers: AtomicUsize::new(0),
+                closed: AtomicBool::new(false),
+                producers: Mutex::new(producers),
+                shard_cap: shard_capacity,
+            }),
+        }
+    }
+
+    /// Claim the exclusive producer endpoint for shard `id` (done once per
+    /// producer thread at spawn).  `None` if already claimed or out of
+    /// range — claiming twice is a topology bug the caller should surface.
+    pub fn claim_producer(&self, id: usize) -> Option<ShardedProducer<T>> {
+        let mut producers = self.shared.producers.lock().unwrap();
+        let ring = producers.get_mut(id)?.take()?;
+        Some(ShardedProducer { ring, shared: Arc::clone(&self.shared) })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shared.combiner.lock().unwrap().shards.len()
+    }
+
+    pub fn shard_capacity(&self) -> usize {
+        self.shared.shard_cap
+    }
+
+    /// Total queued items across shards (diagnostic; racy under load).
+    pub fn len(&self) -> usize {
+        let comb = self.shared.combiner.lock().unwrap();
+        comb.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Acquire)
+    }
+
+    /// Close the queue: producers start failing, blocked consumers wake.
+    /// Consumers drain whatever remains before observing `Closed`.  A push
+    /// *racing* this call may strand its item (see the module docs) — the
+    /// lock-free producer path has no mutex to serialize the flag flip
+    /// against, unlike `Fifo::close`.
+    pub fn close(&self) {
+        self.shared.closed.store(true, Ordering::Release);
+        // Serialize with a consumer between its re-drain and its wait (it
+        // holds the combiner mutex for that whole window), then wake.
+        let guard = self.shared.combiner.lock().unwrap();
+        drop(guard);
+        self.shared.not_empty.notify_all();
+    }
+
+    /// Drain up to `max` items into `out`, blocking until at least one is
+    /// available.  `timeout` bounds the **total** wait (deadline-based,
+    /// like `Fifo::pop_many`): spurious condvar wakeups re-wait only for
+    /// the remaining time — the policy worker's batch linger relies on
+    /// this being a hard deadline.
+    pub fn pop_many(
+        &self,
+        out: &mut Vec<T>,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<usize, RecvError> {
+        let deadline = Instant::now() + timeout;
+        let shared = &*self.shared;
+        let mut comb = shared.combiner.lock().unwrap();
+        loop {
+            let n = drain(&mut comb, out, max);
+            if n > 0 {
+                return Ok(n);
+            }
+            // Empty. Closed wins only once the drain above came up dry, so
+            // remaining items are always delivered before `Closed`.
+            if shared.closed.load(Ordering::Acquire) {
+                return Err(RecvError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            // Publish ourselves, then re-drain: a producer that pushed
+            // before reading `sleepers == 0` is caught by this second
+            // drain (its release-store + SeqCst fence pairs with ours),
+            // and a producer that pushes after will see `sleepers > 0`
+            // and notify under the mutex we hold until the wait.
+            shared.sleepers.fetch_add(1, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            let n = drain(&mut comb, out, max);
+            if n > 0 {
+                shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return Ok(n);
+            }
+            if shared.closed.load(Ordering::Acquire) {
+                shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return Err(RecvError::Closed);
+            }
+            let (guard, _res) = shared
+                .not_empty
+                .wait_timeout(comb, deadline - now)
+                .unwrap();
+            comb = guard;
+            shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Round-robin drain across shards, starting at the cursor.
+fn drain<T: Send>(comb: &mut Combiner<T>, out: &mut Vec<T>, max: usize) -> usize {
+    let n_shards = comb.shards.len();
+    let mut got = 0usize;
+    for k in 0..n_shards {
+        if got >= max {
+            break;
+        }
+        let idx = (comb.cursor + k) % n_shards;
+        got += comb.shards[idx].pop_many(out, max - got);
+    }
+    comb.cursor = (comb.cursor + 1) % n_shards;
+    got
+}
+
+/// The exclusive per-producer push endpoint. `Send`, not clonable.
+pub struct ShardedProducer<T> {
+    ring: spsc::Producer<T>,
+    shared: Arc<Shared<T>>,
+}
+
+impl<T: Send> ShardedProducer<T> {
+    /// Non-blocking push; returns the item back on a full shard or a
+    /// closed queue.
+    pub fn try_push(&mut self, item: T) -> Result<(), T> {
+        if self.shared.closed.load(Ordering::Acquire) {
+            return Err(item);
+        }
+        self.ring.try_push(item)?;
+        self.wake_consumer();
+        Ok(())
+    }
+
+    /// Blocking push: spins briefly, then yields/naps until the shard has
+    /// room (the consumer is behind) or the queue closes.  Returns `false`
+    /// when closed (the item is dropped, matching `Fifo::push`).
+    pub fn push(&mut self, item: T) -> bool {
+        let mut item = item;
+        let mut rounds = 0u32;
+        loop {
+            if self.shared.closed.load(Ordering::Acquire) {
+                return false;
+            }
+            match self.ring.try_push(item) {
+                Ok(()) => {
+                    self.wake_consumer();
+                    return true;
+                }
+                Err(back) => {
+                    item = back;
+                    backoff(&mut rounds);
+                }
+            }
+        }
+    }
+
+    /// Push a whole batch, blocking until everything is in or the queue
+    /// closes (`false`: remaining items dropped, matching
+    /// `Fifo::push_many`).  The consumer is woken at most once per
+    /// productive round, not per item.
+    pub fn push_many(&mut self, items: &mut Vec<T>) -> bool {
+        let mut rounds = 0u32;
+        while !items.is_empty() {
+            if self.shared.closed.load(Ordering::Acquire) {
+                return false;
+            }
+            if self.ring.push_many(items) > 0 {
+                self.wake_consumer();
+                rounds = 0;
+            } else {
+                backoff(&mut rounds);
+            }
+        }
+        true
+    }
+
+    /// Items queued in this producer's own shard.
+    pub fn shard_len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Acquire)
+    }
+
+    /// Wake a sleeping consumer if there is one.  The `SeqCst` fence pairs
+    /// with the consumer's publish-then-re-drain: either we observe its
+    /// `sleepers` increment (and notify under the mutex), or its re-drain
+    /// observes our push — a wakeup can never be missed.  In steady state
+    /// `sleepers == 0` and this is a single relaxed-ish load.
+    fn wake_consumer(&self) {
+        fence(Ordering::SeqCst);
+        if self.shared.sleepers.load(Ordering::SeqCst) > 0 {
+            let guard = self.shared.combiner.lock().unwrap();
+            drop(guard);
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+/// Escalating wait on a full shard: spin, then yield, then 100us naps.
+/// A full shard means the consumer is far behind — at that point the nap
+/// costs nothing and keeps the core available for the consumer itself.
+fn backoff(rounds: &mut u32) {
+    *rounds = rounds.saturating_add(1);
+    match *rounds {
+        0..=16 => std::hint::spin_loop(),
+        17..=64 => std::thread::yield_now(),
+        _ => std::thread::sleep(Duration::from_micros(100)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    const T: Duration = Duration::from_secs(5);
+
+    #[test]
+    fn single_producer_roundtrip() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(1, 16);
+        let mut tx = q.claim_producer(0).unwrap();
+        assert!(q.claim_producer(0).is_none(), "shard claimed twice");
+        assert!(q.claim_producer(1).is_none(), "out-of-range claim");
+        for i in 0..10 {
+            assert!(tx.push(i));
+        }
+        let mut out = Vec::new();
+        let n = q.pop_many(&mut out, 4, T).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        q.pop_many(&mut out, 100, T).unwrap();
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn producers_push_consumer_combines() {
+        let producers = 4usize;
+        let per = 10_000u64;
+        let q: ShardedQueue<u64> = ShardedQueue::new(producers, 64);
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let mut tx = q.claim_producer(p).unwrap();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    assert!(tx.push(p as u64 * per + i));
+                }
+            }));
+        }
+        let total = (producers as u64 * per) as usize;
+        let mut all = Vec::with_capacity(total);
+        while all.len() < total {
+            let mut buf = Vec::new();
+            match q.pop_many(&mut buf, 256, T) {
+                Ok(_) => all.extend_from_slice(&buf),
+                Err(e) => panic!("consumer error: {e:?}"),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..total as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 8);
+        let mut a = q.claim_producer(0).unwrap();
+        let mut b = q.claim_producer(1).unwrap();
+        assert!(a.push(1));
+        assert!(b.push(2));
+        q.close();
+        assert!(!a.push(3), "push after close must fail");
+        assert_eq!(a.try_push(4), Err(4));
+        let mut out = Vec::new();
+        let n = q.pop_many(&mut out, 16, T).unwrap();
+        assert_eq!(n, 2, "items pushed before close must drain");
+        assert_eq!(q.pop_many(&mut out, 16, T), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn per_producer_order_is_fifo() {
+        let q: ShardedQueue<(usize, u64)> = ShardedQueue::new(3, 32);
+        let mut handles = Vec::new();
+        for p in 0..3 {
+            let mut tx = q.claim_producer(p).unwrap();
+            handles.push(thread::spawn(move || {
+                for i in 0..5_000u64 {
+                    assert!(tx.push((p, i)));
+                }
+            }));
+        }
+        let mut next = [0u64; 3];
+        let mut got = 0usize;
+        while got < 15_000 {
+            let mut buf = Vec::new();
+            let n = q.pop_many(&mut buf, 128, T).unwrap();
+            got += n;
+            for (p, i) in buf {
+                assert_eq!(i, next[p], "producer {p} reordered");
+                next[p] += 1;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

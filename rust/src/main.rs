@@ -8,7 +8,7 @@
 //!   eval   --ckpt F [--episodes N] [--greedy b]  evaluate a checkpoint
 //!   match  --ckpt-a A --ckpt-b B [--matches N]   1v1 duel between checkpoints
 //!   render [--ckpt F] --out DIR [--n N]          dump episode frames (PPM)
-//!   envs                                          print the scenario registry
+//!   envs   [--json]                               print the scenario registry
 //!   list                                          list presets/scenarios
 //!
 //! All configuration keys accepted by `--key value` are documented in
@@ -20,7 +20,7 @@ use sample_factory::coordinator::Trainer;
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  repro train [--preset NAME] [--key value ...]\n  repro bench <exhibit> [--key value ...]\n  repro envs\n  repro list"
+        "usage:\n  repro train [--preset NAME] [--key value ...]\n  repro bench <exhibit> [--key value ...]\n  repro envs [--json]\n  repro list"
     );
     std::process::exit(2)
 }
@@ -36,7 +36,7 @@ fn main() {
         "eval" => cmd_eval(&args[1..]),
         "match" => cmd_match(&args[1..]),
         "render" => cmd_render(&args[1..]),
-        "envs" => cmd_envs(),
+        "envs" => cmd_envs(&args[1..]),
         "list" => cmd_list(),
         _ => usage(),
     }
@@ -178,6 +178,9 @@ fn cmd_train(args: &[String]) {
             println!("sgd_steps         {}", res.learner_steps);
             println!("mean_return       {:.3}", res.mean_return);
             println!("policy_lag mean   {:.2} max {}", res.lag_mean, res.lag_max);
+            if res.stat_drops > 0 {
+                println!("stat_drops        {} (monitor fell behind)", res.stat_drops);
+            }
             for (i, r) in res.per_policy_return.iter().enumerate() {
                 println!("policy[{i}] return {r:.3}");
             }
@@ -252,8 +255,14 @@ fn cmd_render(args: &[String]) {
     println!("wrote {} frames to {out}/ (PPM)", paths.len());
 }
 
-/// Print the scenario registry as a table: the data-driven env zoo.
-fn cmd_envs() {
+/// Print the scenario registry: the data-driven env zoo.  `--json` emits
+/// the machine-readable listing (name, obs shape, heads, overridable
+/// params) for tooling; the default is the human table.
+fn cmd_envs(args: &[String]) {
+    if args.iter().any(|a| a == "--json") {
+        println!("{}", sample_factory::env::registry::registry_json().to_string());
+        return;
+    }
     let defs = sample_factory::env::registry::all();
     let mut rows = Vec::new();
     for d in &defs {

@@ -21,9 +21,22 @@ fn appo_trains_tiny_and_respects_invariants() {
     assert!(res.learner_steps > 0, "learner never stepped");
     assert!(res.episodes > 0, "no episodes finished");
     assert!(res.fps > 0.0);
-    // Policy lag must stay bounded by the slot back-pressure (paper: 5-10).
+    // Policy lag must stay bounded by the slot back-pressure (paper: 5-10)
+    // — with the pipelined learner (assembly overlapping the train step)
+    // this is the regression gate for the sharded transport rewiring.
     assert!(res.lag_mean < 50.0, "runaway policy lag {}", res.lag_mean);
     assert!(res.final_metrics.iter().all(|m| m.is_finite()));
+    // The pipelined learner ran both stages and accounted their busy time.
+    assert!(
+        res.learner_train_s > 0.0,
+        "train stage busy-time not accounted: {}",
+        res.learner_train_s
+    );
+    assert!(
+        res.learner_assembly_s > 0.0,
+        "assembly stage busy-time not accounted: {}",
+        res.learner_assembly_s
+    );
     // The curve is monotone in frames and wall time.
     for w in res.curve.windows(2) {
         assert!(w[1].frames >= w[0].frames);

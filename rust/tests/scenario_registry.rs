@@ -174,3 +174,54 @@ fn ensure_connected_repairs_arbitrary_wall_soup() {
         assert!(mapgen::is_connected(&m), "seed {seed} left disconnected");
     }
 }
+
+/// `repro envs --json` source: the machine-readable registry listing
+/// round-trips through the JSON writer and carries the contract fields
+/// (obs shape, heads, overridable params) for every scenario.
+#[test]
+fn registry_json_is_complete_and_roundtrips() {
+    use sample_factory::json::Json;
+    let listing = registry::registry_json();
+    let text = listing.to_string();
+    let back = Json::parse(&text).expect("registry json reparses");
+    assert_eq!(back, listing, "registry json does not round-trip");
+
+    let defs = registry::all();
+    let n = back.req("count").unwrap().as_usize().unwrap();
+    assert_eq!(n, defs.len());
+    let entries = back.req("scenarios").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), defs.len());
+    for (e, d) in entries.iter().zip(&defs) {
+        assert_eq!(e.req("name").unwrap().as_str().unwrap(), d.name);
+        assert_eq!(e.req("spec").unwrap().as_str().unwrap(), d.spec);
+        let shape = e.req("obs_shape").unwrap().usize_arr().unwrap();
+        assert_eq!(shape.len(), 3, "{}: obs_shape must be HWC", d.name);
+        assert!(shape.iter().all(|&s| s > 0));
+        let heads = e.req("action_heads").unwrap().usize_arr().unwrap();
+        assert_eq!(heads, d.heads(), "{}: heads drifted", d.name);
+        let params = e.req("params").unwrap().str_arr().unwrap();
+        assert_eq!(
+            params,
+            d.param_names().iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            "{}: params drifted",
+            d.name
+        );
+    }
+
+    // Spot-check the advertised params actually apply: every listed key is
+    // a name `set_param` recognizes for that scenario (value errors are
+    // fine — unknown-key errors are not).
+    for d in &defs {
+        for key in d.param_names() {
+            let mut probe = registry::get(d.name).unwrap();
+            if let Err(msg) = probe.set_param(key, "3") {
+                assert!(
+                    !msg.contains("unknown scenario parameter")
+                        && !msg.contains("unknown gridlab parameter"),
+                    "{}: advertised param '{key}' rejected as unknown: {msg}",
+                    d.name
+                );
+            }
+        }
+    }
+}
