@@ -1,8 +1,10 @@
 # Workflow wrappers.  `cargo build/test` need nothing beyond a Rust
 # toolchain (native backend); `artifacts` is only for the pjrt backend and
-# requires the python/ layer (jax).
+# requires the python/ layer (jax); `miri`/`tsan` need a nightly toolchain
+# with the miri / rust-src components.
 
-.PHONY: artifacts test test-pjrt bench bench-json clippy clean
+.PHONY: artifacts test test-pjrt bench bench-json clippy clean \
+	chaos miri tsan lint
 
 # Lower the JAX/Pallas programs to HLO text + manifest.json (pjrt backend).
 artifacts:
@@ -28,9 +30,34 @@ bench-json:
 	cargo run --release --bin repro -- bench scenarios --frames $(or $(SF_BENCH_FRAMES),5000)
 
 clippy:
-	cargo clippy --all-targets -- -D warnings \
-		-A clippy::too_many_arguments -A clippy::needless_range_loop \
-		-A clippy::manual_div_ceil
+	cargo clippy --all-targets -- -D warnings
+
+# Deterministic interleaving model checker over the lock-free transport
+# (rust/src/util/chaos.rs): the whole suite under the instrumented
+# `crate::sync` facade, plus the transport models in chaos_transport.rs.
+chaos:
+	cargo test -q --features chaos
+
+# Miri: UB detection (uninit reads, aliasing, leaks) over the ipc/pool
+# unit tests.  `cfg!(miri)` dials iteration counts down in-tree.
+miri:
+	MIRIFLAGS="-Zmiri-disable-isolation" \
+		cargo +nightly miri test --lib ipc:: runtime::native::pool
+
+# ThreadSanitizer over the transport stress suite: catches real
+# weak-memory races the serialized model checker cannot (stale reads from
+# the store buffer).  Needs nightly + the rust-src component.
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" SF_STRESS_ITERS=500 \
+	TSAN_OPTIONS="halt_on_error=1" \
+		cargo +nightly test -Zbuild-std \
+		--target x86_64-unknown-linux-gnu --test prop_transport
+
+# In-tree static-analysis gate: SAFETY comments on every unsafe block,
+# no std::sync/std::thread bypasses of the crate::sync facade in the
+# concurrency modules, no blanket -A clippy downgrades in CI configs.
+lint:
+	cargo run --release --bin sf_lint
 
 clean:
 	cargo clean

@@ -51,23 +51,22 @@ pub fn run_pure_sim(cfg: &Config) -> Result<TrainResult> {
             let mut out = vec![AgentStep::default(); n_agents];
             let mut obs = vec![0u8; obs_len];
             while !stop.load(Ordering::Relaxed) {
-                for e in 0..venv.envs.len() {
+                for env in venv.envs.iter_mut() {
                     for a in actions.iter_mut() {
                         *a = 0;
                     }
-                    for (i, chunk) in actions.chunks_mut(heads.len()).enumerate() {
-                        let _ = i;
+                    for chunk in actions.chunks_mut(heads.len()) {
                         for (h, &n) in heads.iter().enumerate() {
                             chunk[h] = wrng.below(n) as i32;
                         }
                     }
                     for _ in 0..frameskip {
-                        venv.envs[e].step(&actions, &mut out);
+                        env.step(&actions, &mut out);
                     }
                     // The sampler still renders (observations must be
                     // produced — that is part of the sampling cost).
                     for a in 0..n_agents {
-                        venv.envs[e].render(a, &mut obs);
+                        env.render(a, &mut obs);
                     }
                     frames.fetch_add((frameskip as u64) * n_agents as u64, Ordering::Relaxed);
                 }

@@ -376,24 +376,20 @@ fn serialized_worker(
                     break;
                 }
             }
-            for si in 0..streams.len() {
-                if streams[si].env != e {
+            for s in streams.iter_mut() {
+                if s.env != e {
                     continue;
                 }
-                let a = streams[si].agent;
-                let t = streams[si].t;
-                {
-                    let s = &mut streams[si];
-                    s.rewards[t] = acc[a].reward;
-                    s.dones[t] = if acc[a].done { 1.0 } else { 0.0 };
-                    if acc[a].done {
-                        s.h.fill(0.0);
-                    }
+                let a = s.agent;
+                let t = s.t;
+                s.rewards[t] = acc[a].reward;
+                s.dones[t] = if acc[a].done { 1.0 } else { 0.0 };
+                if acc[a].done {
+                    s.h.fill(0.0);
                 }
                 if let Some((ret, len)) = venv.monitors[e].record(a, &acc[a]) {
                     let _ = sh.episodes.try_push((ret, len * frameskip as u64));
                 }
-                let s = &mut streams[si];
                 s.t += 1;
                 let t_next = s.t;
                 {

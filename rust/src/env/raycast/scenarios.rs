@@ -737,6 +737,9 @@ impl Env for RaycastEnv {
             }
             self.intents[pi] = intent;
         }
+        // Indexed: iterating `&self.bot_players` would hold a borrow of
+        // `self` across the `&mut self.intents` writes below.
+        #[allow(clippy::needless_range_loop)]
         for b in 0..self.bot_players.len() {
             let pi = self.bot_players[b];
             self.intents[pi] = self.world.bot_intent(pi);

@@ -427,7 +427,9 @@ impl World {
             }
         }
 
-        // 2. Pickups.
+        // 2. Pickups.  Indexed: the body calls `&mut self` methods, which
+        // an iterator over `self.entities` would keep borrowed.
+        #[allow(clippy::needless_range_loop)]
         for ei in 0..self.entities.len() {
             if !self.entities[ei].alive || self.entities[ei].is_monster() {
                 continue;
@@ -735,6 +737,7 @@ enum Target {
 
 /// Ray-vs-circle: distance along the beam to the target if hit before
 /// `max_d`. The beam direction is normalised (dx, dy).
+#[allow(clippy::too_many_arguments)] // six scalar coordinates, not state
 fn beam_hit(
     sx: f32,
     sy: f32,

@@ -103,6 +103,7 @@ impl<'a> PolicyEval<'a> {
 }
 
 /// Evaluate a policy for `episodes` episodes; returns per-episode outcomes.
+#[allow(clippy::too_many_arguments)] // CLI surface: one parameter per flag
 pub fn evaluate(
     progs: &ModelPrograms,
     params: Tensors,

@@ -9,9 +9,9 @@
 //! and a `push_many` for the symmetric case.  `rust/benches/fifo.rs`
 //! reproduces the appendix B.1 comparison against `std::sync::mpsc`.
 
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Arc, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Error returned by blocking receives when the queue is closed and empty.
@@ -328,7 +328,7 @@ mod tests {
     fn mpmc_stress_no_loss_no_dup() {
         let q: Fifo<u64> = Fifo::new(37); // deliberately awkward capacity
         let producers = 4;
-        let per = 5_000u64;
+        let per: u64 = if cfg!(miri) { 150 } else { 5_000 };
         let mut handles = Vec::new();
         for p in 0..producers {
             let q = q.clone();
@@ -444,12 +444,14 @@ mod tests {
         // so a push could slip in after close() completed and strand the
         // item past the consumers' drain.  Invariant: every successful
         // try_push is drained; drained == succeeded.
-        for round in 0..20 {
+        let rounds = if cfg!(miri) { 2 } else { 20 };
+        let budget: u64 = if cfg!(miri) { 20_000 } else { 1_000_000 };
+        for round in 0..rounds {
             let q: Fifo<u64> = Fifo::new(64);
             let q2 = q.clone();
             let producer = thread::spawn(move || {
                 let mut ok = 0u64;
-                for i in 0..1_000_000u64 {
+                for i in 0..budget {
                     if q2.try_push(i).is_ok() {
                         ok += 1;
                     } else if q2.is_closed() {

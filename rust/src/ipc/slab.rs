@@ -19,8 +19,14 @@
 //! never contended in steady state; the perf pass measured the lock at <1%
 //! of the rollout loop (EXPERIMENTS.md §Perf).
 
-use std::sync::{Arc, Mutex, MutexGuard};
+// `Arc` stays `std`: the store is shared with the coordinator layer (which
+// is outside the facade's scope), and handing out a slot index is not a
+// synchronization event — the `Mutex` around each slot is what the chaos
+// checker needs to see.
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::sync::{Mutex, MutexGuard};
 
 use super::fifo::Fifo;
 

@@ -7,7 +7,7 @@
 //! but still makes every producer contend on one lock.  This ring removes
 //! the lock entirely for the two-party case: one producer thread, one
 //! consumer thread, a fixed buffer, and two monotonically increasing
-//! positions exchanged through `std` atomics.
+//! positions exchanged through atomics.
 //!
 //! * `head` is written only by the consumer, `tail` only by the producer;
 //!   each is on its own cache line (no false sharing between the parties).
@@ -22,11 +22,16 @@
 //! mutating operations taking `&mut self`.  There is no blocking here —
 //! sleep/wake lives a layer up in [`super::sharded`], which composes many
 //! of these rings behind one combining consumer.
+//!
+//! All synchronization goes through the [`crate::sync`] facade, so under
+//! `--features chaos` the interleaving model checker in
+//! `rust/tests/chaos_transport.rs` explores this protocol exhaustively
+//! (push vs. pop, wrap-around at capacity, and the `Drop` drain).
 
-use std::cell::UnsafeCell;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::cell::UnsafeCell;
+use crate::sync::Arc;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 
 /// Pad to a cache line so the producer's `tail` and the consumer's `head`
 /// never ping-pong the same line between cores.
@@ -49,20 +54,36 @@ struct RingInner<T> {
     tail: CachePadded<AtomicUsize>,
 }
 
-// Safety: the cells are accessed under the SPSC protocol — slot `i` is
-// written by the producer strictly before the release store that makes it
-// visible, and read by the consumer strictly after the acquire load that
-// observed it, so no cell is ever accessed concurrently.
+// SAFETY: the cells are accessed under the SPSC protocol — slot `i` is
+// written by the producer strictly before the release store of `tail` that
+// makes it visible, and read by the consumer strictly after the acquire
+// load of `tail` that observed it (and symmetrically for re-use via
+// `head`), so no cell is ever accessed concurrently.  This protocol is
+// model-checked in `rust/tests/chaos_transport.rs`.
 unsafe impl<T: Send> Sync for RingInner<T> {}
+// SAFETY: moving the ring between threads moves only `T` values (in the
+// cells) and plain atomics, so `T: Send` suffices.
 unsafe impl<T: Send> Send for RingInner<T> {}
 
 impl<T> Drop for RingInner<T> {
     fn drop(&mut self) {
-        // `&mut self`: both handles are gone, no concurrency left.
+        // `&mut self`: both handles are gone, no concurrency left.  The
+        // Relaxed loads are sufficient *here* (not a downgrade shortcut):
+        // the final `Arc` handle drop performs a Release decrement and the
+        // thread running this destructor performs an Acquire before it, so
+        // every position store and element write by either party already
+        // happens-before this body — the same argument `std::sync::Arc`
+        // documents for `Drop`, and verified by the `spsc_drop_releases`
+        // chaos model.
         let tail = self.tail.0.load(Ordering::Relaxed);
         let mut pos = self.head.0.load(Ordering::Relaxed);
         while pos != tail {
-            unsafe { (*self.buf[pos & self.mask].get()).assume_init_drop() };
+            self.buf[pos & self.mask].with_mut(|slot| {
+                // SAFETY: positions in `head..tail` were written by the
+                // producer and never consumed, so the slot holds a live
+                // `T`; exclusivity comes from `&mut self`.
+                unsafe { (*slot).assume_init_drop() }
+            });
             pos = pos.wrapping_add(1);
         }
     }
@@ -99,7 +120,13 @@ impl<T: Send> Producer<T> {
         if tail.wrapping_sub(head) >= inner.cap {
             return Err(item);
         }
-        unsafe { (*inner.buf[tail & inner.mask].get()).write(item) };
+        inner.buf[tail & inner.mask].with_mut(|slot| {
+            // SAFETY: `tail` is this producer's exclusive position, and the
+            // capacity check above (against the acquire-loaded `head`)
+            // proved the consumer is done with this slot; the consumer will
+            // not touch it until the release store of `tail` below.
+            unsafe { (*slot).write(item) };
+        });
         inner.tail.0.store(tail.wrapping_add(1), Ordering::Release);
         Ok(())
     }
@@ -113,7 +140,12 @@ impl<T: Send> Producer<T> {
         let room = inner.cap - tail.wrapping_sub(head);
         let n = room.min(items.len());
         for (i, item) in items.drain(..n).enumerate() {
-            unsafe { (*inner.buf[tail.wrapping_add(i) & inner.mask].get()).write(item) };
+            inner.buf[tail.wrapping_add(i) & inner.mask].with_mut(|slot| {
+                // SAFETY: every position in `tail..tail+n` is vacant by the
+                // capacity check against the acquire-loaded `head`, and
+                // invisible to the consumer until the release store below.
+                unsafe { (*slot).write(item) };
+            });
         }
         if n > 0 {
             inner.tail.0.store(tail.wrapping_add(n), Ordering::Release);
@@ -151,7 +183,13 @@ impl<T: Send> Consumer<T> {
         if head == tail {
             return None;
         }
-        let item = unsafe { (*inner.buf[head & inner.mask].get()).assume_init_read() };
+        let item = inner.buf[head & inner.mask].with(|slot| {
+            // SAFETY: `head < tail` with `tail` acquire-loaded, so the
+            // producer's write of this slot happens-before this read; the
+            // producer cannot reuse the slot until the release store of
+            // `head` below.
+            unsafe { (*slot).assume_init_read() }
+        });
         inner.head.0.store(head.wrapping_add(1), Ordering::Release);
         Some(item)
     }
@@ -165,9 +203,13 @@ impl<T: Send> Consumer<T> {
         let n = tail.wrapping_sub(head).min(max);
         out.reserve(n);
         for i in 0..n {
-            let item = unsafe {
-                (*inner.buf[head.wrapping_add(i) & inner.mask].get()).assume_init_read()
-            };
+            let item = inner.buf[head.wrapping_add(i) & inner.mask].with(|slot| {
+                // SAFETY: every position in `head..head+n` is `< tail`,
+                // which was acquire-loaded above, so each slot's write
+                // happens-before this read; reuse is fenced by the release
+                // store of `head` below.
+                unsafe { (*slot).assume_init_read() }
+            });
             out.push(item);
         }
         if n > 0 {
@@ -216,9 +258,10 @@ mod tests {
         // Capacity-3 ring driven far past one wrap of the buffer: order and
         // conservation must survive every head/tail modular boundary.
         let (mut tx, mut rx) = ring::<u64>(3);
+        let rounds = if cfg!(miri) { 64 } else { 1000 };
         let mut next_in = 0u64;
         let mut next_out = 0u64;
-        for _ in 0..1000 {
+        for _ in 0..rounds {
             while tx.try_push(next_in).is_ok() {
                 next_in += 1;
             }
@@ -249,7 +292,7 @@ mod tests {
     #[test]
     fn two_thread_stress_no_loss_no_dup() {
         let (mut tx, mut rx) = ring::<u64>(7); // awkward capacity: exercise wrap
-        let n = 200_000u64;
+        let n: u64 = if cfg!(miri) { 300 } else { 200_000 };
         let producer = thread::spawn(move || {
             for i in 0..n {
                 let mut v = i;

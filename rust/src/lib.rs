@@ -23,6 +23,12 @@
 //! Entry points: the `repro` binary (training + every paper bench), the
 //! `examples/` drivers, and the public [`coordinator::Trainer`] API.
 
+// Every `unsafe` operation must sit in its own explicit `unsafe` block with
+// a `// SAFETY:` comment (enforced by `sf_lint` in CI), even inside an
+// `unsafe fn` — a blanket-unsafe fn body hides exactly the invariants the
+// concurrency harness exists to pin down.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod baselines;
 pub mod bench;
 pub mod config;
@@ -34,6 +40,7 @@ pub mod json;
 pub mod render_dump;
 pub mod runtime;
 pub mod stats;
+pub mod sync;
 pub mod testkit;
 pub mod util;
 

@@ -47,6 +47,8 @@ const KC: usize = 256;
 /// `C[m,n] = A[m,k] @ B[k,n] (+ bias)` — or `C += A @ B` when
 /// `accumulate` (bias must be `None` then).  All matrices row-major.
 /// Sharded over `C` row panels on `pool`.
+// BLAS-style signature: the dims/lds are the interface, same as sgemm's.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_nn(
     pool: &NativePool,
     m: usize,
@@ -75,6 +77,7 @@ pub fn gemm_nn(
 }
 
 /// Compute one panel of `C` rows (`r0..r0 + c_chunk.len()/n`).
+#[allow(clippy::too_many_arguments)] // kernel inner loop, mirrors gemm_nn
 fn nn_block(
     a: &[f32],
     b: &[f32],
@@ -309,6 +312,7 @@ fn col2im_image(g: &ConvGeom, d_cols: &[f32], d_img: &mut [f32]) {
 /// Forward conv over a whole batch as one im2col + GEMM (no activation):
 /// `out[nb*ho*wo, co] = im2col(inp) @ W + b`.  `cols` is reusable
 /// scratch, resized as needed.
+#[allow(clippy::too_many_arguments)] // geometry + batch + buffers, all load-bearing
 pub fn conv_forward_batch(
     pool: &NativePool,
     g: &ConvGeom,

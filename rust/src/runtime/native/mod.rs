@@ -572,6 +572,7 @@ pub struct EncBwdScratch {
 /// into `grads`.  dW and dX are GEMMs against the packed im2col buffer
 /// (rebuilt per layer from the stored activations); the pixel gradient
 /// is discarded.  Equivalent to [`backward_frame`] per row.
+#[allow(clippy::too_many_arguments)] // full BPTT state; grouping would obscure the dataflow
 pub fn backward_batch(
     def: &ModelDef,
     pv: &ParamView,

@@ -31,8 +31,8 @@ impl ConvGeom {
     /// TF/XLA "SAME" geometry: `ceil(in/stride)` outputs, zero padding
     /// split low-side-first.
     pub fn same(h_in: usize, w_in: usize, c_in: usize, c_out: usize, k: usize, stride: usize) -> ConvGeom {
-        let h_out = (h_in + stride - 1) / stride;
-        let w_out = (w_in + stride - 1) / stride;
+        let h_out = h_in.div_ceil(stride);
+        let w_out = w_in.div_ceil(stride);
         let pad_h = ((h_out - 1) * stride + k).saturating_sub(h_in);
         let pad_w = ((w_out - 1) * stride + k).saturating_sub(w_in);
         ConvGeom {
@@ -256,6 +256,9 @@ impl GruTrace {
 /// `wx` is (F, 3H), `wh` is (H, 3H), `b` is (2, 3H) flattened.  When
 /// `trace` is Some, forward state is saved for BPTT; `scratch` must hold
 /// `6 * hidden` f32 and is overwritten.
+// Flat slice parameters mirror the tensor layout; a params struct would
+// just rename them.
+#[allow(clippy::too_many_arguments)]
 pub fn gru_forward_row(
     x: &[f32],
     h: &[f32],

@@ -28,10 +28,11 @@
 //! 1 (or a 1-core machine) makes every `run` execute inline on the
 //! caller — no workers, no locks on the hot path.
 
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{thread, Arc, Condvar, Mutex};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::OnceLock;
 
 /// Default cap on the implicit pool size: the batch kernels saturate
 /// memory bandwidth well before this many cores help.
@@ -114,10 +115,8 @@ impl NativePool {
         });
         for _ in 1..threads {
             let sh = Arc::clone(&shared);
-            std::thread::Builder::new()
-                .name("sf-native-pool".into())
-                .spawn(move || worker_loop(sh))
-                .expect("spawn native pool worker");
+            // Detached: workers exit when `shutdown` flips (see Drop).
+            let _ = thread::spawn_named("sf-native-pool", move || worker_loop(sh));
         }
         NativePool { shared, threads }
     }
@@ -212,7 +211,7 @@ impl NativePool {
     /// independent.
     pub fn rows_per_task(&self, rows: usize, min_rows: usize) -> usize {
         let tasks = self.threads * 2;
-        ((rows + tasks - 1) / tasks).max(min_rows).max(1)
+        rows.div_ceil(tasks).max(min_rows).max(1)
     }
 }
 

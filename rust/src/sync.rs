@@ -1,0 +1,103 @@
+//! The concurrency facade: every synchronization primitive used by the
+//! lock-free transport ([`crate::ipc`]) and the native thread pool
+//! ([`crate::runtime::native::pool`]) is imported from here, never from
+//! `std::sync`/`std::thread` directly (enforced by the `sf_lint` CI gate).
+//!
+//! * **Normal builds** — everything in this module is a zero-cost re-export
+//!   of (or `#[inline]` shim over) the `std` primitive of the same name.
+//! * **`--features chaos`** — the same names resolve to the instrumented
+//!   primitives in [`crate::util::chaos`]: outside an active model they pass
+//!   straight through to `std`, but inside [`crate::util::chaos::check`]
+//!   every atomic/lock/spawn becomes a scheduling point of a deterministic
+//!   interleaving explorer, with vector-clock happens-before tracking that
+//!   turns a mis-ordered `Relaxed` access into a reported data race instead
+//!   of a once-a-week production corruption.
+//!
+//! Two deliberate API deviations from `std` (so both modes share one
+//! surface):
+//!
+//! * [`cell::UnsafeCell`] exposes `with`/`with_mut` (loom-style) instead of
+//!   `get`: the closure receives the raw pointer, and under chaos the access
+//!   is recorded against the happens-before graph.  Dereferencing stays
+//!   `unsafe` at the call site, where the protocol invariant lives.
+//! * [`thread::spawn_named`] replaces `thread::Builder`: chaos needs to
+//!   register model threads, and every spawn in the concurrency layer wants
+//!   a name anyway.
+
+#[cfg(feature = "chaos")]
+pub use crate::util::chaos::facade::{Condvar, Mutex, MutexGuard, Poison, WaitTimeoutResult};
+#[cfg(feature = "chaos")]
+pub use crate::util::chaos::facade::Arc;
+#[cfg(feature = "chaos")]
+pub use crate::util::chaos::facade::{atomic, cell, hint, thread};
+
+#[cfg(not(feature = "chaos"))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+/// Stub poison-error type so chaos-mode `lock()`/`wait()` results unwrap the
+/// same way `std`'s do (the facade never actually poisons).
+#[cfg(not(feature = "chaos"))]
+#[derive(Debug)]
+pub struct Poison;
+
+#[cfg(not(feature = "chaos"))]
+pub mod atomic {
+    pub use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(feature = "chaos"))]
+pub mod hint {
+    #[inline(always)]
+    pub fn spin_loop() {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(not(feature = "chaos"))]
+pub mod thread {
+    pub use std::thread::{sleep, yield_now, JoinHandle};
+
+    /// Spawn a named thread (panics on spawn failure, like the transport's
+    /// previous `Builder::spawn(..).expect(..)` sites did).
+    pub fn spawn_named<F, T>(name: &str, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("failed to spawn thread")
+    }
+}
+
+#[cfg(not(feature = "chaos"))]
+pub mod cell {
+    /// `UnsafeCell` with the loom-style closure API (see the module docs).
+    /// Same auto-traits as `std::cell::UnsafeCell`: `Send` iff `T: Send`,
+    /// never `Sync` — containers build their own `Sync` claim on top.
+    #[derive(Default)]
+    #[repr(transparent)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> UnsafeCell<T> {
+        #[inline(always)]
+        pub fn new(value: T) -> Self {
+            UnsafeCell(std::cell::UnsafeCell::new(value))
+        }
+
+        /// Run `f` with a shared raw pointer to the contents.  Dereferencing
+        /// is `unsafe` and must be justified at the call site.
+        #[inline(always)]
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Run `f` with an exclusive raw pointer to the contents.
+        /// Dereferencing is `unsafe` and must be justified at the call site.
+        #[inline(always)]
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}

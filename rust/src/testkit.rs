@@ -53,6 +53,18 @@ impl Gen {
     }
 }
 
+/// Iteration budget for stress tests: `SF_STRESS_ITERS` overrides
+/// `default` when set.  The sanitizer CI lanes (Miri, TSan) run the same
+/// suites with this dialed way down — instrumentation slows each step by
+/// 10-100x, and the coverage those tools add comes from *observing* the
+/// synchronization, not from raw iteration counts.
+pub fn stress_iters(default: usize) -> usize {
+    match std::env::var("SF_STRESS_ITERS") {
+        Ok(s) => s.trim().parse().expect("SF_STRESS_ITERS must be a usize"),
+        Err(_) => default,
+    }
+}
+
 fn root_seed() -> u64 {
     match std::env::var("SF_TESTKIT_SEED") {
         Ok(s) => s.parse().expect("SF_TESTKIT_SEED must be u64"),

@@ -1,0 +1,1708 @@
+//! A dependency-free, loom-style deterministic interleaving model checker
+//! for the crate's concurrency layer (compiled only under
+//! `--features chaos`; see [`crate::sync`] for the facade it instruments).
+//!
+//! # What it does
+//!
+//! [`check`] runs a closure (the *model*) many times.  Each run executes the
+//! model's threads as real OS threads but **serialized**: exactly one model
+//! thread runs at a time, and every operation on a facade primitive (atomic
+//! load/store/RMW, fence, mutex lock, condvar wait/notify, spawn/join,
+//! spin/yield hint) is a *scheduling point* where a schedule explorer picks
+//! which thread runs next.  Two exploration modes:
+//!
+//! * **Exhaustive, bounded-preemption** ([`Mode::Exhaustive`]) — DFS over
+//!   every schedule with at most `preemption_bound` *preemptive* switches
+//!   (switching away from a thread that could have continued).  Most real
+//!   concurrency bugs manifest within 2 preemptions (CHESS, Musuvathi &
+//!   Qadeer 2007), which keeps the space tractable.
+//! * **Seeded random** ([`Mode::Random`]) — uniform random choice at every
+//!   scheduling point, `random_iters` runs, fully reproducible from `seed`.
+//!
+//! On an assertion failure, detected data race, deadlock, or step-bound
+//! livelock, the checker panics with the failing thread, the message, the
+//! tail of the interleaving trace, and the decision vector that reproduces
+//! the schedule.
+//!
+//! # Happens-before tracking
+//!
+//! Because execution is serialized, every run is sequentially consistent at
+//! the machine level — a weak-memory reordering can never *manifest* here.
+//! Instead, the checker keeps **vector clocks** (threads, atomics, SC-fence
+//! state) and checks every [`facade::cell::UnsafeCell`] access against the
+//! happens-before relation *implied by the memory orderings the code asked
+//! for*: a `Relaxed` load does not acquire, a `Relaxed` store does not
+//! release, and `SeqCst` ops/fences synchronize through a global SC clock.
+//! So a protocol that would only be correct under stronger orderings than
+//! it requests is reported as a data race on the cell it guards, even
+//! though the serialized execution happened to produce the right values.
+//!
+//! # Known limitations (and what covers them instead)
+//!
+//! * Atomic *loads always observe the latest store* (no stale-value
+//!   exploration à la loom's store buffers).  A bug that requires a stale
+//!   read to misbehave is caught only if it also shows up as a missing
+//!   happens-before edge on a tracked cell.  The ThreadSanitizer CI lane
+//!   runs the real weak-memory execution as a complement.
+//! * `Acquire`/`Release` *fences* are approximated as `SeqCst` fences
+//!   (stronger — may miss races, never false-positives).  The tree only
+//!   uses `SeqCst` fences.
+//! * `wait_timeout` never times out inside a model: a consumer that sleeps
+//!   forever because a wakeup was lost shows up as a reported deadlock, not
+//!   as a silently-masked timeout.  Timeout semantics are covered by the
+//!   real-time tests in `rust/tests/prop_transport.rs`.
+//! * Models must be deterministic given the schedule (no wall-clock
+//!   branching, no ambient randomness) or replay/backtracking is unsound.
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, panic_any, AssertUnwindSafe};
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Public configuration / result types
+// ---------------------------------------------------------------------------
+
+/// Exploration strategy for [`check`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// DFS over all schedules with at most `preemption_bound` preemptions.
+    Exhaustive,
+    /// `random_iters` runs with uniform random scheduling from `seed`.
+    Random,
+}
+
+/// Tuning knobs for [`check`].  [`Config::default`] is sized for the
+/// transport models in `rust/tests/chaos_transport.rs`.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub mode: Mode,
+    /// Max preemptive context switches per schedule (Exhaustive mode).
+    pub preemption_bound: usize,
+    /// Hard cap on explored schedules (Exhaustive mode); hitting it sets
+    /// `Report::exhausted = false` instead of running forever.
+    pub max_schedules: usize,
+    /// Per-schedule step bound: exceeding it is reported as a livelock.
+    pub max_steps: usize,
+    /// Number of runs in Random mode.
+    pub random_iters: usize,
+    /// Base seed for Random mode (run *i* uses `seed + i`).
+    pub seed: u64,
+    /// How many trailing trace steps to include in a failure report.
+    pub trace_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            mode: Mode::Exhaustive,
+            preemption_bound: 2,
+            max_schedules: 4000,
+            max_steps: 50_000,
+            random_iters: 200,
+            seed: 0x5F37_59DF,
+            trace_steps: 120,
+        }
+    }
+}
+
+/// What a completed [`check`] explored.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Number of distinct schedules executed.
+    pub schedules: usize,
+    /// Exhaustive mode: `true` iff the bounded-preemption space was fully
+    /// explored (not cut short by `max_schedules`).
+    pub exhausted: bool,
+}
+
+/// Run `f` under the default exhaustive configuration.
+pub fn model(name: &str, f: impl Fn() + Send + Sync + 'static) -> Report {
+    check(name, Config::default(), f)
+}
+
+/// Explore `f` under `cfg`, panicking with a reproduction report on the
+/// first failing schedule.  Returns exploration statistics on success.
+pub fn check(name: &str, cfg: Config, f: impl Fn() + Send + Sync + 'static) -> Report {
+    let f: StdArc<dyn Fn() + Send + Sync> = StdArc::new(f);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    loop {
+        schedules += 1;
+        let seed = cfg.seed.wrapping_add(schedules as u64);
+        let (decisions, failure) = run_once(&cfg, &prefix, seed, StdArc::clone(&f));
+        if let Some(msg) = failure {
+            panic!(
+                "chaos: model '{name}' failed on schedule #{schedules}\n{msg}\n\
+                 (decision prefix to reproduce: {prefix:?})"
+            );
+        }
+        match cfg.mode {
+            Mode::Random => {
+                if schedules >= cfg.random_iters {
+                    return Report { schedules, exhausted: false };
+                }
+            }
+            Mode::Exhaustive => {
+                // Backtrack: find the deepest decision with an untried
+                // alternative, advance it, and replay that prefix.
+                let mut ds = decisions;
+                let mut advanced = false;
+                while let Some((n_cands, chosen)) = ds.pop() {
+                    if chosen + 1 < n_cands {
+                        prefix = ds.iter().map(|&(_, c)| c).collect();
+                        prefix.push(chosen + 1);
+                        advanced = true;
+                        break;
+                    }
+                }
+                if !advanced {
+                    return Report { schedules, exhausted: true };
+                }
+                if schedules >= cfg.max_schedules {
+                    return Report { schedules, exhausted: false };
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector clocks
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Default, Debug)]
+struct VClock(Vec<u64>);
+
+impl VClock {
+    fn get(&self, tid: usize) -> u64 {
+        self.0.get(tid).copied().unwrap_or(0)
+    }
+
+    fn bump(&mut self, tid: usize) {
+        if self.0.len() <= tid {
+            self.0.resize(tid + 1, 0);
+        }
+        self.0[tid] += 1;
+    }
+
+    fn join(&mut self, other: &VClock) {
+        if self.0.len() < other.0.len() {
+            self.0.resize(other.0.len(), 0);
+        }
+        for (i, &v) in other.0.iter().enumerate() {
+            if self.0[i] < v {
+                self.0[i] = v;
+            }
+        }
+    }
+
+    /// `self` happens-before-or-equals `other`.
+    fn leq(&self, other: &VClock) -> bool {
+        self.0.iter().enumerate().all(|(i, &v)| v <= other.get(i))
+    }
+
+    fn clear(&mut self) {
+        self.0.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum St {
+    Runnable,
+    /// Voluntarily deferred (spin/yield/sleep hint): only scheduled when no
+    /// thread is Runnable; flips back to Runnable after any other thread
+    /// executes a step.
+    Yielded,
+    BlockedMutex(u64),
+    BlockedCondvar(u64),
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct Th {
+    name: String,
+    state: St,
+    clock: VClock,
+}
+
+#[derive(Default)]
+struct MutexSt {
+    held_by: Option<usize>,
+    clock: VClock,
+}
+
+struct CvWaiter {
+    tid: usize,
+    timed: bool,
+}
+
+#[derive(Default)]
+struct CellSt {
+    write: VClock,
+    read: VClock,
+}
+
+/// Panic payload used to tear down model threads after a failure was
+/// recorded; the thread wrapper treats it as a silent exit, not an error.
+struct Abort;
+
+struct Core {
+    threads: Vec<Th>,
+    current: usize,
+    abort: bool,
+    failure: Option<String>,
+    steps: usize,
+    preemptions: usize,
+    // Exploration state for this run.
+    prefix: Vec<usize>,
+    decision_cursor: usize,
+    decisions: Vec<(usize, usize)>, // (candidate count, chosen index)
+    rng: u64,
+    random: bool,
+    // Config copied in.
+    max_steps: usize,
+    preemption_bound: usize,
+    trace_cap: usize,
+    trace: VecDeque<String>,
+    // Object state.
+    atomics: HashMap<u64, VClock>,
+    mutexes: HashMap<u64, MutexSt>,
+    condvars: HashMap<u64, Vec<CvWaiter>>,
+    cells: HashMap<u64, CellSt>,
+    global_sc: VClock,
+}
+
+impl Core {
+    fn all_finished(&self) -> bool {
+        self.threads.iter().all(|t| t.state == St::Finished)
+    }
+
+    fn note_step(&mut self, me: usize, label: &str) {
+        self.steps += 1;
+        if self.trace.len() >= self.trace_cap {
+            self.trace.pop_front();
+        }
+        self.trace
+            .push_back(format!("[{}] {}", self.threads[me].name, label));
+        // A step ran: other threads that had voluntarily yielded become
+        // ordinary candidates again (prevents starving a spinning thread
+        // while still letting the scheduler deprioritize busy-wait loops).
+        for (tid, th) in self.threads.iter_mut().enumerate() {
+            if tid != me && th.state == St::Yielded {
+                th.state = St::Runnable;
+            }
+        }
+    }
+
+    /// Threads eligible to run next, deterministic order: the calling
+    /// thread first (if eligible), then ascending tid.  Yielded threads are
+    /// eligible only when nothing is Runnable.  When the preemption budget
+    /// is spent and the caller could continue, it is the only candidate.
+    fn candidates(&self, me: usize) -> Vec<usize> {
+        let mut cands: Vec<usize> = Vec::new();
+        let runnable: Vec<usize> = self
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.state == St::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        let pool: Vec<usize> = if runnable.is_empty() {
+            self.threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.state == St::Yielded)
+                .map(|(i, _)| i)
+                .collect()
+        } else {
+            runnable
+        };
+        if pool.contains(&me) {
+            cands.push(me);
+        }
+        for tid in pool {
+            if tid != me {
+                cands.push(tid);
+            }
+        }
+        if cands.first() == Some(&me)
+            && cands.len() > 1
+            && self.preemptions >= self.preemption_bound
+        {
+            cands.truncate(1);
+        }
+        cands
+    }
+
+    /// Pick an index into `cands` (prefix replay, then RNG or default 0),
+    /// recording the decision when there was a real choice.
+    fn pick(&mut self, cands: &[usize]) -> usize {
+        debug_assert!(!cands.is_empty());
+        if cands.len() == 1 {
+            return 0;
+        }
+        let idx = if self.decision_cursor < self.prefix.len() {
+            self.prefix[self.decision_cursor].min(cands.len() - 1)
+        } else if self.random {
+            (splitmix64(&mut self.rng) % cands.len() as u64) as usize
+        } else {
+            0
+        };
+        self.decisions.push((cands.len(), idx));
+        self.decision_cursor += 1;
+        idx
+    }
+
+    fn grant(&mut self, tid: usize) {
+        if self.threads[tid].state == St::Yielded {
+            self.threads[tid].state = St::Runnable;
+        }
+        self.current = tid;
+    }
+
+    fn trace_tail(&self) -> String {
+        let mut s = String::new();
+        for line in &self.trace {
+            s.push_str("  ");
+            s.push_str(line);
+            s.push('\n');
+        }
+        s
+    }
+
+    fn states_summary(&self) -> String {
+        self.threads
+            .iter()
+            .map(|t| format!("{}={:?}", t.name, t.state))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Runtime: one instance per executed schedule
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Rt {
+    core: StdMutex<Core>,
+    cv: StdCondvar,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<(StdArc<Rt>, usize)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn ctx() -> Option<(StdArc<Rt>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(rt: StdArc<Rt>, tid: usize) {
+    CTX.with(|c| *c.borrow_mut() = Some((rt, tid)));
+}
+
+fn clear_ctx() {
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// Process-wide object id source for facade primitives (atomics, mutexes,
+/// condvars, cells, arcs).  Ids are unique across concurrently running
+/// models, so lazily-created per-model object state can never collide.
+fn next_obj_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+impl Rt {
+    fn new(cfg: &Config, prefix: Vec<usize>, seed: u64) -> Rt {
+        Rt {
+            core: StdMutex::new(Core {
+                threads: Vec::new(),
+                current: 0,
+                abort: false,
+                failure: None,
+                steps: 0,
+                preemptions: 0,
+                prefix,
+                decision_cursor: 0,
+                decisions: Vec::new(),
+                rng: seed,
+                random: cfg.mode == Mode::Random,
+                max_steps: cfg.max_steps,
+                preemption_bound: cfg.preemption_bound,
+                trace_cap: cfg.trace_steps,
+                trace: VecDeque::new(),
+                atomics: HashMap::new(),
+                mutexes: HashMap::new(),
+                condvars: HashMap::new(),
+                cells: HashMap::new(),
+                global_sc: VClock::default(),
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn lock_core(&self) -> StdMutexGuard<'_, Core> {
+        // A model thread that panicked while holding the core lock poisons
+        // it; the state is still consistent enough to tear down and report.
+        self.core.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record a failure, flip the abort flag, wake everyone, and unwind the
+    /// calling model thread.
+    fn fail(&self, mut core: StdMutexGuard<'_, Core>, msg: String) -> ! {
+        if core.failure.is_none() {
+            let detail = format!(
+                "{msg}\n  thread states: {}\n  interleaving tail:\n{}",
+                core.states_summary(),
+                core.trace_tail()
+            );
+            core.failure = Some(detail);
+        }
+        core.abort = true;
+        drop(core);
+        self.cv.notify_all();
+        panic_any(Abort);
+    }
+
+    /// Block until this thread is the scheduled one again (or unwind on
+    /// abort).  Consumes and re-takes the core lock while waiting.
+    fn wait_granted(&self, mut core: StdMutexGuard<'_, Core>, me: usize) {
+        loop {
+            if core.abort {
+                drop(core);
+                if std::thread::panicking() {
+                    return;
+                }
+                panic_any(Abort);
+            }
+            if core.current == me && core.threads[me].state == St::Runnable {
+                return;
+            }
+            core = self
+                .cv
+                .wait(core)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// The universal scheduling point: trace the op, maybe switch threads.
+    fn schedule(&self, me: usize, label: &str) {
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            panic_any(Abort);
+        }
+        core.note_step(me, label);
+        if core.steps > core.max_steps {
+            self.fail(
+                core,
+                "step bound exceeded (livelock or unbounded spin in the model)".into(),
+            );
+        }
+        let cands = core.candidates(me);
+        // `me` is running, hence Runnable, hence always a candidate.
+        let idx = core.pick(&cands);
+        let chosen = cands[idx];
+        if chosen != me {
+            core.preemptions += 1;
+            core.grant(chosen);
+            drop(core);
+            self.cv.notify_all();
+            let core = self.lock_core();
+            self.wait_granted(core, me);
+        }
+    }
+
+    /// Voluntary deschedule (spin-loop / yield / sleep hint).  Not counted
+    /// as a preemption; the thread is deprioritized until someone else runs.
+    fn yield_hint(&self, me: usize, label: &str) {
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            panic_any(Abort);
+        }
+        core.note_step(me, label);
+        if core.steps > core.max_steps {
+            self.fail(
+                core,
+                "step bound exceeded (livelock or unbounded spin in the model)".into(),
+            );
+        }
+        core.threads[me].state = St::Yielded;
+        let cands = core.candidates(me);
+        if cands.is_empty() || cands == [me] {
+            // Nobody else can run; keep going ourselves.
+            core.threads[me].state = St::Runnable;
+            return;
+        }
+        let idx = core.pick(&cands);
+        let chosen = cands[idx];
+        if chosen == me {
+            core.threads[me].state = St::Runnable;
+            return;
+        }
+        core.grant(chosen);
+        drop(core);
+        self.cv.notify_all();
+        let core = self.lock_core();
+        self.wait_granted(core, me);
+    }
+
+    /// Transition into a blocked state and hand the schedule to someone
+    /// else; returns once this thread is granted again.  Reports deadlock
+    /// if no thread can run.
+    fn block_on(&self, mut core: StdMutexGuard<'_, Core>, me: usize, st: St, label: &str) {
+        core.note_step(me, label);
+        core.threads[me].state = st;
+        let cands = core.candidates(me);
+        if cands.is_empty() {
+            let timed = core.threads.iter().any(
+                |t| matches!(t.state, St::BlockedCondvar(_)),
+            );
+            let hint = if timed {
+                " (a condvar waiter was never notified — lost wakeup?)"
+            } else {
+                ""
+            };
+            self.fail(core, format!("deadlock: no runnable threads{hint}"));
+        }
+        let idx = core.pick(&cands);
+        let chosen = cands[idx];
+        core.grant(chosen);
+        drop(core);
+        self.cv.notify_all();
+        let core = self.lock_core();
+        self.wait_granted(core, me);
+    }
+
+    // -- threads ----------------------------------------------------------
+
+    fn register_thread(&self, name: &str, parent: Option<usize>) -> usize {
+        let mut core = self.lock_core();
+        let tid = core.threads.len();
+        let mut clock = VClock::default();
+        if let Some(p) = parent {
+            // Snapshot-then-bump: the child inherits everything up to the
+            // spawn, and the parent's *subsequent* ops get a fresh epoch so
+            // they are correctly unordered with the child.
+            clock = core.threads[p].clock.clone();
+            core.threads[p].clock.bump(p);
+        }
+        clock.bump(tid);
+        core.threads.push(Th {
+            name: name.to_string(),
+            state: St::Runnable,
+            clock,
+        });
+        tid
+    }
+
+    /// Entry gate for a freshly spawned model thread: wait until scheduled.
+    /// Returns `false` if the run aborted before this thread ever ran.
+    fn wait_entry(&self, me: usize) -> bool {
+        let mut core = self.lock_core();
+        loop {
+            if core.abort {
+                return false;
+            }
+            if core.current == me && core.threads[me].state == St::Runnable {
+                return true;
+            }
+            core = self
+                .cv
+                .wait(core)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn record_panic(&self, me: usize, msg: String) {
+        let mut core = self.lock_core();
+        if core.failure.is_none() {
+            let detail = format!(
+                "thread '{}' panicked: {msg}\n  thread states: {}\n  interleaving tail:\n{}",
+                core.threads[me].name,
+                core.states_summary(),
+                core.trace_tail()
+            );
+            core.failure = Some(detail);
+        }
+        core.abort = true;
+        drop(core);
+        self.cv.notify_all();
+    }
+
+    fn mark_finished(&self, me: usize) {
+        let mut core = self.lock_core();
+        core.threads[me].state = St::Finished;
+        core.threads[me].clock.bump(me);
+        for th in core.threads.iter_mut() {
+            if th.state == St::BlockedJoin(me) {
+                th.state = St::Runnable;
+            }
+        }
+        if !core.abort && !core.all_finished() && core.current == me {
+            let cands = core.candidates(me);
+            if cands.is_empty() {
+                if core.failure.is_none() {
+                    let timed = core
+                        .threads
+                        .iter()
+                        .any(|t| matches!(t.state, St::BlockedCondvar(_)));
+                    let hint = if timed {
+                        " (a condvar waiter was never notified — lost wakeup?)"
+                    } else {
+                        ""
+                    };
+                    core.failure = Some(format!(
+                        "deadlock after '{}' finished: no runnable threads{hint}\n  \
+                         thread states: {}\n  interleaving tail:\n{}",
+                        core.threads[me].name,
+                        core.states_summary(),
+                        core.trace_tail()
+                    ));
+                }
+                core.abort = true;
+            } else {
+                let idx = core.pick(&cands);
+                let chosen = cands[idx];
+                core.grant(chosen);
+            }
+        }
+        drop(core);
+        self.cv.notify_all();
+    }
+
+    fn model_join(&self, me: usize, target: usize) {
+        self.schedule(me, "join");
+        let mut core = self.lock_core();
+        if core.threads[target].state != St::Finished {
+            self.block_on(core, me, St::BlockedJoin(target), "join(blocked)");
+            core = self.lock_core();
+        }
+        let tclock = core.threads[target].clock.clone();
+        core.threads[me].clock.join(&tclock);
+    }
+
+    // -- mutexes ----------------------------------------------------------
+
+    fn mutex_lock(&self, me: usize, id: u64) {
+        self.schedule(me, "mutex.lock");
+        loop {
+            let mut core = self.lock_core();
+            if core.abort {
+                drop(core);
+                if std::thread::panicking() {
+                    return;
+                }
+                panic_any(Abort);
+            }
+            let m = core.mutexes.entry(id).or_default();
+            if m.held_by.is_none() {
+                m.held_by = Some(me);
+                let mc = m.clock.clone();
+                core.threads[me].clock.join(&mc);
+                return;
+            }
+            self.block_on(core, me, St::BlockedMutex(id), "mutex.lock(blocked)");
+            // Granted: loop and re-contend (explores acquisition order).
+        }
+    }
+
+    /// Unlock bookkeeping runs even during unwind (guards drop on panic
+    /// paths) — it never panics and never schedules.
+    fn mutex_unlock(&self, me: usize, id: u64) {
+        let mut core = self.lock_core();
+        let clock = core.threads[me].clock.clone();
+        core.threads[me].clock.bump(me);
+        let m = core.mutexes.entry(id).or_default();
+        debug_assert_eq!(m.held_by, Some(me), "unlock of a mutex not held");
+        m.held_by = None;
+        m.clock.join(&clock);
+        for th in core.threads.iter_mut() {
+            if th.state == St::BlockedMutex(id) {
+                th.state = St::Runnable;
+            }
+        }
+        drop(core);
+        self.cv.notify_all();
+    }
+
+    // -- condvars ---------------------------------------------------------
+
+    fn cv_wait(&self, me: usize, cv_id: u64, mutex_id: u64, timed: bool) {
+        let mut core = self.lock_core();
+        if core.abort {
+            drop(core);
+            if std::thread::panicking() {
+                return;
+            }
+            panic_any(Abort);
+        }
+        // Atomically release the mutex and enqueue as a waiter.
+        let clock = core.threads[me].clock.clone();
+        core.threads[me].clock.bump(me);
+        let m = core.mutexes.entry(mutex_id).or_default();
+        debug_assert_eq!(m.held_by, Some(me), "condvar wait without the mutex");
+        m.held_by = None;
+        m.clock.join(&clock);
+        for th in core.threads.iter_mut() {
+            if th.state == St::BlockedMutex(mutex_id) {
+                th.state = St::Runnable;
+            }
+        }
+        core.condvars.entry(cv_id).or_default().push(CvWaiter { tid: me, timed });
+        self.block_on(
+            core,
+            me,
+            St::BlockedCondvar(cv_id),
+            if timed { "condvar.wait_timeout" } else { "condvar.wait" },
+        );
+        // Notified (never a model timeout; see module docs): reacquire.
+        self.mutex_lock(me, mutex_id);
+    }
+
+    fn cv_notify(&self, me: usize, cv_id: u64, all: bool) {
+        self.schedule(me, if all { "condvar.notify_all" } else { "condvar.notify_one" });
+        let mut core = self.lock_core();
+        let waiters = core.condvars.entry(cv_id).or_default();
+        let n = if all { waiters.len() } else { waiters.len().min(1) };
+        let woken: Vec<usize> = waiters.drain(..n).map(|w| w.tid).collect();
+        for tid in woken {
+            core.threads[tid].state = St::Runnable;
+        }
+        drop(core);
+        self.cv.notify_all();
+    }
+
+    // -- happens-before bookkeeping --------------------------------------
+
+    fn sc_sync(core: &mut Core, me: usize) {
+        let clock = core.threads[me].clock.clone();
+        core.global_sc.join(&clock);
+        let sc = core.global_sc.clone();
+        core.threads[me].clock.join(&sc);
+    }
+
+    // Publication discipline (FastTrack-style): every release-like op first
+    // publishes a *snapshot* of the thread clock, then bumps the thread's
+    // own epoch — so operations sequenced after the publication are not
+    // spuriously ordered before a later acquire of it.
+
+    fn clock_load(&self, me: usize, id: u64, ord: std::sync::atomic::Ordering) {
+        use std::sync::atomic::Ordering::*;
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        match ord {
+            Acquire | AcqRel | SeqCst => {
+                let sync = core.atomics.entry(id).or_default().clone();
+                core.threads[me].clock.join(&sync);
+            }
+            _ => {}
+        }
+        if ord == SeqCst {
+            // A SeqCst load also publishes into the global SC order.
+            Self::sc_sync(&mut core, me);
+            core.threads[me].clock.bump(me);
+        }
+    }
+
+    fn clock_store(&self, me: usize, id: u64, ord: std::sync::atomic::Ordering) {
+        use std::sync::atomic::Ordering::*;
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        match ord {
+            Release | AcqRel | SeqCst => {
+                let clock = core.threads[me].clock.clone();
+                core.atomics.insert(id, clock);
+            }
+            _ => {
+                // A relaxed store publishes nothing and breaks any release
+                // sequence headed by a previous store.
+                core.atomics.entry(id).or_default().clear();
+            }
+        }
+        if ord == SeqCst {
+            Self::sc_sync(&mut core, me);
+        }
+        core.threads[me].clock.bump(me);
+    }
+
+    fn clock_rmw(&self, me: usize, id: u64, ord: std::sync::atomic::Ordering) {
+        use std::sync::atomic::Ordering::*;
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        if matches!(ord, Acquire | AcqRel | SeqCst) {
+            let sync = core.atomics.entry(id).or_default().clone();
+            core.threads[me].clock.join(&sync);
+        }
+        if matches!(ord, Release | AcqRel | SeqCst) {
+            // RMWs join into the release chain rather than replacing it.
+            let clock = core.threads[me].clock.clone();
+            core.atomics.entry(id).or_default().join(&clock);
+        }
+        if ord == SeqCst {
+            Self::sc_sync(&mut core, me);
+        }
+        core.threads[me].clock.bump(me);
+    }
+
+    fn clock_fence(&self, me: usize) {
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        Self::sc_sync(&mut core, me);
+        core.threads[me].clock.bump(me);
+    }
+
+    fn cell_read(&self, me: usize, id: u64) {
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        let clock = core.threads[me].clock.clone();
+        let racy = !core.cells.entry(id).or_default().write.leq(&clock);
+        if racy {
+            self.fail(
+                core,
+                format!(
+                    "data race: read of cell#{id} by thread {me} does not \
+                     happen-after the last write (missing acquire edge?)"
+                ),
+            );
+        }
+        core.cells.entry(id).or_default().read.join(&clock);
+    }
+
+    fn cell_write(&self, me: usize, id: u64) {
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        let clock = core.threads[me].clock.clone();
+        let racy = {
+            let cell = core.cells.entry(id).or_default();
+            !cell.write.leq(&clock) || !cell.read.leq(&clock)
+        };
+        if racy {
+            self.fail(
+                core,
+                format!(
+                    "data race: write of cell#{id} by thread {me} does not \
+                     happen-after every prior access (missing release/acquire \
+                     pairing?)"
+                ),
+            );
+        }
+        let cell = core.cells.entry(id).or_default();
+        cell.write = clock;
+        cell.read.clear();
+    }
+
+    fn arc_release(&self, me: usize, id: u64) {
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        // Snapshot-publish-bump, like any other release (see clock_store).
+        let clock = core.threads[me].clock.clone();
+        core.atomics.entry(id).or_default().join(&clock);
+        core.threads[me].clock.bump(me);
+    }
+
+    fn arc_acquire(&self, me: usize, id: u64) {
+        if std::thread::panicking() {
+            return;
+        }
+        let mut core = self.lock_core();
+        let sync = core.atomics.entry(id).or_default().clone();
+        core.threads[me].clock.join(&sync);
+    }
+}
+
+/// Execute one schedule; returns the recorded decisions and any failure.
+fn run_once(
+    cfg: &Config,
+    prefix: &[usize],
+    seed: u64,
+    f: StdArc<dyn Fn() + Send + Sync>,
+) -> (Vec<(usize, usize)>, Option<String>) {
+    let rt = StdArc::new(Rt::new(cfg, prefix.to_vec(), seed));
+    let main_tid = rt.register_thread("main", None);
+    debug_assert_eq!(main_tid, 0);
+    {
+        let mut core = rt.lock_core();
+        core.current = 0;
+    }
+    let rt2 = StdArc::clone(&rt);
+    let handle = std::thread::Builder::new()
+        .name("chaos-main".into())
+        .spawn(move || {
+            set_ctx(StdArc::clone(&rt2), 0);
+            if rt2.wait_entry(0) {
+                match catch_unwind(AssertUnwindSafe(|| (*f)())) {
+                    Ok(()) => {}
+                    Err(p) => {
+                        if p.downcast_ref::<Abort>().is_none() {
+                            rt2.record_panic(0, panic_message(&p));
+                        }
+                    }
+                }
+            }
+            rt2.mark_finished(0);
+            clear_ctx();
+        })
+        .expect("spawn chaos main thread");
+
+    // Wait for every model thread to finish, with a watchdog against bugs
+    // in the checker itself (a stuck model must not hang the test suite).
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut core = rt.lock_core();
+    while !core.all_finished() {
+        if Instant::now() > deadline {
+            if core.failure.is_none() {
+                core.failure = Some(format!(
+                    "checker watchdog fired: model threads stuck\n  thread states: {}\n{}",
+                    core.states_summary(),
+                    core.trace_tail()
+                ));
+            }
+            core.abort = true;
+            rt.cv.notify_all();
+        }
+        let (guard, _) = rt
+            .cv
+            .wait_timeout(core, Duration::from_millis(100))
+            .unwrap_or_else(|e| e.into_inner());
+        core = guard;
+    }
+    let decisions = core.decisions.clone();
+    let failure = core.failure.clone();
+    drop(core);
+    let _ = handle.join();
+    (decisions, failure)
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ===========================================================================
+// Facade: the instrumented primitives `crate::sync` re-exports under
+// `--features chaos`.  Outside an active model every operation passes
+// straight through to `std`; inside a model every operation is a scheduling
+// point with happens-before bookkeeping.
+// ===========================================================================
+
+pub mod facade {
+    use super::{ctx, next_obj_id, Rt};
+    use std::sync::Arc as StdArc;
+    use std::time::Duration;
+
+    /// Stub poison-error type mirroring `crate::sync::Poison` (the facade
+    /// never poisons: a panicking model thread aborts the whole schedule).
+    #[derive(Debug)]
+    pub struct Poison;
+
+    // -- Mutex / MutexGuard ------------------------------------------------
+
+    pub struct Mutex<T> {
+        id: u64,
+        /// Provides real mutual exclusion outside a model (chaos feature on,
+        /// no active `check`); inside a model the scheduler serializes.
+        real: std::sync::Mutex<()>,
+        data: std::cell::UnsafeCell<T>,
+    }
+
+    // SAFETY: `Mutex` hands out `&T`/`&mut T` only through `MutexGuard`,
+    // which holds either the real `std::sync::Mutex` (outside a model) or
+    // the model-level lock (`Rt::mutex_lock`, which admits one holder at a
+    // time).  Either way access to `data` is mutually exclusive, so sharing
+    // the wrapper across threads is sound exactly when `T: Send`.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    // SAFETY: see the `Send` impl above — all access to `data` is mediated
+    // by a mutual-exclusion protocol, which is the standard justification
+    // for `Mutex<T>: Sync where T: Send`.
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    impl<T> Mutex<T> {
+        pub fn new(value: T) -> Self {
+            Mutex {
+                id: next_obj_id(),
+                real: std::sync::Mutex::new(()),
+                data: std::cell::UnsafeCell::new(value),
+            }
+        }
+
+        pub fn lock(&self) -> Result<MutexGuard<'_, T>, Poison> {
+            match ctx() {
+                Some((rt, me)) => {
+                    rt.mutex_lock(me, self.id);
+                    Ok(MutexGuard { m: self, real: None, model: Some((rt, me)) })
+                }
+                None => {
+                    let g = self.real.lock().unwrap_or_else(|e| e.into_inner());
+                    Ok(MutexGuard { m: self, real: Some(g), model: None })
+                }
+            }
+        }
+    }
+
+    pub struct MutexGuard<'a, T> {
+        m: &'a Mutex<T>,
+        real: Option<std::sync::MutexGuard<'a, ()>>,
+        /// Captured at lock time so unlock bookkeeping still works while the
+        /// thread is unwinding (TLS access during drop is fallible).
+        model: Option<(StdArc<Rt>, usize)>,
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            // SAFETY: the guard exists, so this thread holds the lock (real
+            // or model-level) and no other thread can touch `data` until the
+            // guard drops.
+            unsafe { &*self.m.data.get() }
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            // SAFETY: as in `deref` — the lock is held for the guard's whole
+            // lifetime, and `&mut self` makes this the only live reference.
+            unsafe { &mut *self.m.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            if let Some((rt, me)) = &self.model {
+                rt.mutex_unlock(*me, self.m.id);
+            }
+            // `real` (if any) unlocks via its own drop.
+        }
+    }
+
+    // -- Condvar -----------------------------------------------------------
+
+    pub struct WaitTimeoutResult {
+        timed_out: bool,
+    }
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.timed_out
+        }
+    }
+
+    pub struct Condvar {
+        id: u64,
+        real: std::sync::Condvar,
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Condvar::new()
+        }
+    }
+
+    impl Condvar {
+        pub fn new() -> Self {
+            Condvar { id: next_obj_id(), real: std::sync::Condvar::new() }
+        }
+
+        pub fn wait<'a, T>(
+            &self,
+            mut guard: MutexGuard<'a, T>,
+        ) -> Result<MutexGuard<'a, T>, Poison> {
+            if let Some((rt, me)) = guard.model.clone() {
+                rt.cv_wait(me, self.id, guard.m.id, false);
+                Ok(guard)
+            } else {
+                let g = guard.real.take().expect("non-model guard has a real lock");
+                let g = self.real.wait(g).unwrap_or_else(|e| e.into_inner());
+                guard.real = Some(g);
+                Ok(guard)
+            }
+        }
+
+        /// Inside a model this never times out (`timed_out() == false`): a
+        /// waiter that nobody wakes is reported as a deadlock instead of
+        /// being silently rescued, which is exactly how lost-wakeup bugs are
+        /// detected.  Timeout behaviour itself is covered by the real-time
+        /// tests in `prop_transport.rs`.
+        pub fn wait_timeout<'a, T>(
+            &self,
+            mut guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> Result<(MutexGuard<'a, T>, WaitTimeoutResult), Poison> {
+            if let Some((rt, me)) = guard.model.clone() {
+                rt.cv_wait(me, self.id, guard.m.id, true);
+                Ok((guard, WaitTimeoutResult { timed_out: false }))
+            } else {
+                let g = guard.real.take().expect("non-model guard has a real lock");
+                let (g, res) = self
+                    .real
+                    .wait_timeout(g, dur)
+                    .unwrap_or_else(|e| e.into_inner());
+                guard.real = Some(g);
+                Ok((guard, WaitTimeoutResult { timed_out: res.timed_out() }))
+            }
+        }
+
+        pub fn notify_one(&self) {
+            if let Some((rt, me)) = ctx() {
+                rt.cv_notify(me, self.id, false);
+            } else {
+                self.real.notify_one();
+            }
+        }
+
+        pub fn notify_all(&self) {
+            if let Some((rt, me)) = ctx() {
+                rt.cv_notify(me, self.id, true);
+            } else {
+                self.real.notify_all();
+            }
+        }
+    }
+
+    // -- Arc ---------------------------------------------------------------
+
+    struct ArcBox<T> {
+        sync_id: u64,
+        value: T,
+    }
+
+    impl<T> Drop for ArcBox<T> {
+        fn drop(&mut self) {
+            // The thread that runs the final destructor must happen-after
+            // every other handle's release (std::Arc gets this from its
+            // Acquire fence before dropping the payload).
+            if let Some((rt, me)) = ctx() {
+                rt.arc_acquire(me, self.sync_id);
+            }
+        }
+    }
+
+    /// `std::sync::Arc` with the refcount's happens-before edges made
+    /// visible to the checker: each handle drop is a Release into the arc's
+    /// sync clock, and the payload destructor Acquires it — so a payload
+    /// `Drop` that reads data written by other handle-owning threads (e.g.
+    /// `RingInner::drop` draining with `Relaxed` loads) is race-free for the
+    /// same reason it is under real `Arc`.
+    pub struct Arc<T> {
+        inner: std::sync::Arc<ArcBox<T>>,
+    }
+
+    impl<T> Arc<T> {
+        pub fn new(value: T) -> Self {
+            Arc {
+                inner: std::sync::Arc::new(ArcBox { sync_id: next_obj_id(), value }),
+            }
+        }
+
+        pub fn strong_count(this: &Arc<T>) -> usize {
+            std::sync::Arc::strong_count(&this.inner)
+        }
+
+        pub fn ptr_eq(a: &Arc<T>, b: &Arc<T>) -> bool {
+            std::sync::Arc::ptr_eq(&a.inner, &b.inner)
+        }
+    }
+
+    impl<T> Clone for Arc<T> {
+        fn clone(&self) -> Self {
+            Arc { inner: std::sync::Arc::clone(&self.inner) }
+        }
+    }
+
+    impl<T> Drop for Arc<T> {
+        fn drop(&mut self) {
+            // Mirrors std::Arc's Release decrement; the matching Acquire is
+            // in `ArcBox::drop` (which `self.inner`'s drop may run next).
+            if let Some((rt, me)) = ctx() {
+                rt.arc_release(me, self.inner.sync_id);
+            }
+        }
+    }
+
+    impl<T> std::ops::Deref for Arc<T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.inner.value
+        }
+    }
+
+    // -- atomics -----------------------------------------------------------
+
+    pub mod atomic {
+        use crate::util::chaos::{ctx, next_obj_id};
+        pub use std::sync::atomic::Ordering;
+
+        macro_rules! chaos_atomic {
+            ($name:ident, $std_ty:ty, $val_ty:ty) => {
+                pub struct $name {
+                    id: u64,
+                    v: $std_ty,
+                }
+
+                impl $name {
+                    pub fn new(v: $val_ty) -> Self {
+                        $name { id: next_obj_id(), v: <$std_ty>::new(v) }
+                    }
+
+                    pub fn load(&self, ord: Ordering) -> $val_ty {
+                        if let Some((rt, me)) = ctx() {
+                            rt.schedule(me, concat!(stringify!($name), ".load"));
+                            let r = self.v.load(ord);
+                            rt.clock_load(me, self.id, ord);
+                            r
+                        } else {
+                            self.v.load(ord)
+                        }
+                    }
+
+                    pub fn store(&self, val: $val_ty, ord: Ordering) {
+                        if let Some((rt, me)) = ctx() {
+                            rt.schedule(me, concat!(stringify!($name), ".store"));
+                            self.v.store(val, ord);
+                            rt.clock_store(me, self.id, ord);
+                        } else {
+                            self.v.store(val, ord);
+                        }
+                    }
+                }
+            };
+        }
+
+        macro_rules! chaos_atomic_arith {
+            ($name:ident, $val_ty:ty) => {
+                impl $name {
+                    pub fn fetch_add(&self, val: $val_ty, ord: Ordering) -> $val_ty {
+                        if let Some((rt, me)) = ctx() {
+                            rt.schedule(me, concat!(stringify!($name), ".fetch_add"));
+                            let r = self.v.fetch_add(val, ord);
+                            rt.clock_rmw(me, self.id, ord);
+                            r
+                        } else {
+                            self.v.fetch_add(val, ord)
+                        }
+                    }
+
+                    pub fn fetch_sub(&self, val: $val_ty, ord: Ordering) -> $val_ty {
+                        if let Some((rt, me)) = ctx() {
+                            rt.schedule(me, concat!(stringify!($name), ".fetch_sub"));
+                            let r = self.v.fetch_sub(val, ord);
+                            rt.clock_rmw(me, self.id, ord);
+                            r
+                        } else {
+                            self.v.fetch_sub(val, ord)
+                        }
+                    }
+                }
+            };
+        }
+
+        chaos_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+        chaos_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+        chaos_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        chaos_atomic_arith!(AtomicUsize, usize);
+        chaos_atomic_arith!(AtomicU64, u64);
+
+        pub fn fence(ord: Ordering) {
+            if let Some((rt, me)) = ctx() {
+                rt.schedule(me, "fence");
+                std::sync::atomic::fence(ord);
+                rt.clock_fence(me);
+            } else {
+                std::sync::atomic::fence(ord);
+            }
+        }
+    }
+
+    // -- cell --------------------------------------------------------------
+
+    pub mod cell {
+        use crate::util::chaos::{ctx, next_obj_id};
+
+        /// `UnsafeCell` with the loom-style closure API of
+        /// [`crate::sync::cell::UnsafeCell`].  Accesses are *not* scheduling
+        /// points (they model plain memory between atomic ops); instead each
+        /// access is checked against the happens-before graph and a
+        /// conflicting pair is reported as a data race.
+        pub struct UnsafeCell<T> {
+            id: u64,
+            inner: std::cell::UnsafeCell<T>,
+        }
+
+        // SAFETY: matches `std::cell::UnsafeCell<T>: Send where T: Send`.
+        unsafe impl<T: Send> Send for UnsafeCell<T> {}
+        // SAFETY: unlike std's (which is `!Sync`), the modeled cell may be
+        // shared across model threads: every access goes through
+        // `with`/`with_mut`, each checked against the happens-before graph,
+        // and a conflicting pair fails the model instead of being UB.  The
+        // production containers (e.g. `spsc::RingInner`) still carry their
+        // own `unsafe impl Sync` stating the real protocol.
+        unsafe impl<T: Send> Sync for UnsafeCell<T> {}
+
+        impl<T> UnsafeCell<T> {
+            pub fn new(value: T) -> Self {
+                UnsafeCell { id: next_obj_id(), inner: std::cell::UnsafeCell::new(value) }
+            }
+
+            /// Run `f` with a shared raw pointer to the contents; recorded
+            /// as a read.  Dereferencing is `unsafe` at the call site.
+            pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+                if let Some((rt, me)) = ctx() {
+                    rt.cell_read(me, self.id);
+                }
+                f(self.inner.get())
+            }
+
+            /// Run `f` with an exclusive raw pointer to the contents;
+            /// recorded as a write.  Dereferencing is `unsafe` at the call
+            /// site.
+            pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+                if let Some((rt, me)) = ctx() {
+                    rt.cell_write(me, self.id);
+                }
+                f(self.inner.get())
+            }
+        }
+    }
+
+    // -- hint / thread -----------------------------------------------------
+
+    pub mod hint {
+        use crate::util::chaos::ctx;
+
+        pub fn spin_loop() {
+            if let Some((rt, me)) = ctx() {
+                rt.yield_hint(me, "spin_loop");
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    pub mod thread {
+        use crate::util::chaos::{
+            clear_ctx, ctx, panic_message, set_ctx, Abort, Rt,
+        };
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::Arc as StdArc;
+        use std::time::Duration;
+
+        pub fn yield_now() {
+            if let Some((rt, me)) = ctx() {
+                rt.yield_hint(me, "yield_now");
+            } else {
+                std::thread::yield_now();
+            }
+        }
+
+        /// Inside a model the duration is ignored: sleeping is just a
+        /// voluntary deschedule (model time is schedule order, not wall
+        /// clock).
+        pub fn sleep(dur: Duration) {
+            if let Some((rt, me)) = ctx() {
+                rt.yield_hint(me, "sleep");
+            } else {
+                std::thread::sleep(dur);
+            }
+        }
+
+        pub struct JoinHandle<T> {
+            tid: Option<usize>,
+            rt: Option<StdArc<Rt>>,
+            real: std::thread::JoinHandle<Option<T>>,
+        }
+
+        impl<T> JoinHandle<T> {
+            pub fn join(self) -> std::thread::Result<T> {
+                if let (Some(tid), Some(rt)) = (self.tid, self.rt.as_ref()) {
+                    if let Some((_, me)) = ctx() {
+                        rt.model_join(me, tid);
+                    }
+                }
+                match self.real.join() {
+                    Ok(Some(v)) => Ok(v),
+                    Ok(None) => {
+                        Err(Box::new("chaos: model thread aborted")
+                            as Box<dyn std::any::Any + Send>)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        }
+
+        /// Mirrors [`crate::sync::thread::spawn_named`]: inside a model the
+        /// thread is registered with the scheduler and runs only when
+        /// granted; outside it is a plain named `std` thread.
+        pub fn spawn_named<F, T>(name: &str, f: F) -> JoinHandle<T>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match ctx() {
+                Some((rt, me)) => {
+                    let tid = rt.register_thread(name, Some(me));
+                    let rt2 = StdArc::clone(&rt);
+                    let real = std::thread::Builder::new()
+                        .name(name.to_string())
+                        .spawn(move || {
+                            set_ctx(StdArc::clone(&rt2), tid);
+                            let out = if rt2.wait_entry(tid) {
+                                match catch_unwind(AssertUnwindSafe(f)) {
+                                    Ok(v) => Some(v),
+                                    Err(p) => {
+                                        if p.downcast_ref::<Abort>().is_none() {
+                                            rt2.record_panic(tid, panic_message(&*p));
+                                        }
+                                        None
+                                    }
+                                }
+                            } else {
+                                None
+                            };
+                            rt2.mark_finished(tid);
+                            clear_ctx();
+                            out
+                        })
+                        .expect("failed to spawn chaos model thread");
+                    JoinHandle { tid: Some(tid), rt: Some(rt), real }
+                }
+                None => {
+                    let real = std::thread::Builder::new()
+                        .name(name.to_string())
+                        .spawn(move || Some(f()))
+                        .expect("failed to spawn thread");
+                    JoinHandle { tid: None, rt: None, real }
+                }
+            }
+        }
+    }
+}
+
+// ===========================================================================
+// Self-tests: the checker must catch seeded bugs (otherwise a green model
+// run means nothing) and must not flag correctly-synchronized protocols.
+// ===========================================================================
+
+#[cfg(test)]
+mod tests {
+    use super::facade::atomic::{AtomicUsize, Ordering};
+    use super::facade::{cell, thread, Condvar, Mutex};
+    use super::*;
+
+    fn small() -> Config {
+        Config { max_schedules: 2000, ..Config::default() }
+    }
+
+    fn expect_failure(name: &'static str, f: impl Fn() + Send + Sync + 'static) -> String {
+        let res = catch_unwind(AssertUnwindSafe(|| check(name, small(), f)));
+        match res {
+            Ok(report) => panic!(
+                "checker missed the seeded bug in '{name}' \
+                 ({} schedules explored)",
+                report.schedules
+            ),
+            Err(p) => panic_message(&*p),
+        }
+    }
+
+    #[test]
+    fn finds_lost_update_between_relaxed_increments() {
+        // Classic read-modify-write split across two threads: some
+        // interleaving loses an increment, and exhaustive search must find
+        // it and fail the embedded assertion.
+        let msg = expect_failure("lost-update", || {
+            let c = facade::Arc::new(AtomicUsize::new(0));
+            let c2 = facade::Arc::clone(&c);
+            let t = thread::spawn_named("inc", move || {
+                let v = c2.load(Ordering::Relaxed);
+                c2.store(v + 1, Ordering::Relaxed);
+            });
+            let v = c.load(Ordering::Relaxed);
+            c.store(v + 1, Ordering::Relaxed);
+            t.join().unwrap();
+            assert_eq!(c.load(Ordering::Relaxed), 2, "lost update");
+        });
+        assert!(msg.contains("lost update"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn finds_data_race_on_unsynchronized_cell() {
+        // Two sibling threads touch the same cell with no ordering between
+        // them: every interleaving is racy, so even schedule #1 must fail.
+        let msg = expect_failure("cell-race", || {
+            let c = facade::Arc::new(cell::UnsafeCell::new(0u32));
+            let c2 = facade::Arc::clone(&c);
+            let t = thread::spawn_named("writer", move || {
+                c2.with_mut(|p| {
+                    // SAFETY: this is the *seeded bug* — there is no
+                    // synchronization, and the checker must report it.
+                    unsafe { *p = 1 };
+                });
+            });
+            c.with(|p| {
+                // SAFETY: racy by construction; see above.
+                unsafe { *p };
+            });
+            t.join().unwrap();
+        });
+        assert!(msg.contains("data race"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn release_acquire_handoff_is_race_free() {
+        // Message-passing done right: write cell, Release-store flag;
+        // reader spins on Acquire until set, then reads the cell.  No
+        // schedule may report a race, and more than one schedule must have
+        // been explored for the result to mean anything.
+        let report = check("handoff", small(), || {
+            let flag = facade::Arc::new(AtomicUsize::new(0));
+            let data = facade::Arc::new(cell::UnsafeCell::new(0u32));
+            let (f2, d2) = (facade::Arc::clone(&flag), facade::Arc::clone(&data));
+            let t = thread::spawn_named("producer", move || {
+                d2.with_mut(|p| {
+                    // SAFETY: the consumer reads only after observing the
+                    // Acquire-load of the flag this thread Release-stores
+                    // below, so this write happens-before that read.
+                    unsafe { *p = 42 };
+                });
+                f2.store(1, Ordering::Release);
+            });
+            while flag.load(Ordering::Acquire) == 0 {
+                thread::yield_now();
+            }
+            let v = data.with(|p| {
+                // SAFETY: guarded by the Acquire load above; see producer.
+                unsafe { *p }
+            });
+            assert_eq!(v, 42);
+            t.join().unwrap();
+        });
+        assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+        assert!(report.exhausted);
+    }
+
+    #[test]
+    fn relaxed_handoff_is_reported_as_race() {
+        // Same shape as above but the flag uses Relaxed on both sides: the
+        // serialized execution still produces 42, yet the happens-before
+        // clocks must flag the cell access.
+        let msg = expect_failure("relaxed-handoff", || {
+            let flag = facade::Arc::new(AtomicUsize::new(0));
+            let data = facade::Arc::new(cell::UnsafeCell::new(0u32));
+            let (f2, d2) = (facade::Arc::clone(&flag), facade::Arc::clone(&data));
+            let t = thread::spawn_named("producer", move || {
+                d2.with_mut(|p| {
+                    // SAFETY: seeded bug — Relaxed publication does not
+                    // order this write before the consumer's read.
+                    unsafe { *p = 42 };
+                });
+                f2.store(1, Ordering::Relaxed);
+            });
+            while flag.load(Ordering::Relaxed) == 0 {
+                thread::yield_now();
+            }
+            data.with(|p| {
+                // SAFETY: seeded bug; see above.
+                unsafe { *p };
+            });
+            t.join().unwrap();
+        });
+        assert!(msg.contains("data race"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn finds_lost_wakeup_from_unconditional_wait() {
+        // The waiter checks no predicate: if the notifier runs first, the
+        // wait sleeps forever.  In the model that is a deadlock (model
+        // waits never time out), which the checker must report.
+        let msg = expect_failure("lost-wakeup", || {
+            let m = facade::Arc::new(Mutex::new(()));
+            let cv = facade::Arc::new(Condvar::new());
+            let (m2, cv2) = (facade::Arc::clone(&m), facade::Arc::clone(&cv));
+            let t = thread::spawn_named("notifier", move || {
+                let _g = m2.lock().unwrap();
+                cv2.notify_one();
+            });
+            let g = m.lock().unwrap();
+            let _g = cv.wait(g).unwrap();
+            t.join().unwrap();
+        });
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn mutex_protected_counter_is_clean_and_explores() {
+        let report = check("mutex-counter", small(), || {
+            let n = facade::Arc::new(Mutex::new(0u32));
+            let handles: Vec<_> = (0..2)
+                .map(|i| {
+                    let n2 = facade::Arc::clone(&n);
+                    thread::spawn_named(&format!("add{i}"), move || {
+                        *n2.lock().unwrap() += 1;
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+        assert!(report.schedules > 1);
+    }
+
+    #[test]
+    fn random_mode_is_reproducible_and_bounded() {
+        let cfg = Config { mode: Mode::Random, random_iters: 25, ..Config::default() };
+        let report = check("random-smoke", cfg, || {
+            let c = facade::Arc::new(AtomicUsize::new(0));
+            let c2 = facade::Arc::clone(&c);
+            let t = thread::spawn_named("w", move || {
+                c2.fetch_add(1, Ordering::SeqCst);
+            });
+            c.fetch_add(1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(c.load(Ordering::SeqCst), 2);
+        });
+        assert_eq!(report.schedules, 25);
+    }
+}

@@ -4,6 +4,8 @@
 //! so the RNG (xoshiro256++) and other helpers that would normally come from
 //! `rand`/`instant` are implemented here.
 
+#[cfg(feature = "chaos")]
+pub mod chaos;
 pub mod rng;
 
 pub use rng::Rng;

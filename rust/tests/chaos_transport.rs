@@ -1,0 +1,290 @@
+//! Interleaving models for the lock-free transport, run under the
+//! deterministic model checker in `sample_factory::util::chaos`
+//! (`cargo test --features chaos --test chaos_transport`; the target is
+//! gated by `required-features` in Cargo.toml).
+//!
+//! Each model exercises one protocol of `ipc::spsc` / `ipc::sharded` /
+//! `runtime::native::pool` through the `crate::sync` facade: every atomic,
+//! lock, condvar and spawn is a scheduling point, the checker explores
+//! bounded-preemption interleavings exhaustively, and vector clocks flag
+//! any cell access whose happens-before edge relies on stronger orderings
+//! than the code actually requests.  Lost wakeups surface as deadlocks
+//! because modeled `wait_timeout` never times out.
+//!
+//! Models must use primitives from `sample_factory::sync` (instrumented)
+//! and must not touch `NativePool::global()` — a global pool's workers are
+//! spawned outside the model and invisible to the scheduler.
+
+use sample_factory::ipc::{spsc, RecvError, ShardedQueue};
+use sample_factory::runtime::native::pool::{Job, NativePool};
+use sample_factory::sync::atomic::{AtomicUsize, Ordering};
+use sample_factory::sync::{thread, Arc};
+use sample_factory::util::chaos::{check, Config, Mode};
+use std::time::Duration;
+
+/// Long enough that a real-time deadline can never expire inside a model
+/// (model waits are schedule-driven; see the chaos module docs).
+const FOREVER: Duration = Duration::from_secs(3600);
+
+fn cfg(max_schedules: usize) -> Config {
+    Config { max_schedules, ..Config::default() }
+}
+
+#[test]
+fn spsc_push_vs_pop_interleavings() {
+    // Capacity-2 ring, 3 items: producer and consumer race on every
+    // head/tail boundary, including full-ring backpressure.
+    let report = check("spsc_push_vs_pop", cfg(4000), || {
+        let (mut tx, mut rx) = spsc::ring::<u32>(2);
+        let t = thread::spawn_named("producer", move || {
+            for i in 0..3u32 {
+                let mut v = i;
+                loop {
+                    match tx.try_push(v) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            v = back;
+                            thread::yield_now();
+                        }
+                    }
+                }
+            }
+        });
+        let mut got = Vec::new();
+        while got.len() < 3 {
+            match rx.try_pop() {
+                Some(v) => got.push(v),
+                None => thread::yield_now(),
+            }
+        }
+        t.join().unwrap();
+        assert_eq!(got, vec![0, 1, 2], "reorder/loss/dup");
+        assert!(rx.try_pop().is_none());
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn spsc_wraparound_at_capacity_one() {
+    // The tightest ring: every push/pop pair crosses the modular boundary,
+    // so slot reuse is exercised on each item.
+    let report = check("spsc_wraparound", cfg(4000), || {
+        let (mut tx, mut rx) = spsc::ring::<u64>(1);
+        let t = thread::spawn_named("producer", move || {
+            for i in 0..3u64 {
+                let mut v = i;
+                loop {
+                    match tx.try_push(v) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            v = back;
+                            thread::yield_now();
+                        }
+                    }
+                }
+            }
+        });
+        for expect in 0..3u64 {
+            loop {
+                match rx.try_pop() {
+                    Some(v) => {
+                        assert_eq!(v, expect);
+                        break;
+                    }
+                    None => thread::yield_now(),
+                }
+            }
+        }
+        t.join().unwrap();
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn spsc_drop_releases_undrained_items() {
+    // The `RingInner::drop` drain uses Relaxed position loads and claims
+    // the Arc refcount Release/Acquire makes that sound; the instrumented
+    // Arc reproduces exactly those edges, so if the claim were wrong the
+    // cell clocks would report a race here.
+    let report = check("spsc_drop_releases", cfg(4000), || {
+        let token = Arc::new(0u8);
+        let (mut tx, rx) = spsc::ring::<Arc<u8>>(4);
+        let t2 = Arc::clone(&token);
+        let producer = thread::spawn_named("producer", move || {
+            let mut tx = tx;
+            for _ in 0..2 {
+                assert!(tx.try_push(Arc::clone(&t2)).is_ok());
+            }
+            // tx (and its RingInner handle) drops here, possibly last.
+        });
+        let mut rx = rx;
+        let first = rx.try_pop(); // may race the pushes; None is fine
+        drop(first);
+        drop(rx); // consumer handle gone; undrained items must be freed
+        producer.join().unwrap();
+        assert_eq!(Arc::strong_count(&token), 1, "ring leaked/double-freed");
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn sharded_push_vs_close_never_loses_accepted_items_before_close() {
+    // A push racing close() may strand its item (documented departure from
+    // Fifo); what must NEVER happen: a crash, a duplicated item, or a
+    // consumer that blocks forever.  Drain count is 0 or 1, bounded by the
+    // producer's successful pushes.
+    let report = check("sharded_push_vs_close", cfg(2000), || {
+        let q: ShardedQueue<u32> = ShardedQueue::new(1, 1);
+        let mut tx = q.claim_producer(0).unwrap();
+        let t = thread::spawn_named("producer", move || {
+            u32::from(tx.try_push(7).is_ok())
+        });
+        q.close();
+        let mut out = Vec::new();
+        let mut drained = 0usize;
+        loop {
+            match q.pop_many(&mut out, 8, FOREVER) {
+                Ok(n) => drained += n,
+                Err(RecvError::Closed) => break,
+                Err(RecvError::Timeout) => unreachable!("model waits never time out"),
+            }
+        }
+        let pushed = t.join().unwrap() as usize;
+        assert!(drained <= pushed, "drained {drained} > pushed {pushed}");
+        assert!(out.iter().all(|&v| v == 7));
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn sharded_sleep_wake_no_lost_wakeup() {
+    // The eventcount protocol (sleepers counter + paired SeqCst fences,
+    // with the Relaxed fetch_sub/load downgrades): the consumer publishes,
+    // re-drains, then sleeps; the producer pushes, fences, and checks.  If
+    // any interleaving loses the wakeup the consumer sleeps forever, which
+    // the checker reports as a deadlock — so a passing run is a proof over
+    // the explored schedules that the fence pairing is sufficient.
+    let report = check("sharded_sleep_wake", cfg(2000), || {
+        let q: ShardedQueue<u32> = ShardedQueue::new(1, 4);
+        let mut tx = q.claim_producer(0).unwrap();
+        let t = thread::spawn_named("producer", move || {
+            assert!(tx.push(1));
+            assert!(tx.push(2));
+        });
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            let mut buf = Vec::new();
+            match q.pop_many(&mut buf, 8, FOREVER) {
+                Ok(_) => got.extend_from_slice(&buf),
+                Err(e) => panic!("consumer error before items arrived: {e:?}"),
+            }
+        }
+        t.join().unwrap();
+        assert_eq!(got, vec![1, 2], "per-producer FIFO violated");
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn sharded_close_wakes_blocked_consumer() {
+    // A consumer already parked on the condvar must be woken by close()
+    // (close serializes on the combiner mutex, then broadcasts); a lost
+    // close-wakeup would deadlock the model.
+    let report = check("sharded_close_wakes", cfg(2000), || {
+        let q: ShardedQueue<u32> = ShardedQueue::new(1, 1);
+        let closer = q.clone();
+        let t = thread::spawn_named("closer", move || closer.close());
+        let mut out = Vec::new();
+        match q.pop_many(&mut out, 8, FOREVER) {
+            Err(RecvError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        t.join().unwrap();
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn sharded_two_producers_race_the_waker() {
+    // Regression model for the Relaxed downgrades in `wake_consumer` /
+    // `pop_many`: two producers push and check `sleepers` concurrently
+    // while the consumer goes through its publish/re-drain/sleep window.
+    let report = check("sharded_two_producers", cfg(2000), || {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 1);
+        let mut a = q.claim_producer(0).unwrap();
+        let mut b = q.claim_producer(1).unwrap();
+        let ta = thread::spawn_named("prod-a", move || assert!(a.push(10)));
+        let tb = thread::spawn_named("prod-b", move || assert!(b.push(20)));
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            let mut buf = Vec::new();
+            q.pop_many(&mut buf, 8, FOREVER).expect("items must arrive");
+            got.extend_from_slice(&buf);
+        }
+        ta.join().unwrap();
+        tb.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![10, 20]);
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn pool_scope_runs_all_jobs_and_tears_down() {
+    // Scope latch + shutdown handshake: jobs run exactly once (caller
+    // helps drain), `run` returns only after the latch, and dropping the
+    // pool wakes the parked worker so the model can finish.  A missed
+    // shutdown wakeup parks the worker forever -> deadlock report.
+    let report = check("pool_scope_teardown", cfg(2000), || {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = NativePool::new(2);
+            let mut jobs: Vec<Job<'_>> = Vec::new();
+            for _ in 0..2 {
+                let c = Arc::clone(&counter);
+                jobs.push(Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            pool.run(jobs);
+            assert_eq!(counter.load(Ordering::Relaxed), 2, "scope returned early");
+        } // pool drops: shutdown store + broadcast
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
+}
+
+#[test]
+fn random_mode_smoke_on_the_full_stack() {
+    // A wider random sweep over the sharded stack (deeper interleavings
+    // than the bounded DFS reaches, reproducible from the seed).
+    let report = check(
+        "sharded_random_sweep",
+        Config { mode: Mode::Random, random_iters: 150, ..Config::default() },
+        || {
+            let q: ShardedQueue<u64> = ShardedQueue::new(2, 2);
+            let mut a = q.claim_producer(0).unwrap();
+            let mut b = q.claim_producer(1).unwrap();
+            let ta = thread::spawn_named("prod-a", move || {
+                for i in 0..3u64 {
+                    assert!(a.push(i));
+                }
+            });
+            let tb = thread::spawn_named("prod-b", move || {
+                for i in 0..3u64 {
+                    assert!(b.push(100 + i));
+                }
+            });
+            let mut got = Vec::new();
+            while got.len() < 6 {
+                let mut buf = Vec::new();
+                q.pop_many(&mut buf, 16, FOREVER).expect("items must arrive");
+                got.extend_from_slice(&buf);
+            }
+            ta.join().unwrap();
+            tb.join().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1, 2, 100, 101, 102]);
+        },
+    );
+    assert_eq!(report.schedules, 150);
+}

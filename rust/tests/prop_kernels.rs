@@ -17,7 +17,7 @@ use sample_factory::runtime::native::{
     EncScratch, FrameActs, FrameGradScratch, Grads, ModelDef, ParamView, WeightsT,
 };
 use sample_factory::runtime::{lit_f32, Literal};
-use sample_factory::testkit::check;
+use sample_factory::testkit::{check, stress_iters};
 use sample_factory::util::Rng;
 
 const SPECS: [&str; 5] = ["tiny", "doomish", "doomish_full", "arcade", "gridlab"];
@@ -143,7 +143,7 @@ fn prop_conv_backward_batch_matches_scalar_reference() {
 #[test]
 fn prop_gemm_linear_matches_scalar_rows() {
     // gemm_nn against ops::linear_forward row by row, random shapes.
-    check(25, |g| {
+    check(stress_iters(25), |g| {
         let m = g.usize_in(1, 33);
         let k = g.usize_in(1, 400);
         let n = g.usize_in(1, 40);
@@ -163,7 +163,7 @@ fn prop_gemm_linear_matches_scalar_rows() {
 
 #[test]
 fn prop_gru_batch_matches_scalar_rows() {
-    check(15, |g| {
+    check(stress_iters(15), |g| {
         let nb = g.usize_in(1, 9);
         let f = g.usize_in(1, 24);
         let h = g.usize_in(1, 16);
@@ -320,7 +320,7 @@ fn prop_pool_results_independent_of_thread_count() {
 
 #[test]
 fn prop_pool_zero_sized_and_nested_work_no_deadlock() {
-    check(10, |g| {
+    check(stress_iters(10), |g| {
         let pool = std::sync::Arc::new(NativePool::new(g.usize_in(1, 4)));
         // Zero-sized work: empty job lists and empty chunk targets.
         pool.run(Vec::new());

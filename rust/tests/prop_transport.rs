@@ -10,7 +10,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use sample_factory::ipc::{spsc, RecvError, ShardedQueue};
-use sample_factory::testkit::check;
+use sample_factory::testkit::{check, stress_iters};
 
 const LONG: Duration = Duration::from_secs(10);
 
@@ -21,7 +21,7 @@ const LONG: Duration = Duration::from_secs(10);
 fn sharded_conserves_items_across_producer_counts() {
     for &producers in &[1usize, 2, 4, 8] {
         for &shard_cap in &[3usize, 64] {
-            let per: u64 = if shard_cap < 8 { 20_000 } else { 50_000 };
+            let per = stress_iters(if shard_cap < 8 { 20_000 } else { 50_000 }) as u64;
             let q: ShardedQueue<u64> = ShardedQueue::new(producers, shard_cap);
             let mut handles = Vec::new();
             for p in 0..producers {
@@ -80,7 +80,7 @@ fn sharded_conserves_items_across_producer_counts() {
 #[test]
 fn sharded_multiple_consumers_conserve_items() {
     let producers = 4usize;
-    let per = 25_000u64;
+    let per = stress_iters(25_000) as u64;
     let q: ShardedQueue<u64> = ShardedQueue::new(producers, 128);
     let mut handles = Vec::new();
     for p in 0..producers {
@@ -255,7 +255,7 @@ fn pop_many_deadline_is_hard_under_wakeups() {
 /// fidelity as head/tail cross the modular boundary thousands of times.
 #[test]
 fn spsc_wraparound_randomized() {
-    check(50, |g| {
+    check(stress_iters(50), |g| {
         let cap = g.usize_in(1, 9);
         let (mut tx, mut rx) = spsc::ring::<u64>(cap);
         let mut next_in = 0u64;
@@ -297,7 +297,7 @@ fn spsc_wraparound_randomized() {
 fn sharded_push_many_delivers_all_and_stops_on_close() {
     // Conservation: two batched producers, tiny shards (forces many
     // productive rounds + backoff), one combining consumer.
-    let per = 10_000u64;
+    let per = stress_iters(10_000) as u64;
     let q: ShardedQueue<u64> = ShardedQueue::new(2, 5);
     let mut handles = Vec::new();
     for p in 0..2u64 {
