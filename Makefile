@@ -28,6 +28,7 @@ bench-json:
 	cargo run --release --bin repro -- bench throughput --frames $(or $(SF_BENCH_FRAMES),20000)
 	cargo run --release --bin repro -- bench fifo --frames 50000
 	cargo run --release --bin repro -- bench scenarios --frames $(or $(SF_BENCH_FRAMES),5000)
+	cargo run --release --bin repro -- bench envs --frames $(or $(SF_BENCH_FRAMES),20000)
 
 clippy:
 	cargo clippy --all-targets -- -D warnings
@@ -44,14 +45,16 @@ miri:
 	MIRIFLAGS="-Zmiri-disable-isolation" \
 		cargo +nightly miri test --lib ipc:: runtime::native::pool
 
-# ThreadSanitizer over the transport stress suite: catches real
-# weak-memory races the serialized model checker cannot (stale reads from
-# the store buffer).  Needs nightly + the rust-src component.
+# ThreadSanitizer over the transport stress suite and the batched-render
+# property tests (the render pool shards frames across threads): catches
+# real weak-memory races the serialized model checker cannot (stale reads
+# from the store buffer).  Needs nightly + the rust-src component.
 tsan:
 	RUSTFLAGS="-Zsanitizer=thread" SF_STRESS_ITERS=500 \
 	TSAN_OPTIONS="halt_on_error=1" \
 		cargo +nightly test -Zbuild-std \
-		--target x86_64-unknown-linux-gnu --test prop_transport
+		--target x86_64-unknown-linux-gnu \
+		--test prop_transport --test prop_env_batch
 
 # In-tree static-analysis gate: SAFETY comments on every unsafe block,
 # no std::sync/std::thread bypasses of the crate::sync facade in the

@@ -1,52 +1,11 @@
-//! `cargo bench --bench envs` — raw simulator micro-benchmarks (the §Perf
-//! baseline for the rollout hot path): frames/s of step-only and
-//! step+render for every environment substrate.
-use sample_factory::env::{make, AgentStep};
-use sample_factory::util::Rng;
-use std::time::Instant;
-
-fn bench_env(spec: &str, scenario: &str, render_every: usize) -> f64 {
-    let mut rng = Rng::new(7);
-    let mut env = make(spec, scenario, &mut rng).expect("env");
-    let heads = env.spec().action_heads.clone();
-    let n_agents = env.spec().n_agents;
-    let mut actions = vec![0i32; n_agents * heads.len()];
-    let mut out = vec![AgentStep::default(); n_agents];
-    let mut obs = vec![0u8; env.spec().obs.len()];
-    let iters = 40_000usize;
-    let start = Instant::now();
-    for t in 0..iters {
-        for (a, chunk) in actions.chunks_mut(heads.len()).enumerate() {
-            let _ = a;
-            for (h, &n) in heads.iter().enumerate() {
-                chunk[h] = rng.below(n) as i32;
-            }
-        }
-        env.step(&actions, &mut out);
-        if render_every > 0 && t % render_every == 0 {
-            for a in 0..n_agents {
-                env.render(a, &mut obs);
-            }
-        }
-    }
-    (iters * n_agents) as f64 / start.elapsed().as_secs_f64()
-}
-
+//! `cargo bench --bench envs` — batched-vs-scalar env stepping.  Thin
+//! wrapper over the `bench envs` exhibit (`bench::envstep`), so the cargo
+//! bench runner and the `repro bench envs` CLI share one code path (the
+//! rule the bench module doc states).  Produces `BENCH_envstep.json`.
 fn main() {
-    println!("== raw simulator throughput (frames/s, single thread) ==");
-    for (spec, scenario) in [
-        ("doomish", "basic"),
-        ("doomish", "battle"),
-        ("doomish", "battle2"),
-        ("doomish_full", "duel_bots"),
-        ("doomish_full", "deathmatch_bots"),
-        ("arcade", "breakout"),
-        ("gridlab", "collect_good_objects"),
-    ] {
-        let sim_only = bench_env(spec, scenario, 0);
-        let with_render = bench_env(spec, scenario, 4); // frameskip-4 cadence
-        println!(
-            "{spec:>13}/{scenario:<22} sim-only {sim_only:>9.0}  +render/4 {with_render:>9.0}"
-        );
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = sample_factory::bench::envstep::run_cli(&args) {
+        eprintln!("bench envs failed: {e:#}");
+        std::process::exit(1);
     }
 }

@@ -44,32 +44,34 @@ pub fn run_pure_sim(cfg: &Config) -> Result<TrainResult> {
         let frameskip = cfg.frameskip;
         let mut wrng = root_rng.fork(0x77 + w as u64);
         threads.push(std::thread::spawn(move || {
-            let heads = venv.envs[0].spec().action_heads.clone();
-            let n_agents = venv.envs[0].spec().n_agents;
-            let obs_len = venv.envs[0].spec().obs.len();
-            let mut actions = vec![0i32; n_agents * heads.len()];
-            let mut out = vec![AgentStep::default(); n_agents];
-            let mut obs = vec![0u8; obs_len];
+            let heads = venv.spec().action_heads.clone();
+            let n_agents = venv.spec().n_agents;
+            let obs_len = venv.spec().obs.len();
+            let n_envs = venv.n_envs();
+            let n_streams = n_envs * n_agents;
+            let mut actions = vec![0i32; n_streams * heads.len()];
+            let mut out = vec![AgentStep::default(); n_streams];
+            let mut obs = vec![0u8; n_streams * obs_len];
             while !stop.load(Ordering::Relaxed) {
-                for env in venv.envs.iter_mut() {
-                    for a in actions.iter_mut() {
-                        *a = 0;
+                // Random actions, env-major (one draw stream for the whole
+                // vector, same order the scalar loop used).
+                for chunk in actions.chunks_mut(heads.len()) {
+                    for (h, &n) in heads.iter().enumerate() {
+                        chunk[h] = wrng.below(n) as i32;
                     }
-                    for chunk in actions.chunks_mut(heads.len()) {
-                        for (h, &n) in heads.iter().enumerate() {
-                            chunk[h] = wrng.below(n) as i32;
-                        }
-                    }
-                    for _ in 0..frameskip {
-                        env.step(&actions, &mut out);
-                    }
-                    // The sampler still renders (observations must be
-                    // produced — that is part of the sampling cost).
-                    for a in 0..n_agents {
-                        env.render(a, &mut obs);
-                    }
-                    frames.fetch_add((frameskip as u64) * n_agents as u64, Ordering::Relaxed);
                 }
+                // One batched call steps every env.  Frameskip now applies
+                // the hot path's semantics (early stop on done), so the
+                // counter adds the frames *actually* simulated rather than
+                // assuming `frameskip` every time.
+                let f = venv.step_all(&actions, frameskip, &mut out);
+                // The sampler still renders (observations must be produced —
+                // that is part of the sampling cost), batched.
+                {
+                    let mut rows: Vec<&mut [u8]> = obs.chunks_mut(obs_len).collect();
+                    venv.render_all(&mut rows);
+                }
+                frames.fetch_add(f, Ordering::Relaxed);
                 if frames.load(Ordering::Relaxed) >= budget {
                     break;
                 }

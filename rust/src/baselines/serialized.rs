@@ -293,8 +293,9 @@ fn serialized_worker(
         t: usize,
     }
     let n_agents = venv.n_agents_per_env();
+    let n_envs = venv.n_envs();
     let mut streams = Vec::new();
-    for e in 0..venvs_len(&venv) {
+    for e in 0..n_envs {
         for a in 0..n_agents {
             streams.push(WStream {
                 env: e,
@@ -310,11 +311,15 @@ fn serialized_worker(
             });
         }
     }
-    let mut step_out = vec![AgentStep::default(); n_agents];
-    let mut env_actions = vec![0i32; n_agents * n_heads];
+    // Batch-native buffers: all envs step and render in one call (streams
+    // are env-major, matching the BatchEnv layouts).
+    let mut all_actions = vec![0i32; n_envs * n_agents * n_heads];
+    let mut all_out = vec![AgentStep::default(); n_envs * n_agents];
 
-    for s in &mut streams {
-        venv.envs[s.env].render(s.agent, &mut s.obs[..obs_len]);
+    {
+        let mut rows: Vec<&mut [u8]> =
+            streams.iter_mut().map(|s| &mut s.obs[..obs_len]).collect();
+        venv.render_all(&mut rows);
     }
 
     loop {
@@ -356,75 +361,67 @@ fn serialized_worker(
             get_f32s(&msg, &mut off, &mut s.h);
             got += 1;
         }
-        // Step all envs.
-        for e in 0..venvs_len(&venv) {
-            for s in streams.iter().filter(|s| s.env == e) {
-                env_actions[s.agent * n_heads..(s.agent + 1) * n_heads]
-                    .copy_from_slice(&s.actions[s.t * n_heads..(s.t + 1) * n_heads]);
+        // Step all envs in one batched call (frameskip applied inside:
+        // rewards summed, dones OR'd, early stop per env).  The return is
+        // the agent-frames actually simulated — the old per-iteration
+        // counter increments, in one add.
+        for s in &streams {
+            let base = (s.env * n_agents + s.agent) * n_heads;
+            all_actions[base..base + n_heads]
+                .copy_from_slice(&s.actions[s.t * n_heads..(s.t + 1) * n_heads]);
+        }
+        let frames = venv.step_all(&all_actions, frameskip, &mut all_out);
+        sh.frames.fetch_add(frames, Ordering::Relaxed);
+
+        for s in streams.iter_mut() {
+            let a = s.agent;
+            let t = s.t;
+            let acc = all_out[s.env * n_agents + a];
+            s.rewards[t] = acc.reward;
+            s.dones[t] = if acc.done { 1.0 } else { 0.0 };
+            if acc.done {
+                s.h.fill(0.0);
             }
-            let mut acc = vec![AgentStep::default(); n_agents];
-            for _ in 0..frameskip {
-                venv.envs[e].step(&env_actions, &mut step_out);
-                let mut any_done = false;
-                for a in 0..n_agents {
-                    acc[a].reward += step_out[a].reward;
-                    acc[a].done |= step_out[a].done;
-                    any_done |= step_out[a].done;
-                }
-                sh.frames.fetch_add(n_agents as u64, Ordering::Relaxed);
-                if any_done {
-                    break;
-                }
+            if let Some((ret, len)) = venv.monitors[s.env].record(a, &acc) {
+                let _ = sh.episodes.try_push((ret, len * frameskip as u64));
             }
-            for s in streams.iter_mut() {
-                if s.env != e {
-                    continue;
+            s.t += 1;
+        }
+        // Render every stream's next obs (bootstrap row when t == T) in one
+        // batched raycast.
+        {
+            let mut rows: Vec<&mut [u8]> = streams
+                .iter_mut()
+                .map(|s| {
+                    let t = s.t;
+                    &mut s.obs[t * obs_len..(t + 1) * obs_len]
+                })
+                .collect();
+            venv.render_all(&mut rows);
+        }
+        for s in streams.iter_mut() {
+            if s.t == t_len {
+                // Serialize the complete trajectory (the copy the paper
+                // eliminates) and roll over.
+                let mut msg = Vec::with_capacity(
+                    (t_len + 1) * obs_len + 4 * (hidden + t_len * (n_heads + 3)),
+                );
+                msg.extend_from_slice(&s.obs);
+                put_f32s(&mut msg, &s.h0);
+                put_i32s(&mut msg, &s.actions);
+                put_f32s(&mut msg, &s.blp);
+                put_f32s(&mut msg, &s.rewards);
+                put_f32s(&mut msg, &s.dones);
+                if !sh.traj_q.push(msg) {
+                    return;
                 }
-                let a = s.agent;
-                let t = s.t;
-                s.rewards[t] = acc[a].reward;
-                s.dones[t] = if acc[a].done { 1.0 } else { 0.0 };
-                if acc[a].done {
-                    s.h.fill(0.0);
-                }
-                if let Some((ret, len)) = venv.monitors[e].record(a, &acc[a]) {
-                    let _ = sh.episodes.try_push((ret, len * frameskip as u64));
-                }
-                s.t += 1;
-                let t_next = s.t;
-                {
-                    // Render the next obs (bootstrap row when t == T).
-                    let (obs_l, _) = (obs_len, ());
-                    let row = &mut s.obs[t_next * obs_l..(t_next + 1) * obs_l];
-                    venv.envs[e].render(a, row);
-                }
-                if s.t == t_len {
-                    // Serialize the complete trajectory (the copy the paper
-                    // eliminates) and roll over.
-                    let mut msg = Vec::with_capacity(
-                        (t_len + 1) * obs_len + 4 * (hidden + t_len * (n_heads + 3)),
-                    );
-                    msg.extend_from_slice(&s.obs);
-                    put_f32s(&mut msg, &s.h0);
-                    put_i32s(&mut msg, &s.actions);
-                    put_f32s(&mut msg, &s.blp);
-                    put_f32s(&mut msg, &s.rewards);
-                    put_f32s(&mut msg, &s.dones);
-                    if !sh.traj_q.push(msg) {
-                        return;
-                    }
-                    let last = s.obs[t_len * obs_len..].to_vec();
-                    s.obs[..obs_len].copy_from_slice(&last);
-                    s.h0.copy_from_slice(&s.h);
-                    s.t = 0;
-                }
+                let last = s.obs[t_len * obs_len..].to_vec();
+                s.obs[..obs_len].copy_from_slice(&last);
+                s.h0.copy_from_slice(&s.h);
+                s.t = 0;
             }
         }
     }
-}
-
-fn venvs_len(v: &VecEnv) -> usize {
-    v.envs.len()
 }
 
 /// Batched inference server: deserializes requests, runs the policy program,

@@ -1,0 +1,191 @@
+//! `bench envs` — batched-vs-scalar env stepping (the batch-native env
+//! layer's acceptance exhibit).  For every single-agent raycast scenario in
+//! the registry it measures steps/sec of the scalar oracle path
+//! ([`ScalarBatch`]: one env at a time) against the batch-native path
+//! ([`make_batch_with`]: `step_many` + the batched raycaster) at batch
+//! sizes k ∈ {4, 16, 64} and a render-pool thread sweep, on the rollout
+//! worker's cadence (step with frameskip 4, then render every stream).
+//! Results go to `BENCH_envstep.json`, uploaded from CI's bench-smoke job.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::env::batch::{make_batch_with, BatchEnv};
+use crate::env::AgentStep;
+use crate::json::Json;
+use crate::runtime::native::pool::NativePool;
+use crate::util::Rng;
+
+use super::{parse_bench_args, print_table, write_bench_json, write_csv};
+
+const BATCH_SIZES: [usize; 3] = [4, 16, 64];
+const THREADS: [usize; 3] = [1, 2, 4];
+const FRAMESKIP: u32 = 4;
+
+/// Run one cell: random actions -> `step_many` (frameskip inside) ->
+/// `render_many` for every stream, until `frames_target` agent-frames have
+/// been simulated.  Returns simulated frames/sec (renders ride along, as
+/// on the rollout worker).
+fn measure(b: &mut dyn BatchEnv, frames_target: u64, arng: &mut Rng) -> f64 {
+    let spec = b.spec().clone();
+    let k = b.n_envs();
+    let n_agents = spec.n_agents;
+    let n_heads = spec.action_heads.len();
+    let obs_len = spec.obs.len();
+    let mut actions = vec![0i32; k * n_agents * n_heads];
+    let mut out = vec![AgentStep::default(); k * n_agents];
+    let mut obs = vec![0u8; k * n_agents * obs_len];
+    let mut frames = 0u64;
+    let start = std::time::Instant::now();
+    while frames < frames_target {
+        for chunk in actions.chunks_mut(n_heads) {
+            for (h, &n) in spec.action_heads.iter().enumerate() {
+                chunk[h] = arng.below(n) as i32;
+            }
+        }
+        frames += b.step_many(&actions, FRAMESKIP, &mut out);
+        let mut rows: Vec<&mut [u8]> = obs.chunks_mut(obs_len).collect();
+        b.render_many(&mut rows);
+    }
+    frames as f64 / start.elapsed().as_secs_f64()
+}
+
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let (_cfg, extra) = parse_bench_args(Config::default(), args)?;
+    let frames = extra.frames.unwrap_or(if extra.full { 200_000 } else { 20_000 });
+    // `--batch false` drops the batched sweep (scalar-only quick look);
+    // default measures both sides — the comparison is the exhibit.
+    let batched_mode = extra.batch.unwrap_or(true);
+    let defs = super::scenarios::sweep();
+    println!(
+        "== env stepping: batched vs scalar, {} scenarios x k{:?} x {frames} frames/cell ==",
+        defs.len(),
+        BATCH_SIZES,
+    );
+
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    let mut scenario_cells = Vec::new();
+    for def in &defs {
+        let mut cells = Vec::new();
+        for &k in &BATCH_SIZES {
+            // Scalar oracle side: the adapter over k scalar envs.  A fresh
+            // env batch per cell, same seed stream as the batched side.
+            let mut srng = Rng::new(0xE5E5);
+            let mut scalar = scalar_batch(def.spec, def.name, k, &mut srng)?;
+            let mut arng = Rng::new(0xAC7);
+            let scalar_fps = measure(scalar.as_mut(), frames, &mut arng);
+
+            let mut batched = Vec::new();
+            if batched_mode {
+                for &threads in &THREADS {
+                    let pool = Arc::new(NativePool::new(threads));
+                    let mut brng = Rng::new(0xE5E5);
+                    let mut b =
+                        make_batch_with(def.spec, def.name, k, &mut brng, Some(pool))
+                            .map_err(|e| anyhow!(e))?;
+                    let mut arng = Rng::new(0xAC7);
+                    let fps = measure(b.as_mut(), frames, &mut arng);
+                    batched.push((threads, fps, fps / scalar_fps.max(1e-9)));
+                }
+            }
+
+            let best = batched
+                .iter()
+                .cloned()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap_or((0, 0.0, 0.0));
+            rows.push(vec![
+                def.name.to_string(),
+                format!("{k}"),
+                format!("{scalar_fps:.0}"),
+                batched
+                    .iter()
+                    .map(|(t, f, _)| format!("{t}t:{f:.0}"))
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                format!("{:.2}x", best.2),
+            ]);
+            for &(t, f, s) in &batched {
+                csv_rows.push(vec![
+                    def.name.to_string(),
+                    format!("{k}"),
+                    format!("{t}"),
+                    format!("{scalar_fps:.1}"),
+                    format!("{f:.1}"),
+                    format!("{s:.3}"),
+                ]);
+            }
+            cells.push(Json::obj(vec![
+                ("k", Json::num(k as f64)),
+                ("scalar_fps", Json::num(scalar_fps)),
+                (
+                    "batched",
+                    Json::Arr(
+                        batched
+                            .iter()
+                            .map(|&(t, f, s)| {
+                                Json::obj(vec![
+                                    ("threads", Json::num(t as f64)),
+                                    ("fps", Json::num(f)),
+                                    ("speedup", Json::num(s)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+        eprintln!("  [{}] done", def.name);
+        scenario_cells.push(Json::obj(vec![
+            ("scenario", Json::str(def.name)),
+            ("spec", Json::str(def.spec)),
+            ("map", Json::str(def.map_kind())),
+            ("cells", Json::Arr(cells)),
+        ]));
+    }
+
+    let header = ["scenario", "k", "scalar_fps", "batched_fps", "best_speedup"];
+    print_table(&header, &rows);
+    write_csv(
+        "bench_results/envstep.csv",
+        &["scenario", "k", "threads", "scalar_fps", "batched_fps", "speedup"],
+        &csv_rows,
+    )?;
+    write_bench_json(
+        "envstep",
+        Json::obj(vec![
+            ("frames_per_cell", Json::num(frames as f64)),
+            ("frameskip", Json::num(FRAMESKIP as f64)),
+            (
+                "batch_sizes",
+                Json::Arr(BATCH_SIZES.iter().map(|&k| Json::num(k as f64)).collect()),
+            ),
+            (
+                "threads",
+                Json::Arr(THREADS.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("scenarios", Json::Arr(scenario_cells)),
+        ]),
+    )?;
+    Ok(())
+}
+
+/// Build the scalar-oracle side of a cell: a [`ScalarBatch`] over `k`
+/// envs from `env::make` — even for raycast scenarios, so the comparison
+/// is strictly scalar-path vs batch-path.
+fn scalar_batch(
+    spec: &str,
+    scenario: &str,
+    k: usize,
+    rng: &mut Rng,
+) -> Result<Box<dyn BatchEnv>> {
+    use crate::env::batch::ScalarBatch;
+    let mut envs = Vec::with_capacity(k);
+    for _ in 0..k {
+        envs.push(crate::env::make(spec, scenario, rng).map_err(|e| anyhow!(e))?);
+    }
+    Ok(Box::new(ScalarBatch::from_envs(envs)))
+}

@@ -9,6 +9,7 @@
 //! (seconds per cell).  EXPERIMENTS.md records full-scale runs.
 
 pub mod battle;
+pub mod envstep;
 pub mod fifo;
 pub mod lag;
 pub mod multitask;
@@ -36,6 +37,7 @@ pub fn parse_bench_args(base: Config, args: &[String]) -> Result<(Config, BenchA
             "frames" => extra.frames = Some(val.parse()?),
             "full" => extra.full = val.parse()?,
             "out" => extra.out = Some(val.clone()),
+            "batch" => extra.batch = Some(val.parse()?),
             _ => cfg
                 .set(key, val)
                 .map_err(|e| anyhow::anyhow!(e))?,
@@ -53,6 +55,9 @@ pub struct BenchArgs {
     pub full: bool,
     /// CSV output path override.
     pub out: Option<String>,
+    /// `bench envs`: include the batched sweep (`--batch false` for a
+    /// scalar-only quick look; default on).
+    pub batch: Option<bool>,
 }
 
 /// Write `BENCH_<name>.json` at the repo root (the process cwd): the

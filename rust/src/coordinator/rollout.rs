@@ -8,6 +8,12 @@
 //! massively.  Double-buffered sampling (Fig 2b): the env vector is split
 //! into two groups; while group A's action requests are in flight on the
 //! policy worker, group B is being stepped, masking inference latency.
+//!
+//! Each group is stepped and rendered **batch-natively**: one
+//! [`VecEnv::step_group`] call advances the whole group (frameskip inside
+//! the batch), and one [`VecEnv::render_group`] call raycasts every
+//! (env, agent) stream of the group straight into its trajectory-slab row
+//! through the shared thread pool.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;
@@ -39,8 +45,6 @@ struct Stream {
     /// Policy this episode's experience belongs to (multi-policy routing:
     /// resampled per episode, §3.5).
     policy: u32,
-    /// Action reply received for the pending request.
-    ready: bool,
     /// Frames produced by this stream (diagnostics).
     frames: u64,
 }
@@ -69,7 +73,7 @@ pub fn run_rollout_worker(
     let mut rng = Rng::new(cfg.seed);
 
     let n_agents = venv.n_agents_per_env();
-    let n_envs = venv.envs.len();
+    let n_envs = venv.n_envs();
 
     // Build streams; acquire initial slots (blocks if the store is tight).
     let mut streams: Vec<Stream> = Vec::with_capacity(n_envs * n_agents);
@@ -93,13 +97,14 @@ pub fn run_rollout_worker(
                 slot,
                 t: 0,
                 policy,
-                ready: false,
                 frames: 0,
             });
         }
     }
 
     // Group streams by env group (all agents of an env share its group).
+    // Members are in ascending stream order = env-major, agent-minor — the
+    // row order `render_group` expects.
     let groups: Vec<Vec<usize>> = (0..venv.n_groups())
         .map(|g| {
             let r = venv.group(g);
@@ -111,16 +116,18 @@ pub fn run_rollout_worker(
                 .collect()
         })
         .collect();
+    let max_group_envs =
+        (0..venv.n_groups()).map(|g| venv.group(g).len()).max().unwrap_or(0);
 
     let mut monitors: Vec<EpisodeMonitor> = std::mem::take(&mut venv.monitors);
-    let mut step_out = vec![AgentStep::default(); n_agents];
-    let mut actions_buf = vec![0i32; n_agents * n_heads];
+    let mut group_actions = vec![0i32; max_group_envs * n_agents * n_heads];
+    let mut group_out = vec![AgentStep::default(); max_group_envs * n_agents];
     let mut pending = vec![0usize; groups.len()];
 
     // Render t=0 observations and issue the initial requests for all groups.
     for (g, members) in groups.iter().enumerate() {
+        render_group_into_slots(ctx, &mut venv, g, members, &streams, obs_len);
         for &si in members {
-            render_into_slot(ctx, &mut venv, &mut streams[si], obs_len);
             send_request(&mut producers, &streams[si], cfg.worker_id, si as u32);
             pending[g] += 1;
         }
@@ -143,7 +150,6 @@ pub fn run_rollout_worker(
                     }
                 };
                 let si = reply.stream as usize;
-                streams[si].ready = true;
                 let sg = group_of(&groups, si);
                 pending[sg] -= 1;
             }
@@ -151,89 +157,83 @@ pub fn run_rollout_worker(
                 break 'outer;
             }
 
-            // Step every env in this group with the actions from the slab.
-            let member_range = venv.group(g);
-            for env_idx in member_range {
-                // Gather all agents' actions for this env.
-                let env_streams: Vec<usize> = groups[g]
-                    .iter()
-                    .copied()
-                    .filter(|&si| streams[si].env_idx == env_idx)
-                    .collect();
-                for &si in &env_streams {
-                    let st = &streams[si];
-                    let slot = ctx.store.slot(st.slot);
-                    let a0 = st.t * n_heads;
-                    actions_buf[st.agent_idx * n_heads..(st.agent_idx + 1) * n_heads]
-                        .copy_from_slice(&slot.actions[a0..a0 + n_heads]);
-                }
-                // Frameskip: repeat the action, summing rewards; stop early
-                // on done (the env auto-resets internally).
-                let mut acc: Vec<AgentStep> = vec![AgentStep::default(); n_agents];
-                for skip in 0..cfg.frameskip {
-                    venv.envs[env_idx].step(&actions_buf, &mut step_out);
-                    let mut any_done = false;
-                    for a in 0..n_agents {
-                        acc[a].reward += step_out[a].reward;
-                        acc[a].done |= step_out[a].done;
-                        any_done |= step_out[a].done;
-                    }
-                    let frames = n_agents as u64;
-                    ctx.meter.add(frames);
-                    ctx.frames.fetch_add(frames, Ordering::Relaxed);
-                    let _ = skip;
-                    if any_done {
-                        break;
-                    }
-                }
+            let g0 = venv.group(g).start;
+            let group_envs = venv.group(g).len();
 
-                // Record the transition into each agent's trajectory.
-                for &si in &env_streams {
-                    let st = &mut streams[si];
-                    let a = st.agent_idx;
-                    st.frames += cfg.frameskip as u64;
-                    {
-                        let mut slot = ctx.store.slot(st.slot);
-                        slot.rewards[st.t] = acc[a].reward;
-                        slot.dones[st.t] = if acc[a].done { 1.0 } else { 0.0 };
-                        if acc[a].done {
-                            // Fresh episode: hidden state restarts at zero.
-                            slot.h_cur.fill(0.0);
-                        }
-                    }
-                    if let Some((ret, len)) = monitors[env_idx].record(a, &acc[a]) {
-                        let frags = 0; // env-level frag queries happen in PBT mode
-                        ctx.push_stat(StatMsg::Episode {
-                            policy: st.policy,
-                            ret,
-                            len: len * cfg.frameskip as u64,
-                            frags,
-                            task: cfg.task_id,
-                        });
-                    }
-                    st.t += 1;
+            // Gather every stream's action row from the slab into the
+            // group-local env-major action buffer.
+            for &si in &groups[g] {
+                let st = &streams[si];
+                let slot = ctx.store.slot(st.slot);
+                let a0 = st.t * n_heads;
+                let base = ((st.env_idx - g0) * n_agents + st.agent_idx) * n_heads;
+                group_actions[base..base + n_heads]
+                    .copy_from_slice(&slot.actions[a0..a0 + n_heads]);
+            }
 
-                    // Render the next observation into row t.  When the
-                    // trajectory is full this is row T — the V-trace
-                    // bootstrap observation.
-                    render_into_slot(ctx, &mut venv, &mut streams[si], obs_len);
-                    if streams[si].t == t_max {
-                        // Ship the full slot; the bootstrap row doubles as
-                        // the first observation of the next trajectory.
-                        if !finalize_trajectory(
-                            ctx,
-                            &mut producers,
-                            &mut streams[si],
-                            &mut rng,
-                            cfg.n_policies,
-                            obs_len,
-                        ) {
-                            break 'outer;
-                        }
+            // One batched call advances the whole group, frameskip applied
+            // per env inside (rewards summed, dones OR'd, early stop).  The
+            // return value is the agent-frames actually simulated — exactly
+            // what the throughput meters count.
+            let frames = venv.step_group(
+                g,
+                &group_actions[..group_envs * n_agents * n_heads],
+                cfg.frameskip,
+                &mut group_out[..group_envs * n_agents],
+            );
+            ctx.meter.add(frames);
+            ctx.frames.fetch_add(frames, Ordering::Relaxed);
+
+            // Record the transition into each agent's trajectory.
+            for &si in &groups[g] {
+                let st = &mut streams[si];
+                let a = st.agent_idx;
+                let acc = group_out[(st.env_idx - g0) * n_agents + a];
+                st.frames += cfg.frameskip as u64;
+                {
+                    let mut slot = ctx.store.slot(st.slot);
+                    slot.rewards[st.t] = acc.reward;
+                    slot.dones[st.t] = if acc.done { 1.0 } else { 0.0 };
+                    if acc.done {
+                        // Fresh episode: hidden state restarts at zero.
+                        slot.h_cur.fill(0.0);
                     }
-                    send_request(&mut producers, &streams[si], cfg.worker_id, si as u32);
-                    pending[g] += 1;
                 }
+                if let Some((ret, len)) = monitors[st.env_idx].record(a, &acc) {
+                    let frags = 0; // env-level frag queries happen in PBT mode
+                    ctx.push_stat(StatMsg::Episode {
+                        policy: st.policy,
+                        ret,
+                        len: len * cfg.frameskip as u64,
+                        frags,
+                        task: cfg.task_id,
+                    });
+                }
+                st.t += 1;
+            }
+
+            // Render the next observation of every stream into its row t in
+            // one batched raycast.  When a trajectory is full this is row
+            // T — the V-trace bootstrap observation.
+            render_group_into_slots(ctx, &mut venv, g, &groups[g], &streams, obs_len);
+
+            for &si in &groups[g] {
+                if streams[si].t == t_max {
+                    // Ship the full slot; the bootstrap row doubles as
+                    // the first observation of the next trajectory.
+                    if !finalize_trajectory(
+                        ctx,
+                        &mut producers,
+                        &mut streams[si],
+                        &mut rng,
+                        cfg.n_policies,
+                        obs_len,
+                    ) {
+                        break 'outer;
+                    }
+                }
+                send_request(&mut producers, &streams[si], cfg.worker_id, si as u32);
+                pending[g] += 1;
             }
         }
     }
@@ -251,16 +251,27 @@ fn group_of(groups: &[Vec<usize>], si: usize) -> usize {
         .expect("stream not in any group")
 }
 
-/// Render the stream's current observation into its slot row `t`.
-fn render_into_slot(
+/// Render every stream of group `g` into its slot row `t` with one batched
+/// raycast call.  Each stream owns a distinct slot, so holding all the
+/// per-slot guards at once is deadlock-free (`TrajStore` locks per slot),
+/// and no other thread touches an owned slot between a reply and the next
+/// request.
+fn render_group_into_slots(
     ctx: &SharedCtx,
     venv: &mut VecEnv,
-    st: &mut Stream,
+    g: usize,
+    members: &[usize],
+    streams: &[Stream],
     obs_len: usize,
 ) {
-    let mut slot = ctx.store.slot(st.slot);
-    let row = slot.obs_row_mut(st.t, obs_len);
-    venv.envs[st.env_idx].render(st.agent_idx, row);
+    let mut guards: Vec<_> =
+        members.iter().map(|&si| ctx.store.slot(streams[si].slot)).collect();
+    let mut rows: Vec<&mut [u8]> = guards
+        .iter_mut()
+        .zip(members.iter())
+        .map(|(gu, &si)| gu.obs_row_mut(streams[si].t, obs_len))
+        .collect();
+    venv.render_group(g, &mut rows);
 }
 
 fn send_request(producers: &mut RolloutProducers, st: &Stream, worker_id: u16, stream: u32) {

@@ -1,0 +1,387 @@
+//! Batch-native environment stepping: the `step_many` contract.
+//!
+//! PR 3 moved inference from per-row kernels to whole-batch GEMMs; this
+//! module does the same to the env layer (the Large Batch Simulation
+//! argument — Shacklett et al. 2021 — and EnvPool's batched-step engine).
+//! A [`BatchEnv`] owns N worlds and advances/renders them in one call:
+//!
+//! * stepping shards the envs across the native thread pool, with
+//!   frameskip applied *inside* the batch (rewards summed, dones OR'd,
+//!   early stop per env on any done — the rollout worker's semantics);
+//! * rendering snapshots every world into struct-of-arrays gather
+//!   buffers and casts all (env, column-strip) shards through
+//!   [`render_batch`](crate::env::raycast::render::render_batch) with a
+//!   fixed reduction order, so frames are **bit-identical to the scalar
+//!   [`Env::render`] path for any thread count** — the `gemm.rs`
+//!   determinism contract, third time.
+//!
+//! The scalar [`Env`] trait stays untouched as the property-tested
+//! reference oracle (`rust/tests/prop_env_batch.rs`): [`ScalarBatch`]
+//! lifts any `Box<dyn Env>` onto the batch interface by plain looping, and
+//! the tests require [`RaycastBatch`] to be byte-for-byte equal to it.
+
+use std::sync::Arc;
+
+use crate::env::raycast::render::{render_batch, BatchRenderScratch};
+use crate::env::raycast::scenarios::RaycastEnv;
+use crate::env::raycast::world::World;
+use crate::env::registry::{self, Builder};
+use crate::env::{self, AgentStep, Env, EnvSpec};
+use crate::runtime::native::pool::{Job, NativePool};
+use crate::util::Rng;
+
+/// A batch of homogeneous environments stepped and rendered together.
+///
+/// Layouts are env-major: `actions` is `n_envs * n_agents * n_heads`
+/// entries, `out` is `n_envs * n_agents`, and render rows are ordered
+/// `(env 0, agent 0), (env 0, agent 1), …, (env 1, agent 0), …`.
+pub trait BatchEnv: Send {
+    /// Per-env spec (all envs in a batch share it).
+    fn spec(&self) -> &EnvSpec;
+
+    fn n_envs(&self) -> usize;
+
+    /// Restart one env's episode from `seed`.
+    fn reset_env(&mut self, env: usize, seed: u64);
+
+    /// Advance every env by up to `skip` frames (frameskip): per env the
+    /// action repeats, rewards are summed, dones are OR'd, and simulation
+    /// stops early for that env once any of its agents reports done.
+    /// Returns the number of **agent-frames actually simulated** (the
+    /// quantity throughput meters count; early-stopped envs contribute
+    /// fewer than `skip * n_agents`).
+    fn step_many(&mut self, actions: &[i32], skip: u32, out: &mut [AgentStep]) -> u64;
+
+    /// Render the current observation of every (env, agent) stream into
+    /// `rows` (`n_envs * n_agents` buffers of `spec().obs.len()` bytes,
+    /// env-major).
+    fn render_many(&mut self, rows: &mut [&mut [u8]]);
+}
+
+/// Frameskip-accumulating scalar step: the single-env reference semantics
+/// shared by [`ScalarBatch`] and the sharded [`RaycastBatch`] chunks.
+fn step_env_acc<E: Env + ?Sized>(
+    env: &mut E,
+    actions: &[i32],
+    skip: u32,
+    out: &mut [AgentStep],
+    tmp: &mut [AgentStep],
+) -> u64 {
+    let n_agents = out.len();
+    for s in out.iter_mut() {
+        *s = AgentStep::default();
+    }
+    let mut frames = 0u64;
+    for _ in 0..skip.max(1) {
+        env.step(actions, tmp);
+        frames += n_agents as u64;
+        let mut any_done = false;
+        for (acc, st) in out.iter_mut().zip(tmp.iter()) {
+            acc.reward += st.reward;
+            acc.done |= st.done;
+            any_done |= st.done;
+        }
+        if any_done {
+            break;
+        }
+    }
+    frames
+}
+
+/// Blanket adapter lifting any scalar [`Env`] onto the [`BatchEnv`]
+/// interface by stepping/rendering one env at a time.  This *is* the
+/// oracle semantics — substrates without a native batch path (arcade,
+/// gridlab) run through it unchanged.
+pub struct ScalarBatch {
+    envs: Vec<Box<dyn Env>>,
+    spec: EnvSpec,
+    tmp: Vec<AgentStep>,
+}
+
+impl ScalarBatch {
+    /// Wrap pre-built envs (they must share a spec).
+    pub fn from_envs(envs: Vec<Box<dyn Env>>) -> ScalarBatch {
+        assert!(!envs.is_empty(), "empty env batch");
+        let spec = envs[0].spec().clone();
+        let tmp = vec![AgentStep::default(); spec.n_agents];
+        ScalarBatch { envs, spec, tmp }
+    }
+}
+
+impl BatchEnv for ScalarBatch {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn n_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn reset_env(&mut self, env: usize, seed: u64) {
+        self.envs[env].reset(seed);
+    }
+
+    fn step_many(&mut self, actions: &[i32], skip: u32, out: &mut [AgentStep]) -> u64 {
+        let n_agents = self.spec.n_agents;
+        let n_heads = self.spec.action_heads.len();
+        debug_assert_eq!(actions.len(), self.envs.len() * n_agents * n_heads);
+        debug_assert_eq!(out.len(), self.envs.len() * n_agents);
+        let mut frames = 0u64;
+        for (e, env) in self.envs.iter_mut().enumerate() {
+            frames += step_env_acc(
+                env.as_mut(),
+                &actions[e * n_agents * n_heads..(e + 1) * n_agents * n_heads],
+                skip,
+                &mut out[e * n_agents..(e + 1) * n_agents],
+                &mut self.tmp,
+            );
+        }
+        frames
+    }
+
+    fn render_many(&mut self, rows: &mut [&mut [u8]]) {
+        let n_agents = self.spec.n_agents;
+        debug_assert_eq!(rows.len(), self.envs.len() * n_agents);
+        for (i, row) in rows.iter_mut().enumerate() {
+            self.envs[i / n_agents].render(i % n_agents, row);
+        }
+    }
+}
+
+/// Batch-native raycast envs: N worlds stepped in pool shards and rendered
+/// through the batched raycaster in one call.
+pub struct RaycastBatch {
+    envs: Vec<RaycastEnv>,
+    spec: EnvSpec,
+    heavy: bool,
+    /// Private pool override (benches/tests); `None` shares the process
+    /// pool.
+    pool: Option<Arc<NativePool>>,
+    scratch: BatchRenderScratch,
+}
+
+impl BatchEnv for RaycastBatch {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn n_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn reset_env(&mut self, env: usize, seed: u64) {
+        self.envs[env].reset(seed);
+    }
+
+    fn step_many(&mut self, actions: &[i32], skip: u32, out: &mut [AgentStep]) -> u64 {
+        let n_agents = self.spec.n_agents;
+        let n_heads = self.spec.action_heads.len();
+        let k = self.envs.len();
+        debug_assert_eq!(actions.len(), k * n_agents * n_heads);
+        debug_assert_eq!(out.len(), k * n_agents);
+        let pool = self.pool.as_deref().unwrap_or_else(NativePool::global);
+        let per = pool.rows_per_task(k, 1);
+        // One counter slot per chunk, summed after the barrier: the total
+        // is independent of how the pool schedules the chunks.
+        let mut frame_counts = vec![0u64; k.div_ceil(per)];
+        {
+            let mut jobs: Vec<Job<'_>> = Vec::with_capacity(frame_counts.len());
+            for (((envs, outs), acts), frames) in self
+                .envs
+                .chunks_mut(per)
+                .zip(out.chunks_mut(per * n_agents))
+                .zip(actions.chunks(per * n_agents * n_heads))
+                .zip(frame_counts.iter_mut())
+            {
+                jobs.push(Box::new(move || {
+                    let mut tmp = vec![AgentStep::default(); n_agents];
+                    for (e, env) in envs.iter_mut().enumerate() {
+                        *frames += step_env_acc(
+                            env,
+                            &acts[e * n_agents * n_heads..(e + 1) * n_agents * n_heads],
+                            skip,
+                            &mut outs[e * n_agents..(e + 1) * n_agents],
+                            &mut tmp,
+                        );
+                    }
+                }));
+            }
+            pool.run(jobs);
+        }
+        frame_counts.iter().sum()
+    }
+
+    fn render_many(&mut self, rows: &mut [&mut [u8]]) {
+        let n_agents = self.spec.n_agents;
+        debug_assert_eq!(rows.len(), self.envs.len() * n_agents);
+        // Struct-of-arrays gather: one world/player entry per stream,
+        // env-major, matching the row order.
+        let mut worlds: Vec<&World> = Vec::with_capacity(rows.len());
+        let mut players: Vec<usize> = Vec::with_capacity(rows.len());
+        for env in &self.envs {
+            for a in 0..n_agents {
+                worlds.push(env.world());
+                players.push(env.agent_player(a));
+            }
+        }
+        render_batch(
+            &worlds,
+            &players,
+            self.spec.obs,
+            self.heavy,
+            self.pool.as_deref().unwrap_or_else(NativePool::global),
+            &mut self.scratch,
+            rows,
+        );
+    }
+}
+
+/// Construct a batch of `k` envs for a scenario, resolved through the
+/// registry exactly like [`env::make`] — including the seed-draw order:
+/// one `rng.next_u64()` per env, so a batch and `k` scalar `make` calls on
+/// the same `Rng` stream start from identical worlds (the property the
+/// oracle tests rely on).  Raycast scenarios get the batch-native
+/// [`RaycastBatch`]; everything else the [`ScalarBatch`] adapter.
+pub fn make_batch(
+    spec_name: &str,
+    scenario: &str,
+    k: usize,
+    rng: &mut Rng,
+) -> Result<Box<dyn BatchEnv>, String> {
+    make_batch_with(spec_name, scenario, k, rng, None)
+}
+
+/// [`make_batch`] with an explicit render/step pool (benches sweep thread
+/// counts with private pools; `None` uses the shared process pool).
+pub fn make_batch_with(
+    spec_name: &str,
+    scenario: &str,
+    k: usize,
+    rng: &mut Rng,
+    pool: Option<Arc<NativePool>>,
+) -> Result<Box<dyn BatchEnv>, String> {
+    if k == 0 {
+        return Err("empty env batch (k = 0)".to_string());
+    }
+    let obs = env::obs_for_spec(spec_name)?;
+    let heads = env::heads_for_spec(spec_name)?;
+    let def = registry::resolve(scenario)?;
+    if let Builder::Raycast(r) = &def.builder {
+        let mut envs = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut e = RaycastEnv::from_def((**r).clone(), obs, &heads)?;
+            e.reset(rng.next_u64());
+            envs.push(e);
+        }
+        let spec = envs[0].spec().clone();
+        let heavy = envs[0].heavy_render();
+        Ok(Box::new(RaycastBatch {
+            envs,
+            spec,
+            heavy,
+            pool,
+            scratch: BatchRenderScratch::new(),
+        }))
+    } else {
+        let mut envs: Vec<Box<dyn Env>> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut e = registry::instantiate(def.clone(), obs, &heads)?;
+            e.reset(rng.next_u64());
+            envs.push(e);
+        }
+        Ok(Box::new(ScalarBatch::from_envs(envs)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_actions(rng: &mut Rng, heads: &[usize], n: usize) -> Vec<i32> {
+        let mut v = Vec::with_capacity(n * heads.len());
+        for _ in 0..n {
+            for &h in heads {
+                v.push(rng.below(h) as i32);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn raycast_batch_matches_scalar_make_stream() {
+        // Same Rng stream -> identical worlds; then identical actions must
+        // give bit-identical rewards/dones and byte-identical frames.
+        let k = 3;
+        let heads = env::heads_for_spec("tiny").unwrap();
+        let mut br = Rng::new(99);
+        let mut sr = Rng::new(99);
+        let mut batch = make_batch("tiny", "basic", k, &mut br).unwrap();
+        let mut scalars: Vec<Box<dyn Env>> = (0..k)
+            .map(|_| env::make("tiny", "basic", &mut sr).unwrap())
+            .collect();
+        let obs_len = batch.spec().obs.len();
+
+        let mut arng = Rng::new(7);
+        let mut out = vec![AgentStep::default(); k];
+        let mut want = vec![AgentStep::default(); k];
+        let mut tmp = vec![AgentStep::default(); 1];
+        for step in 0..40 {
+            let skip = if step % 2 == 0 { 1 } else { 4 };
+            let actions = random_actions(&mut arng, &heads, k);
+            let mut want_frames = 0u64;
+            for (e, env) in scalars.iter_mut().enumerate() {
+                want_frames += step_env_acc(
+                    env.as_mut(),
+                    &actions[e * heads.len()..(e + 1) * heads.len()],
+                    skip,
+                    &mut want[e..e + 1],
+                    &mut tmp,
+                );
+            }
+            let frames = batch.step_many(&actions, skip, &mut out);
+            assert_eq!(frames, want_frames, "step {step}");
+            for e in 0..k {
+                assert_eq!(out[e].reward.to_bits(), want[e].reward.to_bits());
+                assert_eq!(out[e].done, want[e].done);
+            }
+        }
+        // Frames byte-identical through the batched renderer.
+        let mut batched = vec![0u8; k * obs_len];
+        {
+            let mut rows: Vec<&mut [u8]> = batched.chunks_mut(obs_len).collect();
+            batch.render_many(&mut rows);
+        }
+        for (e, env) in scalars.iter_mut().enumerate() {
+            let mut want = vec![0u8; obs_len];
+            env.render(0, &mut want);
+            assert_eq!(batched[e * obs_len..(e + 1) * obs_len], want[..], "env {e}");
+        }
+    }
+
+    #[test]
+    fn scalar_adapter_covers_non_raycast_substrates() {
+        let mut rng = Rng::new(3);
+        let mut b = make_batch("arcade", "breakout", 2, &mut rng).unwrap();
+        assert_eq!(b.n_envs(), 2);
+        let heads = b.spec().action_heads.clone();
+        let obs_len = b.spec().obs.len();
+        let mut arng = Rng::new(5);
+        let mut out = vec![AgentStep::default(); 2];
+        for _ in 0..20 {
+            let actions = random_actions(&mut arng, &heads, 2);
+            let frames = b.step_many(&actions, 4, &mut out);
+            assert!(frames > 0 && frames <= 8);
+        }
+        let mut buf = vec![0u8; 2 * obs_len];
+        let mut rows: Vec<&mut [u8]> = buf.chunks_mut(obs_len).collect();
+        b.render_many(&mut rows);
+    }
+
+    #[test]
+    fn make_batch_rejects_bad_inputs() {
+        let mut rng = Rng::new(1);
+        assert!(make_batch("tiny", "basic", 0, &mut rng).is_err());
+        assert!(make_batch("tiny", "nope", 2, &mut rng).is_err());
+        assert!(make_batch("doomish", "duel", 2, &mut rng).is_err());
+    }
+}

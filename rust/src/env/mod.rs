@@ -16,12 +16,16 @@
 //! parameter overrides like `battle?monsters=20` — through it.
 //!
 //! Everything implements the uniform multi-agent [`Env`] trait; single-agent
-//! environments report `n_agents == 1`.  Observations are rendered directly
+//! environments report `n_agents == 1`.  The hot path steps envs through
+//! the batch-native [`batch::BatchEnv`] interface (`step_many` over N
+//! worlds at once, with the scalar trait kept as the property-tested
+//! oracle).  Observations are rendered directly
 //! into caller-provided byte buffers — on the hot path that buffer is a row
 //! of the shared trajectory slab, so pixels move simulator -> learner with
 //! zero intermediate copies (paper §3.3).
 
 pub mod arcade;
+pub mod batch;
 pub mod gridlab;
 pub mod multitask;
 pub mod raycast;

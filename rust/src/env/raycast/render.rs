@@ -9,9 +9,10 @@
 //! allocation (callers pass the output buffer and a reusable z-buffer) and
 //! any per-pixel trig.
 
-use super::map::{DOOR_CLOSED, DOOR_OPEN};
+use super::map::{GridMap, DOOR_CLOSED, DOOR_OPEN};
 use super::world::{EntityKind, MonsterKind, World, WEAPONS};
 use crate::env::ObsSpec;
+use crate::runtime::native::pool::{Job, NativePool};
 
 /// Horizontal field of view ~ 77 degrees (tan(fov/2) = 0.8), Doom-like.
 const PLANE_SCALE: f32 = 0.8;
@@ -328,6 +329,492 @@ pub fn render(
                 let on = wslot == p.weapon;
                 let rgb = if on { [240, 240, 240] } else { [70, 70, 70] };
                 put(out, w, x, hud_y0 + 1.min(h - hud_y0 - 1), rgb, ch);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched rendering (the `BatchEnv` / `RaycastBatch` hot path)
+// ---------------------------------------------------------------------------
+//
+// [`render_batch`] renders *every* (env, agent) stream of a batch in one
+// call through the native thread pool.  The scalar [`render`] above is the
+// property-tested reference oracle (`rust/tests/prop_env_batch.rs`), the
+// same ops.rs-vs-gemm.rs contract the runtime uses: the batched path must
+// be byte-for-byte identical for any thread count.
+//
+// How that identity is kept:
+//
+// * Work is sharded over **(stream, column strip)**.  Each task raycasts a
+//   disjoint strip of columns into a **column-major** intermediate buffer
+//   (columns contiguous, so strips are plain `chunks_mut` slices); a
+//   second wave of tasks transposes disjoint row bands into the HWC
+//   outputs.  Every output byte is produced by exactly one task and there
+//   is no cross-task reduction, so the thread count only affects
+//   *partitioning*, never values — the contract `gemm.rs` established.
+// * Per-pixel arithmetic mirrors the oracle expression for expression,
+//   including its accumulation order: heavy-mode floor casting replays the
+//   oracle's `fx += step_x` walk from column 0 up to the strip start (an
+//   analytic `fx0 + x * step` would round differently).
+// * Camera, HUD state and the far-to-near sprite draw list are gathered
+//   per frame into struct-of-arrays snapshots ([`BatchRenderScratch`]),
+//   using the oracle's exact sort; tasks read only those snapshots plus
+//   the immutable `GridMap`.
+
+/// Per-stream camera snapshot (everything the oracle derives from the
+/// player pose before its pixel loops).
+#[derive(Clone, Copy, Default)]
+struct ViewSnap {
+    px: f32,
+    py: f32,
+    dir_x: f32,
+    dir_y: f32,
+    plane_x: f32,
+    plane_y: f32,
+}
+
+/// Per-stream HUD state snapshot.
+#[derive(Clone, Copy, Default)]
+struct HudSnap {
+    health: f32,
+    armor: f32,
+    weapon: usize,
+    ammo: u32,
+}
+
+/// One sprite draw command: everything the oracle computes per sprite
+/// outside its per-column loop, resolved at gather time.  Stored in draw
+/// order (far to near), so replaying commands in sequence reproduces the
+/// oracle's overwrite semantics per pixel.
+#[derive(Clone, Copy)]
+struct SpriteCmd {
+    trans_y: f32,
+    screen_x: i64,
+    sprite_w: i64,
+    x0: usize,
+    x1: usize,
+    y0: usize,
+    y1: usize,
+    fog: f32,
+    color: [f32; 3],
+}
+
+/// Reusable buffers for [`render_batch`]: the struct-of-arrays gather
+/// (poses, HUD state, sprite tables) plus the shared column-major
+/// intermediate frame buffer.
+#[derive(Default)]
+pub struct BatchRenderScratch {
+    views: Vec<ViewSnap>,
+    huds: Vec<HudSnap>,
+    sprites: Vec<SpriteCmd>,
+    /// Per-stream `(start, end)` range into `sprites`.
+    sprite_ranges: Vec<(u32, u32)>,
+    order: Vec<(f32, usize, bool)>,
+    /// Column-major pixels, one frame per stream:
+    /// `colbuf[s * frame + (x * h + y) * c + ch]`.
+    colbuf: Vec<u8>,
+}
+
+impl BatchRenderScratch {
+    pub fn new() -> BatchRenderScratch {
+        BatchRenderScratch::default()
+    }
+}
+
+/// Render every stream of a batch, bit-identically to the scalar
+/// [`render`] oracle for any `pool` thread count.
+///
+/// `worlds[s]` / `players[s]` describe stream `s` (streams may share a
+/// world: one entry per agent); `outs[s]` receives its HWC frame.
+pub fn render_batch(
+    worlds: &[&World],
+    players: &[usize],
+    obs: ObsSpec,
+    heavy: bool,
+    pool: &NativePool,
+    scratch: &mut BatchRenderScratch,
+    outs: &mut [&mut [u8]],
+) {
+    let n = worlds.len();
+    assert_eq!(players.len(), n);
+    assert_eq!(outs.len(), n);
+    if n == 0 {
+        return;
+    }
+    let (w, h, ch) = (obs.w, obs.h, obs.c);
+    // The column-major intermediate mirrors `put`'s "two channels always,
+    // third when present" pattern; c == 1 would need put's overlapping
+    // cross-pixel writes, which no registry spec uses.
+    assert!(ch >= 2, "render_batch requires c >= 2");
+    let frame = w * h * ch;
+
+    let BatchRenderScratch { views, huds, sprites, sprite_ranges, order, colbuf } =
+        scratch;
+    views.clear();
+    huds.clear();
+    sprites.clear();
+    sprite_ranges.clear();
+    for s in 0..n {
+        let start = sprites.len() as u32;
+        let (view, hud) = gather_stream(worlds[s], players[s], obs, sprites, order);
+        views.push(view);
+        huds.push(hud);
+        sprite_ranges.push((start, sprites.len() as u32));
+    }
+    colbuf.resize(n * frame, 0);
+
+    // ---- wave 1: raycast disjoint column strips into the column-major
+    // intermediate.  Strip width targets ~2 tasks per thread across the
+    // whole batch but never crosses a stream boundary.
+    let strip_cols = pool.rows_per_task(n * w, 8).min(w);
+    {
+        let mut jobs: Vec<Job<'_>> = Vec::with_capacity(n * w.div_ceil(strip_cols));
+        for (s, sframe) in colbuf.chunks_mut(frame).enumerate() {
+            let map = &worlds[s].map;
+            let view = &views[s];
+            let hud = &huds[s];
+            let (lo, hi) = sprite_ranges[s];
+            let cmds = &sprites[lo as usize..hi as usize];
+            for (ci, strip) in sframe.chunks_mut(strip_cols * h * ch).enumerate() {
+                let x0 = ci * strip_cols;
+                jobs.push(Box::new(move || {
+                    render_strip(map, view, cmds, hud, obs, heavy, x0, strip);
+                }));
+            }
+        }
+        pool.run(jobs);
+    }
+
+    // ---- wave 2: transpose disjoint row bands of each stream into its
+    // HWC output.  Only the channels the oracle's `put` writes are copied
+    // (`min(c, 3)`), so any extra channels keep the caller's bytes exactly
+    // as the scalar path would.
+    {
+        let rows_per = pool.rows_per_task(n * h, 8).min(h);
+        let band = rows_per * w * ch;
+        let copy_ch = ch.min(3);
+        let mut jobs: Vec<Job<'_>> = Vec::with_capacity(n * h.div_ceil(rows_per));
+        for (s, out) in outs.iter_mut().enumerate() {
+            debug_assert_eq!(out.len(), frame);
+            let src = &colbuf[s * frame..(s + 1) * frame];
+            for (bi, dst) in out.chunks_mut(band).enumerate() {
+                let y_base = bi * rows_per;
+                jobs.push(Box::new(move || {
+                    for (dy, drow) in dst.chunks_mut(w * ch).enumerate() {
+                        let y = y_base + dy;
+                        for x in 0..w {
+                            let so = (x * h + y) * ch;
+                            let po = x * ch;
+                            drow[po..po + copy_ch].copy_from_slice(&src[so..so + copy_ch]);
+                        }
+                    }
+                }));
+            }
+        }
+        pool.run(jobs);
+    }
+}
+
+/// Snapshot one stream's camera/HUD and append its sprite draw list (the
+/// oracle's exact candidate set, sort and per-sprite precomputation).
+fn gather_stream(
+    world: &World,
+    player: usize,
+    obs: ObsSpec,
+    sprites: &mut Vec<SpriteCmd>,
+    order: &mut Vec<(f32, usize, bool)>,
+) -> (ViewSnap, HudSnap) {
+    let (w, h) = (obs.w, obs.h);
+    let view_h = h - HUD_ROWS.min(h / 4);
+    let p = &world.players[player];
+    let (dir_x, dir_y) = (p.angle.cos(), p.angle.sin());
+    let (plane_x, plane_y) = (-dir_y * PLANE_SCALE, dir_x * PLANE_SCALE);
+    let view = ViewSnap { px: p.x, py: p.y, dir_x, dir_y, plane_x, plane_y };
+    let hud = HudSnap {
+        health: p.health,
+        armor: p.armor,
+        weapon: p.weapon,
+        ammo: p.ammo[p.weapon],
+    };
+
+    order.clear();
+    for (i, e) in world.entities.iter().enumerate() {
+        if e.alive {
+            let d = (e.x - p.x).hypot(e.y - p.y);
+            order.push((d, i, false));
+        }
+    }
+    for (i, q) in world.players.iter().enumerate() {
+        if i != player && q.alive {
+            let d = (q.x - p.x).hypot(q.y - p.y);
+            order.push((d, i, true));
+        }
+    }
+    order.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let inv_det = 1.0 / (plane_x * dir_y - dir_x * plane_y);
+    for &(_, idx, is_player) in order.iter() {
+        let (ex, ey, color, scale_h): (f32, f32, [f32; 3], f32) = if is_player {
+            let q = &world.players[idx];
+            (q.x, q.y, [0.30, 0.45, 0.95], 1.0)
+        } else {
+            let e = &world.entities[idx];
+            let s = if e.is_monster() { 1.0 } else { 0.5 };
+            (e.x, e.y, entity_color(e.kind), s)
+        };
+        let rel_x = ex - p.x;
+        let rel_y = ey - p.y;
+        let trans_x = inv_det * (dir_y * rel_x - dir_x * rel_y);
+        let trans_y = inv_det * (-plane_y * rel_x + plane_x * rel_y);
+        if trans_y <= 0.05 {
+            continue; // behind the camera
+        }
+        let screen_x = ((w as f32 / 2.0) * (1.0 + trans_x / trans_y)) as i64;
+        let sprite_h = ((view_h as f32 / trans_y) * scale_h) as i64;
+        let sprite_w = sprite_h * 2 / 3;
+        if sprite_h <= 0 {
+            continue;
+        }
+        let v_offset = if scale_h < 1.0 {
+            (view_h as f32 / trans_y * (1.0 - scale_h) * 0.5) as i64
+        } else {
+            0
+        };
+        let y0 = ((view_h as i64 - sprite_h) / 2 + v_offset).max(0) as usize;
+        let y1 = (((view_h as i64 + sprite_h) / 2 + v_offset) as usize).min(view_h);
+        let x0 = (screen_x - sprite_w / 2).max(0) as usize;
+        let x1 = ((screen_x + sprite_w / 2) as usize).min(w);
+        let fog = 1.0 / (1.0 + trans_y * 0.15);
+        sprites.push(SpriteCmd { trans_y, screen_x, sprite_w, x0, x1, y0, y1, fog, color });
+    }
+    (view, hud)
+}
+
+/// Write one pixel of a column-major strip (same channel semantics as the
+/// oracle's `put`).
+#[inline]
+fn put_col(strip: &mut [u8], col_len: usize, ch: usize, x_rel: usize, y: usize, rgb: [u8; 3]) {
+    let o = x_rel * col_len + y * ch;
+    strip[o] = rgb[0];
+    strip[o + 1] = rgb[1];
+    if ch >= 3 {
+        strip[o + 2] = rgb[2];
+    }
+}
+
+/// Raycast columns `x0 .. x0 + strip_w` of one stream into a column-major
+/// strip buffer (`strip[(x - x0) * h * c + y * c + ch]`), reproducing the
+/// scalar renderer's per-pixel arithmetic exactly.
+#[allow(clippy::too_many_arguments)]
+fn render_strip(
+    map: &GridMap,
+    view: &ViewSnap,
+    sprites: &[SpriteCmd],
+    hud: &HudSnap,
+    obs: ObsSpec,
+    heavy: bool,
+    x0: usize,
+    strip: &mut [u8],
+) {
+    let (w, h, ch) = (obs.w, obs.h, obs.c);
+    let col_len = h * ch;
+    let strip_w = strip.len() / col_len;
+    let x1 = x0 + strip_w;
+    let view_h = h - HUD_ROWS.min(h / 4);
+    let horizon = view_h / 2;
+    let (px, py) = (view.px, view.py);
+    let (dir_x, dir_y) = (view.dir_x, view.dir_y);
+    let (plane_x, plane_y) = (view.plane_x, view.plane_y);
+
+    // --- background
+    if heavy {
+        for y in 0..view_h {
+            let is_floor = y >= horizon;
+            let d = if is_floor {
+                (y as f32 - view_h as f32 / 2.0).max(0.5)
+            } else {
+                (view_h as f32 / 2.0 - y as f32).max(0.5)
+            };
+            let row_dist = view_h as f32 * 0.5 / d;
+            let step_x = row_dist * 2.0 * plane_x / w as f32;
+            let step_y = row_dist * 2.0 * plane_y / w as f32;
+            let mut fx = px + row_dist * (dir_x - plane_x);
+            let mut fy = py + row_dist * (dir_y - plane_y);
+            let fog = 1.0 / (1.0 + row_dist * 0.22);
+            // Replay the oracle's accumulation from column 0 so the floats
+            // at this strip's columns carry its exact rounding history.
+            for x in 0..x1 {
+                if x >= x0 {
+                    let checker = ((fx.floor() as i64 + fy.floor() as i64) & 1) == 0;
+                    let base: [f32; 3] = if is_floor {
+                        if checker { [0.30, 0.28, 0.25] } else { [0.22, 0.21, 0.19] }
+                    } else if checker {
+                        [0.16, 0.17, 0.22]
+                    } else {
+                        [0.12, 0.13, 0.17]
+                    };
+                    let rgb = [
+                        (base[0] * fog * 255.0) as u8,
+                        (base[1] * fog * 255.0) as u8,
+                        (base[2] * fog * 255.0) as u8,
+                    ];
+                    put_col(strip, col_len, ch, x - x0, y, rgb);
+                }
+                fx += step_x;
+                fy += step_y;
+            }
+        }
+    } else {
+        for y in 0..view_h {
+            let rgb = if y < horizon { CEIL_COLOR } else { FLOOR_COLOR };
+            for x in x0..x1 {
+                put_col(strip, col_len, ch, x - x0, y, rgb);
+            }
+        }
+    }
+
+    // --- walls: one DDA per column; the z-buffer is strip-local because
+    // sprite occlusion only ever tests a column's own depth.
+    let mut zbuf = vec![0f32; strip_w];
+    for x in x0..x1 {
+        let camera_x = 2.0 * x as f32 / w as f32 - 1.0;
+        let rd_x = dir_x + plane_x * camera_x;
+        let rd_y = dir_y + plane_y * camera_x;
+        let mut map_x = px as i64;
+        let mut map_y = py as i64;
+        let delta_x = if rd_x.abs() < 1e-9 { f32::MAX } else { (1.0 / rd_x).abs() };
+        let delta_y = if rd_y.abs() < 1e-9 { f32::MAX } else { (1.0 / rd_y).abs() };
+        let (step_x, mut side_x) = if rd_x < 0.0 {
+            (-1i64, (px - map_x as f32) * delta_x)
+        } else {
+            (1i64, (map_x as f32 + 1.0 - px) * delta_x)
+        };
+        let (step_y, mut side_y) = if rd_y < 0.0 {
+            (-1i64, (py - map_y as f32) * delta_y)
+        } else {
+            (1i64, (map_y as f32 + 1.0 - py) * delta_y)
+        };
+        let mut side = 0u8;
+        let mut tex = 1u8;
+        for _ in 0..256 {
+            if side_x < side_y {
+                side_x += delta_x;
+                map_x += step_x;
+                side = 0;
+            } else {
+                side_y += delta_y;
+                map_y += step_y;
+                side = 1;
+            }
+            if map_x < 0 || map_y < 0 {
+                tex = 1;
+                break;
+            }
+            let c = map.cell(map_x as usize, map_y as usize);
+            if c != 0 && c != DOOR_OPEN {
+                tex = c;
+                break;
+            }
+        }
+        let perp = if side == 0 { side_x - delta_x } else { side_y - delta_y };
+        let perp = perp.max(1e-4);
+        zbuf[x - x0] = perp;
+
+        let line_h = (view_h as f32 / perp) as i64;
+        let y0 = ((view_h as i64 - line_h) / 2).max(0) as usize;
+        let y1 = (((view_h as i64 + line_h) / 2) as usize).min(view_h);
+
+        let wall_u = if side == 0 { py + perp * rd_y } else { px + perp * rd_x };
+        let wall_u = wall_u - wall_u.floor();
+
+        let base = WALL_COLORS[(tex as usize).min(WALL_COLORS.len() - 1)];
+        let fog = 1.0 / (1.0 + perp * 0.18);
+        let side_shade = if side == 1 { 0.75 } else { 1.0 };
+        let band = ((wall_u * 6.0) as i32) & 1;
+        let band_shade = if band == 0 { 1.0 } else { 0.82 };
+        let is_door = tex == DOOR_CLOSED || tex == DOOR_OPEN;
+        for y in y0..y1 {
+            let v = (y - y0) as f32 / ((y1 - y0).max(1)) as f32;
+            let row_shade = if is_door {
+                if ((v * 5.0) as i32) & 1 == 0 { 1.0 } else { 0.7 }
+            } else if ((v * 8.0) as i32) & 1 == 0 {
+                1.0
+            } else {
+                0.9
+            };
+            let sh = fog * side_shade * band_shade * row_shade * 255.0;
+            let rgb = [
+                (base[0] * sh) as u8,
+                (base[1] * sh) as u8,
+                (base[2] * sh) as u8,
+            ];
+            put_col(strip, col_len, ch, x - x0, y, rgb);
+        }
+    }
+
+    // --- sprites: replay the draw commands in their far-to-near order;
+    // per pixel that is the oracle's exact overwrite sequence.
+    for cmd in sprites {
+        let cx0 = cmd.x0.max(x0);
+        let cx1 = cmd.x1.min(x1);
+        for x in cx0..cx1 {
+            if cmd.trans_y >= zbuf[x - x0] {
+                continue; // occluded by a wall
+            }
+            let fx = (x as f32 - cmd.screen_x as f32) / (cmd.sprite_w.max(1) as f32 / 2.0);
+            for y in cmd.y0..cmd.y1 {
+                let fy = (y as f32 - (cmd.y0 + cmd.y1) as f32 / 2.0)
+                    / ((cmd.y1 - cmd.y0).max(1) as f32 / 2.0);
+                let r2 = fx * fx + fy * fy;
+                if r2 > 1.0 {
+                    continue;
+                }
+                let tone = if r2 < 0.35 { 1.0 } else { 0.75 };
+                let sh = cmd.fog * tone * 255.0;
+                let rgb = [
+                    (cmd.color[0] * sh) as u8,
+                    (cmd.color[1] * sh) as u8,
+                    (cmd.color[2] * sh) as u8,
+                ];
+                put_col(strip, col_len, ch, x - x0, y, rgb);
+            }
+        }
+    }
+
+    // --- HUD strip: the oracle draws fill, health, armor, ammo, then the
+    // weapon ticks, each overwriting the last; resolve that sequence per
+    // pixel (the two HUD rows coincide when the strip is a single row).
+    if view_h < h {
+        let hud_y0 = view_h;
+        let row2 = hud_y0 + 1.min(h - hud_y0 - 1);
+        let health_px =
+            ((hud.health / 100.0).clamp(0.0, 1.0) * (w as f32 * 0.45)) as usize;
+        let armor_px = ((hud.armor / 100.0).clamp(0.0, 1.0) * (w as f32 * 0.45)) as usize;
+        let ammo_px = ((hud.ammo as usize).min(60) * (w / 2 - 2)) / 60;
+        for y in hud_y0..h {
+            for x in x0..x1 {
+                let mut rgb = [12, 12, 12];
+                if y == hud_y0 && x < health_px {
+                    rgb = [220, 40, 40];
+                }
+                if y == row2 && x < armor_px {
+                    rgb = [40, 200, 60];
+                }
+                if y == hud_y0 && x >= w / 2 && x < w / 2 + ammo_px {
+                    rgb = [230, 210, 60];
+                }
+                if y == row2 && x >= w / 2 && x + 1 < w {
+                    let t = x - w / 2;
+                    if t % 3 == 0 && t / 3 < WEAPONS.len() {
+                        rgb = if t / 3 == hud.weapon {
+                            [240, 240, 240]
+                        } else {
+                            [70, 70, 70]
+                        };
+                    }
+                }
+                put_col(strip, col_len, ch, x - x0, y, rgb);
             }
         }
     }

@@ -569,6 +569,16 @@ impl RaycastEnv {
         // ---- monsters ---------------------------------------------------
         let mut ents: Vec<Entity> = Vec::new();
         let mt = def.monsters;
+        // Seeded ring rotation: without it a Ring layout is a pure function
+        // of the map size, so every episode of e.g. `defend_center` (frozen
+        // player, fixed heading, all-chaser ring, no pickups) consumed zero
+        // RNG and two envs built from one parent `Rng` played *identical*
+        // trajectories — the latent independent-seeding bug.
+        let ring_phase = if matches!(mt.placement, MonsterPlacement::Ring) {
+            rng.next_f32()
+        } else {
+            0.0
+        };
         for i in 0..mt.n {
             let shoots =
                 mt.shooter_period > 0 && (i + mt.shooter_phase) % mt.shooter_period == 0;
@@ -588,17 +598,23 @@ impl RaycastEnv {
                             1.5 + rng.next_f32() * (map.h as f32 - 3.0).max(0.0),
                         )
                     } else {
+                        // Seeded jitter around the even spread, for the same
+                        // reason as `ring_phase` above: an unjittered line is
+                        // seed-independent, so sibling envs of `defend_line`
+                        // started from identical worlds.
+                        let spacing = (map.h as f32 - 3.0).max(0.0) / (mt.n - 1) as f32;
+                        let jitter = (rng.next_f32() - 0.5) * spacing * 0.6;
                         (
                             (map.w as f32 - 2.5).max(1.5),
-                            1.5 + i as f32 * (map.h as f32 - 3.0).max(0.0)
-                                / (mt.n - 1) as f32,
+                            (1.5 + i as f32 * spacing + jitter)
+                                .clamp(1.5, (map.h as f32 - 1.5).max(1.5)),
                         )
                     };
                     (x, y)
                 }
                 MonsterPlacement::Ring => {
                     let (cx, cy) = (map.w as f32 / 2.0, map.h as f32 / 2.0);
-                    let a = i as f32 * std::f32::consts::TAU / mt.n as f32;
+                    let a = (i as f32 + ring_phase) * std::f32::consts::TAU / mt.n as f32;
                     let x = (cx + a.cos() * (cx - 2.0)).clamp(1.5, map.w as f32 - 1.5);
                     let y = (cy + a.sin() * (cy - 1.5)).clamp(1.5, map.h as f32 - 1.5);
                     (x, y)
@@ -708,6 +724,22 @@ impl RaycastEnv {
     /// — used by the PBT meta-objective.
     pub fn agent_frags(&self, agent: usize) -> i32 {
         self.world.players[self.agent_players[agent]].frags
+    }
+
+    // Read-only views for the batched renderer (`env::batch::RaycastBatch`
+    // snapshots every env's world/camera in one gather pass, then renders
+    // all streams through the thread pool).
+
+    pub(crate) fn world(&self) -> &World {
+        &self.world
+    }
+
+    pub(crate) fn heavy_render(&self) -> bool {
+        self.def.cfg.heavy_render
+    }
+
+    pub(crate) fn agent_player(&self, agent: usize) -> usize {
+        self.agent_players[agent]
     }
 }
 

@@ -4,21 +4,33 @@
 //! vector is split into two groups: while group A waits for actions on the
 //! policy worker, group B is being stepped — with a fast enough policy
 //! worker and `k/2 > t_inf / t_env` the CPU never idles (paper Fig 2b).
+//!
+//! Since the batch-native refactor each *group* is one [`BatchEnv`]: the
+//! worker steps and renders a whole group per call (`step_group` /
+//! `render_group`) instead of looping `Box<dyn Env>` one env at a time.
 
-use super::{make, Env, EpisodeMonitor};
+use super::batch::{make_batch, BatchEnv};
+use super::{AgentStep, EnvSpec, EpisodeMonitor};
 use crate::util::Rng;
 
 /// One rollout worker's environments plus per-agent episode bookkeeping.
+///
+/// Env indices are global across groups (group `g` owns the contiguous
+/// range `group(g)`); action/out/row layouts within a group call are
+/// env-major as defined by [`BatchEnv`].
 pub struct VecEnv {
-    pub envs: Vec<Box<dyn Env>>,
-    pub monitors: Vec<EpisodeMonitor>,
-    /// Group boundaries: `groups[g]` is a range of env indices.
+    /// One batch per sampling group.
+    batches: Vec<Box<dyn BatchEnv>>,
+    /// Group boundaries: `groups[g]` is a range of global env indices.
     groups: Vec<std::ops::Range<usize>>,
+    pub monitors: Vec<EpisodeMonitor>,
+    spec: EnvSpec,
 }
 
 impl VecEnv {
     /// Build `k` env instances of the given scenario, split into one or two
-    /// sampling groups.
+    /// sampling groups.  Seeds are drawn from `rng` in global env order
+    /// (one `next_u64` per env — the same stream `env::make` consumes).
     pub fn build(
         spec_name: &str,
         scenario: &str,
@@ -27,15 +39,22 @@ impl VecEnv {
         rng: &mut Rng,
     ) -> Result<VecEnv, String> {
         assert!(k > 0);
-        let mut envs = Vec::with_capacity(k);
-        let mut monitors = Vec::with_capacity(k);
-        for _ in 0..k {
-            let e = make(spec_name, scenario, rng)?;
-            monitors.push(EpisodeMonitor::new(e.spec().n_agents));
-            envs.push(e);
-        }
         let groups = split_groups(k, double_buffer);
-        Ok(VecEnv { envs, monitors, groups })
+        let mut batches = Vec::with_capacity(groups.len());
+        for r in &groups {
+            batches.push(make_batch(spec_name, scenario, r.len(), rng)?);
+        }
+        let spec = batches[0].spec().clone();
+        let monitors = vec![EpisodeMonitor::new(spec.n_agents); k];
+        Ok(VecEnv { batches, groups, monitors, spec })
+    }
+
+    pub fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.groups.iter().map(|r| r.len()).sum()
     }
 
     pub fn n_groups(&self) -> usize {
@@ -47,12 +66,58 @@ impl VecEnv {
     }
 
     pub fn n_agents_per_env(&self) -> usize {
-        self.envs[0].spec().n_agents
+        self.spec.n_agents
     }
 
     /// Total policy streams this worker produces (envs x agents).
     pub fn total_agents(&self) -> usize {
-        self.envs.iter().map(|e| e.spec().n_agents).sum()
+        self.n_envs() * self.spec.n_agents
+    }
+
+    /// Step group `g` with frameskip `skip` (see [`BatchEnv::step_many`]);
+    /// `actions`/`out` cover only that group, env-major.  Returns
+    /// agent-frames actually simulated.
+    pub fn step_group(&mut self, g: usize, actions: &[i32], skip: u32, out: &mut [AgentStep]) -> u64 {
+        self.batches[g].step_many(actions, skip, out)
+    }
+
+    /// Render every (env, agent) stream of group `g`, env-major.
+    pub fn render_group(&mut self, g: usize, rows: &mut [&mut [u8]]) {
+        self.batches[g].render_many(rows);
+    }
+
+    /// Step all groups at once (single-group callers: the baselines).
+    /// `actions`/`out` are global env-major.
+    pub fn step_all(&mut self, actions: &[i32], skip: u32, out: &mut [AgentStep]) -> u64 {
+        let n_agents = self.spec.n_agents;
+        let n_heads = self.spec.action_heads.len();
+        let mut frames = 0u64;
+        for (g, r) in self.groups.iter().enumerate() {
+            frames += self.batches[g].step_many(
+                &actions[r.start * n_agents * n_heads..r.end * n_agents * n_heads],
+                skip,
+                &mut out[r.start * n_agents..r.end * n_agents],
+            );
+        }
+        frames
+    }
+
+    /// Render every stream of every group, global env-major.
+    pub fn render_all(&mut self, rows: &mut [&mut [u8]]) {
+        let n_agents = self.spec.n_agents;
+        let mut rest = rows;
+        for (g, r) in self.groups.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(r.len() * n_agents);
+            self.batches[g].render_many(head);
+            rest = tail;
+        }
+    }
+
+    /// Restart one env's episode (global index) from `seed`.
+    pub fn reset_env(&mut self, env: usize, seed: u64) {
+        let g = self.groups.iter().position(|r| r.contains(&env)).expect("env index");
+        let local = env - self.groups[g].start;
+        self.batches[g].reset_env(local, seed);
     }
 }
 
@@ -92,7 +157,7 @@ mod tests {
     fn builds_vector_of_envs() {
         let mut rng = Rng::new(1);
         let v = VecEnv::build("doomish", "battle", 4, true, &mut rng).unwrap();
-        assert_eq!(v.envs.len(), 4);
+        assert_eq!(v.n_envs(), 4);
         assert_eq!(v.n_groups(), 2);
         assert_eq!(v.total_agents(), 4);
         assert_eq!(v.n_agents_per_env(), 1);
@@ -108,13 +173,21 @@ mod tests {
 
     #[test]
     fn envs_are_independently_seeded() {
+        // Frame-0 divergence for the battle pair (the original check); the
+        // registry-wide sibling-divergence sweep lives in
+        // rust/tests/scenario_registry.rs.
         let mut rng = Rng::new(3);
         let mut v = VecEnv::build("doomish", "battle", 2, false, &mut rng).unwrap();
-        let spec = v.envs[0].spec().obs;
-        let mut a = vec![0u8; spec.len()];
-        let mut b = vec![0u8; spec.len()];
-        v.envs[0].render(0, &mut a);
-        v.envs[1].render(0, &mut b);
-        assert_ne!(a, b, "two battle instances rendered identical frames");
+        let obs_len = v.spec().obs.len();
+        let mut buf = vec![0u8; 2 * obs_len];
+        {
+            let mut rows: Vec<&mut [u8]> = buf.chunks_mut(obs_len).collect();
+            v.render_all(&mut rows);
+        }
+        assert_ne!(
+            buf[..obs_len],
+            buf[obs_len..],
+            "two battle instances rendered identical frames"
+        );
     }
 }

@@ -4,7 +4,8 @@
 //!   train  [--preset NAME] [--key value ...]     train a run, print summary
 //!   bench  <exhibit> [--key value ...]           regenerate a paper exhibit
 //!          exhibits: throughput | table1 | walltime | scenarios | battle |
-//!                    pbt-duel | pbt-throughput | multitask | fifo | lag
+//!                    pbt-duel | pbt-throughput | multitask | envs | fifo |
+//!                    lag
 //!   eval   --ckpt F [--episodes N] [--greedy b]  evaluate a checkpoint
 //!   match  --ckpt-a A --ckpt-b B [--matches N]   1v1 duel between checkpoints
 //!   render [--ckpt F] --out DIR [--n N]          dump episode frames (PPM)
@@ -210,6 +211,7 @@ fn cmd_bench(args: &[String]) {
         "pbt-duel" => bench::pbt::run_duel_cli(rest),
         "pbt-throughput" => bench::pbt::run_throughput_cli(rest),
         "multitask" => bench::multitask::run_cli(rest),
+        "envs" => bench::envstep::run_cli(rest),
         "fifo" => bench::fifo::run_cli(rest),
         "lag" => bench::lag::run_cli(rest),
         _ => {

@@ -1,0 +1,226 @@
+//! Batched env stepping vs the scalar oracle (the `ops.rs`-vs-`gemm.rs`
+//! property-test pattern, third time): `step_many`/`render_many` over N
+//! seeded envs must be **byte-for-byte** equal — observations, reward
+//! bits, dones, frame counts, and episode returns — to stepping the same
+//! N scalar envs in a loop, for every single-agent raycast scenario in
+//! the registry, at several batch sizes and render-pool thread counts.
+//!
+//! Iteration counts respect `SF_STRESS_ITERS` (testkit::stress_iters) so
+//! the TSan lane stays bounded.
+
+use std::sync::Arc;
+
+use sample_factory::bench::scenarios::sweep;
+use sample_factory::env::batch::{make_batch_with, BatchEnv};
+use sample_factory::env::{self, AgentStep, Env, EpisodeMonitor};
+use sample_factory::runtime::native::pool::NativePool;
+use sample_factory::testkit;
+use sample_factory::util::Rng;
+
+/// Steps per (scenario, k, threads) combo: ~30 by default, 55 under the
+/// TSan lane's SF_STRESS_ITERS=500.
+fn combo_steps() -> usize {
+    (testkit::stress_iters(270) / 9).max(8)
+}
+
+fn fnv(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn random_actions(rng: &mut Rng, heads: &[usize], streams: usize) -> Vec<i32> {
+    let mut v = Vec::with_capacity(streams * heads.len());
+    for _ in 0..streams {
+        for &h in heads {
+            v.push(rng.below(h) as i32);
+        }
+    }
+    v
+}
+
+/// The rollout worker's frameskip semantics on one scalar env: repeat the
+/// action, sum rewards, OR dones, stop early on any done.  Returns
+/// agent-frames simulated.
+fn step_scalar_acc(
+    env: &mut dyn Env,
+    actions: &[i32],
+    skip: u32,
+    out: &mut [AgentStep],
+    tmp: &mut [AgentStep],
+) -> u64 {
+    let n_agents = out.len();
+    for s in out.iter_mut() {
+        *s = AgentStep::default();
+    }
+    let mut frames = 0u64;
+    for _ in 0..skip.max(1) {
+        env.step(actions, tmp);
+        frames += n_agents as u64;
+        let mut any = false;
+        for (acc, st) in out.iter_mut().zip(tmp.iter()) {
+            acc.reward += st.reward;
+            acc.done |= st.done;
+            any |= st.done;
+        }
+        if any {
+            break;
+        }
+    }
+    frames
+}
+
+/// Run one (scenario, k, threads) combo: a batch and k scalar envs built
+/// from identical `Rng` streams, driven by identical action sequences,
+/// asserting bitwise equality of every output every step.
+fn assert_batch_matches_oracle(spec: &str, scenario: &str, k: usize, threads: usize) {
+    let steps = combo_steps();
+    let seed = 0xBEEF ^ ((k as u64) << 8) ^ ((threads as u64) << 16);
+    let pool = Arc::new(NativePool::new(threads));
+    let mut brng = Rng::new(seed);
+    let mut batch = make_batch_with(spec, scenario, k, &mut brng, Some(pool))
+        .unwrap_or_else(|e| panic!("{scenario}: {e}"));
+    let mut srng = Rng::new(seed);
+    let mut scalars: Vec<Box<dyn Env>> = (0..k)
+        .map(|_| env::make(spec, scenario, &mut srng).unwrap())
+        .collect();
+
+    let sp = batch.spec().clone();
+    let n_agents = sp.n_agents;
+    let heads = sp.action_heads.clone();
+    let n_heads = heads.len();
+    let obs_len = sp.obs.len();
+    let ctx = |step: usize| format!("{scenario} k={k} threads={threads} step={step}");
+
+    let mut arng = Rng::new(777);
+    let mut out = vec![AgentStep::default(); k * n_agents];
+    let mut want = vec![AgentStep::default(); k * n_agents];
+    let mut tmp = vec![AgentStep::default(); n_agents];
+    let mut bmon: Vec<EpisodeMonitor> =
+        (0..k).map(|_| EpisodeMonitor::new(n_agents)).collect();
+    let mut smon = bmon.clone();
+    let mut bobs = vec![0u8; k * n_agents * obs_len];
+    let mut sobs = vec![0u8; obs_len];
+
+    for step in 0..steps {
+        // Alternate frameskips so both the 1-frame and the early-stop-able
+        // 4-frame path are exercised.
+        let skip = if step % 2 == 0 { 1 } else { 4 };
+        let actions = random_actions(&mut arng, &heads, k * n_agents);
+
+        let mut want_frames = 0u64;
+        for (e, envb) in scalars.iter_mut().enumerate() {
+            want_frames += step_scalar_acc(
+                envb.as_mut(),
+                &actions[e * n_agents * n_heads..(e + 1) * n_agents * n_heads],
+                skip,
+                &mut want[e * n_agents..(e + 1) * n_agents],
+                &mut tmp,
+            );
+        }
+        let frames = batch.step_many(&actions, skip, &mut out);
+        assert_eq!(frames, want_frames, "frame count diverged at {}", ctx(step));
+        for i in 0..k * n_agents {
+            assert_eq!(
+                out[i].reward.to_bits(),
+                want[i].reward.to_bits(),
+                "reward bits diverged (stream {i}) at {}",
+                ctx(step)
+            );
+            assert_eq!(out[i].done, want[i].done, "done diverged at {}", ctx(step));
+            // Episode returns: the monitors on both sides must emit the
+            // same (return, length) events at the same steps.
+            let be = bmon[i / n_agents].record(i % n_agents, &out[i]);
+            let se = smon[i / n_agents].record(i % n_agents, &want[i]);
+            assert_eq!(be, se, "episode event diverged at {}", ctx(step));
+        }
+
+        // Frames: batched raycast vs per-env scalar render, byte-for-byte
+        // (every other step — rendering both sides dominates the runtime).
+        if step % 2 == 0 {
+            {
+                let mut rows: Vec<&mut [u8]> = bobs.chunks_mut(obs_len).collect();
+                batch.render_many(&mut rows);
+            }
+            for (e, envb) in scalars.iter_mut().enumerate() {
+                for a in 0..n_agents {
+                    envb.render(a, &mut sobs);
+                    let i = e * n_agents + a;
+                    assert_eq!(
+                        bobs[i * obs_len..(i + 1) * obs_len],
+                        sobs[..],
+                        "frame bytes diverged (env {e} agent {a}) at {}",
+                        ctx(step)
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_step_render_matches_scalar_oracle() {
+    // Every single-agent raycast scenario, batch sizes {1, 3, 6}; thread
+    // counts 1/2/4 rotate across cells so each scenario is checked at
+    // every batch size and (across the sweep) at every thread count —
+    // determinism across thread counts itself is pinned by the 1-vs-4
+    // comparison in the trajectory test below.
+    let defs = sweep();
+    assert!(defs.len() >= 14, "registry sweep shrank to {}", defs.len());
+    for (di, def) in defs.iter().enumerate() {
+        for (ki, &k) in [1usize, 3, 6].iter().enumerate() {
+            let threads = [1, 2, 4][(di + ki) % 3];
+            assert_batch_matches_oracle(def.spec, def.name, k, threads);
+        }
+    }
+}
+
+/// One step's signature in a recorded trajectory.
+type StepSig = (Vec<u32>, Vec<bool>, u64);
+
+fn run_trajectory(threads: usize, steps: usize, k: usize) -> Vec<StepSig> {
+    let pool = Arc::new(NativePool::new(threads));
+    let mut rng = Rng::new(4242);
+    let mut b = make_batch_with("doomish", "battle", k, &mut rng, Some(pool)).unwrap();
+    let sp = b.spec().clone();
+    let heads = sp.action_heads.clone();
+    let obs_len = sp.obs.len();
+    let mut arng = Rng::new(31337);
+    let mut out = vec![AgentStep::default(); k];
+    let mut obs = vec![0u8; k * obs_len];
+    let mut sig = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let actions = random_actions(&mut arng, &heads, k);
+        b.step_many(&actions, 4, &mut out);
+        let hash = if step % 10 == 0 || step == steps - 1 {
+            let mut rows: Vec<&mut [u8]> = obs.chunks_mut(obs_len).collect();
+            b.render_many(&mut rows);
+            fnv(&obs)
+        } else {
+            0
+        };
+        sig.push((
+            out.iter().map(|s| s.reward.to_bits()).collect(),
+            out.iter().map(|s| s.done).collect(),
+            hash,
+        ));
+    }
+    sig
+}
+
+#[test]
+fn same_seeds_and_actions_reproduce_identical_trajectories() {
+    // 200-step action-sequence determinism: two *fresh* batches built from
+    // the same seeds and fed the same actions must replay bit-identical
+    // trajectories — including across different render-pool thread counts
+    // (1 vs 4), which pins the fixed-reduction-order contract.
+    let a = run_trajectory(1, 200, 3);
+    let b = run_trajectory(4, 200, 3);
+    assert_eq!(a.len(), b.len());
+    for (step, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(sa, sb, "trajectories diverged at step {step}");
+    }
+}

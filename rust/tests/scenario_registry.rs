@@ -4,6 +4,7 @@
 //! connected, spawnable maps for any seed; and `name?key=value` overrides
 //! must compose with seeding into fully reproducible episodes.
 
+use sample_factory::env::batch::{make_batch, BatchEnv};
 use sample_factory::env::raycast::map::GridMap;
 use sample_factory::env::raycast::mapgen::{self, MapSource};
 use sample_factory::env::registry;
@@ -223,5 +224,149 @@ fn registry_json_is_complete_and_roundtrips() {
                 );
             }
         }
+    }
+}
+
+/// The rollout worker's frameskip semantics on one scalar env: repeat the
+/// action `skip` times, sum rewards, OR dones, stop early on any done.
+/// Mirrors what `step_many` does internally; returns agent-frames simulated.
+fn step_scalar_acc(
+    env: &mut dyn Env,
+    actions: &[i32],
+    skip: u32,
+    out: &mut [AgentStep],
+    tmp: &mut [AgentStep],
+) -> u64 {
+    let n_agents = out.len();
+    for s in out.iter_mut() {
+        *s = AgentStep::default();
+    }
+    let mut frames = 0u64;
+    for _ in 0..skip.max(1) {
+        env.step(actions, tmp);
+        frames += n_agents as u64;
+        let mut any = false;
+        for (acc, st) in out.iter_mut().zip(tmp.iter()) {
+            acc.reward += st.reward;
+            acc.done |= st.done;
+            any |= st.done;
+        }
+        if any {
+            break;
+        }
+    }
+    frames
+}
+
+/// The every-scenario sweep through the batch-native path: the *whole*
+/// registry — arcade, gridlab, and multi-agent scenarios included, i.e.
+/// everything the `ScalarBatch` adapter and `RaycastBatch` between them
+/// cover — must step and render identically through `make_batch` and
+/// through two scalar `env::make` envs built from an identical `Rng`
+/// stream.  (The per-pixel raycast sweep lives in `prop_env_batch.rs`;
+/// this is the registry-wide contract check.)
+#[test]
+fn every_scenario_steps_identically_through_the_batch_adapter() {
+    let k = 2usize;
+    for def in registry::all() {
+        let mut brng = Rng::new(0xBA7C);
+        let mut batch = make_batch(def.spec, def.name, k, &mut brng)
+            .unwrap_or_else(|e| panic!("{}: {e}", def.name));
+        let mut srng = Rng::new(0xBA7C);
+        let mut scalars: Vec<Box<dyn Env>> = (0..k)
+            .map(|_| make(def.spec, def.name, &mut srng).unwrap())
+            .collect();
+
+        let sp = batch.spec().clone();
+        let n_agents = sp.n_agents;
+        let heads = sp.action_heads.clone();
+        let n_heads = heads.len();
+        let obs_len = sp.obs.len();
+
+        let mut arng = Rng::new(515);
+        let mut actions = vec![0i32; k * n_agents * n_heads];
+        let mut out = vec![AgentStep::default(); k * n_agents];
+        let mut want = vec![AgentStep::default(); k * n_agents];
+        let mut tmp = vec![AgentStep::default(); n_agents];
+        let mut bobs = vec![0u8; k * n_agents * obs_len];
+        let mut sobs = vec![0u8; obs_len];
+
+        for step in 0..60 {
+            let skip = if step % 2 == 0 { 1 } else { 3 };
+            for chunk in actions.chunks_mut(n_heads) {
+                for (h, &n) in heads.iter().enumerate() {
+                    chunk[h] = arng.below(n) as i32;
+                }
+            }
+            let mut want_frames = 0u64;
+            for (e, env) in scalars.iter_mut().enumerate() {
+                want_frames += step_scalar_acc(
+                    env.as_mut(),
+                    &actions[e * n_agents * n_heads..(e + 1) * n_agents * n_heads],
+                    skip,
+                    &mut want[e * n_agents..(e + 1) * n_agents],
+                    &mut tmp,
+                );
+            }
+            let frames = batch.step_many(&actions, skip, &mut out);
+            assert_eq!(frames, want_frames, "{} step {step}: frame count", def.name);
+            for i in 0..k * n_agents {
+                assert_eq!(
+                    out[i].reward.to_bits(),
+                    want[i].reward.to_bits(),
+                    "{} step {step}: reward bits (stream {i})",
+                    def.name
+                );
+                assert_eq!(
+                    out[i].done, want[i].done,
+                    "{} step {step}: done (stream {i})",
+                    def.name
+                );
+            }
+            if step % 20 == 0 {
+                {
+                    let mut rows: Vec<&mut [u8]> = bobs.chunks_mut(obs_len).collect();
+                    batch.render_many(&mut rows);
+                }
+                for (e, env) in scalars.iter_mut().enumerate() {
+                    for a in 0..n_agents {
+                        env.render(a, &mut sobs);
+                        let i = e * n_agents + a;
+                        assert_eq!(
+                            bobs[i * obs_len..(i + 1) * obs_len],
+                            sobs[..],
+                            "{} step {step}: frame bytes (env {e} agent {a})",
+                            def.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Registry-wide independent seeding — the gap behind the old
+/// `VecEnv::envs_are_independently_seeded` test, which only checked
+/// `battle`.  Two sibling envs built from ONE parent `Rng` (exactly how
+/// `VecEnv::build` seeds its members) and driven by identical action
+/// sequences must diverge for EVERY scenario.  Before the seeded
+/// ring-phase / east-edge-jitter fixes in the scenario spawner,
+/// `defend_center` and `defend_line` consumed zero layout randomness and
+/// two siblings replayed byte-identical trajectories.
+#[test]
+fn siblings_from_one_rng_diverge_for_every_scenario() {
+    for def in registry::all() {
+        let mut parent = Rng::new(0xD1F5);
+        let mut a = make(def.spec, def.name, &mut parent)
+            .unwrap_or_else(|e| panic!("{}: {e}", def.name));
+        let mut b = make(def.spec, def.name, &mut parent)
+            .unwrap_or_else(|e| panic!("{}: {e}", def.name));
+        let sig_a = run_signature(&mut a, 400, 2024);
+        let sig_b = run_signature(&mut b, 400, 2024);
+        assert_ne!(
+            sig_a, sig_b,
+            "{}: siblings from one parent Rng replayed identical trajectories",
+            def.name
+        );
     }
 }
