@@ -29,6 +29,7 @@ bench-json:
 	cargo run --release --bin repro -- bench fifo --frames 50000
 	cargo run --release --bin repro -- bench scenarios --frames $(or $(SF_BENCH_FRAMES),5000)
 	cargo run --release --bin repro -- bench envs --frames $(or $(SF_BENCH_FRAMES),20000)
+	cargo run --release --bin repro -- bench pin --frames $(or $(SF_BENCH_FRAMES),20000)
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

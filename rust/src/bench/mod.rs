@@ -14,6 +14,7 @@ pub mod fifo;
 pub mod lag;
 pub mod multitask;
 pub mod pbt;
+pub mod pin;
 pub mod scenarios;
 pub mod throughput;
 pub mod walltime;

@@ -1,0 +1,298 @@
+//! Placement + kernel fast-path exhibit: `repro bench pin`.
+//!
+//! Three measurements on this machine, written to `BENCH_pin.json`:
+//!
+//! 1. **GEMM GFLOP/s** — the scalar micro-kernel vs the explicit-SIMD
+//!    path (`--features simd`; without the feature the "simd" row simply
+//!    re-measures scalar and `simd_compiled` records why) vs the i8
+//!    serving kernel, all on one doom-sized `[m,k]x[k,n]` problem.
+//! 2. **Batched policy inference** per `--inference_dtype` (f32/f16/i8):
+//!    frames/s and p50 batch latency through the exact `upload` +
+//!    `run_cached` path the policy workers use, plus the max |Δlogit|
+//!    vs f32 on identical inputs — the accuracy contract is checked in
+//!    the same place the speedup is claimed.
+//! 3. **Pinned vs unpinned end-to-end fps** — short APPO runs over a
+//!    worker sweep with `--cpu_affinity` off then on.  On a big box the
+//!    pinned column should win from ~8 workers up; on this 1-core
+//!    container the two columns are a wash (the plan degrades to a
+//!    single shared core), which the JSON records honestly.
+
+use anyhow::Result;
+
+pub fn run_cli(args: &[String]) -> Result<()> {
+    #[cfg(feature = "native")]
+    return native::run(args);
+    #[cfg(not(feature = "native"))]
+    {
+        let _ = args;
+        anyhow::bail!("bench pin requires the native backend (default feature)")
+    }
+}
+
+#[cfg(feature = "native")]
+mod native {
+    use anyhow::Result;
+
+    use crate::bench::{parse_bench_args, percentile, print_table, write_bench_json, write_csv};
+    use crate::config::{Config, InferenceDtype, Method};
+    use crate::coordinator::Trainer;
+    use crate::json::Json;
+    use crate::runtime::native::pool::NativePool;
+    use crate::runtime::native::{gemm, quant};
+    use crate::runtime::placement::{pin_current_thread, Topology};
+    use crate::runtime::{lit_f32, lit_u8, ModelPrograms, Runtime};
+    use crate::util::Rng;
+
+    /// Doom-sized GEMM: roughly the second conv layer's im2col product at
+    /// policy-batch scale (m = batch x out-pixels, k = c_in x 3 x 3, n = c_out).
+    const M: usize = 512;
+    const K: usize = 288;
+    const N: usize = 128;
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.next_f32() - 0.5).collect()
+    }
+
+    /// GFLOP/s of `gemm_nn` on the fixed problem, with the SIMD path
+    /// forced on or off.  Restores the default (on) before returning so
+    /// the toggle never leaks into later cells.
+    fn gemm_gflops(pool: &NativePool, iters: usize, simd: bool) -> f64 {
+        let mut rng = Rng::new(0x51D0);
+        let a = rand_vec(&mut rng, M * K);
+        let b = rand_vec(&mut rng, K * N);
+        let mut c = vec![0.0f32; M * N];
+        gemm::set_simd_enabled(simd);
+        for _ in 0..2 {
+            gemm::gemm_nn(pool, M, K, N, &a, &b, None, &mut c, false);
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            gemm::gemm_nn(pool, M, K, N, &a, &b, None, &mut c, false);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        gemm::set_simd_enabled(true);
+        (2 * M * K * N * iters) as f64 / wall.max(1e-9) / 1e9
+    }
+
+    /// Effective GFLOP/s of the i8 serving kernel (counting the same
+    /// 2mkn ops the f32 kernel would do, so the ratio is the speedup).
+    fn i8_gflops(pool: &NativePool, iters: usize) -> f64 {
+        let mut rng = Rng::new(0x51D1);
+        let w = rand_vec(&mut rng, K * N);
+        let bias = rand_vec(&mut rng, N);
+        let a = rand_vec(&mut rng, M * K);
+        let ql = quant::QuantizedLinear::from_f32(&w, &bias, K, N);
+        let (mut a_q, mut a_scale) = (Vec::new(), Vec::new());
+        let mut out = vec![0.0f32; M * N];
+        for _ in 0..2 {
+            quant::linear_i8_forward(pool, &ql, M, &a, &mut a_q, &mut a_scale, &mut out);
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            quant::linear_i8_forward(pool, &ql, M, &a, &mut a_q, &mut a_scale, &mut out);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        (2 * M * K * N * iters) as f64 / wall.max(1e-9) / 1e9
+    }
+
+    /// One inference cell: load `spec` at `dtype`, run the policy-worker
+    /// hot path (`upload` once, timed `run_cached` loop) on inputs fixed
+    /// across dtypes.  Returns (frames/s, p50 ms, batch, first logits).
+    fn infer_cell(
+        spec: &str,
+        dtype: InferenceDtype,
+        iters: usize,
+    ) -> Result<(f64, f64, usize, Vec<f32>)> {
+        let rt = Runtime::cpu()?;
+        let progs = ModelPrograms::load_with(&rt, "artifacts", spec, dtype)?;
+        let man = &progs.manifest;
+        let b = man.policy_batch;
+        let mut rng = Rng::new(0xbe9c);
+        let obs: Vec<u8> =
+            (0..b * man.obs_len()).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        let (hh, ww, cc) = (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
+        let obs_lit = lit_u8(&[b, hh, ww, cc], &obs)?;
+        let h_lit = lit_f32(&[b, man.hidden], &vec![0.0f32; b * man.hidden])?;
+        let params = progs.init_params(7)?;
+        let param_bufs = progs.policy.upload(&params.iter().collect::<Vec<_>>())?;
+        let logits = progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])?[0]
+            .as_f32()?
+            .to_vec();
+        for _ in 0..2 {
+            progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])?;
+        }
+        let mut lat_ms = Vec::with_capacity(iters);
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            let s = std::time::Instant::now();
+            progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])?;
+            lat_ms.push(s.elapsed().as_secs_f64() * 1e3);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let fps = (iters * b) as f64 / wall.max(1e-9);
+        Ok((fps, percentile(&lat_ms, 50.0), b, logits))
+    }
+
+    /// One short APPO run at `workers`, pinned or not.  A pinned run
+    /// narrows this (monitor) thread's affinity to the reserved set, so
+    /// restore the full online mask afterwards — later cells must
+    /// measure the machine, not a leftover mask.
+    fn fps_run(base: &Config, workers: usize, pinned: bool, frames: u64) -> Result<f64> {
+        let mut cfg = base.clone();
+        cfg.method = Method::Appo;
+        cfg.spec = "doomish".into();
+        cfg.scenario = "battle".into();
+        cfg.log_interval_s = 0.0;
+        cfg.total_env_frames = frames;
+        cfg.num_workers = workers;
+        cfg.envs_per_worker = 2;
+        cfg.cpu_affinity = pinned;
+        let res = Trainer::run(&cfg);
+        if pinned {
+            let all: Vec<usize> = Topology::detect().cpus.iter().map(|c| c.cpu).collect();
+            pin_current_thread(&all);
+        }
+        Ok(res?.fps)
+    }
+
+    pub fn run(args: &[String]) -> Result<()> {
+        let (base, extra) = parse_bench_args(Config::default(), args)?;
+        let frames = extra.frames.unwrap_or(if extra.full { 200_000 } else { 30_000 });
+        let gemm_iters = if extra.full { 64 } else { 16 };
+        let simd_compiled = cfg!(feature = "simd");
+        println!("== placement + kernel fast paths ==");
+
+        // -- 1. GEMM micro-kernels -------------------------------------
+        let pool = NativePool::global();
+        let scalar = gemm_gflops(pool, gemm_iters, false);
+        let simd = gemm_gflops(pool, gemm_iters, true);
+        let i8k = i8_gflops(pool, gemm_iters);
+        let kernel_rows: Vec<(&str, f64)> = vec![
+            ("scalar", scalar),
+            (if simd_compiled { "simd" } else { "simd (not compiled: = scalar)" }, simd),
+            ("i8", i8k),
+        ];
+        println!("-- gemm [{M}x{K}]x[{K}x{N}], {gemm_iters} iters --");
+        print_table(
+            &["kernel", "gflops", "vs scalar"],
+            &kernel_rows
+                .iter()
+                .map(|(name, g)| {
+                    vec![
+                        name.to_string(),
+                        format!("{g:.2}"),
+                        format!("{:.2}x", g / scalar.max(1e-9)),
+                    ]
+                })
+                .collect::<Vec<_>>(),
+        );
+
+        // -- 2. policy inference per dtype -----------------------------
+        let infer_iters = (frames / 1_000).clamp(20, 200) as usize;
+        println!("-- policy inference (doomish, {infer_iters} iters) --");
+        let mut infer_rows = Vec::new();
+        let mut infer_json = Vec::new();
+        let mut f32_logits: Vec<f32> = Vec::new();
+        for dtype in [InferenceDtype::F32, InferenceDtype::F16, InferenceDtype::I8] {
+            let (fps, p50, b, logits) = infer_cell("doomish", dtype, infer_iters)?;
+            if dtype == InferenceDtype::F32 {
+                f32_logits = logits.clone();
+            }
+            let delta = logits
+                .iter()
+                .zip(&f32_logits)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0, f64::max);
+            infer_rows.push(vec![
+                dtype.name().to_string(),
+                format!("{fps:.0}"),
+                format!("{p50:.3}"),
+                format!("{b}"),
+                format!("{delta:.2e}"),
+            ]);
+            infer_json.push(Json::obj(vec![
+                ("dtype", Json::str(dtype.name())),
+                ("fps", Json::num(fps)),
+                ("p50_ms", Json::num(p50)),
+                ("batch", Json::num(b as f64)),
+                ("max_abs_logit_delta_vs_f32", Json::num(delta)),
+            ]));
+        }
+        print_table(&["dtype", "fps", "p50_ms", "batch", "max|dlogit|"], &infer_rows);
+
+        // -- 3. pinned vs unpinned end-to-end fps ----------------------
+        let sweep: &[usize] = if extra.full { &[4, 8, 16] } else { &[2, 4, 8] };
+        println!("-- appo fps, cpu_affinity off vs on ({frames} frames/cell) --");
+        let mut place_rows = Vec::new();
+        let mut place_json = Vec::new();
+        for &w in sweep {
+            let unpinned = fps_run(&base, w, false, frames)?;
+            let pinned = fps_run(&base, w, true, frames)?;
+            eprintln!("  [workers={w}] unpinned={unpinned:.0} pinned={pinned:.0}");
+            place_rows.push(vec![
+                format!("{w}"),
+                format!("{unpinned:.0}"),
+                format!("{pinned:.0}"),
+                format!("{:.3}", pinned / unpinned.max(1e-9)),
+            ]);
+            place_json.push(Json::obj(vec![
+                ("workers", Json::num(w as f64)),
+                ("unpinned_fps", Json::num(unpinned)),
+                ("pinned_fps", Json::num(pinned)),
+            ]));
+        }
+        print_table(&["workers", "unpinned_fps", "pinned_fps", "ratio"], &place_rows);
+        write_csv(
+            "bench_results/pin_placement.csv",
+            &["workers", "unpinned_fps", "pinned_fps", "ratio"],
+            &place_rows,
+        )?;
+
+        write_bench_json(
+            "pin",
+            Json::obj(vec![
+                ("bench", Json::str("pin")),
+                ("unix_time", Json::num(crate::util::unix_time_s())),
+                (
+                    "config",
+                    Json::obj(vec![
+                        ("frames_per_cell", Json::num(frames as f64)),
+                        ("gemm_iters", Json::num(gemm_iters as f64)),
+                        ("infer_iters", Json::num(infer_iters as f64)),
+                        (
+                            "native_threads",
+                            Json::num(crate::runtime::native::pool::default_threads() as f64),
+                        ),
+                        ("simd_compiled", Json::Bool(simd_compiled)),
+                        (
+                            "topology",
+                            Json::str(&{
+                                let t = Topology::detect();
+                                let cores: std::collections::BTreeSet<(usize, usize)> =
+                                    t.cpus.iter().map(|c| (c.package, c.core)).collect();
+                                format!("{} cpus / {} cores", t.cpus.len(), cores.len())
+                            }),
+                        ),
+                    ]),
+                ),
+                (
+                    "gemm",
+                    Json::Arr(
+                        [("scalar", scalar), ("simd", simd), ("i8", i8k)]
+                            .iter()
+                            .map(|(k, g)| {
+                                Json::obj(vec![
+                                    ("kernel", Json::str(k)),
+                                    ("gflops", Json::num(*g)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("policy_inference", Json::Arr(infer_json)),
+                ("placement", Json::Arr(place_json)),
+            ]),
+        )?;
+        Ok(())
+    }
+}

@@ -48,6 +48,37 @@ impl Method {
     }
 }
 
+/// Numeric type of the policy worker's **inference** path
+/// (`--inference_dtype`).  Training is always f32; f16/i8 quantize only
+/// the serving GEMMs (per-row absmax i8 with i32 accumulate + f32
+/// dequant epilogue, or f16-stored weights), within the documented
+/// accuracy contract (<=1e-2 on logits; see README "Placement & SIMD").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InferenceDtype {
+    F32,
+    F16,
+    I8,
+}
+
+impl InferenceDtype {
+    pub fn parse(s: &str) -> Option<InferenceDtype> {
+        match s {
+            "f32" => Some(InferenceDtype::F32),
+            "f16" => Some(InferenceDtype::F16),
+            "i8" => Some(InferenceDtype::I8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InferenceDtype::F32 => "f32",
+            InferenceDtype::F16 => "f16",
+            InferenceDtype::I8 => "i8",
+        }
+    }
+}
+
 /// Population-based training settings (paper §3.5, §A.3.1).
 #[derive(Clone, Debug)]
 pub struct PbtConfig {
@@ -128,6 +159,18 @@ pub struct Config {
     pub hyper_overrides: BTreeMap<String, f32>,
     pub pbt: PbtConfig,
 
+    /// Pin threads to cores: rollout workers spread across physical
+    /// cores, policy/learner threads + native pool on a reserved set
+    /// (`runtime::placement`).  Off by default — behavior (and kernel
+    /// scheduling) is then exactly the unpinned baseline.
+    pub cpu_affinity: bool,
+    /// Physical cores reserved for the policy-worker/learner/pool side
+    /// when `cpu_affinity` is on.
+    pub reserved_cores: usize,
+    /// Inference numeric type for the policy-worker hot path
+    /// (f32|f16|i8).  Training stays f32 regardless.
+    pub inference_dtype: InferenceDtype,
+
     /// Episode-stat logging interval in seconds (0 = quiet).
     pub log_interval_s: f64,
     /// Directory for CSV/JSON run outputs.
@@ -156,6 +199,9 @@ impl Default for Config {
             seed: 42,
             hyper_overrides: BTreeMap::new(),
             pbt: PbtConfig::default(),
+            cpu_affinity: false,
+            reserved_cores: 1,
+            inference_dtype: InferenceDtype::F32,
             log_interval_s: 5.0,
             out_dir: "bench_results".into(),
             save_ckpt: false,
@@ -192,6 +238,13 @@ impl Config {
             "rollout" => self.rollout = p(key, value)?,
             "slot_slack" => self.slot_slack = p(key, value)?,
             "seed" => self.seed = p(key, value)?,
+            "cpu_affinity" => self.cpu_affinity = p(key, value)?,
+            "reserved_cores" => self.reserved_cores = p(key, value)?,
+            "inference_dtype" => {
+                self.inference_dtype = InferenceDtype::parse(value).ok_or_else(|| {
+                    format!("bad value '{value}' for {key} (expected f32|f16|i8)")
+                })?
+            }
             "log_interval_s" => self.log_interval_s = p(key, value)?,
             "out_dir" => self.out_dir = value.into(),
             "save_ckpt" => self.save_ckpt = p(key, value)?,
@@ -419,6 +472,23 @@ mod tests {
         let mut c = Config::default();
         assert!(c.set("num_wrokers", "3").is_err());
         assert!(c.set("method", "warp").is_err());
+    }
+
+    #[test]
+    fn placement_and_dtype_keys() {
+        let mut c = Config::default();
+        assert!(!c.cpu_affinity);
+        assert_eq!(c.inference_dtype, InferenceDtype::F32);
+        c.set("cpu_affinity", "true").unwrap();
+        c.set("reserved_cores", "2").unwrap();
+        c.set("inference_dtype", "i8").unwrap();
+        assert!(c.cpu_affinity);
+        assert_eq!(c.reserved_cores, 2);
+        assert_eq!(c.inference_dtype, InferenceDtype::I8);
+        c.set("inference_dtype", "f16").unwrap();
+        assert_eq!(c.inference_dtype, InferenceDtype::F16);
+        assert!(c.set("inference_dtype", "bf16").is_err());
+        assert!(c.set("cpu_affinity", "maybe").is_err());
     }
 
     #[test]

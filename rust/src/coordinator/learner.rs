@@ -184,8 +184,11 @@ pub fn run_learner(
             let filled = filled.clone();
             let policy_id = cfg.policy_id;
             std::thread::Builder::new()
-                .name(format!("assembly-{policy_id}"))
+                .name(format!("sf-learner-asm-{policy_id}"))
                 .spawn_scoped(s, move || {
+                    // Assembly is a memcpy stage feeding the train stage:
+                    // it lives on the reserved set with the learner.
+                    ctx.placement.pin_reserved();
                     run_assembly(ctx, policy_id, b, &free, &filled)
                 })
                 .expect("spawn assembly stage")

@@ -109,8 +109,31 @@ fn worker_scenario(cfg: &Config, worker: usize) -> (String, usize) {
 
 /// The full asynchronous architecture (paper Fig 1).
 pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
+    // Placement first: the pool hint must be installed before anything
+    // (model init, env construction) lazily spawns the global pool.  An
+    // invalid SF_PIN_CPUS is a hard startup error even with affinity off.
+    let placement = Arc::new(
+        crate::runtime::placement::PlacementPlan::compute(
+            cfg.cpu_affinity,
+            cfg.reserved_cores,
+            cfg.num_workers,
+        )
+        .map_err(|e| anyhow!(e))?,
+    );
+    placement.install_pool_hint();
+    if placement.is_enabled() {
+        eprintln!("[repro] {}", placement.describe());
+        // The monitor loop (this thread) belongs to the reserved set.
+        placement.pin_reserved();
+    }
+
     let rt = Runtime::cpu()?;
-    let progs = Arc::new(ModelPrograms::load(&rt, &cfg.artifacts_dir, &cfg.spec)?);
+    let progs = Arc::new(ModelPrograms::load_with(
+        &rt,
+        &cfg.artifacts_dir,
+        &cfg.spec,
+        cfg.inference_dtype,
+    )?);
     let man = &progs.manifest;
     cfg.validate_against_manifest(man.train_batch, man.rollout)
         .map_err(|e| anyhow!(e))?;
@@ -172,6 +195,7 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
         train_busy_ns: AtomicU64::new(0),
         store,
         progs: progs.clone(),
+        placement,
         meter: Arc::new(ThroughputMeter::new()),
         shutdown: Arc::new(AtomicBool::new(false)),
         frame_budget: cfg.total_env_frames,
@@ -200,8 +224,11 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
             let ps = param_store.clone();
             let lcfg = learner::LearnerCfg { policy_id: p as u32, hypers, copy_from };
             threads.push(std::thread::Builder::new()
-                .name(format!("learner-{p}"))
-                .spawn(move || learner::run_learner(&ctx, ps, state, lcfg))
+                .name(format!("sf-learner-{p}"))
+                .spawn(move || {
+                    ctx.placement.pin_reserved();
+                    learner::run_learner(&ctx, ps, state, lcfg)
+                })
                 .expect("spawn learner"));
         }
         // policy worker threads
@@ -214,8 +241,11 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
                 batch_linger: Duration::from_micros(200),
             };
             threads.push(std::thread::Builder::new()
-                .name(format!("policy-{p}-{w}"))
-                .spawn(move || policy_worker::run_policy_worker(&ctx, ps, pcfg))
+                .name(format!("sf-policy-{p}-{w}"))
+                .spawn(move || {
+                    ctx.placement.pin_reserved();
+                    policy_worker::run_policy_worker(&ctx, ps, pcfg)
+                })
                 .expect("spawn policy worker"));
         }
     }
@@ -250,8 +280,11 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
         };
         let ctx = ctx.clone();
         threads.push(std::thread::Builder::new()
-            .name(format!("rollout-{w}"))
-            .spawn(move || rollout::run_rollout_worker(&ctx, venv, producers, rcfg))
+            .name(format!("sf-rollout-{w}"))
+            .spawn(move || {
+                ctx.placement.pin_rollout(w);
+                rollout::run_rollout_worker(&ctx, venv, producers, rcfg)
+            })
             .expect("spawn rollout worker"));
     }
 

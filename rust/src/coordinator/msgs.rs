@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::ipc::{Fifo, ShardedQueue, SlotIdx, TrajStore};
+use crate::runtime::placement::PlacementPlan;
 use crate::runtime::ModelPrograms;
 use crate::stats::ThroughputMeter;
 
@@ -83,6 +84,9 @@ pub struct SharedCtx {
     pub train_busy_ns: AtomicU64,
     pub store: Arc<TrajStore>,
     pub progs: Arc<ModelPrograms>,
+    /// Affinity-aware thread placement (`--cpu_affinity`); every thread
+    /// body calls its `pin_*` method at start (no-op when disabled).
+    pub placement: Arc<PlacementPlan>,
     pub meter: Arc<ThroughputMeter>,
     pub shutdown: Arc<AtomicBool>,
     /// Env frames target; rollout workers stop sampling once reached.

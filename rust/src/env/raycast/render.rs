@@ -358,9 +358,11 @@ pub fn render(
 //   oracle's `fx += step_x` walk from column 0 up to the strip start (an
 //   analytic `fx0 + x * step` would round differently).
 // * Camera, HUD state and the far-to-near sprite draw list are gathered
-//   per frame into struct-of-arrays snapshots ([`BatchRenderScratch`]),
-//   using the oracle's exact sort; tasks read only those snapshots plus
-//   the immutable `GridMap`.
+//   per frame into per-stream [`GatherOut`] slots — a pooled wave of its
+//   own (wave 0), since each stream's gather writes only its own slot
+//   (disjoint `&mut`) and uses the oracle's exact candidate set and
+//   sort.  The raycast tasks read only those snapshots plus the
+//   immutable `GridMap`.
 
 /// Per-stream camera snapshot (everything the oracle derives from the
 /// player pose before its pixel loops).
@@ -400,17 +402,24 @@ struct SpriteCmd {
     color: [f32; 3],
 }
 
-/// Reusable buffers for [`render_batch`]: the struct-of-arrays gather
-/// (poses, HUD state, sprite tables) plus the shared column-major
-/// intermediate frame buffer.
+/// One stream's gather output: camera + HUD snapshots and the sprite
+/// draw list, produced by one wave-0 task into its own slot (disjoint
+/// `&mut` per stream, so the gather parallelizes without changing a
+/// byte of output).
+#[derive(Default)]
+struct GatherOut {
+    view: ViewSnap,
+    hud: HudSnap,
+    sprites: Vec<SpriteCmd>,
+    /// Sort scratch, retained per slot to avoid steady-state allocs.
+    order: Vec<(f32, usize, bool)>,
+}
+
+/// Reusable buffers for [`render_batch`]: the per-stream gather slots
+/// plus the shared column-major intermediate frame buffer.
 #[derive(Default)]
 pub struct BatchRenderScratch {
-    views: Vec<ViewSnap>,
-    huds: Vec<HudSnap>,
-    sprites: Vec<SpriteCmd>,
-    /// Per-stream `(start, end)` range into `sprites`.
-    sprite_ranges: Vec<(u32, u32)>,
-    order: Vec<(f32, usize, bool)>,
+    gathers: Vec<GatherOut>,
     /// Column-major pixels, one frame per stream:
     /// `colbuf[s * frame + (x * h + y) * c + ch]`.
     colbuf: Vec<u8>,
@@ -449,18 +458,21 @@ pub fn render_batch(
     assert!(ch >= 2, "render_batch requires c >= 2");
     let frame = w * h * ch;
 
-    let BatchRenderScratch { views, huds, sprites, sprite_ranges, order, colbuf } =
-        scratch;
-    views.clear();
-    huds.clear();
-    sprites.clear();
-    sprite_ranges.clear();
-    for s in 0..n {
-        let start = sprites.len() as u32;
-        let (view, hud) = gather_stream(worlds[s], players[s], obs, sprites, order);
-        views.push(view);
-        huds.push(hud);
-        sprite_ranges.push((start, sprites.len() as u32));
+    let BatchRenderScratch { gathers, colbuf } = scratch;
+    if gathers.len() < n {
+        gathers.resize_with(n, GatherOut::default);
+    }
+
+    // ---- wave 0: gather each stream's camera/HUD snapshot and sprite
+    // draw list into its own slot (disjoint `&mut` per stream).
+    {
+        let per_task = pool.rows_per_task(n, 1);
+        pool.par_chunks_mut(&mut gathers[..n], per_task, |ci, chunk| {
+            for (gi, g) in chunk.iter_mut().enumerate() {
+                let s = ci * per_task + gi;
+                gather_stream(worlds[s], players[s], obs, g);
+            }
+        });
     }
     colbuf.resize(n * frame, 0);
 
@@ -472,14 +484,12 @@ pub fn render_batch(
         let mut jobs: Vec<Job<'_>> = Vec::with_capacity(n * w.div_ceil(strip_cols));
         for (s, sframe) in colbuf.chunks_mut(frame).enumerate() {
             let map = &worlds[s].map;
-            let view = &views[s];
-            let hud = &huds[s];
-            let (lo, hi) = sprite_ranges[s];
-            let cmds = &sprites[lo as usize..hi as usize];
+            let g = &gathers[s];
+            let cmds = &g.sprites[..];
             for (ci, strip) in sframe.chunks_mut(strip_cols * h * ch).enumerate() {
                 let x0 = ci * strip_cols;
                 jobs.push(Box::new(move || {
-                    render_strip(map, view, cmds, hud, obs, heavy, x0, strip);
+                    render_strip(map, &g.view, cmds, &g.hud, obs, heavy, x0, strip);
                 }));
             }
         }
@@ -516,28 +526,25 @@ pub fn render_batch(
     }
 }
 
-/// Snapshot one stream's camera/HUD and append its sprite draw list (the
-/// oracle's exact candidate set, sort and per-sprite precomputation).
-fn gather_stream(
-    world: &World,
-    player: usize,
-    obs: ObsSpec,
-    sprites: &mut Vec<SpriteCmd>,
-    order: &mut Vec<(f32, usize, bool)>,
-) -> (ViewSnap, HudSnap) {
+/// Snapshot one stream's camera/HUD and rebuild its sprite draw list
+/// (the oracle's exact candidate set, sort and per-sprite
+/// precomputation) into its [`GatherOut`] slot.
+fn gather_stream(world: &World, player: usize, obs: ObsSpec, g: &mut GatherOut) {
+    let GatherOut { view, hud, sprites, order } = g;
     let (w, h) = (obs.w, obs.h);
     let view_h = h - HUD_ROWS.min(h / 4);
     let p = &world.players[player];
     let (dir_x, dir_y) = (p.angle.cos(), p.angle.sin());
     let (plane_x, plane_y) = (-dir_y * PLANE_SCALE, dir_x * PLANE_SCALE);
-    let view = ViewSnap { px: p.x, py: p.y, dir_x, dir_y, plane_x, plane_y };
-    let hud = HudSnap {
+    *view = ViewSnap { px: p.x, py: p.y, dir_x, dir_y, plane_x, plane_y };
+    *hud = HudSnap {
         health: p.health,
         armor: p.armor,
         weapon: p.weapon,
         ammo: p.ammo[p.weapon],
     };
 
+    sprites.clear();
     order.clear();
     for (i, e) in world.entities.iter().enumerate() {
         if e.alive {
@@ -588,7 +595,6 @@ fn gather_stream(
         let fog = 1.0 / (1.0 + trans_y * 0.15);
         sprites.push(SpriteCmd { trans_y, screen_x, sprite_w, x0, x1, y0, y1, fog, color });
     }
-    (view, hud)
 }
 
 /// Write one pixel of a column-major strip (same channel semantics as the

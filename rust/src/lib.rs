@@ -28,6 +28,10 @@
 // `unsafe fn` — a blanket-unsafe fn body hides exactly the invariants the
 // concurrency harness exists to pin down.
 #![deny(unsafe_op_in_unsafe_fn)]
+// The explicit-SIMD GEMM micro-kernel (`runtime::native::gemm`) uses
+// `std::simd`, which is nightly-only; the `simd` cargo feature opts in
+// (CI runs a dedicated nightly lane).  Default builds stay stable.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod baselines;
 pub mod bench;

@@ -5,7 +5,7 @@
 //!   bench  <exhibit> [--key value ...]           regenerate a paper exhibit
 //!          exhibits: throughput | table1 | walltime | scenarios | battle |
 //!                    pbt-duel | pbt-throughput | multitask | envs | fifo |
-//!                    lag
+//!                    lag | pin
 //!   eval   --ckpt F [--episodes N] [--greedy b]  evaluate a checkpoint
 //!   match  --ckpt-a A --ckpt-b B [--matches N]   1v1 duel between checkpoints
 //!   render [--ckpt F] --out DIR [--n N]          dump episode frames (PPM)
@@ -214,6 +214,7 @@ fn cmd_bench(args: &[String]) {
         "envs" => bench::envstep::run_cli(rest),
         "fifo" => bench::fifo::run_cli(rest),
         "lag" => bench::lag::run_cli(rest),
+        "pin" => bench::pin::run_cli(rest),
         _ => {
             eprintln!("unknown exhibit '{exhibit}'");
             std::process::exit(2);

@@ -30,6 +30,7 @@ pub mod literal;
 pub mod literals;
 pub mod manifest;
 pub mod params;
+pub mod placement;
 
 #[cfg(feature = "native")]
 pub mod native;
@@ -127,6 +128,26 @@ pub trait Program: Send + Sync {
 pub trait Backend: Send + Sync {
     fn platform(&self) -> String;
     fn load_model(&self, artifacts_dir: &str, spec: &str) -> Result<LoadedModel>;
+
+    /// Like [`Backend::load_model`], but with a reduced-precision
+    /// **inference** dtype (`--inference_dtype f16|i8`) for the policy
+    /// program's serving hot path.  Training is always f32.  Backends
+    /// without a quantized path (PJRT) keep this default, which rejects
+    /// anything but f32 instead of silently serving full precision.
+    fn load_model_with(
+        &self,
+        artifacts_dir: &str,
+        spec: &str,
+        dtype: crate::config::InferenceDtype,
+    ) -> Result<LoadedModel> {
+        if dtype != crate::config::InferenceDtype::F32 {
+            return Err(anyhow!(
+                "backend '{}' supports only --inference_dtype f32",
+                self.platform()
+            ));
+        }
+        self.load_model(artifacts_dir, spec)
+    }
 }
 
 /// What [`Backend::load_model`] produces.
@@ -256,9 +277,22 @@ impl ModelPrograms {
     /// the model from the built-in spec table (no `make artifacts` needed);
     /// on PJRT it parses `artifacts_dir/<spec>/` and compiles the HLO.
     pub fn load(rt: &Runtime, artifacts_dir: &str, spec: &str) -> Result<Self> {
+        Self::load_with(rt, artifacts_dir, spec, crate::config::InferenceDtype::F32)
+    }
+
+    /// [`ModelPrograms::load`] with an explicit inference dtype for the
+    /// policy program (`--inference_dtype`).  f16/i8 affect only the
+    /// serving path (`policy.upload` + `policy.run_cached`); `init` and
+    /// `train` stay f32 and bit-identical.
+    pub fn load_with(
+        rt: &Runtime,
+        artifacts_dir: &str,
+        spec: &str,
+        dtype: crate::config::InferenceDtype,
+    ) -> Result<Self> {
         let LoadedModel { manifest, init, policy, train } = rt
             .backend
-            .load_model(artifacts_dir, spec)
+            .load_model_with(artifacts_dir, spec, dtype)
             .with_context(|| format!("loading model for spec '{spec}'"))?;
         Ok(ModelPrograms { manifest, init, policy, train })
     }

@@ -28,9 +28,77 @@
 //! source vectorizes on any target.  The scalar reference's `v == 0.0`
 //! skip branch is deliberately absent — it defeated vectorization for a
 //! ~2x-at-best sparsity win.
+//!
+//! ## Explicit SIMD (`--features simd`, nightly)
+//!
+//! With the `simd` cargo feature the innermost fused multiply-add row
+//! runs through a `std::simd::f32x8` micro-kernel ([`fma_row`]).  Each
+//! `C` element still receives exactly one `mul` followed by one `add`
+//! per `k` step, in the same ascending-`k` order, and `std::simd`
+//! lane ops are strict IEEE (no FMA contraction) — so the SIMD path is
+//! *bit-identical* to the scalar path by construction; the property
+//! tests assert exact equality.  [`set_simd_enabled`] is a runtime
+//! kill-switch so benchmarks can A/B scalar vs SIMD in one process;
+//! the default build (no feature) compiles the scalar path only.
+
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use super::ops::{sigmoid, ConvGeom};
 use super::pool::NativePool;
+
+/// Runtime kill-switch for the explicit-SIMD micro-kernel (stored
+/// inverted so the static's `false` default means "on when compiled
+/// in").  Only consulted once per GEMM block, never in the inner loop.
+static SIMD_OFF: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable the `f32x8` micro-kernel at runtime (benchmark A/B
+/// and the bit-identity property tests).  No-op without
+/// `--features simd`.
+pub fn set_simd_enabled(on: bool) {
+    SIMD_OFF.store(!on, Ordering::Relaxed);
+}
+
+/// True when the explicit-SIMD micro-kernel is compiled in *and* not
+/// disabled via [`set_simd_enabled`].
+pub fn simd_enabled() -> bool {
+    cfg!(feature = "simd") && !SIMD_OFF.load(Ordering::Relaxed)
+}
+
+/// `c_row[j] += av * b_row[j]` — the innermost GEMM row, dispatched
+/// once per block (`use_simd` is hoisted out of the panel loops).
+#[inline(always)]
+fn fma_row(use_simd: bool, c_row: &mut [f32], av: f32, b_row: &[f32]) {
+    #[cfg(feature = "simd")]
+    if use_simd {
+        return fma_row_simd(c_row, av, b_row);
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = use_simd;
+    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+        *cv += av * bv;
+    }
+}
+
+/// `f32x8` lane version of [`fma_row`].  Per element this is the same
+/// `mul` + `add` pair as the scalar loop (elements are independent
+/// across `n`), so results are bit-identical.
+#[cfg(feature = "simd")]
+fn fma_row_simd(c_row: &mut [f32], av: f32, b_row: &[f32]) {
+    use std::simd::f32x8;
+    const L: usize = 8;
+    let vec_len = (c_row.len() / L) * L;
+    let (c_vec, c_tail) = c_row.split_at_mut(vec_len);
+    let (b_vec, b_tail) = b_row.split_at(vec_len);
+    let avv = f32x8::splat(av);
+    for (cc, bb) in c_vec.chunks_exact_mut(L).zip(b_vec.chunks_exact(L)) {
+        let c = f32x8::from_slice(cc);
+        let b = f32x8::from_slice(bb);
+        (c + avv * b).copy_to_slice(cc);
+    }
+    for (cv, &bv) in c_tail.iter_mut().zip(b_tail) {
+        *cv += av * bv;
+    }
+}
 
 /// Row-panel height of the micro-kernel: each loaded `B` row is applied
 /// to this many `A` rows / `C` rows.
@@ -89,6 +157,7 @@ fn nn_block(
     accumulate: bool,
 ) {
     let rows = c_chunk.len() / n;
+    let use_simd = simd_enabled();
     if !accumulate {
         match bias {
             Some(bias) => {
@@ -110,10 +179,7 @@ fn nn_block(
                 let b_row = &b[(k0 + kk) * n..][..n];
                 for r in 0..ir {
                     let av = a[(r0 + i + r) * k + k0 + kk];
-                    let c_row = &mut c_panel[r * n..][..n];
-                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                        *cv += av * bv;
-                    }
+                    fma_row(use_simd, &mut c_panel[r * n..][..n], av, b_row);
                 }
             }
             i += ir;
@@ -149,15 +215,13 @@ pub fn gemm_tn(
 
 fn tn_block(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, kk0: usize, c_chunk: &mut [f32]) {
     let kc = c_chunk.len() / n;
+    let use_simd = simd_enabled();
     for i in 0..m {
         let a_row = &a[i * k..][..k];
         let b_row = &b[i * n..][..n];
         for kk in 0..kc {
             let av = a_row[kk0 + kk];
-            let c_row = &mut c_chunk[kk * n..][..n];
-            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                *cv += av * bv;
-            }
+            fma_row(use_simd, &mut c_chunk[kk * n..][..n], av, b_row);
         }
     }
 }

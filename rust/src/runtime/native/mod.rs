@@ -25,6 +25,7 @@
 pub mod gemm;
 pub mod ops;
 pub mod pool;
+pub mod quant;
 mod train;
 
 use std::sync::{Arc, Mutex};
@@ -32,7 +33,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, Result};
 
 use super::manifest::{Manifest, ParamDef};
-use super::{Backend, Executable, Literal, LoadedModel, Program};
+use super::{Backend, DeviceBuffers, Executable, HostCache, Literal, LoadedModel, Program};
+use crate::config::InferenceDtype;
 use crate::util::Rng;
 use ops::ConvGeom;
 use pool::NativePool;
@@ -710,6 +712,28 @@ impl Backend for NativeBackend {
             ),
         })
     }
+
+    /// The native backend's quantized serving path: f16/i8 swap in a
+    /// [`PolicyProgram`] whose `upload` quantizes the published
+    /// parameters once per version and whose `run_cached` runs the
+    /// reduced-precision forward.  `init`/`train` (and the plain
+    /// `policy.run`, used by the `SF_NO_PARAM_CACHE` ablation) stay f32.
+    fn load_model_with(
+        &self,
+        artifacts_dir: &str,
+        spec: &str,
+        dtype: InferenceDtype,
+    ) -> Result<LoadedModel> {
+        let mut lm = self.load_model(artifacts_dir, spec)?;
+        if dtype != InferenceDtype::F32 {
+            let def = Arc::new(ModelDef::builtin(spec)?);
+            lm.policy = Executable::new(
+                format!("native:{spec}/policy[{}]", dtype.name()),
+                Box::new(PolicyProgram::with_dtype(def, dtype)),
+            );
+        }
+        Ok(lm)
+    }
 }
 
 /// `init`: u32 seed -> fresh parameters (He-style init, zero biases,
@@ -756,6 +780,11 @@ struct PolicyScratch {
     w_all: Vec<f32>,
     b_all: Vec<f32>,
     out_all: Vec<f32>,
+    /// i8 path: quantized activations + per-row scales.
+    a_q: Vec<i8>,
+    a_scale: Vec<f32>,
+    /// f16 path: per-layer weight decode panel.
+    wf: Vec<f32>,
 }
 
 /// `policy`: params + u8 obs (B,H,W,C) + f32 h (B,hidden) ->
@@ -766,13 +795,187 @@ struct PolicyScratch {
 /// single GEMMs (heads and value are packed into one weight matrix).
 struct PolicyProgram {
     def: Arc<ModelDef>,
+    /// Serving dtype for the cached-parameter path
+    /// (`upload`/`run_cached`); plain `run` is always f32.
+    dtype: InferenceDtype,
     scratch: Mutex<Vec<PolicyScratch>>,
+}
+
+/// Pre-quantized parameter set built once per published version by
+/// [`PolicyProgram::upload`]: every serving GEMM weight (conv stack via
+/// im2col, fc, packed heads+value) in reduced precision, plus a full
+/// f32 literal snapshot for the GRU step (recurrence stays f32 for
+/// stability) and shape validation.
+enum QuantPlan {
+    I8 {
+        conv: Vec<quant::QuantizedLinear>,
+        fc: quant::QuantizedLinear,
+        heads: quant::QuantizedLinear,
+    },
+    F16 {
+        conv: Vec<quant::F16Matrix>,
+        fc: quant::F16Matrix,
+        heads: quant::F16Matrix,
+        heads_bias: Vec<f32>,
+    },
+}
+
+struct QuantCache {
+    lits: Vec<Literal>,
+    plan: QuantPlan,
 }
 
 impl PolicyProgram {
     fn new(def: Arc<ModelDef>) -> PolicyProgram {
-        PolicyProgram { def, scratch: Mutex::new(Vec::new()) }
+        PolicyProgram::with_dtype(def, InferenceDtype::F32)
     }
+
+    fn with_dtype(def: Arc<ModelDef>, dtype: InferenceDtype) -> PolicyProgram {
+        PolicyProgram { def, dtype, scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Validate obs/h shapes against the def, returning the batch size.
+    fn batch_of(&self, obs: &[u8], h_in: &[f32]) -> Result<usize> {
+        let def = &*self.def;
+        let obs_len = def.obs_len();
+        if obs.len() % obs_len != 0 {
+            return Err(anyhow!(
+                "policy obs has {} bytes, not a multiple of frame size {obs_len}",
+                obs.len()
+            ));
+        }
+        let b = obs.len() / obs_len;
+        if h_in.len() != b * def.hidden {
+            return Err(anyhow!(
+                "policy h has {} elements, expected {b} x {}",
+                h_in.len(),
+                def.hidden
+            ));
+        }
+        Ok(b)
+    }
+
+    /// The full policy forward: encoder (f32 or quantized), f32 GRU,
+    /// heads+value output layer (f32 or quantized).  `plan: None` is
+    /// the exact f32 path `run` has always used.
+    fn forward(
+        &self,
+        pv: &ParamView,
+        plan: Option<&QuantPlan>,
+        obs: &[u8],
+        h_in: &[f32],
+        b: usize,
+    ) -> Result<Vec<Literal>> {
+        let def = &*self.def;
+        let hidden = def.hidden;
+        let pool = NativePool::global();
+        let mut s = self.scratch.lock().unwrap().pop().unwrap_or_default();
+
+        // Encoder: conv stack + fc, whole batch at once.
+        match plan {
+            None => encode_batch(def, pv, pool, obs, b, &mut s.enc),
+            Some(plan) => encode_batch_quant(def, pv, plan, pool, obs, b, &mut s),
+        }
+
+        // GRU step for all rows (two gate GEMMs + elementwise gates).
+        let mut h_out = vec![0.0f32; b * hidden];
+        gemm::gru_forward_batch(
+            pool, b, def.fc_dim, hidden, &s.enc.emb, h_in, pv.gru_wx, pv.gru_wh,
+            pv.gru_b, &mut h_out, &mut s.gx, &mut s.gh, None,
+        );
+
+        // Heads + value as one packed GEMM.
+        let ta = def.total_actions();
+        let ta1 = ta + 1;
+        s.out_all.resize(b * ta1, 0.0);
+        match plan {
+            None => {
+                pack_heads_value(def, pv, &mut s.w_all, &mut s.b_all);
+                gemm::gemm_nn(
+                    pool, b, hidden, ta1, &h_out, &s.w_all, Some(&s.b_all),
+                    &mut s.out_all, false,
+                );
+            }
+            Some(QuantPlan::I8 { heads, .. }) => quant::linear_i8_forward(
+                pool, heads, b, &h_out, &mut s.a_q, &mut s.a_scale, &mut s.out_all,
+            ),
+            Some(QuantPlan::F16 { heads, heads_bias, .. }) => {
+                heads.decode_into(&mut s.wf);
+                gemm::gemm_nn(
+                    pool, b, hidden, ta1, &h_out, &s.wf, Some(heads_bias),
+                    &mut s.out_all, false,
+                );
+            }
+        }
+        let mut logits = vec![0.0f32; b * ta];
+        let mut values = vec![0.0f32; b];
+        for i in 0..b {
+            logits[i * ta..(i + 1) * ta]
+                .copy_from_slice(&s.out_all[i * ta1..i * ta1 + ta]);
+            values[i] = s.out_all[i * ta1 + ta];
+        }
+        self.scratch.lock().unwrap().push(s);
+        Ok(vec![
+            Literal::f32(&[b, ta], logits)?,
+            Literal::f32(&[b], values)?,
+            Literal::f32(&[b, hidden], h_out)?,
+        ])
+    }
+}
+
+/// Quantized twin of [`encode_batch`]: identical structure (im2col +
+/// one GEMM per conv layer, one fc GEMM, relu after each), with every
+/// GEMM dispatched through the plan's reduced-precision weights.
+fn encode_batch_quant(
+    def: &ModelDef,
+    pv: &ParamView,
+    plan: &QuantPlan,
+    pool: &NativePool,
+    obs_u8: &[u8],
+    nb: usize,
+    s: &mut PolicyScratch,
+) {
+    let obs_len = def.obs_len();
+    debug_assert_eq!(obs_u8.len(), nb * obs_len);
+    let PolicyScratch { enc, a_q, a_scale, wf, .. } = s;
+    let EncScratch { xs, acts, emb, cols } = enc;
+    xs.resize(nb * obs_len, 0.0);
+    for (dst, &src) in xs.iter_mut().zip(obs_u8) {
+        *dst = src as f32 * (1.0 / 255.0);
+    }
+    acts.resize(def.geoms.len(), Vec::new());
+    for (i, g) in def.geoms.iter().enumerate() {
+        let (prev, rest) = acts.split_at_mut(i);
+        let inp: &[f32] = if i == 0 { xs.as_slice() } else { &prev[i - 1] };
+        let out = &mut rest[0];
+        out.resize(nb * g.out_len(), 0.0);
+        let krow = gemm::im2col_row_len(g);
+        let m = nb * g.h_out * g.w_out;
+        cols.resize(m * krow, 0.0);
+        gemm::im2col(pool, g, nb, inp, cols);
+        match plan {
+            QuantPlan::I8 { conv, .. } => {
+                quant::linear_i8_forward(pool, &conv[i], m, cols, a_q, a_scale, out)
+            }
+            QuantPlan::F16 { conv, .. } => {
+                conv[i].decode_into(wf);
+                gemm::gemm_nn(pool, m, krow, g.c_out, cols, wf, Some(pv.conv_b[i]), out, false);
+            }
+        }
+        gemm::relu_batch(pool, out);
+    }
+    emb.resize(nb * def.fc_dim, 0.0);
+    let last = &acts[def.geoms.len() - 1];
+    match plan {
+        QuantPlan::I8 { fc, .. } => {
+            quant::linear_i8_forward(pool, fc, nb, last, a_q, a_scale, emb)
+        }
+        QuantPlan::F16 { fc, .. } => {
+            fc.decode_into(wf);
+            gemm::gemm_nn(pool, nb, def.flat, def.fc_dim, last, wf, Some(pv.fc_b), emb, false);
+        }
+    }
+    gemm::relu_batch(pool, emb);
 }
 
 impl Program for PolicyProgram {
@@ -789,56 +992,77 @@ impl Program for PolicyProgram {
         let pv = ParamView::parse(def, &inputs[..n])?;
         let obs = inputs[n].as_u8()?;
         let h_in = inputs[n + 1].as_f32()?;
-        let obs_len = def.obs_len();
-        if obs.len() % obs_len != 0 {
-            return Err(anyhow!(
-                "policy obs has {} bytes, not a multiple of frame size {obs_len}",
-                obs.len()
-            ));
-        }
-        let b = obs.len() / obs_len;
-        let hidden = def.hidden;
-        if h_in.len() != b * hidden {
-            return Err(anyhow!(
-                "policy h has {} elements, expected {b} x {hidden}",
-                h_in.len()
-            ));
-        }
-        let pool = NativePool::global();
-        let mut s = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        let b = self.batch_of(obs, h_in)?;
+        self.forward(&pv, None, obs, h_in, b)
+    }
 
-        // Encoder: conv stack + fc, whole batch at once.
-        encode_batch(def, &pv, pool, obs, b, &mut s.enc);
-
-        // GRU step for all rows (two gate GEMMs + elementwise gates).
-        let mut h_out = vec![0.0f32; b * hidden];
-        gemm::gru_forward_batch(
-            pool, b, def.fc_dim, hidden, &s.enc.emb, h_in, pv.gru_wx, pv.gru_wh,
-            pv.gru_b, &mut h_out, &mut s.gx, &mut s.gh, None,
-        );
-
-        // Heads + value as one packed GEMM.
-        let ta = def.total_actions();
-        let ta1 = ta + 1;
-        pack_heads_value(def, &pv, &mut s.w_all, &mut s.b_all);
-        s.out_all.resize(b * ta1, 0.0);
-        gemm::gemm_nn(
-            pool, b, hidden, ta1, &h_out, &s.w_all, Some(&s.b_all), &mut s.out_all,
-            false,
-        );
-        let mut logits = vec![0.0f32; b * ta];
-        let mut values = vec![0.0f32; b];
-        for i in 0..b {
-            logits[i * ta..(i + 1) * ta]
-                .copy_from_slice(&s.out_all[i * ta1..i * ta1 + ta]);
-            values[i] = s.out_all[i * ta1 + ta];
+    fn upload(&self, inputs: &[&Literal]) -> Result<DeviceBuffers> {
+        let lits: Vec<Literal> = inputs.iter().map(|l| (*l).clone()).collect();
+        if self.dtype == InferenceDtype::F32 {
+            return Ok(DeviceBuffers::new(HostCache(lits)));
         }
-        self.scratch.lock().unwrap().push(s);
-        Ok(vec![
-            Literal::f32(&[b, ta], logits)?,
-            Literal::f32(&[b], values)?,
-            Literal::f32(&[b, hidden], h_out)?,
-        ])
+        let def = &*self.def;
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let pv = ParamView::parse(def, &refs)?;
+        let (mut w_all, mut b_all) = (Vec::new(), Vec::new());
+        pack_heads_value(def, &pv, &mut w_all, &mut b_all);
+        let ta1 = def.total_actions() + 1;
+        let plan = match self.dtype {
+            InferenceDtype::I8 => QuantPlan::I8 {
+                conv: def
+                    .geoms
+                    .iter()
+                    .enumerate()
+                    .map(|(i, g)| {
+                        quant::QuantizedLinear::from_f32(
+                            pv.conv_w[i],
+                            pv.conv_b[i],
+                            gemm::im2col_row_len(g),
+                            g.c_out,
+                        )
+                    })
+                    .collect(),
+                fc: quant::QuantizedLinear::from_f32(pv.fc_w, pv.fc_b, def.flat, def.fc_dim),
+                heads: quant::QuantizedLinear::from_f32(&w_all, &b_all, def.hidden, ta1),
+            },
+            InferenceDtype::F16 => QuantPlan::F16 {
+                conv: def
+                    .geoms
+                    .iter()
+                    .enumerate()
+                    .map(|(i, g)| {
+                        quant::F16Matrix::from_f32(pv.conv_w[i], gemm::im2col_row_len(g), g.c_out)
+                    })
+                    .collect(),
+                fc: quant::F16Matrix::from_f32(pv.fc_w, def.flat, def.fc_dim),
+                heads: quant::F16Matrix::from_f32(&w_all, def.hidden, ta1),
+                heads_bias: b_all,
+            },
+            InferenceDtype::F32 => unreachable!("handled above"),
+        };
+        Ok(DeviceBuffers::new(QuantCache { lits, plan }))
+    }
+
+    fn run_cached(&self, cached: &DeviceBuffers, fresh: &[&Literal]) -> Result<Vec<Literal>> {
+        if let Some(host) = cached.downcast_ref::<HostCache>() {
+            let mut refs: Vec<&Literal> = Vec::with_capacity(host.0.len() + fresh.len());
+            refs.extend(host.0.iter());
+            refs.extend_from_slice(fresh);
+            return self.run(&refs);
+        }
+        let qc = cached
+            .downcast_ref::<QuantCache>()
+            .ok_or_else(|| anyhow!("input cache was created by a different backend"))?;
+        if fresh.len() != 2 {
+            return Err(anyhow!("quantized policy expects obs + h, got {} inputs", fresh.len()));
+        }
+        let def = &*self.def;
+        let refs: Vec<&Literal> = qc.lits.iter().collect();
+        let pv = ParamView::parse(def, &refs)?;
+        let obs = fresh[0].as_u8()?;
+        let h_in = fresh[1].as_f32()?;
+        let b = self.batch_of(obs, h_in)?;
+        self.forward(&pv, Some(&qc.plan), obs, h_in, b)
     }
 }
 
@@ -906,5 +1130,54 @@ mod tests {
         assert_eq!(logits[..5], logits[5..10]);
         let h_new = out[2].as_f32().unwrap();
         assert!(h_new.iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn quantized_policy_tracks_f32_and_plain_run_stays_exact() {
+        let def = Arc::new(ModelDef::builtin("tiny").unwrap());
+        let init = InitProgram { def: def.clone() };
+        let seed = Literal::u32_scalar(7);
+        let params = init.run(&[&seed]).unwrap();
+        let b = 4;
+        let mut rng = crate::util::Rng::new(9);
+        let obs_data: Vec<u8> =
+            (0..b * def.obs_len()).map(|_| rng.range_f32(0.0, 255.0) as u8).collect();
+        let obs = lit_u8(&[b, 24, 32, 3], &obs_data).unwrap();
+        let h_data: Vec<f32> =
+            (0..b * def.hidden).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let h = lit_f32(&[b, def.hidden], &h_data).unwrap();
+        let param_refs: Vec<&Literal> = params.iter().collect();
+        let mut full: Vec<&Literal> = param_refs.clone();
+        full.push(&obs);
+        full.push(&h);
+
+        let f32_prog = PolicyProgram::new(def.clone());
+        let cache = f32_prog.upload(&param_refs).unwrap();
+        let want = f32_prog.run_cached(&cache, &[&obs, &h]).unwrap();
+
+        for dtype in [InferenceDtype::F16, InferenceDtype::I8] {
+            let prog = PolicyProgram::with_dtype(def.clone(), dtype);
+            // The cached (serving) path is quantized but must track f32.
+            let cache = prog.upload(&param_refs).unwrap();
+            let got = prog.run_cached(&cache, &[&obs, &h]).unwrap();
+            for (wl, gl) in want.iter().zip(&got) {
+                for (i, (&w, &g)) in
+                    wl.as_f32().unwrap().iter().zip(gl.as_f32().unwrap()).enumerate()
+                {
+                    assert!(
+                        (w - g).abs() <= 0.1,
+                        "{}[{i}]: f32 {w} vs {} {g}",
+                        "quantized output",
+                        dtype.name()
+                    );
+                }
+            }
+            // Plain `run` must stay the exact f32 path (bit-identical).
+            let exact = prog.run(&full).unwrap();
+            let base = f32_prog.run(&full).unwrap();
+            for (el, bl) in exact.iter().zip(&base) {
+                assert_eq!(el.as_f32().unwrap(), bl.as_f32().unwrap());
+            }
+        }
     }
 }

@@ -113,10 +113,16 @@ impl NativePool {
             work: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
-        for _ in 1..threads {
+        for i in 1..threads {
             let sh = Arc::clone(&shared);
             // Detached: workers exit when `shutdown` flips (see Drop).
-            let _ = thread::spawn_named("sf-native-pool", move || worker_loop(sh));
+            // Indexed names so `perf`/`top`/TSan reports are attributable.
+            let _ = thread::spawn_named(&format!("sf-pool-{i}"), move || {
+                // Pin to the reserved set when a placement plan installed
+                // one before this worker spawned (no-op otherwise).
+                crate::runtime::placement::pin_native_pool_thread();
+                worker_loop(sh)
+            });
         }
         NativePool { shared, threads }
     }
@@ -245,16 +251,36 @@ fn worker_loop(shared: Arc<Shared>) {
 }
 
 /// `SF_NATIVE_THREADS` override, else `available_parallelism` capped.
+/// An *invalid* override is a hard startup error — the old silent
+/// fallback meant a typo like `SF_NATIVE_THREADS=4x` quietly benchmarked
+/// the default thread count.
 pub fn default_threads() -> usize {
-    if let Ok(s) = std::env::var("SF_NATIVE_THREADS") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            return n.max(1);
-        }
+    match parse_threads_env(std::env::var("SF_NATIVE_THREADS").ok().as_deref()) {
+        Ok(Some(n)) => n,
+        Ok(None) => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_DEFAULT_THREADS),
+        Err(msg) => panic!("{msg}"),
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(MAX_DEFAULT_THREADS)
+}
+
+/// Parse the `SF_NATIVE_THREADS` value (`None` = unset).  Split out pure
+/// so the error cases are unit-testable without mutating process env.
+pub fn parse_threads_env(v: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(s) = v else { return Ok(None) };
+    match s.trim().parse::<usize>() {
+        Ok(0) => Err(
+            "SF_NATIVE_THREADS must be a positive integer, got 0 \
+             (unset it to use all cores)"
+                .into(),
+        ),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => Err(format!(
+            "invalid SF_NATIVE_THREADS '{s}': expected a positive integer \
+             (unset it to use all cores)"
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -336,6 +362,46 @@ mod tests {
             }));
         }
         pool.run(jobs);
+    }
+
+    #[test]
+    fn worker_threads_are_named() {
+        // 3 total threads = caller + 2 spawned workers.  A 3-way barrier
+        // inside the jobs forces all three to run one job concurrently, so
+        // both workers must participate and report their thread names.
+        let pool = NativePool::new(3);
+        let barrier = std::sync::Barrier::new(3);
+        let names = std::sync::Mutex::new(Vec::<Option<String>>::new());
+        let mut jobs: Vec<Job<'_>> = Vec::new();
+        for _ in 0..3 {
+            let (b, n) = (&barrier, &names);
+            jobs.push(Box::new(move || {
+                b.wait();
+                n.lock()
+                    .unwrap()
+                    .push(std::thread::current().name().map(|s| s.to_string()));
+            }));
+        }
+        pool.run(jobs);
+        let names = names.into_inner().unwrap();
+        let mut workers: Vec<&str> = names
+            .iter()
+            .filter_map(|n| n.as_deref())
+            .filter(|n| n.starts_with("sf-pool-"))
+            .collect();
+        workers.sort_unstable();
+        assert_eq!(workers, vec!["sf-pool-1", "sf-pool-2"], "all names: {names:?}");
+    }
+
+    #[test]
+    fn invalid_thread_override_is_a_hard_error() {
+        // Regression: these used to fall back silently to the default.
+        assert!(parse_threads_env(Some("4x")).is_err());
+        assert!(parse_threads_env(Some("")).is_err());
+        assert!(parse_threads_env(Some("-2")).is_err());
+        assert!(parse_threads_env(Some("0")).is_err());
+        assert_eq!(parse_threads_env(Some(" 8 ")), Ok(Some(8)));
+        assert_eq!(parse_threads_env(None), Ok(None));
     }
 
     #[test]

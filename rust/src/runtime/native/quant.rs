@@ -1,0 +1,323 @@
+//! Reduced-precision **inference** kernels for the native backend
+//! (`--inference_dtype f16|i8`).
+//!
+//! Training is always f32 and bit-identical; these kernels touch only
+//! the policy program's serving path, where the paper's asynchronous
+//! architecture makes inference throughput (not gradient fidelity) the
+//! bottleneck.  Two schemes:
+//!
+//! * **f16** — weights stored as IEEE 754 binary16 bit patterns
+//!   (hand-rolled round-to-nearest-even conversion; no external crate)
+//!   and decoded into an f32 scratch panel once per forward, so the
+//!   GEMM itself runs through the ordinary [`super::gemm`] path.  The
+//!   `O(k*n)` decode amortizes over the batch's `m` rows.
+//! * **i8** — per-output-feature absmax weight quantization done once
+//!   per published parameter version, per-row dynamic absmax
+//!   activation quantization per forward, i32-accumulated dot products
+//!   (a form LLVM auto-vectorizes at 4x the f32 lane width), and an
+//!   f32 dequantize + bias epilogue.  Weights are stored *transposed*
+//!   (`[n][k]` row-major) so each dot product streams two contiguous
+//!   i8 rows.
+//!
+//! Accuracy contract (asserted by `rust/tests/prop_kernels.rs` and the
+//! analytic-bound unit tests below): for the builtin specs the i8/f16
+//! policy logits stay within `1e-2` of f32 at published-checkpoint
+//! scales, and any argmax flip is confined to rows whose f32 top-2
+//! logit gap is already inside the quantization noise floor.
+
+use super::pool::NativePool;
+
+// ---------------------------------------------------------------------------
+// f16 (IEEE binary16) bit conversion
+// ---------------------------------------------------------------------------
+
+/// f32 -> f16 bit pattern, round-to-nearest-even (the IEEE default),
+/// with overflow to infinity and underflow through subnormals to
+/// signed zero.  NaN payload collapses to a canonical quiet NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN-ness with a canonical payload).
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // f16 subnormal (or zero): shift the implicit-1 mantissa down.
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && half & 1 == 1) { half + 1 } else { half };
+        // A mantissa carry rolls into the smallest normal — the bit
+        // pattern is already correct for that.
+        return sign | rounded as u16;
+    }
+    // Normal: keep 10 mantissa bits, round-to-nearest-even on the 13
+    // dropped bits.  A carry propagates into the exponent (and on to
+    // infinity) with the correct bit pattern.
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && half & 1 == 1) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// f16 bit pattern -> f32 (exact; every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.  Value is `man * 2^-24`; after `s`
+            // left shifts bit 10 is set and the f32 exponent field is
+            // `113 - s`.
+            let mut m = man;
+            let mut s = 0u32;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                s += 1;
+            }
+            sign | ((113 - s) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// A weight matrix stored as f16 bit patterns, decoded to an f32
+/// scratch panel once per forward call.
+pub struct F16Matrix {
+    pub bits: Vec<u16>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl F16Matrix {
+    /// Encode a `[rows, cols]` row-major f32 matrix.
+    pub fn from_f32(w: &[f32], rows: usize, cols: usize) -> F16Matrix {
+        debug_assert_eq!(w.len(), rows * cols);
+        F16Matrix { bits: w.iter().map(|&x| f32_to_f16_bits(x)).collect(), rows, cols }
+    }
+
+    /// Decode into `out` (resized to fit), same `[rows, cols]` layout.
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        out.resize(self.bits.len(), 0.0);
+        for (o, &b) in out.iter_mut().zip(&self.bits) {
+            *o = f16_bits_to_f32(b);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8 quantized linear layer
+// ---------------------------------------------------------------------------
+
+/// An i8-quantized linear layer: per-output-feature absmax weights
+/// stored transposed (`[n][k]` row-major, one output feature per
+/// contiguous row) plus the f32 dequant scales and bias.
+pub struct QuantizedLinear {
+    pub w: Vec<i8>,
+    /// Per-output-feature dequant scale (`absmax / 127`).
+    pub w_scale: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl QuantizedLinear {
+    /// Quantize a `[k, n]` row-major f32 weight matrix (the layout
+    /// [`super::gemm::gemm_nn`] consumes) per output feature `j`.
+    pub fn from_f32(w: &[f32], bias: &[f32], k: usize, n: usize) -> QuantizedLinear {
+        debug_assert_eq!(w.len(), k * n);
+        debug_assert_eq!(bias.len(), n);
+        let mut q = vec![0i8; k * n];
+        let mut w_scale = vec![0.0f32; n];
+        for j in 0..n {
+            let mut amax = 0.0f32;
+            for kk in 0..k {
+                amax = amax.max(w[kk * n + j].abs());
+            }
+            let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            w_scale[j] = scale;
+            let inv = 1.0 / scale;
+            let row = &mut q[j * k..][..k];
+            for (kk, qv) in row.iter_mut().enumerate() {
+                *qv = (w[kk * n + j] * inv).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantizedLinear { w: q, w_scale, bias: bias.to_vec(), k, n }
+    }
+}
+
+/// `out[m,n] = dequant(quant(a) @ w_q^T) + bias` — the i8 serving GEMM.
+/// Activations are quantized per input row (dynamic absmax into
+/// `a_q`/`a_scale`, reusable scratch), the dot products accumulate in
+/// i32, and the epilogue applies `a_scale[i] * w_scale[j]` plus bias.
+/// Sharded over output rows on `pool` (fixed ascending-`k` order, so
+/// results are thread-count invariant like the f32 kernels).
+pub fn linear_i8_forward(
+    pool: &NativePool,
+    ql: &QuantizedLinear,
+    m: usize,
+    a: &[f32],
+    a_q: &mut Vec<i8>,
+    a_scale: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let (k, n) = (ql.k, ql.n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    a_q.resize(m * k, 0);
+    a_scale.resize(m, 0.0);
+    // Serial activation quantization: O(m*k) against the GEMM's
+    // O(m*k*n) — not worth a second parallel wave.
+    for i in 0..m {
+        let row = &a[i * k..][..k];
+        let mut amax = 0.0f32;
+        for &v in row {
+            amax = amax.max(v.abs());
+        }
+        let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        a_scale[i] = scale;
+        let inv = 1.0 / scale;
+        for (qv, &v) in a_q[i * k..][..k].iter_mut().zip(row) {
+            *qv = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    let a_q: &[i8] = a_q;
+    let a_scale: &[f32] = a_scale;
+    let rows_per = pool.rows_per_task(m, 4usize.max(8192 / n.max(1)));
+    pool.par_chunks_mut(out, rows_per * n, |ci, chunk| {
+        let r0 = ci * rows_per;
+        for (r, out_row) in chunk.chunks_exact_mut(n).enumerate() {
+            let i = r0 + r;
+            let a_row = &a_q[i * k..][..k];
+            let sa = a_scale[i];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let w_row = &ql.w[j * k..][..k];
+                let mut acc: i32 = 0;
+                for (&x, &y) in a_row.iter().zip(w_row) {
+                    acc += x as i32 * y as i32;
+                }
+                *o = sa * ql.w_scale[j] * acc as f32 + ql.bias[j];
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_every_finite_pattern() {
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let man = h & 0x3ff;
+            if exp == 0x1f && man != 0 {
+                // NaN: re-encoding yields *a* NaN, not the same payload.
+                assert!(f16_bits_to_f32(h).is_nan());
+                assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)) & 0x7c00, 0x7c00);
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_encode_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 (mantissa even) and
+        // 1 + 2^-10; ties-to-even keeps 1.0.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), f32_to_f16_bits(1.0));
+        // 1 + 3*2^-11 is halfway between mantissa 1 (odd) and 2 (even);
+        // ties-to-even rounds up.
+        assert_eq!(
+            f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)),
+            f32_to_f16_bits(1.0 + 2.0 * 2f32.powi(-10))
+        );
+        // Above-halfway rounds up regardless of parity.
+        assert_eq!(
+            f32_to_f16_bits(1.0 + 2f32.powi(-11) + 2f32.powi(-20)),
+            f32_to_f16_bits(1.0 + 2f32.powi(-10))
+        );
+        // Overflow and underflow edges.
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // rounds to inf
+        assert_eq!(f32_to_f16_bits(1e-10), 0); // below subnormal range
+        assert_eq!(f32_to_f16_bits(-0.0).to_be_bytes()[0], 0x80); // signed zero
+    }
+
+    #[test]
+    fn i8_linear_matches_f32_within_analytic_bound() {
+        let mut rng = Rng::new(11);
+        let pool = NativePool::new(3);
+        for &(m, k, n) in &[(1usize, 8usize, 5usize), (17, 96, 13), (32, 300, 22)] {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-0.8, 0.8)).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.range_f32(-0.3, 0.3)).collect();
+            let a: Vec<f32> = (0..m * k).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            let ql = QuantizedLinear::from_f32(&w, &bias, k, n);
+            let mut out = vec![0.0f32; m * n];
+            let (mut a_q, mut a_scale) = (Vec::new(), Vec::new());
+            linear_i8_forward(&pool, &ql, m, &a, &mut a_q, &mut a_scale, &mut out);
+            // Worst-case rounding error per term is amax_a*sw/2 +
+            // amax_w*sa/2 + sa*sw/4 with sa,sw = absmax/127, i.e. just
+            // under amax_a*amax_w/120 summed over k terms.
+            let amax_a = a.iter().fold(0.0f32, |z, &v| z.max(v.abs()));
+            let amax_w = w.iter().fold(0.0f32, |z, &v| z.max(v.abs()));
+            let bound = k as f32 * amax_a * amax_w / 120.0;
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = bias[j];
+                    for kk in 0..k {
+                        acc += a[i * k + kk] * w[kk * n + j];
+                    }
+                    let got = out[i * n + j];
+                    assert!(
+                        (got - acc).abs() <= bound,
+                        "({m},{k},{n})[{i},{j}]: {got} vs {acc} (bound {bound})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_weights_are_stored_transposed_with_per_feature_scales() {
+        // A rank-structured matrix where every column has a distinct
+        // absmax: column j of the [k,n] source must land in row j of
+        // the [n,k] quantized storage at full i8 range.
+        let (k, n) = (3usize, 4usize);
+        let mut w = vec![0.0f32; k * n];
+        for j in 0..n {
+            w[n + j] = (j + 1) as f32; // peak of column j in row 1
+            w[2 * n + j] = -0.5 * (j + 1) as f32;
+        }
+        let ql = QuantizedLinear::from_f32(&w, &vec![0.0; n], k, n);
+        for j in 0..n {
+            assert!((ql.w_scale[j] - (j + 1) as f32 / 127.0).abs() < 1e-6);
+            assert_eq!(ql.w[j * k], 0); // w[0][j]
+            assert_eq!(ql.w[j * k + 1], 127); // the column peak
+            assert_eq!(ql.w[j * k + 2], -64); // -63.5 rounds away from zero
+        }
+    }
+}

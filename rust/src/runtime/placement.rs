@@ -1,0 +1,468 @@
+//! Affinity-aware thread placement (`--cpu_affinity true`).
+//!
+//! The paper's large-scale recipe ships `--set_workers_cpu_affinity=True`,
+//! and the architectural study of RL training systems (Inci et al., 2020)
+//! shows that past ~16 workers core placement — not algorithm work —
+//! decides throughput.  This module is the whole placement story:
+//!
+//! * **Topology discovery** — parse `/sys/devices/system/cpu` on Linux
+//!   (online list + per-cpu `core_id`/`physical_package_id`); everywhere
+//!   else fall back to "every logical CPU is its own core" so the plan
+//!   degrades to a no-op spread instead of failing.
+//! * **Plan computation** — a [`PlacementPlan`]: the first
+//!   `reserved_cores` physical cores (all their SMT siblings) are the
+//!   *reserved set* for the policy workers, learner + assembly stages and
+//!   the native pool; rollout workers are spread round-robin across the
+//!   remaining physical cores, same-package-as-reserved first, so each
+//!   `ShardedQueue` SPSC shard's producer (the rollout worker) and its
+//!   consumer-side drain (the policy worker / learner assembly on the
+//!   reserved set) stay in one cache domain while capacity allows.
+//! * **Application** — a libc-free `sched_setaffinity` raw-syscall
+//!   wrapper ([`pin_current_thread`]); on non-Linux (or unsupported
+//!   arch) pinning is a graceful no-op and the run proceeds unpinned.
+//!
+//! `SF_PIN_CPUS=0-3,8` restricts the CPU universe the plan draws from
+//! (e.g. to keep a box half-free).  An unparsable value is a **hard
+//! startup error** — silent misconfiguration is how throughput
+//! experiments lie.
+
+use std::sync::OnceLock;
+
+/// One logical CPU with its physical location.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpuInfo {
+    /// Logical CPU index (the bit set in the affinity mask).
+    pub cpu: usize,
+    /// Physical core id within the package (SMT siblings share it).
+    pub core: usize,
+    /// Package / socket id (the cache-domain boundary we care about).
+    pub package: usize,
+}
+
+/// The machine's CPU layout as far as placement cares.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub cpus: Vec<CpuInfo>,
+}
+
+impl Topology {
+    /// Discover the topology.  Never fails: on non-Linux, or when sysfs
+    /// is unreadable, every logical CPU counts as its own physical core
+    /// on package 0 (pinning still spreads threads, just without SMT or
+    /// package awareness).
+    pub fn detect() -> Topology {
+        #[cfg(target_os = "linux")]
+        if let Some(cpus) = detect_linux() {
+            return Topology { cpus };
+        }
+        Topology::flat(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+
+    /// A synthetic flat topology: `n` CPUs, each its own core, one package.
+    pub fn flat(n: usize) -> Topology {
+        Topology {
+            cpus: (0..n.max(1))
+                .map(|c| CpuInfo { cpu: c, core: c, package: 0 })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn detect_linux() -> Option<Vec<CpuInfo>> {
+    let online = std::fs::read_to_string("/sys/devices/system/cpu/online").ok()?;
+    let cpus = parse_cpu_list(online.trim()).ok()?;
+    let mut out = Vec::with_capacity(cpus.len());
+    for c in cpus {
+        let base = format!("/sys/devices/system/cpu/cpu{c}/topology");
+        // Missing topology files (containers often hide them): treat the
+        // CPU as its own core — degraded but usable.
+        let core = read_sys_usize(&format!("{base}/core_id")).unwrap_or(c);
+        let package =
+            read_sys_usize(&format!("{base}/physical_package_id")).unwrap_or(0);
+        out.push(CpuInfo { cpu: c, core, package });
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn read_sys_usize(path: &str) -> Option<usize> {
+    std::fs::read_to_string(path).ok()?.trim().parse().ok()
+}
+
+/// Parse a kernel-style CPU list: `"0-3,8,10-11"`.  Used for both the
+/// sysfs `online` file and the `SF_PIN_CPUS` override.
+pub fn parse_cpu_list(s: &str) -> Result<Vec<usize>, String> {
+    let bad = |tok: &str| {
+        format!(
+            "invalid CPU list '{s}': bad token '{tok}' (expected e.g. '0-3,8')"
+        )
+    };
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            return Err(bad(tok));
+        }
+        if let Some((lo, hi)) = tok.split_once('-') {
+            let lo: usize = lo.trim().parse().map_err(|_| bad(tok))?;
+            let hi: usize = hi.trim().parse().map_err(|_| bad(tok))?;
+            if hi < lo {
+                return Err(format!(
+                    "invalid CPU list '{s}': descending range '{tok}'"
+                ));
+            }
+            out.extend(lo..=hi);
+        } else {
+            out.push(tok.parse().map_err(|_| bad(tok))?);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+/// Where every thread of a training run should live.  Computed once in
+/// `run_appo` and shared through `SharedCtx`; all the `pin_*` methods are
+/// no-ops when the plan is disabled, so call sites stay unconditional.
+#[derive(Debug)]
+pub struct PlacementPlan {
+    enabled: bool,
+    /// CPU set (one physical core + SMT siblings) per rollout worker.
+    rollout: Vec<Vec<usize>>,
+    /// CPU set shared by policy workers, learner/assembly and the pool.
+    reserved: Vec<usize>,
+}
+
+impl PlacementPlan {
+    /// A plan that pins nothing (affinity off — the default).
+    pub fn disabled() -> PlacementPlan {
+        PlacementPlan { enabled: false, rollout: Vec::new(), reserved: Vec::new() }
+    }
+
+    /// Compute the plan for this machine.  `SF_PIN_CPUS` (if set)
+    /// restricts the universe; an invalid value is a hard error even when
+    /// affinity is off, so a typo never silently reverts to "pin
+    /// everywhere".
+    pub fn compute(
+        enabled: bool,
+        reserved_cores: usize,
+        num_workers: usize,
+    ) -> Result<PlacementPlan, String> {
+        let pin_override = match std::env::var("SF_PIN_CPUS") {
+            Ok(s) => Some(parse_cpu_list(s.trim()).map_err(|e| {
+                format!("SF_PIN_CPUS is set but unusable: {e}")
+            })?),
+            Err(_) => None,
+        };
+        if !enabled {
+            return Ok(PlacementPlan::disabled());
+        }
+        Ok(PlacementPlan::from_parts(
+            &Topology::detect(),
+            pin_override.as_deref(),
+            reserved_cores,
+            num_workers,
+        ))
+    }
+
+    /// Pure plan construction (unit-testable with synthetic topologies).
+    pub fn from_parts(
+        topo: &Topology,
+        pin_override: Option<&[usize]>,
+        reserved_cores: usize,
+        num_workers: usize,
+    ) -> PlacementPlan {
+        // Universe: the override list intersected with known CPUs, or
+        // everything the topology reports.
+        let universe: Vec<CpuInfo> = match pin_override {
+            Some(list) => topo
+                .cpus
+                .iter()
+                .filter(|c| list.contains(&c.cpu))
+                .copied()
+                .collect(),
+            None => topo.cpus.clone(),
+        };
+        if universe.is_empty() {
+            return PlacementPlan::disabled();
+        }
+
+        // Group logical CPUs into physical cores, ordered (package, core).
+        let mut cores: Vec<((usize, usize), Vec<usize>)> = Vec::new();
+        for c in &universe {
+            let key = (c.package, c.core);
+            match cores.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push(c.cpu),
+                None => cores.push((key, vec![c.cpu])),
+            }
+        }
+        cores.sort();
+
+        // Reserved set: the first `reserved_cores` cores — but always
+        // leave at least one core for the rollout workers when possible.
+        let n_res = reserved_cores.max(1).min(cores.len().saturating_sub(1)).max(
+            if cores.len() == 1 { 1 } else { 0 },
+        );
+        let reserved: Vec<usize> =
+            cores[..n_res].iter().flat_map(|(_, v)| v.iter().copied()).collect();
+        let mut rest: Vec<&((usize, usize), Vec<usize>)> =
+            cores[n_res..].iter().collect();
+        if rest.is_empty() {
+            // One core total: everything shares it; pinning is then only
+            // an isolation statement, not a spread.
+            rest = cores.iter().collect();
+        }
+        // Same-package-as-reserved cores first: a rollout worker's SPSC
+        // shard is drained by a reserved-set thread, so filling the
+        // reserved package first keeps producer and consumer in one
+        // cache domain while there is room.
+        let res_pkg = cores[0].0 .0;
+        rest.sort_by_key(|((pkg, core), _)| (*pkg != res_pkg, *pkg, *core));
+
+        let rollout = (0..num_workers)
+            .map(|w| rest[w % rest.len()].1.clone())
+            .collect();
+        PlacementPlan { enabled: true, rollout, reserved }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Pin the calling thread to rollout worker `w`'s core.
+    pub fn pin_rollout(&self, w: usize) {
+        if self.enabled {
+            pin_current_thread(&self.rollout[w % self.rollout.len()]);
+        }
+    }
+
+    /// Pin the calling thread to the reserved set (policy workers,
+    /// learner train + assembly stages, monitor).
+    pub fn pin_reserved(&self) {
+        if self.enabled {
+            pin_current_thread(&self.reserved);
+        }
+    }
+
+    /// Record the reserved set as the native pool's home: pool workers
+    /// spawned *after* this call pin themselves there.  Call before the
+    /// first pool use of the process (the pool is a lazy global).
+    pub fn install_pool_hint(&self) {
+        if self.enabled && !self.reserved.is_empty() {
+            let _ = POOL_CPUS.set(self.reserved.clone());
+        }
+    }
+
+    /// One-line human description for the startup log.
+    pub fn describe(&self) -> String {
+        if !self.enabled {
+            return "cpu_affinity off".into();
+        }
+        let uniq: std::collections::BTreeSet<&Vec<usize>> =
+            self.rollout.iter().collect();
+        format!(
+            "cpu_affinity on: reserved cpus {:?}, {} rollout workers over {} cores",
+            self.reserved,
+            self.rollout.len(),
+            uniq.len()
+        )
+    }
+}
+
+/// The native pool's CPU set, installed by [`PlacementPlan::install_pool_hint`].
+static POOL_CPUS: OnceLock<Vec<usize>> = OnceLock::new();
+
+/// Called by every native-pool worker as it starts: pin to the reserved
+/// set if a plan installed one, else do nothing.
+pub fn pin_native_pool_thread() {
+    if let Some(cpus) = POOL_CPUS.get() {
+        pin_current_thread(cpus);
+    }
+}
+
+/// Pin the calling thread to `cpus` via `sched_setaffinity(0, ...)`.
+/// Returns whether the kernel accepted the mask; `false` on unsupported
+/// platforms (graceful no-op) or when the mask is empty.
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    if cpus.is_empty() {
+        return false;
+    }
+    let words = cpus.iter().max().unwrap() / 64 + 1;
+    let mut mask = vec![0u64; words];
+    for &c in cpus {
+        mask[c / 64] |= 1u64 << (c % 64);
+    }
+    sched_setaffinity_self(&mask) == 0
+}
+
+/// Raw `sched_setaffinity(pid=0, len, mask)` — pid 0 means the calling
+/// thread.  Returns the kernel's result (0 on success, negative errno
+/// otherwise).  libc-free: the two syscall instructions are the whole
+/// dependency.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sched_setaffinity_self(mask: &[u64]) -> isize {
+    let ret: isize;
+    // SAFETY: sched_setaffinity (x86_64 nr 203) reads `len` bytes from the
+    // `mask` pointer and mutates no user memory; `mask` is a live, aligned
+    // allocation of exactly `mask.len() * 8` bytes for the duration of the
+    // call.  rcx/r11 are declared clobbered as the syscall ABI requires.
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret,
+            in("rdi") 0usize,
+            in("rsi") mask.len() * 8,
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack, preserves_flags)
+        );
+    }
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sched_setaffinity_self(mask: &[u64]) -> isize {
+    let ret: isize;
+    // SAFETY: sched_setaffinity (aarch64 nr 122) reads `len` bytes from
+    // the `mask` pointer and mutates no user memory; `mask` is a live,
+    // aligned allocation of exactly `mask.len() * 8` bytes for the
+    // duration of the call.
+    unsafe {
+        core::arch::asm!(
+            "svc 0",
+            in("x8") 122usize,
+            inlateout("x0") 0usize => ret,
+            in("x1") mask.len() * 8,
+            in("x2") mask.as_ptr(),
+            options(nostack)
+        );
+    }
+    ret
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn sched_setaffinity_self(_mask: &[u64]) -> isize {
+    -1 // unsupported platform: report "not pinned", never fail the run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_list_parses_kernel_syntax() {
+        assert_eq!(parse_cpu_list("0-3,8").unwrap(), vec![0, 1, 2, 3, 8]);
+        assert_eq!(parse_cpu_list("5").unwrap(), vec![5]);
+        assert_eq!(parse_cpu_list("0,0,1-2,2").unwrap(), vec![0, 1, 2]);
+        assert_eq!(parse_cpu_list(" 1 , 3-4 ").unwrap(), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn bad_cpu_lists_are_hard_errors() {
+        for bad in ["", "a", "1-", "-3", "3-1", "1,,2", "0-3,x"] {
+            assert!(parse_cpu_list(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn plan_spreads_rollout_and_reserves_cores() {
+        // 8 logical CPUs = 4 physical cores x 2 SMT, one package.
+        let topo = Topology {
+            cpus: (0..8)
+                .map(|c| CpuInfo { cpu: c, core: c % 4, package: 0 })
+                .collect(),
+        };
+        let plan = PlacementPlan::from_parts(&topo, None, 1, 6);
+        assert!(plan.is_enabled());
+        // Core 0 (cpus 0 and 4) is reserved.
+        assert_eq!(plan.reserved, vec![0, 4]);
+        // 6 workers round-robin over cores 1..4.
+        assert_eq!(plan.rollout.len(), 6);
+        assert_eq!(plan.rollout[0], plan.rollout[3]);
+        assert_ne!(plan.rollout[0], plan.rollout[1]);
+        for set in &plan.rollout {
+            assert!(set.iter().all(|c| !plan.reserved.contains(c)));
+        }
+    }
+
+    #[test]
+    fn pin_override_restricts_universe() {
+        let topo = Topology::flat(8);
+        let plan = PlacementPlan::from_parts(&topo, Some(&[2, 3, 5]), 1, 4);
+        assert_eq!(plan.reserved, vec![2]);
+        for set in &plan.rollout {
+            for c in set {
+                assert!([3usize, 5].contains(c), "cpu {c} outside override");
+            }
+        }
+        // Override naming no known CPU: plan degrades to disabled.
+        let empty = PlacementPlan::from_parts(&topo, Some(&[99]), 1, 4);
+        assert!(!empty.is_enabled());
+    }
+
+    #[test]
+    fn single_core_machine_degrades_gracefully() {
+        let topo = Topology::flat(1);
+        let plan = PlacementPlan::from_parts(&topo, None, 2, 4);
+        assert!(plan.is_enabled());
+        assert_eq!(plan.reserved, vec![0]);
+        assert_eq!(plan.rollout.len(), 4);
+        for set in &plan.rollout {
+            assert_eq!(set, &vec![0]);
+        }
+    }
+
+    #[test]
+    fn two_package_plan_prefers_reserved_package() {
+        // 2 packages x 2 cores, no SMT.
+        let topo = Topology {
+            cpus: (0..4)
+                .map(|c| CpuInfo { cpu: c, core: c % 2, package: c / 2 })
+                .collect(),
+        };
+        let plan = PlacementPlan::from_parts(&topo, None, 1, 3);
+        // Reserved = package 0 core 0; first rollout core should be the
+        // remaining package-0 core (cpu 1), before package 1.
+        assert_eq!(plan.reserved, vec![0]);
+        assert_eq!(plan.rollout[0], vec![1]);
+    }
+
+    #[test]
+    fn disabled_plan_is_inert() {
+        let plan = PlacementPlan::disabled();
+        assert!(!plan.is_enabled());
+        plan.pin_reserved(); // must not panic on empty sets
+        plan.install_pool_hint();
+        assert_eq!(plan.describe(), "cpu_affinity off");
+    }
+
+    #[test]
+    fn pinning_self_to_all_cpus_is_accepted_on_linux() {
+        // Pin to the full online set: behavior-neutral, but exercises the
+        // raw syscall path end to end where it exists.
+        let topo = Topology::detect();
+        let all: Vec<usize> = topo.cpus.iter().map(|c| c.cpu).collect();
+        let ok = pin_current_thread(&all);
+        if cfg!(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        )) {
+            assert!(ok, "sched_setaffinity to the full online set failed");
+        } else {
+            assert!(!ok);
+        }
+    }
+
+    #[test]
+    fn empty_mask_is_rejected_cheaply() {
+        assert!(!pin_current_thread(&[]));
+    }
+}

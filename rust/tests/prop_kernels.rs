@@ -8,6 +8,13 @@
 //! * **Thread-pool invariants** — results are bit-identical for any
 //!   thread count (so `SF_NATIVE_THREADS` is a pure perf knob), and the
 //!   pool survives nested and zero-sized work without deadlock.
+//! * **SIMD bit-identity** (`--features simd`) — the explicit `std::simd`
+//!   micro-kernel must be *bit-identical* to the scalar path, forward and
+//!   backward, so the feature is a pure speed knob.
+//! * **Quantized serving accuracy** — the f16/i8 `--inference_dtype`
+//!   policy path must track the f32 logits within the documented
+//!   contract, and greedy actions must agree wherever f32's top-2 logit
+//!   gap exceeds twice the observed error.
 
 use sample_factory::runtime::native::gemm;
 use sample_factory::runtime::native::ops::{self, ConvGeom};
@@ -315,6 +322,173 @@ fn prop_pool_results_independent_of_thread_count() {
         assert_eq!(base.1, got.1, "d_wgt differs at {threads} threads");
         assert_eq!(base.2, got.2, "d_bias differs at {threads} threads");
         assert_eq!(base.3, got.3, "d_inp differs at {threads} threads");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD bit-identity (`--features simd`; nightly-only)
+// ---------------------------------------------------------------------------
+
+/// The explicit-SIMD path vectorizes over output columns with one mul+add
+/// per (row, k) step in the same order as the scalar kernel, and
+/// `std::simd` ops are strict IEEE — so it must be *bit-identical*, not
+/// merely close.  One test toggles the global switch sequentially (the
+/// toggle is process-wide; concurrent tests are unaffected precisely
+/// because of the property asserted here).
+#[cfg(feature = "simd")]
+#[test]
+fn simd_kernels_bit_identical_to_scalar() {
+    let pool = NativePool::new(3);
+    let mut rng = Rng::new(0x51d2);
+
+    // Raw GEMM, assorted shapes (vector body + every tail length).
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 7, 9), (5, 31, 23), (16, 288, 128)] {
+        let a = rand_vec(&mut rng, m * k, 0.5);
+        let w = rand_vec(&mut rng, k * n, 0.5);
+        let bias = rand_vec(&mut rng, n, 0.2);
+        let mut scalar = vec![0.0f32; m * n];
+        let mut simd = vec![0.0f32; m * n];
+        gemm::set_simd_enabled(false);
+        gemm::gemm_nn(&pool, m, k, n, &a, &w, Some(&bias), &mut scalar, false);
+        gemm::set_simd_enabled(true);
+        gemm::gemm_nn(&pool, m, k, n, &a, &w, Some(&bias), &mut simd, false);
+        assert_eq!(scalar, simd, "gemm_nn {m}x{k}x{n} diverged under simd");
+    }
+
+    // Conv forward + backward across every builtin geometry.
+    for g in all_geometries() {
+        let nb = 3usize;
+        let inp = rand_vec(&mut rng, nb * g.in_len(), 0.5);
+        let wgt = rand_vec(&mut rng, g.w_len(), 0.5);
+        let bias = rand_vec(&mut rng, g.c_out, 0.2);
+        let d_out = rand_vec(&mut rng, nb * g.out_len(), 0.5);
+        let krow = gemm::im2col_row_len(&g);
+        let mut wgt_t = vec![0.0f32; g.w_len()];
+        gemm::transpose(&wgt, krow, g.c_out, &mut wgt_t);
+        let run_with = |simd: bool| {
+            gemm::set_simd_enabled(simd);
+            let mut cols = Vec::new();
+            let mut out = vec![0.0f32; nb * g.out_len()];
+            gemm::conv_forward_batch(&pool, &g, nb, &inp, &wgt, &bias, &mut cols, &mut out);
+            let mut d_cols = Vec::new();
+            let mut d_wgt = vec![0.0f32; g.w_len()];
+            let mut d_bias = vec![0.0f32; g.c_out];
+            let mut d_inp = vec![0.0f32; nb * g.in_len()];
+            gemm::conv_backward_batch(
+                &pool, &g, nb, &inp, Some(&wgt_t), &d_out, &mut cols, &mut d_cols,
+                &mut d_wgt, &mut d_bias, Some(&mut d_inp),
+            );
+            (out, d_wgt, d_bias, d_inp)
+        };
+        let scalar = run_with(false);
+        let simd = run_with(true);
+        assert_eq!(scalar, simd, "conv {g:?} diverged under simd");
+    }
+    gemm::set_simd_enabled(true); // restore the default
+}
+
+// ---------------------------------------------------------------------------
+// Quantized serving accuracy (f16 / i8 --inference_dtype)
+// ---------------------------------------------------------------------------
+
+/// Controlled-scale random parameters (smaller than `random_params` so the
+/// analytic quantization error bound stays well under the contract).
+fn small_params(def: &ModelDef, seed: u64, scale: f32) -> Vec<Literal> {
+    let mut rng = Rng::new(seed);
+    def.param_defs()
+        .into_iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let data: Vec<f32> = (0..n).map(|_| scale * rng.normal()).collect();
+            lit_f32(&shape, &data).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_quant_policy_logits_track_f32_within_contract() {
+    use sample_factory::config::InferenceDtype;
+    use sample_factory::runtime::{lit_u8, ModelPrograms, Runtime};
+
+    let rt = Runtime::cpu().unwrap();
+    let def = ModelDef::builtin("tiny").unwrap();
+    let params = small_params(&def, 0x9a11, 0.1);
+    let param_refs: Vec<&Literal> = params.iter().collect();
+    let b = 8usize;
+    let mut rng = Rng::new(0x0b5);
+    let obs_data: Vec<u8> =
+        (0..b * def.obs_len()).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+    let obs = lit_u8(&[b, 24, 32, 3], &obs_data).unwrap();
+    let h = lit_f32(
+        &[b, def.hidden],
+        &(0..b * def.hidden).map(|_| rng.range_f32(-0.5, 0.5)).collect::<Vec<_>>(),
+    )
+    .unwrap();
+
+    let f32_progs = ModelPrograms::load_with(&rt, "artifacts", "tiny", InferenceDtype::F32).unwrap();
+    let cache = f32_progs.policy.upload(&param_refs).unwrap();
+    let want = f32_progs.policy.run_cached(&cache, &[&obs, &h]).unwrap()[0]
+        .as_f32()
+        .unwrap()
+        .to_vec();
+    let na = want.len() / b; // actions per row
+
+    for (dtype, tol) in [(InferenceDtype::F16, 2e-3f32), (InferenceDtype::I8, 1e-2f32)] {
+        let progs =
+            ModelPrograms::load_with(&rt, "artifacts", "tiny", dtype).unwrap();
+        let cache = progs.policy.upload(&param_refs).unwrap();
+        let got = progs.policy.run_cached(&cache, &[&obs, &h]).unwrap()[0]
+            .as_f32()
+            .unwrap()
+            .to_vec();
+        assert_eq!(got.len(), want.len());
+
+        // Contract 1: every logit within `tol` of f32.
+        let mut max_delta = 0.0f32;
+        for (i, (&w, &g)) in want.iter().zip(&got).enumerate() {
+            let d = (w - g).abs();
+            assert!(d <= tol, "{} logit[{i}]: f32 {w} vs {g}", dtype.name());
+            max_delta = max_delta.max(d);
+        }
+
+        // Contract 2: greedy action agreement wherever f32's top-2 gap
+        // exceeds 2x the observed error (a flip there would mean some
+        // logit moved by more than `max_delta` — contradiction), and
+        // enough rows must actually be resolvable for this to mean
+        // something.
+        let argmax = |row: &[f32]| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap()
+        };
+        let mut resolvable = 0usize;
+        for r in 0..b {
+            let wrow = &want[r * na..][..na];
+            let grow = &got[r * na..][..na];
+            let top = argmax(wrow);
+            let gap = wrow
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != top)
+                .map(|(_, &v)| wrow[top] - v)
+                .fold(f32::INFINITY, f32::min);
+            if gap > 2.0 * max_delta {
+                resolvable += 1;
+                assert_eq!(
+                    argmax(grow),
+                    top,
+                    "{} greedy action flipped on a resolvable row {r} (gap {gap}, max_delta {max_delta})",
+                    dtype.name()
+                );
+            }
+        }
+        assert!(
+            resolvable * 4 >= b,
+            "{}: only {resolvable}/{b} rows resolvable (max_delta {max_delta})",
+            dtype.name()
+        );
     }
 }
 
