@@ -30,6 +30,7 @@ bench-json:
 	cargo run --release --bin repro -- bench scenarios --frames $(or $(SF_BENCH_FRAMES),5000)
 	cargo run --release --bin repro -- bench envs --frames $(or $(SF_BENCH_FRAMES),20000)
 	cargo run --release --bin repro -- bench pin --frames $(or $(SF_BENCH_FRAMES),20000)
+	cargo run --release --bin repro -- bench obs --frames $(or $(SF_BENCH_FRAMES),30000)
 
 clippy:
 	cargo clippy --all-targets -- -D warnings
@@ -59,7 +60,8 @@ tsan:
 
 # In-tree static-analysis gate: SAFETY comments on every unsafe block,
 # no std::sync/std::thread bypasses of the crate::sync facade in the
-# concurrency modules, no blanket -A clippy downgrades in CI configs.
+# concurrency modules, no bare Instant::now() in coordinator//ipc/ (use
+# crate::obs::clock), no blanket -A clippy downgrades in CI configs.
 lint:
 	cargo run --release --bin sf_lint
 

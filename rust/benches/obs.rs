@@ -1,0 +1,8 @@
+//! `cargo bench --bench obs` — telemetry overhead (metrics off / on /
+//! +tracing) and a Perfetto-trace smoke check.  Shares the harness with
+//! `repro bench obs`; scale via SF_BENCH_FRAMES.
+fn main() {
+    let frames = std::env::var("SF_BENCH_FRAMES").unwrap_or_else(|_| "30000".into());
+    let args = vec!["--frames".to_string(), frames];
+    sample_factory::bench::obs::run_cli(&args).expect("obs overhead bench");
+}

@@ -13,6 +13,7 @@ pub mod envstep;
 pub mod fifo;
 pub mod lag;
 pub mod multitask;
+pub mod obs;
 pub mod pbt;
 pub mod pin;
 pub mod scenarios;

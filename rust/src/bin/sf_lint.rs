@@ -21,6 +21,11 @@
 //!    `.github/workflows/ci.yml`) must not pass `-A clippy::...`: lints
 //!    are either fixed or allowed *at the offending site* with a written
 //!    justification, never blanket-disabled for the whole tree.
+//! 4. **clock-bypass** — pipeline code (`rust/src/coordinator/*`,
+//!    `rust/src/ipc/*`) must not call `Instant::now()` directly; it goes
+//!    through `crate::obs::clock::now()` / `now_ns()` so that chaos
+//!    builds keep a deterministic logical clock and every timestamp
+//!    feeds the same telemetry time base.  Test modules are exempt.
 //!
 //! The scanner is line-based and intentionally conservative: it strips
 //! `//` comments and string literals before matching code tokens, and
@@ -52,6 +57,10 @@ const FORBIDDEN_IN_FACADE_SCOPE: &[&str] = &[
     "std::thread::{",
 ];
 
+/// Modules required to take wall-clock readings from `crate::obs::clock`
+/// (deterministic under `--features chaos`, single telemetry time base).
+const CLOCK_SCOPED: &[&str] = &["rust/src/coordinator/", "rust/src/ipc/"];
+
 fn main() -> ExitCode {
     let root = std::env::var("CARGO_MANIFEST_DIR")
         .map(PathBuf::from)
@@ -69,6 +78,7 @@ fn main() -> ExitCode {
         let rel = relative(&root, path);
         check_safety_comments(&rel, &text, &mut violations);
         check_facade_bypass(&rel, &text, &mut violations);
+        check_clock_bypass(&rel, &text, &mut violations);
     }
 
     for cfg in ["Makefile", ".github/workflows/ci.yml"] {
@@ -214,6 +224,27 @@ fn check_facade_bypass(rel: &str, text: &str, violations: &mut Vec<String>) {
     }
 }
 
+fn check_clock_bypass(rel: &str, text: &str, violations: &mut Vec<String>) {
+    if !CLOCK_SCOPED.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    for (i, raw) in text.lines().enumerate() {
+        // Same test-region convention as the facade rule: everything from
+        // the first `#[cfg(test)]` on may use the real clock freely.
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            break;
+        }
+        if code_only(raw).contains("Instant::now") {
+            violations.push(format!(
+                "{rel}:{}: clock-bypass: bare `Instant::now()` in pipeline code; \
+                 use `crate::obs::clock::now()`/`now_ns()` (deterministic under \
+                 chaos, shared telemetry time base)",
+                i + 1
+            ));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +289,31 @@ mod tests {
         let mut v = Vec::new();
         check_facade_bypass("rust/src/learner/mod.rs", "use std::sync::Mutex;\n", &mut v);
         assert!(v.is_empty(), "facade rule is scoped: {v:?}");
+    }
+
+    #[test]
+    fn clock_bypass_respects_scope_and_test_regions() {
+        let mut v = Vec::new();
+        check_clock_bypass(
+            "rust/src/coordinator/x.rs",
+            "let t = std::time::Instant::now();\n",
+            &mut v,
+        );
+        assert_eq!(v.len(), 1, "{v:?}");
+        let mut v = Vec::new();
+        check_clock_bypass(
+            "rust/src/ipc/x.rs",
+            "let t = crate::obs::clock::now();\n\
+             #[cfg(test)]\nmod t { fn f() { let _ = std::time::Instant::now(); } }\n",
+            &mut v,
+        );
+        assert!(v.is_empty(), "{v:?}");
+        let mut v = Vec::new();
+        check_clock_bypass("rust/src/bench/x.rs", "Instant::now();\n", &mut v);
+        assert!(v.is_empty(), "clock rule is scoped: {v:?}");
+        let mut v = Vec::new();
+        check_clock_bypass("rust/src/ipc/x.rs", "// Instant::now() in prose\n", &mut v);
+        assert!(v.is_empty(), "comments are stripped: {v:?}");
     }
 
     #[test]

@@ -171,6 +171,16 @@ pub struct Config {
     /// (f32|f16|i8).  Training stays f32 regardless.
     pub inference_dtype: InferenceDtype,
 
+    /// Always-on metrics registry (`--metrics false` disables the sampled
+    /// histograms: batch latency/size, pop waits, policy lag, queue
+    /// depths, pool task wait/run).  Frame and drop *counters* stay on
+    /// regardless — they are control-plane (frame budget, drop
+    /// accounting), not telemetry.
+    pub metrics: bool,
+    /// Write a Chrome trace-event JSON (Perfetto-loadable) of per-thread
+    /// spans to this path at shutdown (`--trace out.json`; empty =
+    /// tracing off, one relaxed atomic load per instrumented site).
+    pub trace_path: String,
     /// Episode-stat logging interval in seconds (0 = quiet).
     pub log_interval_s: f64,
     /// Directory for CSV/JSON run outputs.
@@ -202,6 +212,8 @@ impl Default for Config {
             cpu_affinity: false,
             reserved_cores: 1,
             inference_dtype: InferenceDtype::F32,
+            metrics: true,
+            trace_path: String::new(),
             log_interval_s: 5.0,
             out_dir: "bench_results".into(),
             save_ckpt: false,
@@ -245,6 +257,8 @@ impl Config {
                     format!("bad value '{value}' for {key} (expected f32|f16|i8)")
                 })?
             }
+            "metrics" => self.metrics = p(key, value)?,
+            "trace" => self.trace_path = value.into(),
             "log_interval_s" => self.log_interval_s = p(key, value)?,
             "out_dir" => self.out_dir = value.into(),
             "save_ckpt" => self.save_ckpt = p(key, value)?,
@@ -489,6 +503,18 @@ mod tests {
         assert_eq!(c.inference_dtype, InferenceDtype::F16);
         assert!(c.set("inference_dtype", "bf16").is_err());
         assert!(c.set("cpu_affinity", "maybe").is_err());
+    }
+
+    #[test]
+    fn obs_keys() {
+        let mut c = Config::default();
+        assert!(c.metrics);
+        assert!(c.trace_path.is_empty());
+        c.set("metrics", "false").unwrap();
+        c.set("trace", "/tmp/out.json").unwrap();
+        assert!(!c.metrics);
+        assert_eq!(c.trace_path, "/tmp/out.json");
+        assert!(c.set("metrics", "sometimes").is_err());
     }
 
     #[test]

@@ -20,11 +20,11 @@
 //! regime — the monitor prints the same statistic and the integration tests
 //! assert it stays bounded (back-pressure through the slot store).
 
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::ipc::{Fifo, RecvError, SlotIdx};
+use crate::obs;
 use crate::runtime::{
     lit_f32, lit_i32, lit_u8, to_f32_vec, LearnerState, Literal, ParamStore, Tensors,
 };
@@ -122,6 +122,8 @@ fn run_assembly(
                 }
             }
         };
+        let m = &ctx.metrics;
+        let wait0 = obs::now_ns_if(m.on() || obs::trace::enabled());
         while slots.len() < b {
             match queue.pop_many(&mut slots, b - slots.len(), Duration::from_millis(100))
             {
@@ -134,10 +136,19 @@ fn run_assembly(
                 }
             }
         }
-        let t0 = Instant::now();
-        fill_batch(ctx, &slots, &mut bufs);
-        ctx.assembly_busy_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some(t0) = wait0 {
+            let end = obs::clock::now_ns();
+            if m.on() {
+                m.learner_pop_wait_ns.record(end.saturating_sub(t0));
+            }
+            obs::trace::event("learner.wait", t0, end);
+        }
+        let t0 = obs::clock::now_ns();
+        {
+            let _sp = obs::trace::span("learner.assemble");
+            fill_batch(ctx, &slots, &mut bufs);
+        }
+        m.assembly_busy_ns.add(obs::clock::now_ns().saturating_sub(t0));
         if !filled.push(bufs) {
             // Closed mid-handoff (shutdown): the batch was dropped with its
             // slot list — the local `slots` copy below returns them.
@@ -216,10 +227,14 @@ pub fn run_learner(
             let mut lag_sum = 0u64;
             let mut lag_max = 0u32;
             let train_version = params_store.version();
+            let lag_hist = ctx.metrics.on();
             for &v in &bufs.versions {
                 let lag = train_version.saturating_sub(v);
                 lag_sum += lag as u64;
                 lag_max = lag_max.max(lag);
+                if lag_hist {
+                    ctx.metrics.lag.record(lag as u64);
+                }
             }
 
             let (hh, ww, cc) = (man.obs_shape[0], man.obs_shape[1], man.obs_shape[2]);
@@ -251,10 +266,12 @@ pub fn run_learner(
             inputs.push(&lits.6);
 
             // ---- the fused train step -----------------------------------
-            let t0 = Instant::now();
-            let mut outs = ctx.progs.train.run(&inputs).expect("train step failed");
-            ctx.train_busy_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let t0 = obs::clock::now_ns();
+            let mut outs = {
+                let _sp = obs::trace::span("learner.train");
+                ctx.progs.train.run(&inputs).expect("train step failed")
+            };
+            ctx.metrics.train_busy_ns.add(obs::clock::now_ns().saturating_sub(t0));
             debug_assert_eq!(outs.len(), 3 * n_params + 2);
             let metrics_lit = outs.pop().unwrap();
             let step_lit = outs.pop().unwrap();

@@ -11,9 +11,9 @@ pub mod pbt;
 pub mod policy_worker;
 pub mod rollout;
 
-use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::atomic::AtomicBool;
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -21,8 +21,10 @@ use crate::config::{Config, Method};
 use crate::env::vec_env::VecEnv;
 use crate::env::{heads_for_spec, multitask};
 use crate::ipc::{Fifo, ShardedQueue, TrajStore, TrajStoreSpec};
+use crate::json::Json;
+use crate::obs::{self, LatencySummary};
 use crate::runtime::{LearnerState, ModelPrograms, ParamStore, Runtime};
-use crate::stats::{EpisodeTracker, ThroughputMeter};
+use crate::stats::{EpisodeTracker, WindowedRate};
 use crate::util::Rng;
 
 use msgs::{SharedCtx, StatMsg};
@@ -69,6 +71,20 @@ pub struct TrainResult {
     /// overlap-utilization ratio the transport bench reports.
     pub learner_assembly_s: f64,
     pub learner_train_s: f64,
+    /// ActionRequest -> ActionReply round-trip latency per policy (ms),
+    /// measured live at the rollout workers — the training-path
+    /// counterpart of the bench-only inference microbench.  Empty when
+    /// `--metrics false`.
+    pub action_rtt_ms: Vec<LatencySummary>,
+    /// Policy-worker batch latency (linger through ack, ms) aggregated
+    /// across workers, and the mean requests per inference batch.
+    pub policy_batch_ms: LatencySummary,
+    pub policy_batch_size_mean: f64,
+    /// Policy-lag distribution quantiles (versions); `lag_mean`/`lag_max`
+    /// above stay as the learner-reported exact aggregates.
+    pub lag_p50: f64,
+    pub lag_p95: f64,
+    pub lag_p99: f64,
 }
 
 impl TrainResult {
@@ -190,17 +206,22 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
             .map(|_| ShardedQueue::new(cfg.num_workers, n_slots))
             .collect(),
         stats: Fifo::new(4096),
-        stat_drops: AtomicU64::new(0),
-        assembly_busy_ns: AtomicU64::new(0),
-        train_busy_ns: AtomicU64::new(0),
+        metrics: Arc::new(obs::Metrics::new(n_policies, cfg.metrics)),
         store,
         progs: progs.clone(),
         placement,
-        meter: Arc::new(ThroughputMeter::new()),
         shutdown: Arc::new(AtomicBool::new(false)),
         frame_budget: cfg.total_env_frames,
-        frames: Arc::new(AtomicU64::new(0)),
     });
+    // Pool task wait/run sampling is process-global (the pool outlives
+    // runs); arm it to match this run's metrics switch.
+    obs::set_pool_sampling(cfg.metrics);
+    // Arm the span tracer before any worker thread exists so every role's
+    // first event already carries its thread name.
+    let tracing = !cfg.trace_path.is_empty();
+    if tracing {
+        obs::trace::start();
+    }
 
     // ---- per-policy state -------------------------------------------------
     let mut handles: Vec<PolicyHandles> = Vec::with_capacity(n_policies);
@@ -295,6 +316,15 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
     for t in threads {
         let _ = t.join();
     }
+    // Drain the trace after every worker has joined (their rings are
+    // complete) but before surfacing any run error, so a failed run still
+    // leaves its trace behind for diagnosis.
+    if tracing {
+        match obs::trace::stop_and_write(&cfg.trace_path) {
+            Ok(n) => eprintln!("[obs] trace: {n} events -> {}", cfg.trace_path),
+            Err(e) => eprintln!("[obs] trace write failed ({}): {e}", cfg.trace_path),
+        }
+    }
     let mut result = result?;
     if cfg.save_ckpt {
         for (i, h) in handles.iter().enumerate() {
@@ -317,7 +347,8 @@ fn monitor_loop(
     n_metrics: usize,
 ) -> Result<TrainResult> {
     let n_policies = handles.len();
-    let start = Instant::now();
+    let m = ctx.metrics.clone();
+    let start = obs::clock::now();
     let mut trackers: Vec<EpisodeTracker> =
         (0..n_policies).map(|_| EpisodeTracker::new(100)).collect();
     let mut task_trackers: Vec<EpisodeTracker> =
@@ -331,8 +362,25 @@ fn monitor_loop(
     let mut final_metrics = vec![0f32; n_metrics];
     let mut curve = Vec::new();
     let mut pbt = PbtController::new(cfg.pbt.clone(), &ctx.progs.manifest, cfg.seed ^ 0xbbbb);
-    let mut last_log = Instant::now();
+    let mut last_log = obs::clock::now();
     let mut msgs = Vec::with_capacity(256);
+    // Windowed fps over ~3 log intervals: the console line tracks the
+    // *current* rate; the run-start average is kept alongside it.
+    let mut fps_window = WindowedRate::new((cfg.log_interval_s * 3.0).max(5.0));
+    // metrics.jsonl: one snapshot object per log interval (plus a final
+    // one), truncated at run start.  Console-silent runs skip it.
+    let mut jsonl = if m.on() && cfg.log_interval_s > 0.0 {
+        let path = std::path::Path::new(&cfg.out_dir).join("metrics.jsonl");
+        match obs::JsonlWriter::create(&path) {
+            Ok(w) => Some((w, path)),
+            Err(e) => {
+                eprintln!("[obs] metrics.jsonl disabled ({}): {e}", path.display());
+                None
+            }
+        }
+    } else {
+        None
+    };
 
     loop {
         msgs.clear();
@@ -360,24 +408,44 @@ fn monitor_loop(
             }
         }
 
-        let frames = ctx.frames.load(std::sync::atomic::Ordering::Relaxed);
+        let frames = m.frames.get();
         let scores: Vec<f64> = trackers.iter().map(|t| t.mean_return()).collect();
         pbt.step(frames, &scores, handles);
 
         let elapsed = start.elapsed().as_secs_f64();
+        fps_window.record(elapsed, frames);
+        if m.on() {
+            sample_queue_depths(ctx);
+        }
         if cfg.log_interval_s > 0.0
             && last_log.elapsed().as_secs_f64() >= cfg.log_interval_s
         {
-            last_log = Instant::now();
-            let fps = frames as f64 / elapsed.max(1e-9);
+            last_log = obs::clock::now();
+            let fps_avg = frames as f64 / elapsed.max(1e-9);
+            let fps_now = fps_window.rate();
             let best = scores.iter().cloned().fold(f64::MIN, f64::max);
-            let drops = ctx.stat_drops.load(std::sync::atomic::Ordering::Relaxed);
+            let drops = m.stat_drops.get();
+            let lag = m.lag.snapshot();
             eprintln!(
-                "[{elapsed:7.1}s] frames {frames:>10}  fps {fps:>9.0}  \
-                 episodes {episodes:>6}  sgd {learner_steps:>5}  \
-                 return {best:>8.2}  lag {:.1}  stat_drops {drops}",
-                if lag_n > 0 { lag_sum / lag_n as f64 } else { 0.0 },
+                "[{elapsed:7.1}s] frames {frames:>10}  fps {fps_now:>9.0} \
+                 (avg {fps_avg:>9.0})  episodes {episodes:>6}  \
+                 sgd {learner_steps:>5}  return {best:>8.2}  \
+                 lag p50/p95 {}/{}  stat_drops {drops}",
+                lag.quantile(0.50),
+                lag.quantile(0.95),
             );
+            let mut failed = false;
+            if let Some((w, path)) = jsonl.as_mut() {
+                let line =
+                    metrics_jsonl_line(ctx, elapsed, frames, fps_now, episodes, learner_steps);
+                if let Err(e) = w.line(&line) {
+                    eprintln!("[obs] metrics.jsonl write failed ({}): {e}", path.display());
+                    failed = true;
+                }
+            }
+            if failed {
+                jsonl = None;
+            }
         }
         // Curve sampling (denser than logging; benches bin it as needed).
         let need_point = curve
@@ -404,8 +472,16 @@ fn monitor_loop(
         }
     }
 
-    let frames = ctx.frames.load(std::sync::atomic::Ordering::Relaxed);
+    let frames = m.frames.get();
     let wall_s = start.elapsed().as_secs_f64();
+    // Final snapshot line so short runs (under one log interval) still
+    // leave a complete metrics.jsonl record behind.
+    if let Some((w, path)) = jsonl.as_mut() {
+        let line =
+            metrics_jsonl_line(ctx, wall_s, frames, fps_window.rate(), episodes, learner_steps);
+        let _ = w.line(&line);
+        eprintln!("[obs] metrics -> {}", path.display());
+    }
     let per_policy_return: Vec<f64> = trackers.iter().map(|t| t.mean_return()).collect();
     let mean_return = per_policy_return.iter().cloned().fold(f64::MIN, f64::max);
     let per_task_return = if is_multitask {
@@ -417,6 +493,7 @@ fn monitor_loop(
     } else {
         Vec::new()
     };
+    let lag_snap = m.lag.snapshot();
     Ok(TrainResult {
         frames,
         wall_s,
@@ -432,13 +509,146 @@ fn monitor_loop(
         final_metrics,
         pbt_events: pbt.events,
         ckpt_paths: Vec::new(),
-        stat_drops: ctx.stat_drops.load(std::sync::atomic::Ordering::Relaxed),
-        learner_assembly_s: ctx
-            .assembly_busy_ns
-            .load(std::sync::atomic::Ordering::Relaxed) as f64
-            / 1e9,
-        learner_train_s: ctx.train_busy_ns.load(std::sync::atomic::Ordering::Relaxed)
-            as f64
-            / 1e9,
+        stat_drops: m.stat_drops.get(),
+        learner_assembly_s: m.assembly_busy_ns.get() as f64 / 1e9,
+        learner_train_s: m.train_busy_ns.get() as f64 / 1e9,
+        action_rtt_ms: if m.on() {
+            m.action_rtt_ns
+                .iter()
+                .map(|h| LatencySummary::from_ns_hist(&h.snapshot()))
+                .collect()
+        } else {
+            Vec::new()
+        },
+        policy_batch_ms: LatencySummary::from_ns_hist(&m.policy_batch_ns.snapshot()),
+        policy_batch_size_mean: m.policy_batch_size.snapshot().mean(),
+        lag_p50: lag_snap.quantile(0.50) as f64,
+        lag_p95: lag_snap.quantile(0.95) as f64,
+        lag_p99: lag_snap.quantile(0.99) as f64,
     })
+}
+
+/// Sample every transport shard's queue depth into the depth histograms
+/// (one sample per shard per monitor tick, ~20 Hz while training).
+fn sample_queue_depths(ctx: &SharedCtx) {
+    let m = &ctx.metrics;
+    for q in &ctx.policy_queues {
+        for l in q.shard_lens() {
+            m.policy_queue_depth.record(l as u64);
+        }
+    }
+    for q in &ctx.learner_queues {
+        for l in q.shard_lens() {
+            m.learner_queue_depth.record(l as u64);
+        }
+    }
+}
+
+/// Current per-shard depths of a queue family as `[[depth; shard]; queue]`.
+fn depths_json<T: Send>(qs: &[ShardedQueue<T>]) -> Json {
+    Json::Arr(
+        qs.iter()
+            .map(|q| {
+                Json::Arr(q.shard_lens().into_iter().map(|l| Json::num(l as f64)).collect())
+            })
+            .collect(),
+    )
+}
+
+/// One `metrics.jsonl` snapshot object (schema documented in README
+/// "Observability"; all histograms are cumulative since run start).
+fn metrics_jsonl_line(
+    ctx: &SharedCtx,
+    elapsed: f64,
+    frames: u64,
+    fps_window: f64,
+    episodes: u64,
+    learner_steps: u64,
+) -> Json {
+    let m = &ctx.metrics;
+    let lag = m.lag.snapshot();
+    let pool = obs::pool_stats();
+    Json::obj(vec![
+        ("t", Json::num(elapsed)),
+        ("frames", Json::num(frames as f64)),
+        (
+            "fps",
+            Json::obj(vec![
+                ("window", Json::num(fps_window)),
+                ("total", Json::num(frames as f64 / elapsed.max(1e-9))),
+            ]),
+        ),
+        ("episodes", Json::num(episodes as f64)),
+        ("sgd", Json::num(learner_steps as f64)),
+        (
+            "policy_batch",
+            Json::obj(vec![
+                ("size", m.policy_batch_size.snapshot().json_quantiles()),
+                (
+                    "latency_ms",
+                    LatencySummary::from_ns_hist(&m.policy_batch_ns.snapshot()).json(),
+                ),
+                (
+                    "pop_wait_ms",
+                    LatencySummary::from_ns_hist(&m.policy_pop_wait_ns.snapshot()).json(),
+                ),
+            ]),
+        ),
+        (
+            "action_rtt_ms",
+            Json::Arr(
+                m.action_rtt_ns
+                    .iter()
+                    .map(|h| LatencySummary::from_ns_hist(&h.snapshot()).json())
+                    .collect(),
+            ),
+        ),
+        (
+            "lag",
+            Json::obj(vec![
+                ("p50", Json::num(lag.quantile(0.50) as f64)),
+                ("p95", Json::num(lag.quantile(0.95) as f64)),
+                ("p99", Json::num(lag.quantile(0.99) as f64)),
+                ("max", Json::num(lag.max as f64)),
+                ("mean", Json::num(lag.mean())),
+                ("buckets", lag.json_buckets()),
+            ]),
+        ),
+        (
+            "queues",
+            Json::obj(vec![
+                ("policy", depths_json(&ctx.policy_queues)),
+                ("learner", depths_json(&ctx.learner_queues)),
+                (
+                    "reply",
+                    Json::Arr(
+                        ctx.reply_queues.iter().map(|q| Json::num(q.len() as f64)).collect(),
+                    ),
+                ),
+                ("policy_depth", m.policy_queue_depth.snapshot().json_quantiles()),
+                ("learner_depth", m.learner_queue_depth.snapshot().json_quantiles()),
+            ]),
+        ),
+        (
+            "pool",
+            Json::obj(vec![
+                (
+                    "task_wait_ms",
+                    LatencySummary::from_ns_hist(&pool.task_wait_ns.snapshot()).json(),
+                ),
+                (
+                    "task_run_ms",
+                    LatencySummary::from_ns_hist(&pool.task_run_ns.snapshot()).json(),
+                ),
+            ]),
+        ),
+        (
+            "learner",
+            Json::obj(vec![
+                ("assembly_busy_s", Json::num(m.assembly_busy_ns.get() as f64 / 1e9)),
+                ("train_busy_s", Json::num(m.train_busy_ns.get() as f64 / 1e9)),
+            ]),
+        ),
+        ("stat_drops", Json::num(m.stat_drops.get() as f64)),
+    ])
 }

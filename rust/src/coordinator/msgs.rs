@@ -12,13 +12,13 @@
 //! *consumer* rather than per queue) and stats (many sporadic producers,
 //! monitor consumer) stay on the mutex-ring [`Fifo`].
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::ipc::{Fifo, ShardedQueue, SlotIdx, TrajStore};
+use crate::obs::Metrics;
 use crate::runtime::placement::PlacementPlan;
 use crate::runtime::ModelPrograms;
-use crate::stats::ThroughputMeter;
 
 /// Request: "produce an action for step `t` of the trajectory in `slot`".
 /// The policy worker finds the observation at `slot.obs[t]` and the GRU
@@ -73,32 +73,25 @@ pub struct SharedCtx {
     /// sharded per rollout worker.
     pub learner_queues: Vec<ShardedQueue<SlotIdx>>,
     pub stats: Fifo<StatMsg>,
-    /// `StatMsg`s dropped because the monitor fell behind (`push_stat`).
-    /// Surfaced in `TrainResult::stat_drops` and the monitor log line so
-    /// throughput runs can't quietly lose episode/lag data.
-    pub stat_drops: AtomicU64,
-    /// Nanoseconds the learner assembly stages spent filling batch
-    /// buffers, and the train stages spent in `train.run` — the
-    /// pipelined-learner overlap diagnostics (summed across policies).
-    pub assembly_busy_ns: AtomicU64,
-    pub train_busy_ns: AtomicU64,
+    /// Telemetry registry (`rust/src/obs/`): frame/drop accounting,
+    /// learner busy time, and every latency histogram — batch size and
+    /// latency, pop waits, per-policy action round-trip, the policy-lag
+    /// distribution, queue depths.  The monitor snapshots it each log
+    /// interval into the console line and `metrics.jsonl`.
+    pub metrics: Arc<Metrics>,
     pub store: Arc<TrajStore>,
     pub progs: Arc<ModelPrograms>,
     /// Affinity-aware thread placement (`--cpu_affinity`); every thread
     /// body calls its `pin_*` method at start (no-op when disabled).
     pub placement: Arc<PlacementPlan>,
-    pub meter: Arc<ThroughputMeter>,
     pub shutdown: Arc<AtomicBool>,
     /// Env frames target; rollout workers stop sampling once reached.
     pub frame_budget: u64,
-    /// Frames actually produced (frameskip-inclusive).
-    pub frames: Arc<AtomicU64>,
 }
 
 impl SharedCtx {
     pub fn should_stop(&self) -> bool {
-        self.shutdown.load(Ordering::Acquire)
-            || self.frames.load(Ordering::Relaxed) >= self.frame_budget
+        self.shutdown.load(Ordering::Acquire) || self.metrics.frames.get() >= self.frame_budget
     }
 
     /// Best-effort stat delivery: never blocks the hot path, but a dropped
@@ -106,7 +99,7 @@ impl SharedCtx {
     /// lies during throughput runs.
     pub fn push_stat(&self, msg: StatMsg) {
         if self.stats.try_push(msg).is_err() {
-            self.stat_drops.fetch_add(1, Ordering::Relaxed);
+            self.metrics.stat_drops.inc();
         }
     }
 

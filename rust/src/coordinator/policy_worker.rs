@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::ipc::RecvError;
+use crate::obs;
 use crate::runtime::{lit_f32, lit_u8, read_f32_into, Literal, ParamStore};
 use crate::util::{log_softmax, sample_categorical, Rng};
 
@@ -65,6 +66,12 @@ pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWo
         .upload(&cur_params.iter().collect::<Vec<_>>())
         .expect("param upload");
 
+    let metrics = &ctx.metrics;
+    // Wait stopwatch: opened when the worker goes idle, closed when the
+    // first request of the next batch arrives.  Deliberately *not* reset
+    // on pop timeouts so consecutive idle intervals accumulate into one
+    // wait sample (and one `policy.wait` trace slice).
+    let mut wait0 = obs::now_ns_if(metrics.on() || obs::trace::enabled());
     loop {
         // ---- collect a batch -------------------------------------------
         reqs.clear();
@@ -78,15 +85,24 @@ pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWo
                 continue;
             }
         }
+        if let Some(t0) = wait0 {
+            let end = obs::clock::now_ns();
+            if metrics.on() {
+                metrics.policy_pop_wait_ns.record(end.saturating_sub(t0));
+            }
+            obs::trace::event("policy.wait", t0, end);
+        }
+        let batch0 = metrics.start();
         // Small linger lets more requests join the batch — bigger batches
         // amortise the fixed dispatch cost (tunable; see §Perf).  The wait
         // is a deadline-bounded *blocking* pop_many: while no requests are
         // queued the worker sleeps on the queue condvar instead of burning
         // a core on a try_pop/yield spin.
         if reqs.len() < b_max && !cfg.batch_linger.is_zero() {
-            let deadline = std::time::Instant::now() + cfg.batch_linger;
+            let _sp = obs::trace::span("policy.linger");
+            let deadline = obs::clock::now() + cfg.batch_linger;
             while reqs.len() < b_max {
-                let now = std::time::Instant::now();
+                let now = obs::clock::now();
                 if now >= deadline {
                     break;
                 }
@@ -133,23 +149,27 @@ pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWo
 
         // SF_NO_PARAM_CACHE=1 re-uploads parameters every batch — the
         // §Perf ablation switch for the device-resident cache.
-        let outs = if std::env::var_os("SF_NO_PARAM_CACHE").is_some() {
-            let p = &cur_params;
-            let mut inputs: Vec<&Literal> = Vec::with_capacity(p.len() + 2);
-            inputs.extend(p.iter());
-            inputs.push(&obs_lit);
-            inputs.push(&h_lit);
-            ctx.progs.policy.run(&inputs)
-        } else {
-            ctx.progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])
-        }
-        .expect("policy inference failed");
+        let outs = {
+            let _sp = obs::trace::span("policy.infer");
+            if std::env::var_os("SF_NO_PARAM_CACHE").is_some() {
+                let p = &cur_params;
+                let mut inputs: Vec<&Literal> = Vec::with_capacity(p.len() + 2);
+                inputs.extend(p.iter());
+                inputs.push(&obs_lit);
+                inputs.push(&h_lit);
+                ctx.progs.policy.run(&inputs)
+            } else {
+                ctx.progs.policy.run_cached(&param_bufs, &[&obs_lit, &h_lit])
+            }
+            .expect("policy inference failed")
+        };
         debug_assert_eq!(outs.len(), 3);
         read_f32_into(&outs[0], &mut logits_buf).expect("logits read");
         read_f32_into(&outs[1], &mut value_buf).expect("value read");
         read_f32_into(&outs[2], &mut h_out_buf).expect("hidden read");
 
         // ---- sample actions, write results back, ack --------------------
+        let _sp = obs::trace::span("policy.writeback");
         for (i, r) in reqs.iter().enumerate().take(n) {
             let row = &logits_buf[i * total_actions..(i + 1) * total_actions];
             let mut slot = ctx.store.slot(r.slot);
@@ -173,5 +193,11 @@ pub fn run_policy_worker(ctx: &SharedCtx, params: Arc<ParamStore>, cfg: PolicyWo
             let _ = ctx.reply_queues[r.reply_to as usize]
                 .push(ActionReply { stream: r.stream });
         }
+        drop(_sp);
+        if metrics.on() {
+            metrics.policy_batch_size.record(n as u64);
+        }
+        metrics.policy_batch_ns.record_since(batch0);
+        wait0 = obs::now_ns_if(metrics.on() || obs::trace::enabled());
     }
 }

@@ -15,12 +15,12 @@
 //! (env, agent) stream of the group straight into its trajectory-slab row
 //! through the shared thread pool.
 
-use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use crate::env::vec_env::VecEnv;
 use crate::env::{AgentStep, EpisodeMonitor};
 use crate::ipc::{RecvError, ShardedProducer, SlotIdx};
+use crate::obs;
 use crate::util::Rng;
 
 use super::msgs::{ActionRequest, SharedCtx, StatMsg};
@@ -47,6 +47,9 @@ struct Stream {
     policy: u32,
     /// Frames produced by this stream (diagnostics).
     frames: u64,
+    /// When the in-flight `ActionRequest` was sent (`obs` clock ns);
+    /// 0 = metrics off.  Closes the round-trip histogram on reply.
+    sent_ns: u64,
 }
 
 pub struct RolloutWorkerCfg {
@@ -98,6 +101,7 @@ pub fn run_rollout_worker(
                 t: 0,
                 policy,
                 frames: 0,
+                sent_ns: 0,
             });
         }
     }
@@ -128,7 +132,7 @@ pub fn run_rollout_worker(
     for (g, members) in groups.iter().enumerate() {
         render_group_into_slots(ctx, &mut venv, g, members, &streams, obs_len);
         for &si in members {
-            send_request(&mut producers, &streams[si], cfg.worker_id, si as u32);
+            send_request(ctx, &mut producers, &mut streams[si], cfg.worker_id, si as u32);
             pending[g] += 1;
         }
     }
@@ -136,22 +140,30 @@ pub fn run_rollout_worker(
     'outer: loop {
         for g in 0..groups.len() {
             // Wait until every stream in group g has its action.
-            while pending[g] > 0 {
-                let reply = match ctx.reply_queues[cfg.worker_id as usize]
-                    .pop(Duration::from_millis(100))
-                {
-                    Ok(r) => r,
-                    Err(RecvError::Closed) => break 'outer,
-                    Err(RecvError::Timeout) => {
-                        if ctx.should_stop() {
-                            break 'outer;
+            if pending[g] > 0 {
+                let _sp = obs::trace::span("rollout.wait");
+                while pending[g] > 0 {
+                    let reply = match ctx.reply_queues[cfg.worker_id as usize]
+                        .pop(Duration::from_millis(100))
+                    {
+                        Ok(r) => r,
+                        Err(RecvError::Closed) => break 'outer,
+                        Err(RecvError::Timeout) => {
+                            if ctx.should_stop() {
+                                break 'outer;
+                            }
+                            continue;
                         }
-                        continue;
+                    };
+                    let si = reply.stream as usize;
+                    if streams[si].sent_ns != 0 {
+                        let rtt = obs::clock::now_ns().saturating_sub(streams[si].sent_ns);
+                        ctx.metrics.action_rtt_ns[streams[si].policy as usize].record(rtt);
+                        streams[si].sent_ns = 0;
                     }
-                };
-                let si = reply.stream as usize;
-                let sg = group_of(&groups, si);
-                pending[sg] -= 1;
+                    let sg = group_of(&groups, si);
+                    pending[sg] -= 1;
+                }
             }
             if ctx.should_stop() {
                 break 'outer;
@@ -175,14 +187,16 @@ pub fn run_rollout_worker(
             // per env inside (rewards summed, dones OR'd, early stop).  The
             // return value is the agent-frames actually simulated — exactly
             // what the throughput meters count.
-            let frames = venv.step_group(
-                g,
-                &group_actions[..group_envs * n_agents * n_heads],
-                cfg.frameskip,
-                &mut group_out[..group_envs * n_agents],
-            );
-            ctx.meter.add(frames);
-            ctx.frames.fetch_add(frames, Ordering::Relaxed);
+            let frames = {
+                let _sp = obs::trace::span("env.step");
+                venv.step_group(
+                    g,
+                    &group_actions[..group_envs * n_agents * n_heads],
+                    cfg.frameskip,
+                    &mut group_out[..group_envs * n_agents],
+                )
+            };
+            ctx.metrics.frames.add(frames);
 
             // Record the transition into each agent's trajectory.
             for &si in &groups[g] {
@@ -232,7 +246,7 @@ pub fn run_rollout_worker(
                         break 'outer;
                     }
                 }
-                send_request(&mut producers, &streams[si], cfg.worker_id, si as u32);
+                send_request(ctx, &mut producers, &mut streams[si], cfg.worker_id, si as u32);
                 pending[g] += 1;
             }
         }
@@ -264,6 +278,7 @@ fn render_group_into_slots(
     streams: &[Stream],
     obs_len: usize,
 ) {
+    let _sp = obs::trace::span("env.render");
     let mut guards: Vec<_> =
         members.iter().map(|&si| ctx.store.slot(streams[si].slot)).collect();
     let mut rows: Vec<&mut [u8]> = guards
@@ -274,13 +289,21 @@ fn render_group_into_slots(
     venv.render_group(g, &mut rows);
 }
 
-fn send_request(producers: &mut RolloutProducers, st: &Stream, worker_id: u16, stream: u32) {
+fn send_request(
+    ctx: &SharedCtx,
+    producers: &mut RolloutProducers,
+    st: &mut Stream,
+    worker_id: u16,
+    stream: u32,
+) {
     let req = ActionRequest {
         slot: st.slot,
         t: st.t as u16,
         reply_to: worker_id,
         stream,
     };
+    // Round-trip stopwatch (closed when the reply pops); 0 = metrics off.
+    st.sent_ns = ctx.metrics.start().unwrap_or(0);
     // Wait-free in steady state: this worker's private SPSC shard.  A full
     // shard (policy worker far behind) blocks with backoff, the same
     // back-pressure the mutex ring applied.

@@ -12,7 +12,7 @@
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::{Arc, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Error returned by blocking receives when the queue is closed and empty.
 #[derive(Debug, PartialEq, Eq)]
@@ -186,7 +186,7 @@ impl<T> Fifo<T> {
     /// deadline is computed once, and each condvar wait uses the remaining
     /// time, so spurious wakeups cannot extend the wait past it.
     pub fn pop(&self, timeout: Duration) -> Result<T, RecvError> {
-        let deadline = Instant::now() + timeout;
+        let deadline = crate::obs::clock::now() + timeout;
         let mut st = self.inner.state.lock().unwrap();
         loop {
             if let Some(item) = st.ring.pop_front() {
@@ -197,7 +197,7 @@ impl<T> Fifo<T> {
             if self.is_closed() {
                 return Err(RecvError::Closed);
             }
-            let now = Instant::now();
+            let now = crate::obs::clock::now();
             if now >= deadline {
                 return Err(RecvError::Timeout);
             }
@@ -232,7 +232,7 @@ impl<T> Fifo<T> {
         max: usize,
         timeout: Duration,
     ) -> Result<usize, RecvError> {
-        let deadline = Instant::now() + timeout;
+        let deadline = crate::obs::clock::now() + timeout;
         let mut st = self.inner.state.lock().unwrap();
         loop {
             if !st.ring.is_empty() {
@@ -245,7 +245,7 @@ impl<T> Fifo<T> {
             if self.is_closed() {
                 return Err(RecvError::Closed);
             }
-            let now = Instant::now();
+            let now = crate::obs::clock::now();
             if now >= deadline {
                 return Err(RecvError::Timeout);
             }

@@ -47,7 +47,7 @@
 
 use crate::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
 use crate::sync::{hint, thread, Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::fifo::RecvError;
 use super::spsc;
@@ -129,6 +129,14 @@ impl<T: Send> ShardedQueue<T> {
         comb.shards.iter().map(|s| s.len()).sum()
     }
 
+    /// Queued items per shard, in producer (rollout-worker) order — the
+    /// per-shard depth readout the monitor samples into `metrics.jsonl`.
+    /// Same diagnostic caveat as [`ShardedQueue::len`]: racy under load.
+    pub fn shard_lens(&self) -> Vec<usize> {
+        let comb = self.shared.combiner.lock().unwrap();
+        comb.shards.iter().map(|s| s.len()).collect()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -162,7 +170,7 @@ impl<T: Send> ShardedQueue<T> {
         max: usize,
         timeout: Duration,
     ) -> Result<usize, RecvError> {
-        let deadline = Instant::now() + timeout;
+        let deadline = crate::obs::clock::now() + timeout;
         let shared = &*self.shared;
         let mut comb = shared.combiner.lock().unwrap();
         loop {
@@ -175,7 +183,7 @@ impl<T: Send> ShardedQueue<T> {
             if shared.closed.load(Ordering::Acquire) {
                 return Err(RecvError::Closed);
             }
-            let now = Instant::now();
+            let now = crate::obs::clock::now();
             if now >= deadline {
                 return Err(RecvError::Timeout);
             }

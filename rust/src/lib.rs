@@ -41,6 +41,7 @@ pub mod env;
 pub mod eval;
 pub mod ipc;
 pub mod json;
+pub mod obs;
 pub mod render_dump;
 pub mod runtime;
 pub mod stats;

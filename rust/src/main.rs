@@ -2,10 +2,12 @@
 //!
 //! Subcommands:
 //!   train  [--preset NAME] [--key value ...]     train a run, print summary
+//!          `--trace out.json` writes a Perfetto-loadable span trace;
+//!          `--metrics false` turns the sampled histograms off
 //!   bench  <exhibit> [--key value ...]           regenerate a paper exhibit
 //!          exhibits: throughput | table1 | walltime | scenarios | battle |
 //!                    pbt-duel | pbt-throughput | multitask | envs | fifo |
-//!                    lag | pin
+//!                    lag | pin | obs
 //!   eval   --ckpt F [--episodes N] [--greedy b]  evaluate a checkpoint
 //!   match  --ckpt-a A --ckpt-b B [--matches N]   1v1 duel between checkpoints
 //!   render [--ckpt F] --out DIR [--n N]          dump episode frames (PPM)
@@ -179,6 +181,30 @@ fn cmd_train(args: &[String]) {
             println!("sgd_steps         {}", res.learner_steps);
             println!("mean_return       {:.3}", res.mean_return);
             println!("policy_lag mean   {:.2} max {}", res.lag_mean, res.lag_max);
+            if res.lag_p99 > 0.0 {
+                println!(
+                    "policy_lag p50/p95/p99 {:.0}/{:.0}/{:.0}",
+                    res.lag_p50, res.lag_p95, res.lag_p99
+                );
+            }
+            if res.policy_batch_ms.count > 0 {
+                println!(
+                    "policy_batch      mean {:.1} reqs, latency p50/p95/p99 \
+                     {:.2}/{:.2}/{:.2} ms",
+                    res.policy_batch_size_mean,
+                    res.policy_batch_ms.p50,
+                    res.policy_batch_ms.p95,
+                    res.policy_batch_ms.p99
+                );
+            }
+            for (i, rtt) in res.action_rtt_ms.iter().enumerate() {
+                if rtt.count > 0 {
+                    println!(
+                        "action_rtt[{i}]     p50/p95/p99 {:.2}/{:.2}/{:.2} ms (n={})",
+                        rtt.p50, rtt.p95, rtt.p99, rtt.count
+                    );
+                }
+            }
             if res.stat_drops > 0 {
                 println!("stat_drops        {} (monitor fell behind)", res.stat_drops);
             }
@@ -215,6 +241,7 @@ fn cmd_bench(args: &[String]) {
         "fifo" => bench::fifo::run_cli(rest),
         "lag" => bench::lag::run_cli(rest),
         "pin" => bench::pin::run_cli(rest),
+        "obs" => bench::obs::run_cli(rest),
         _ => {
             eprintln!("unknown exhibit '{exhibit}'");
             std::process::exit(2);

@@ -1,0 +1,81 @@
+//! Clock facade for the telemetry layer.
+//!
+//! All timing in instrumented modules (`coordinator/`, `ipc/` — enforced
+//! by `sf_lint` rule 4) goes through this module instead of calling
+//! `std::time::Instant::now()` directly, mirroring how `crate::sync`
+//! fronts the concurrency primitives:
+//!
+//! * [`now`] returns a real monotonic `Instant` in **every** build.  It
+//!   backs deadline arithmetic (queue `pop` timeouts, the policy-worker
+//!   linger window, the monitor's log cadence) — real deadlines must keep
+//!   expiring even under `--features chaos`, otherwise models that rely
+//!   on timeouts to make progress would hang.
+//! * [`now_ns`] is the *measurement* clock used for histograms and trace
+//!   spans.  Normal builds report nanoseconds since a process-global
+//!   anchor.  Under the chaos feature it degrades to a logical tick
+//!   counter: a plain `std` atomic increment is **not** a scheduling
+//!   point for the interleaving checker (only `crate::sync` facade ops
+//!   are), so recording a timestamp can never perturb which schedules
+//!   get explored — exploration stays deterministic, while timestamps
+//!   remain strictly monotone so `duration > 0` invariants still hold.
+
+use std::time::Instant;
+
+/// Real monotonic clock, in every build.  Use for deadlines and elapsed
+/// wall-time; use [`now_ns`] for anything recorded into a histogram or
+/// trace.
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+#[cfg(not(feature = "chaos"))]
+fn anchor() -> Instant {
+    use std::sync::OnceLock;
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Measurement clock: nanoseconds since the first call in this process.
+#[cfg(not(feature = "chaos"))]
+#[inline]
+pub fn now_ns() -> u64 {
+    anchor().elapsed().as_nanos() as u64
+}
+
+/// Measurement clock under the chaos checker: a strictly monotone logical
+/// tick.  The counter is a *std* atomic on purpose — facade atomics are
+/// scheduling points, and the measurement clock must be invisible to the
+/// scheduler (see module docs).
+#[cfg(feature = "chaos")]
+#[inline]
+pub fn now_ns() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TICK: AtomicU64 = AtomicU64::new(0);
+    TICK.fetch_add(1, Ordering::Relaxed) + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        let c = now_ns();
+        assert!(a <= b && b <= c);
+        // Strictly increasing under chaos (logical ticks); non-decreasing
+        // with a real clock.
+        #[cfg(feature = "chaos")]
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn now_backs_deadlines() {
+        let t0 = now();
+        assert!(now() >= t0);
+        let deadline = t0 + std::time::Duration::from_millis(1);
+        assert!(deadline > t0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Lock-free metric primitives: counters, gauges, and a log-linear
+//! latency histogram (HdrHistogram-lite).
+//!
+//! The hot path is atomics-only: `Counter::add` is one relaxed
+//! `fetch_add`; `Histogram::record` is a bucket-index computation (two
+//! shifts off `leading_zeros`) plus four relaxed RMWs.  Nothing here
+//! allocates after construction and nothing takes a lock, so record
+//! sites are safe inside the rollout/policy/learner inner loops.
+//!
+//! Bucket layout: values `0..8` get exact unit buckets; every later
+//! power-of-two octave is split into 4 sub-buckets, giving a worst-case
+//! relative error of 1/8 of the value — tight enough that a quantile
+//! estimated from bucket counts lands in the *same bucket* as the exact
+//! nearest-rank order statistic (asserted against a sorted-vector oracle
+//! in `rust/tests/obs.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::clock;
+use crate::json::Json;
+
+/// Sub-buckets per power-of-two octave (octaves 3..=63).
+const SUBS: usize = 4;
+/// Total bucket count: 8 exact unit buckets + 61 octaves * 4 sub-buckets.
+pub const N_BUCKETS: usize = 8 + 61 * SUBS;
+
+/// Map a value to its bucket index.  Monotone: `a <= b` implies
+/// `bucket_index(a) <= bucket_index(b)`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 8 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= 3 since v >= 8
+    let sub = ((v >> (msb - 2)) & 3) as usize;
+    8 + (msb - 3) * SUBS + sub
+}
+
+/// Smallest value mapping to bucket `i`.
+pub fn bucket_lo(i: usize) -> u64 {
+    if i < 8 {
+        return i as u64;
+    }
+    let oct = (i - 8) / SUBS + 3;
+    let sub = ((i - 8) % SUBS) as u64;
+    (1u64 << oct) + (sub << (oct - 2))
+}
+
+/// Largest value mapping to bucket `i`.
+pub fn bucket_hi(i: usize) -> u64 {
+    if i + 1 >= N_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lo(i + 1) - 1
+    }
+}
+
+/// Monotonically increasing event count.  Relaxed atomics only.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-linear histogram over `u64` values (typically nanoseconds).
+/// Concurrent `record` from any number of threads; `snapshot` is racy by
+/// design (counts may lag sum by in-flight records) — fine for reporting.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let buckets: Vec<AtomicU64> = (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record the elapsed time since a [`super::Metrics::start`] stamp.
+    /// `None` (metrics disabled) is a no-op — no clock read, no RMW.
+    #[inline]
+    pub fn record_since(&self, t0: Option<u64>) {
+        if let Some(t) = t0 {
+            self.record(clock::now_ns().saturating_sub(t));
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`], with quantile estimation.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile estimate (`q` in 0..=1).  Walks the bucket
+    /// counts to the bucket holding the rank-`ceil(q*n)` order statistic
+    /// and returns that bucket's midpoint (exact for the unit buckets,
+    /// within 1/8 relative error otherwise).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let lo = bucket_lo(i);
+                let hi = if i + 1 >= N_BUCKETS { self.max.max(lo) } else { bucket_hi(i) };
+                return lo + (hi - lo) / 2;
+            }
+        }
+        self.max
+    }
+
+    /// Non-empty buckets as `(bucket_lo, count)` pairs — the compact
+    /// histogram representation written to `metrics.jsonl`.
+    pub fn sparse_buckets(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lo(i), c))
+            .collect()
+    }
+
+    /// Sparse buckets as a JSON array of `[lo, count]` pairs.
+    pub fn json_buckets(&self) -> Json {
+        Json::Arr(
+            self.sparse_buckets()
+                .into_iter()
+                .map(|(lo, c)| Json::Arr(vec![Json::num(lo as f64), Json::num(c as f64)]))
+                .collect(),
+        )
+    }
+
+    /// Raw-unit quantile summary (`p50`/`p95`/`p99`/`max`/`mean`/`count`)
+    /// for histograms whose values are not nanoseconds (batch sizes, lag).
+    pub fn json_quantiles(&self) -> Json {
+        Json::obj(vec![
+            ("p50", Json::num(self.quantile(0.50) as f64)),
+            ("p95", Json::num(self.quantile(0.95) as f64)),
+            ("p99", Json::num(self.quantile(0.99) as f64)),
+            ("max", Json::num(self.max as f64)),
+            ("mean", Json::num(self.mean())),
+            ("count", Json::num(self.count as f64)),
+        ])
+    }
+}
+
+/// Millisecond latency summary derived from a nanosecond histogram —
+/// the form surfaced in `TrainResult`, the train summary, and bench JSON.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub count: u64,
+}
+
+impl LatencySummary {
+    pub fn from_ns_hist(h: &HistSnapshot) -> LatencySummary {
+        const MS: f64 = 1e-6; // ns -> ms
+        LatencySummary {
+            p50: h.quantile(0.50) as f64 * MS,
+            p95: h.quantile(0.95) as f64 * MS,
+            p99: h.quantile(0.99) as f64 * MS,
+            max: h.max as f64 * MS,
+            mean: h.mean() * MS,
+            count: h.count,
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+            ("max", Json::num(self.max)),
+            ("mean", Json::num(self.mean)),
+            ("count", Json::num(self.count as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketization_is_monotone_and_total() {
+        let mut samples: Vec<u64> = (0..200).collect();
+        for shift in 3..64 {
+            let v = 1u64 << shift;
+            samples.extend([v - 1, v, v + 1, v + (v >> 1)]);
+        }
+        samples.push(u64::MAX);
+        samples.sort_unstable();
+        let mut prev = 0usize;
+        for &v in &samples {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS, "idx {i} out of range for {v}");
+            assert!(i >= prev, "non-monotone at {v}: {i} < {prev}");
+            prev = i;
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::new();
+        c.add(3);
+        c.inc();
+        assert_eq!(c.get(), 4);
+        let g = Gauge::new();
+        g.set(17);
+        assert_eq!(g.get(), 17);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert!(s.sparse_buckets().is_empty());
+    }
+}

@@ -1,0 +1,189 @@
+//! Always-on observability for the training pipeline.
+//!
+//! Two halves, both std-only:
+//!
+//! * [`metrics`] — lock-free counters/gauges/histograms collected into a
+//!   per-run [`Metrics`] registry that lives in `SharedCtx`.  The monitor
+//!   loop snapshots it every log interval into the console line and an
+//!   append-only `<out_dir>/metrics.jsonl` (one JSON object per line via
+//!   `crate::json`).  Disable with `--metrics false`; the registry still
+//!   exists (frame/drop accounting is control-plane and always counts),
+//!   but every latency record site collapses to a single branch.
+//! * [`trace`] — a span tracer armed by `--trace <path>`: per-thread ring
+//!   buffers of begin/end events, drained at shutdown into Chrome
+//!   trace-event JSON that Perfetto loads with one named track per
+//!   pipeline role.
+//!
+//! [`clock`] fronts all timing for both halves (and, by lint rule 4, for
+//! all of `coordinator/` and `ipc/`), so the chaos checker's schedule
+//! exploration stays deterministic — see its module docs.
+
+pub mod clock;
+pub mod metrics;
+pub mod trace;
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+pub use metrics::{Counter, Gauge, HistSnapshot, Histogram, LatencySummary};
+
+/// Timestamp helper for wait measurements shared between the metrics and
+/// trace halves: `Some(now_ns)` iff any consumer is interested.
+#[inline]
+pub fn now_ns_if(interested: bool) -> Option<u64> {
+    if interested {
+        Some(clock::now_ns())
+    } else {
+        None
+    }
+}
+
+/// Per-run metric registry, shared by every pipeline role via
+/// `SharedCtx`.  All fields are lock-free; see [`metrics`] for the
+/// primitives.  `frames` and `stat_drops` are **control-plane** — the
+/// frame budget and drop accounting read them — so they count even when
+/// the registry is disabled; everything else is gated on [`Metrics::on`].
+pub struct Metrics {
+    on: bool,
+    /// Env frames produced (drives the frame budget; always counts).
+    pub frames: Counter,
+    /// Stats messages dropped on a full queue (always counts).
+    pub stat_drops: Counter,
+    /// Learner assembly-stage busy time, summed across policies (ns).
+    pub assembly_busy_ns: Counter,
+    /// Learner train-stage busy time, summed across policies (ns).
+    pub train_busy_ns: Counter,
+    /// Requests per policy-worker inference batch.
+    pub policy_batch_size: Histogram,
+    /// Policy-worker batch wall time, linger through ack (ns).
+    pub policy_batch_ns: Histogram,
+    /// Policy-worker wait for the first request of a batch (ns).
+    pub policy_pop_wait_ns: Histogram,
+    /// Learner assembly-stage wait for a full batch of slots (ns).
+    pub learner_pop_wait_ns: Histogram,
+    /// ActionRequest -> ActionReply round-trip per policy (ns),
+    /// measured at the rollout worker.
+    pub action_rtt_ns: Vec<Histogram>,
+    /// Policy lag (learner version minus behavior version) per sample —
+    /// the paper's off-policy correction knob, as a full distribution.
+    pub lag: Histogram,
+    /// Per-shard policy-queue depth, sampled by the monitor each tick.
+    pub policy_queue_depth: Histogram,
+    /// Per-shard learner-queue depth, sampled by the monitor each tick.
+    pub learner_queue_depth: Histogram,
+}
+
+impl Metrics {
+    pub fn new(n_policies: usize, on: bool) -> Metrics {
+        Metrics {
+            on,
+            frames: Counter::new(),
+            stat_drops: Counter::new(),
+            assembly_busy_ns: Counter::new(),
+            train_busy_ns: Counter::new(),
+            policy_batch_size: Histogram::new(),
+            policy_batch_ns: Histogram::new(),
+            policy_pop_wait_ns: Histogram::new(),
+            learner_pop_wait_ns: Histogram::new(),
+            action_rtt_ns: (0..n_policies.max(1)).map(|_| Histogram::new()).collect(),
+            lag: Histogram::new(),
+            policy_queue_depth: Histogram::new(),
+            learner_queue_depth: Histogram::new(),
+        }
+    }
+
+    /// Is latency collection enabled?  Record sites branch on this once.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    /// Start a latency measurement: `Some(now_ns)` when enabled, `None`
+    /// (skipping even the clock read) when disabled.  Pair with
+    /// [`Histogram::record_since`].
+    #[inline]
+    pub fn start(&self) -> Option<u64> {
+        now_ns_if(self.on)
+    }
+}
+
+/// Pool task wait/run instrumentation.  The native pool is a
+/// process-global shared by training, rendering and benches, so its
+/// stats are process-global too, behind a sampling switch the
+/// coordinator flips from `cfg.metrics` at run start.
+pub struct PoolStats {
+    /// Enqueue-to-start latency of queued pool tasks (ns).
+    pub task_wait_ns: Histogram,
+    /// Execution time of queued pool tasks (ns).
+    pub task_run_ns: Histogram,
+}
+
+static POOL_SAMPLING: AtomicBool = AtomicBool::new(false);
+
+pub fn pool_stats() -> &'static PoolStats {
+    static STATS: OnceLock<PoolStats> = OnceLock::new();
+    STATS.get_or_init(|| PoolStats {
+        task_wait_ns: Histogram::new(),
+        task_run_ns: Histogram::new(),
+    })
+}
+
+pub fn set_pool_sampling(on: bool) {
+    POOL_SAMPLING.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn pool_sampling() -> bool {
+    POOL_SAMPLING.load(Ordering::Relaxed)
+}
+
+/// Append-only JSONL sink (`metrics.jsonl`): one `crate::json::Json`
+/// object per line, flushed per line so a killed run keeps its tail.
+pub struct JsonlWriter {
+    file: std::fs::File,
+}
+
+impl JsonlWriter {
+    /// Create (truncate) `path`, creating parent directories as needed.
+    pub fn create(path: &std::path::Path) -> std::io::Result<JsonlWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        Ok(JsonlWriter { file: std::fs::File::create(path)? })
+    }
+
+    pub fn line(&mut self, obj: &crate::json::Json) -> std::io::Result<()> {
+        self.file.write_all(obj.to_string().as_bytes())?;
+        self.file.write_all(b"\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_skips_clock() {
+        let m = Metrics::new(1, false);
+        assert!(!m.on());
+        assert!(m.start().is_none());
+        m.policy_batch_ns.record_since(None);
+        assert_eq!(m.policy_batch_ns.snapshot().count, 0);
+        // Control-plane counters still count.
+        m.frames.add(7);
+        assert_eq!(m.frames.get(), 7);
+    }
+
+    #[test]
+    fn enabled_registry_measures() {
+        let m = Metrics::new(2, true);
+        assert_eq!(m.action_rtt_ns.len(), 2);
+        let t0 = m.start();
+        assert!(t0.is_some());
+        m.policy_batch_ns.record_since(t0);
+        assert_eq!(m.policy_batch_ns.snapshot().count, 1);
+    }
+}

@@ -46,6 +46,33 @@ pub type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
 struct Task {
     job: Box<dyn FnOnce() + Send + 'static>,
     scope: Arc<ScopeState>,
+    /// Enqueue timestamp (`obs` clock, ns) when pool sampling is armed
+    /// (`crate::obs::set_pool_sampling`); 0 = unsampled.  Feeds the
+    /// task wait/run histograms in `crate::obs::pool_stats`.
+    t_enq: u64,
+}
+
+/// Run one task, recording wait/run time into the process-global pool
+/// histograms when it was stamped, and wrapping execution in a
+/// `pool.task` trace span (one relaxed load when tracing is off).
+fn exec_task(task: Task) {
+    let run0 = if task.t_enq != 0 {
+        let now = crate::obs::clock::now_ns();
+        crate::obs::pool_stats().task_wait_ns.record(now.saturating_sub(task.t_enq));
+        now
+    } else {
+        0
+    };
+    let panicked = {
+        let _sp = crate::obs::trace::span("pool.task");
+        catch_unwind(AssertUnwindSafe(task.job)).is_err()
+    };
+    if run0 != 0 {
+        crate::obs::pool_stats()
+            .task_run_ns
+            .record(crate::obs::clock::now_ns().saturating_sub(run0));
+    }
+    task.scope.complete(panicked);
 }
 
 struct ScopeState {
@@ -149,6 +176,9 @@ impl NativePool {
             return;
         }
         if self.threads <= 1 || jobs.len() == 1 {
+            // Inline fast path: deliberately uninstrumented — no queueing
+            // means "task wait" has no meaning here, and single-job scopes
+            // are too frequent/short to be worth a histogram record.
             let mut panicked = false;
             for job in jobs {
                 panicked |= catch_unwind(AssertUnwindSafe(job)).is_err();
@@ -159,6 +189,11 @@ impl NativePool {
             return;
         }
         let scope = Arc::new(ScopeState::new(jobs.len()));
+        let t_enq = if crate::obs::pool_sampling() {
+            crate::obs::clock::now_ns()
+        } else {
+            0
+        };
         {
             let mut q = self.shared.queue.lock().unwrap();
             for job in jobs {
@@ -168,7 +203,7 @@ impl NativePool {
                 // call.
                 let job: Box<dyn FnOnce() + Send + 'static> =
                     unsafe { std::mem::transmute(job) };
-                q.push_back(Task { job, scope: Arc::clone(&scope) });
+                q.push_back(Task { job, scope: Arc::clone(&scope), t_enq });
             }
         }
         self.shared.work.notify_all();
@@ -179,8 +214,7 @@ impl NativePool {
         loop {
             let task = self.shared.queue.lock().unwrap().pop_front();
             let Some(t) = task else { break };
-            let panicked = catch_unwind(AssertUnwindSafe(t.job)).is_err();
-            t.scope.complete(panicked);
+            exec_task(t);
         }
         if scope.wait() {
             panic!("native pool: a parallel task panicked");
@@ -245,8 +279,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 q = shared.work.wait(q).unwrap();
             }
         };
-        let panicked = catch_unwind(AssertUnwindSafe(task.job)).is_err();
-        task.scope.complete(panicked);
+        exec_task(task);
     }
 }
 

@@ -288,3 +288,38 @@ fn random_mode_smoke_on_the_full_stack() {
     );
     assert_eq!(report.schedules, 150);
 }
+
+#[test]
+fn obs_clock_is_deterministic_under_chaos() {
+    // Under the chaos feature `obs::clock::now_ns()` is a logical tick
+    // counter on a *plain std* atomic — invisible to the scheduler, so
+    // instrumented code paths that stamp telemetry do not perturb
+    // schedule exploration.  Two identical checks must explore the same
+    // schedule count, and the tick sequences each thread observes must
+    // be identical modulo the (process-global) counter's starting offset.
+    fn run_once() -> (usize, Vec<u64>) {
+        let ticks = Arc::new(std::sync::Mutex::new(Vec::<u64>::new()));
+        let ticks2 = Arc::clone(&ticks);
+        let report = check("obs_clock_determinism", cfg(200), move || {
+            let flag = Arc::new(AtomicUsize::new(0));
+            let f2 = Arc::clone(&flag);
+            let sink = Arc::clone(&ticks2);
+            let t = thread::spawn_named("ticker", move || {
+                let a = sample_factory::obs::clock::now_ns();
+                f2.fetch_add(1, Ordering::Relaxed); // scheduling point
+                let b = sample_factory::obs::clock::now_ns();
+                assert!(b > a, "logical clock must be strictly monotone");
+                sink.lock().unwrap().push(b - a);
+            });
+            flag.fetch_add(1, Ordering::Relaxed); // scheduling point
+            t.join().unwrap();
+        });
+        let seq = ticks.lock().unwrap().clone();
+        (report.schedules, seq)
+    }
+    let (schedules_a, seq_a) = run_once();
+    let (schedules_b, seq_b) = run_once();
+    assert!(schedules_a > 1, "explored only {schedules_a} schedules");
+    assert_eq!(schedules_a, schedules_b, "clock reads changed exploration");
+    assert_eq!(seq_a, seq_b, "tick deltas must be schedule-deterministic");
+}

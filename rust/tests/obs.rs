@@ -1,0 +1,292 @@
+//! Observability-layer tests: histogram bucketization and quantiles
+//! against a sorted-vector oracle, tracer round-trip through the in-tree
+//! JSON parser, disabled-path no-ops, and an end-to-end tiny training run
+//! that must produce a Perfetto-loadable trace with the expected named
+//! tracks plus a parseable `metrics.jsonl`.
+
+use std::sync::Mutex;
+
+use sample_factory::config::preset;
+use sample_factory::coordinator::Trainer;
+use sample_factory::json::Json;
+use sample_factory::obs::metrics::{bucket_hi, bucket_index, bucket_lo, N_BUCKETS};
+use sample_factory::obs::{self, Histogram, LatencySummary, Metrics};
+use sample_factory::testkit;
+
+/// The tracer (enabled flag, thread rings) is process-global, so every
+/// test that arms or inspects it serializes here.
+static TRACER_LOCK: Mutex<()> = Mutex::new(());
+
+fn tracer_guard() -> std::sync::MutexGuard<'static, ()> {
+    TRACER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("sf_obs_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------- buckets
+
+#[test]
+fn bucket_boundaries_round_trip() {
+    for i in 0..N_BUCKETS {
+        let lo = bucket_lo(i);
+        let hi = bucket_hi(i);
+        assert_eq!(bucket_index(lo), i, "lo of bucket {i}");
+        assert_eq!(bucket_index(hi), i, "hi of bucket {i} ({hi})");
+        assert!(hi >= lo);
+        if i > 0 {
+            assert_eq!(bucket_index(lo - 1), i - 1, "below lo of bucket {i}");
+        }
+    }
+    assert_eq!(bucket_hi(N_BUCKETS - 1), u64::MAX);
+}
+
+#[test]
+fn quantiles_match_sorted_vector_oracle() {
+    testkit::check(60, |g| {
+        let n = g.usize_in(1, 400);
+        let h = Histogram::new();
+        let mut samples: Vec<u64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Mix of magnitudes: exact-bucket small values through ~2^40
+            // (bounded so the sum counter cannot overflow).
+            let v = match g.usize_in(0, 2) {
+                0 => g.u64() % 8,
+                1 => g.u64() % 10_000,
+                _ => g.u64() % (1u64 << 40),
+            };
+            samples.push(v);
+            h.record(v);
+        }
+        samples.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count, n as u64);
+        assert_eq!(snap.max, *samples.last().unwrap());
+        let oracle_mean =
+            samples.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let mean = snap.mean();
+        assert!(
+            (mean - oracle_mean).abs() <= oracle_mean.abs() * 1e-9 + 1e-9,
+            "mean {mean} vs oracle {oracle_mean}"
+        );
+        for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let oracle = samples[rank - 1];
+            let est = snap.quantile(q);
+            // The estimate is the midpoint of the bucket holding the exact
+            // order statistic, so it must land in the same bucket.
+            assert_eq!(
+                bucket_index(est),
+                bucket_index(oracle),
+                "q={q} est={est} oracle={oracle} (n={n})"
+            );
+        }
+    });
+}
+
+#[test]
+fn concurrent_records_preserve_totals() {
+    let h = std::sync::Arc::new(Histogram::new());
+    let threads = 4;
+    let per = 10_000u64;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let h2 = std::sync::Arc::clone(&h);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per {
+                h2.record(t * per + i);
+            }
+        }));
+    }
+    for hd in handles {
+        hd.join().unwrap();
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.count, threads * per);
+    assert_eq!(snap.max, threads * per - 1);
+    assert_eq!(snap.buckets.iter().sum::<u64>(), threads * per);
+}
+
+#[test]
+fn latency_summary_converts_ns_to_ms() {
+    let h = Histogram::new();
+    for _ in 0..100 {
+        h.record(1_000_000); // 1 ms
+    }
+    let s = LatencySummary::from_ns_hist(&h.snapshot());
+    assert_eq!(s.count, 100);
+    // Bucket midpoint: within the 1/8 relative-error bound of 1.0 ms.
+    assert!((0.75..=1.31).contains(&s.p50), "p50 {} ms", s.p50);
+    assert!((0.75..=1.31).contains(&s.p99), "p99 {} ms", s.p99);
+    assert!((s.max - 1.0).abs() < 1e-9, "max is exact: {}", s.max);
+}
+
+// ---------------------------------------------------------- disabled path
+
+#[test]
+fn disabled_tracer_and_metrics_are_no_ops() {
+    let _g = tracer_guard();
+    obs::trace::stop();
+    let baseline = obs::trace::pending_events();
+    std::thread::Builder::new()
+        .name("sf-test-disabled".into())
+        .spawn(|| {
+            for _ in 0..64 {
+                let _sp = obs::trace::span("should.not.record");
+            }
+            obs::trace::event("also.not", 1, 2);
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+    assert_eq!(
+        obs::trace::pending_events(),
+        baseline,
+        "disabled tracer buffered events"
+    );
+
+    let m = Metrics::new(1, false);
+    assert!(m.start().is_none());
+    m.policy_batch_ns.record_since(m.start());
+    m.action_rtt_ns[0].record_since(None);
+    assert_eq!(m.policy_batch_ns.snapshot().count, 0);
+    assert_eq!(m.action_rtt_ns[0].snapshot().count, 0);
+}
+
+// ------------------------------------------------------------ trace JSON
+
+#[test]
+fn trace_writes_wellformed_chrome_json() {
+    let _g = tracer_guard();
+    obs::trace::start();
+    std::thread::Builder::new()
+        .name("sf-test-thread".into())
+        .spawn(|| {
+            {
+                let _sp = obs::trace::span("test.work");
+                std::hint::black_box((0..1000).sum::<u64>());
+            }
+            obs::trace::event("test.wait", 10, 250);
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+    let path = temp_dir("trace").join("trace.json");
+    let n = obs::trace::stop_and_write(path.to_str().unwrap()).unwrap();
+    assert!(n >= 2, "expected at least the two test events, got {n}");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).expect("trace must be valid JSON");
+    assert_eq!(j.get("displayTimeUnit").and_then(|d| d.as_str()), Some("ms"));
+    let events = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+
+    let mut saw_thread_meta = false;
+    let mut saw_x = 0u64;
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("ph");
+        match ph {
+            "M" => {
+                if ev.get("name").and_then(|s| s.as_str()) == Some("thread_name")
+                    && ev.get("args").and_then(|a| a.get("name")).and_then(|s| s.as_str())
+                        == Some("sf-test-thread")
+                {
+                    saw_thread_meta = true;
+                }
+            }
+            "X" => {
+                saw_x += 1;
+                let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("numeric ts");
+                let dur = ev.get("dur").and_then(|d| d.as_f64()).expect("numeric dur");
+                assert!(ts >= 0.0 && dur >= 0.0);
+                assert!(ev.get("name").and_then(|s| s.as_str()).is_some());
+            }
+            other => panic!("unexpected ph {other}"),
+        }
+    }
+    assert!(saw_thread_meta, "missing thread_name metadata for the test thread");
+    assert_eq!(saw_x, n, "stop_and_write count mismatch");
+
+    // Round-trip through the in-tree serializer: parse(to_string(x)) == x.
+    let again = Json::parse(&j.to_string()).unwrap();
+    assert_eq!(again, j);
+}
+
+// ------------------------------------------------------------ end to end
+
+#[test]
+fn tiny_train_emits_trace_and_metrics_jsonl() {
+    let _g = tracer_guard();
+    let dir = temp_dir("train");
+    let trace_path = dir.join("trace.json");
+    let mut cfg = preset("tiny_smoke").unwrap();
+    cfg.total_env_frames = 8_000;
+    cfg.log_interval_s = 0.05;
+    cfg.out_dir = dir.to_str().unwrap().into();
+    cfg.trace_path = trace_path.to_str().unwrap().into();
+    let res = Trainer::run(&cfg).expect("traced tiny run");
+    assert!(res.frames >= cfg.total_env_frames);
+
+    // -- TrainResult latency surface --------------------------------
+    assert_eq!(res.action_rtt_ms.len(), 1);
+    let rtt = &res.action_rtt_ms[0];
+    assert!(rtt.count > 0, "no action round-trips sampled");
+    assert!(rtt.p95 >= rtt.p50, "p95 {} < p50 {}", rtt.p95, rtt.p50);
+    assert!(res.policy_batch_ms.count > 0, "no policy batches sampled");
+    assert!(res.policy_batch_size_mean > 0.0);
+
+    // -- Perfetto trace: named tracks per pipeline role -------------
+    let j = Json::parse(&std::fs::read_to_string(&trace_path).unwrap())
+        .expect("trace JSON");
+    let events = j.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    let tracks: Vec<String> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("M")
+                && e.get("name").and_then(|s| s.as_str()) == Some("thread_name")
+        })
+        .filter_map(|e| {
+            e.get("args")?.get("name")?.as_str().map(|s| s.to_string())
+        })
+        .collect();
+    for prefix in ["sf-rollout-", "sf-policy-0-"] {
+        assert!(
+            tracks.iter().any(|t| t.starts_with(prefix)),
+            "no {prefix}* track in {tracks:?}"
+        );
+    }
+    for exact in ["sf-learner-0", "sf-learner-asm-0"] {
+        assert!(tracks.iter().any(|t| t == exact), "no {exact} track in {tracks:?}");
+    }
+    let span_names: std::collections::BTreeSet<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .filter_map(|e| e.get("name").and_then(|s| s.as_str()))
+        .collect();
+    for name in ["env.step", "env.render", "policy.infer", "learner.assemble", "learner.train"]
+    {
+        assert!(span_names.contains(name), "span {name} missing from {span_names:?}");
+    }
+
+    // -- metrics.jsonl: every line parses, schema keys present ------
+    let jsonl = std::fs::read_to_string(dir.join("metrics.jsonl")).expect("metrics.jsonl");
+    let lines: Vec<&str> = jsonl.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(!lines.is_empty(), "metrics.jsonl is empty");
+    for (i, line) in lines.iter().enumerate() {
+        let obj = Json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}"));
+        for key in
+            ["t", "frames", "fps", "policy_batch", "action_rtt_ms", "lag", "queues", "stat_drops"]
+        {
+            assert!(obj.get(key).is_some(), "line {i} missing key {key}");
+        }
+    }
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    let fps_total =
+        last.get("fps").and_then(|f| f.get("total")).and_then(|f| f.as_f64()).unwrap();
+    assert!(fps_total > 0.0, "final fps.total {fps_total}");
+    let frames =
+        last.get("frames").and_then(|f| f.as_f64()).unwrap();
+    assert!(frames >= cfg.total_env_frames as f64);
+}
