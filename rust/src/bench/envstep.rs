@@ -5,6 +5,13 @@
 //! ([`make_batch_with`]: `step_many` + the batched raycaster) at batch
 //! sizes k ∈ {4, 16, 64} and a render-pool thread sweep, on the rollout
 //! worker's cadence (step with frameskip 4, then render every stream).
+//! Two extra exhibits ride along: a pooled-sim column (`step_many` alone,
+//! simulation advanced inside the native pool with no render in the loop)
+//! and an episode-reset latency table comparing a cold map cache
+//! (`?map_cache=0`, every reset rebuilds the layout) against a warm one
+//! (`?map_cache=1`, primed so every reset is a hit).  For the generated-map
+//! family (`*_gen`) the warm path must be at least 5x faster than cold —
+//! asserted in-binary so CI's bench-smoke job catches regressions.
 //! Results go to `BENCH_envstep.json`, uploaded from CI's bench-smoke job.
 
 use std::sync::Arc;
@@ -13,7 +20,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Config;
 use crate::env::batch::{make_batch_with, BatchEnv};
-use crate::env::AgentStep;
+use crate::env::{AgentStep, Env as _};
 use crate::json::Json;
 use crate::runtime::native::pool::NativePool;
 use crate::util::Rng;
@@ -23,12 +30,18 @@ use super::{parse_bench_args, print_table, write_bench_json, write_csv};
 const BATCH_SIZES: [usize; 3] = [4, 16, 64];
 const THREADS: [usize; 3] = [1, 2, 4];
 const FRAMESKIP: u32 = 4;
+/// Distinct seeds per reset-latency pass (all < the default cache
+/// capacity, so the warm side folds onto exactly this many entries).
+const RESET_SEEDS: u64 = 8;
+/// Timed passes over the seed set per reset-latency measurement.
+const RESET_PASSES: usize = 25;
 
 /// Run one cell: random actions -> `step_many` (frameskip inside) ->
 /// `render_many` for every stream, until `frames_target` agent-frames have
-/// been simulated.  Returns simulated frames/sec (renders ride along, as
-/// on the rollout worker).
-fn measure(b: &mut dyn BatchEnv, frames_target: u64, arng: &mut Rng) -> f64 {
+/// been simulated.  Returns simulated frames/sec.  With `render` set the
+/// loop renders every stream each iteration (the rollout worker's
+/// cadence); without it the cell times pooled simulation alone.
+fn measure(b: &mut dyn BatchEnv, frames_target: u64, arng: &mut Rng, render: bool) -> f64 {
     let spec = b.spec().clone();
     let k = b.n_envs();
     let n_agents = spec.n_agents;
@@ -46,10 +59,34 @@ fn measure(b: &mut dyn BatchEnv, frames_target: u64, arng: &mut Rng) -> f64 {
             }
         }
         frames += b.step_many(&actions, FRAMESKIP, &mut out);
-        let mut rows: Vec<&mut [u8]> = obs.chunks_mut(obs_len).collect();
-        b.render_many(&mut rows);
+        if render {
+            let mut rows: Vec<&mut [u8]> = obs.chunks_mut(obs_len).collect();
+            b.render_many(&mut rows);
+        }
     }
     frames as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Mean wall-clock milliseconds per `Env::reset` over [`RESET_PASSES`]
+/// passes of [`RESET_SEEDS`] distinct seeds.  With `prime` set, one
+/// un-timed pass over the seed set runs first so a warm map cache serves
+/// every timed reset; without it (and with `?map_cache=0` in the
+/// scenario) every timed reset rebuilds the layout from scratch.
+fn reset_latency_ms(spec: &str, scenario: &str, prime: bool) -> Result<f64> {
+    let mut rng = Rng::new(0x5EED);
+    let mut env = crate::env::make(spec, scenario, &mut rng).map_err(|e| anyhow!(e))?;
+    if prime {
+        for seed in 1..=RESET_SEEDS {
+            env.reset(seed);
+        }
+    }
+    let start = std::time::Instant::now();
+    for _ in 0..RESET_PASSES {
+        for seed in 1..=RESET_SEEDS {
+            env.reset(seed);
+        }
+    }
+    Ok(start.elapsed().as_secs_f64() * 1e3 / (RESET_PASSES as u64 * RESET_SEEDS) as f64)
 }
 
 pub fn run_cli(args: &[String]) -> Result<()> {
@@ -67,6 +104,7 @@ pub fn run_cli(args: &[String]) -> Result<()> {
 
     let mut rows = Vec::new();
     let mut csv_rows = Vec::new();
+    let mut reset_rows = Vec::new();
     let mut scenario_cells = Vec::new();
     for def in &defs {
         let mut cells = Vec::new();
@@ -76,19 +114,32 @@ pub fn run_cli(args: &[String]) -> Result<()> {
             let mut srng = Rng::new(0xE5E5);
             let mut scalar = scalar_batch(def.spec, def.name, k, &mut srng)?;
             let mut arng = Rng::new(0xAC7);
-            let scalar_fps = measure(scalar.as_mut(), frames, &mut arng);
+            let scalar_fps = measure(scalar.as_mut(), frames, &mut arng, true);
 
             let mut batched = Vec::new();
             if batched_mode {
                 for &threads in &THREADS {
                     let pool = Arc::new(NativePool::new(threads));
                     let mut brng = Rng::new(0xE5E5);
-                    let mut b =
-                        make_batch_with(def.spec, def.name, k, &mut brng, Some(pool))
-                            .map_err(|e| anyhow!(e))?;
+                    let mut b = make_batch_with(
+                        def.spec,
+                        def.name,
+                        k,
+                        &mut brng,
+                        Some(Arc::clone(&pool)),
+                    )
+                    .map_err(|e| anyhow!(e))?;
                     let mut arng = Rng::new(0xAC7);
-                    let fps = measure(b.as_mut(), frames, &mut arng);
-                    batched.push((threads, fps, fps / scalar_fps.max(1e-9)));
+                    let fps = measure(b.as_mut(), frames, &mut arng, true);
+                    // Pooled-sim column: same batch shape, `step_many`
+                    // alone — isolates in-pool world simulation from the
+                    // raycaster.
+                    let mut prng = Rng::new(0xE5E5);
+                    let mut ps = make_batch_with(def.spec, def.name, k, &mut prng, Some(pool))
+                        .map_err(|e| anyhow!(e))?;
+                    let mut arng = Rng::new(0xAC7);
+                    let sim_fps = measure(ps.as_mut(), frames, &mut arng, false);
+                    batched.push((threads, fps, fps / scalar_fps.max(1e-9), sim_fps));
                 }
             }
 
@@ -96,25 +147,28 @@ pub fn run_cli(args: &[String]) -> Result<()> {
                 .iter()
                 .cloned()
                 .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap_or((0, 0.0, 0.0));
+                .unwrap_or((0, 0.0, 0.0, 0.0));
+            let best_sim = batched.iter().map(|c| c.3).fold(0.0f64, f64::max);
             rows.push(vec![
                 def.name.to_string(),
                 format!("{k}"),
                 format!("{scalar_fps:.0}"),
                 batched
                     .iter()
-                    .map(|(t, f, _)| format!("{t}t:{f:.0}"))
+                    .map(|(t, f, _, _)| format!("{t}t:{f:.0}"))
                     .collect::<Vec<_>>()
                     .join(" "),
+                format!("{best_sim:.0}"),
                 format!("{:.2}x", best.2),
             ]);
-            for &(t, f, s) in &batched {
+            for &(t, f, s, sim) in &batched {
                 csv_rows.push(vec![
                     def.name.to_string(),
                     format!("{k}"),
                     format!("{t}"),
                     format!("{scalar_fps:.1}"),
                     format!("{f:.1}"),
+                    format!("{sim:.1}"),
                     format!("{s:.3}"),
                 ]);
             }
@@ -126,10 +180,11 @@ pub fn run_cli(args: &[String]) -> Result<()> {
                     Json::Arr(
                         batched
                             .iter()
-                            .map(|&(t, f, s)| {
+                            .map(|&(t, f, s, sim)| {
                                 Json::obj(vec![
                                     ("threads", Json::num(t as f64)),
                                     ("fps", Json::num(f)),
+                                    ("sim_fps", Json::num(sim)),
                                     ("speedup", Json::num(s)),
                                 ])
                             })
@@ -138,20 +193,76 @@ pub fn run_cli(args: &[String]) -> Result<()> {
                 ),
             ]));
         }
-        eprintln!("  [{}] done", def.name);
+
+        // Episode-reset latency: cold rebuilds the layout on every reset,
+        // warm is primed so every reset is a map-cache hit.
+        let cold_ms =
+            reset_latency_ms(def.spec, &format!("{}?map_cache=0", def.name), false)?;
+        let warm_ms =
+            reset_latency_ms(def.spec, &format!("{}?map_cache=1", def.name), true)?;
+        let reset_speedup = cold_ms / warm_ms.max(1e-9);
+        if def.name.ends_with("_gen") {
+            // bench-smoke acceptance: a warm cache must make generated-map
+            // resets at least 5x cheaper than rebuilding the layout.
+            assert!(
+                reset_speedup >= 5.0,
+                "[{}] warm reset {warm_ms:.4} ms is only {reset_speedup:.1}x faster \
+                 than cold {cold_ms:.4} ms (need >= 5x)",
+                def.name,
+            );
+        }
+        reset_rows.push(vec![
+            def.name.to_string(),
+            format!("{cold_ms:.4}"),
+            format!("{warm_ms:.4}"),
+            format!("{reset_speedup:.1}x"),
+        ]);
+
+        eprintln!(
+            "  [{}] done (reset cold {cold_ms:.3} ms / warm {warm_ms:.3} ms)",
+            def.name
+        );
         scenario_cells.push(Json::obj(vec![
             ("scenario", Json::str(def.name)),
             ("spec", Json::str(def.spec)),
             ("map", Json::str(def.map_kind())),
+            (
+                "reset",
+                Json::obj(vec![
+                    ("cold_ms", Json::num(cold_ms)),
+                    ("warm_ms", Json::num(warm_ms)),
+                    ("speedup", Json::num(reset_speedup)),
+                ]),
+            ),
             ("cells", Json::Arr(cells)),
         ]));
     }
 
-    let header = ["scenario", "k", "scalar_fps", "batched_fps", "best_speedup"];
+    let header = [
+        "scenario",
+        "k",
+        "scalar_fps",
+        "batched_fps",
+        "pooled_sim_fps",
+        "best_speedup",
+    ];
     print_table(&header, &rows);
+    println!("== episode reset latency: cold map cache vs warm ==");
+    print_table(
+        &["scenario", "reset_cold_ms", "reset_warm_ms", "warm_speedup"],
+        &reset_rows,
+    );
     write_csv(
         "bench_results/envstep.csv",
-        &["scenario", "k", "threads", "scalar_fps", "batched_fps", "speedup"],
+        &[
+            "scenario",
+            "k",
+            "threads",
+            "scalar_fps",
+            "batched_fps",
+            "sim_fps",
+            "speedup",
+        ],
         &csv_rows,
     )?;
     write_bench_json(

@@ -171,6 +171,14 @@ pub struct Config {
     /// (f32|f16|i8).  Training stays f32 regardless.
     pub inference_dtype: InferenceDtype,
 
+    /// Stage raycast episodes from the process-wide seeded layout cache
+    /// (`--map_cache off` reproduces the regenerate-per-reset behavior
+    /// exactly; a per-scenario `?map_cache=` override always wins).
+    pub map_cache: bool,
+    /// Layout-pool size per scenario family: bounds both the folded seed
+    /// domain and the cache's FIFO capacity (`--map_cache_size`).
+    pub map_cache_size: usize,
+
     /// Always-on metrics registry (`--metrics false` disables the sampled
     /// histograms: batch latency/size, pop waits, policy lag, queue
     /// depths, pool task wait/run).  Frame and drop *counters* stay on
@@ -212,6 +220,8 @@ impl Default for Config {
             cpu_affinity: false,
             reserved_cores: 1,
             inference_dtype: InferenceDtype::F32,
+            map_cache: true,
+            map_cache_size: crate::env::raycast::mapcache::DEFAULT_CAPACITY,
             metrics: true,
             trace_path: String::new(),
             log_interval_s: 5.0,
@@ -256,6 +266,22 @@ impl Config {
                 self.inference_dtype = InferenceDtype::parse(value).ok_or_else(|| {
                     format!("bad value '{value}' for {key} (expected f32|f16|i8)")
                 })?
+            }
+            "map_cache" => {
+                // Accepts on/off in addition to bool syntax: the flag is
+                // documented as `--map_cache off`.
+                self.map_cache = match value {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    _ => {
+                        return Err(format!(
+                            "bad value '{value}' for {key} (expected on|off)"
+                        ))
+                    }
+                }
+            }
+            "map_cache_size" => {
+                self.map_cache_size = p::<usize>(key, value)?.max(1);
             }
             "metrics" => self.metrics = p(key, value)?,
             "trace" => self.trace_path = value.into(),
@@ -515,6 +541,24 @@ mod tests {
         assert!(!c.metrics);
         assert_eq!(c.trace_path, "/tmp/out.json");
         assert!(c.set("metrics", "sometimes").is_err());
+    }
+
+    #[test]
+    fn map_cache_keys() {
+        let mut c = Config::default();
+        assert!(c.map_cache, "cache is on by default");
+        c.set("map_cache", "off").unwrap();
+        assert!(!c.map_cache);
+        c.set("map_cache", "on").unwrap();
+        assert!(c.map_cache);
+        c.set("map_cache", "false").unwrap();
+        assert!(!c.map_cache);
+        assert!(c.set("map_cache", "maybe").is_err());
+        c.set("map_cache_size", "8").unwrap();
+        assert_eq!(c.map_cache_size, 8);
+        c.set("map_cache_size", "0").unwrap();
+        assert_eq!(c.map_cache_size, 1, "capacity is clamped to >= 1");
+        assert!(c.set("map_cache_size", "lots").is_err());
     }
 
     #[test]

@@ -114,13 +114,30 @@ impl Trainer {
 
 /// Scenario name for a given rollout worker in multitask mode (§A.2: equal
 /// *compute* per task — one worker share per task, OS-scheduled).
+///
+/// Also where `--map_cache` reaches the envs: raycast scenarios get
+/// `map_cache=1` appended unless the scenario string already pins the
+/// param either way (the explicit `?map_cache=` override always wins, so
+/// tests and benches can force either path per env).
 fn worker_scenario(cfg: &Config, worker: usize) -> (String, usize) {
-    if cfg.scenario == "multitask" {
+    let (mut scenario, task) = if cfg.scenario == "multitask" {
         let task = worker % multitask::n_tasks();
         (format!("gridlab_task{task}"), task)
     } else {
         (cfg.scenario.clone(), usize::MAX)
+    };
+    if cfg.map_cache && !scenario.contains("map_cache=") {
+        let name = scenario.split('?').next().unwrap_or("");
+        let is_raycast = matches!(
+            crate::env::registry::get(name),
+            Some(def) if matches!(def.builder, crate::env::registry::Builder::Raycast(_))
+        );
+        if is_raycast {
+            scenario.push(if scenario.contains('?') { '&' } else { '?' });
+            scenario.push_str("map_cache=1");
+        }
     }
+    (scenario, task)
 }
 
 /// The full asynchronous architecture (paper Fig 1).
@@ -216,6 +233,9 @@ pub fn run_appo(cfg: &Config) -> Result<TrainResult> {
     // Pool task wait/run sampling is process-global (the pool outlives
     // runs); arm it to match this run's metrics switch.
     obs::set_pool_sampling(cfg.metrics);
+    // Layout-cache capacity is process-global too: it bounds the folded
+    // seed domain, so set it before any env construction below.
+    crate::env::raycast::mapcache::set_capacity(cfg.map_cache_size);
     // Arm the span tracer before any worker thread exists so every role's
     // first event already carries its thread name.
     let tracing = !cfg.trace_path.is_empty();
@@ -482,6 +502,21 @@ fn monitor_loop(
         let _ = w.line(&line);
         eprintln!("[obs] metrics -> {}", path.display());
     }
+    // Layout-cache train summary (counters are process-cumulative; a run
+    // with the cache off — or a non-procedural map — reports all zeros).
+    {
+        let mc = obs::map_cache_stats();
+        let (hits, misses) = (mc.hits.get(), mc.misses.get());
+        if hits + misses > 0 {
+            eprintln!(
+                "[obs] map cache: {hits} hits / {misses} misses ({:.1}% hit), \
+                 {} evictions, build p50 {:.2} ms",
+                100.0 * hits as f64 / (hits + misses) as f64,
+                mc.evictions.get(),
+                LatencySummary::from_ns_hist(&mc.build_ns.snapshot()).p50,
+            );
+        }
+    }
     let per_policy_return: Vec<f64> = trackers.iter().map(|t| t.mean_return()).collect();
     let mean_return = per_policy_return.iter().cloned().fold(f64::MIN, f64::max);
     let per_task_return = if is_multitask {
@@ -568,6 +603,7 @@ fn metrics_jsonl_line(
     let m = &ctx.metrics;
     let lag = m.lag.snapshot();
     let pool = obs::pool_stats();
+    let mc = obs::map_cache_stats();
     Json::obj(vec![
         ("t", Json::num(elapsed)),
         ("frames", Json::num(frames as f64)),
@@ -647,6 +683,18 @@ fn metrics_jsonl_line(
             Json::obj(vec![
                 ("assembly_busy_s", Json::num(m.assembly_busy_ns.get() as f64 / 1e9)),
                 ("train_busy_s", Json::num(m.train_busy_ns.get() as f64 / 1e9)),
+            ]),
+        ),
+        (
+            "map_cache",
+            Json::obj(vec![
+                ("hits", Json::num(mc.hits.get() as f64)),
+                ("misses", Json::num(mc.misses.get() as f64)),
+                ("evictions", Json::num(mc.evictions.get() as f64)),
+                (
+                    "build_ms",
+                    LatencySummary::from_ns_hist(&mc.build_ns.snapshot()).json(),
+                ),
             ]),
         ),
         ("stat_drops", Json::num(m.stat_drops.get() as f64)),

@@ -158,6 +158,11 @@ pub struct RaycastBatch {
     /// pool.
     pool: Option<Arc<NativePool>>,
     scratch: BatchRenderScratch,
+    /// Per-job frameskip accumulators for [`step_many`], one `n_agents`
+    /// chunk per shard — hoisted here so stepping allocates nothing.
+    ///
+    /// [`step_many`]: BatchEnv::step_many
+    step_tmp: Vec<AgentStep>,
 }
 
 impl BatchEnv for RaycastBatch {
@@ -181,27 +186,31 @@ impl BatchEnv for RaycastBatch {
         debug_assert_eq!(out.len(), k * n_agents);
         let pool = self.pool.as_deref().unwrap_or_else(NativePool::global);
         let per = pool.rows_per_task(k, 1);
+        let n_jobs = k.div_ceil(per);
         // One counter slot per chunk, summed after the barrier: the total
         // is independent of how the pool schedules the chunks.
-        let mut frame_counts = vec![0u64; k.div_ceil(per)];
+        let mut frame_counts = vec![0u64; n_jobs];
+        // One n_agents-sized accumulator chunk per shard (disjoint `&mut`
+        // slices of the batch-owned scratch — no per-job allocation).
+        self.step_tmp.resize(n_jobs * n_agents, AgentStep::default());
         {
-            let mut jobs: Vec<Job<'_>> = Vec::with_capacity(frame_counts.len());
-            for (((envs, outs), acts), frames) in self
+            let mut jobs: Vec<Job<'_>> = Vec::with_capacity(n_jobs);
+            for ((((envs, outs), acts), frames), tmp) in self
                 .envs
                 .chunks_mut(per)
                 .zip(out.chunks_mut(per * n_agents))
                 .zip(actions.chunks(per * n_agents * n_heads))
                 .zip(frame_counts.iter_mut())
+                .zip(self.step_tmp.chunks_mut(n_agents))
             {
                 jobs.push(Box::new(move || {
-                    let mut tmp = vec![AgentStep::default(); n_agents];
                     for (e, env) in envs.iter_mut().enumerate() {
                         *frames += step_env_acc(
                             env,
                             &acts[e * n_agents * n_heads..(e + 1) * n_agents * n_heads],
                             skip,
                             &mut outs[e * n_agents..(e + 1) * n_agents],
-                            &mut tmp,
+                            tmp,
                         );
                     }
                 }));
@@ -267,9 +276,13 @@ pub fn make_batch_with(
     let heads = env::heads_for_spec(spec_name)?;
     let def = registry::resolve(scenario)?;
     if let Builder::Raycast(r) = &def.builder {
+        // Siblings share one definition: resolve the `?key=value`
+        // overrides (done by `registry::resolve` above) and validate the
+        // def/head pairing once per batch, not once per sibling.
+        let decoder = RaycastEnv::validate(r, &heads)?;
         let mut envs = Vec::with_capacity(k);
         for _ in 0..k {
-            let mut e = RaycastEnv::from_def((**r).clone(), obs, &heads)?;
+            let mut e = RaycastEnv::from_validated((**r).clone(), obs, &heads, decoder);
             e.reset(rng.next_u64());
             envs.push(e);
         }
@@ -281,6 +294,7 @@ pub fn make_batch_with(
             heavy,
             pool,
             scratch: BatchRenderScratch::new(),
+            step_tmp: Vec::new(),
         }))
     } else {
         let mut envs: Vec<Box<dyn Env>> = Vec::with_capacity(k);

@@ -108,7 +108,7 @@ impl Collect {
             );
         }
         world.players = vec![player];
-        world.entities = ents;
+        world.entities = ents.into();
         self.world = world;
         self.tick_in_ep = 0;
     }

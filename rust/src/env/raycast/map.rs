@@ -153,6 +153,13 @@ impl GridMap {
         self.cells[y * self.w + x]
     }
 
+    /// Raw row-major cell bytes — the layout-identity surface the map-cache
+    /// tests compare (`same seed => byte-identical grid`, cache on or off).
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        &self.cells
+    }
+
     #[inline]
     pub fn set(&mut self, x: usize, y: usize, v: u8) {
         if x < self.w && y < self.h {

@@ -1,0 +1,203 @@
+//! Seeded procedural map cache — the DMLab-style "level cache".
+//!
+//! BSP/cave/arena generation plus the connectivity flood fill dominates
+//! episode reset for the `*_gen` scenarios, and every sibling env in a
+//! `RaycastBatch` used to regenerate its own copy.  This module memoizes
+//! connectivity-validated layouts process-wide, keyed by the *layout
+//! portion* of the map source ([`MapSource::layout_key`]) plus a layout
+//! seed, so a warm reset is a lock + `Arc` clone instead of generation +
+//! flood fill, and every episode on one layout shares a single `GridMap`
+//! allocation ([`crate::env::raycast::world::MapRef`]).
+//!
+//! Determinism contract:
+//!
+//! * `build` derives the layout from `Rng::new(layout_seed)` exactly as the
+//!   uncached reset path does, so for any seed in the folded domain the
+//!   cached grid is **byte-identical** to what `--map_cache off` generates
+//!   from that seed (asserted in `prop_env_batch.rs`).
+//! * [`fold`] maps the unbounded per-episode seed stream onto a bounded
+//!   layout pool (`seed % capacity`), which is what makes steady-state
+//!   training hit the cache at all; the folding is a pure function of the
+//!   seed and the capacity knob, never of cache contents or thread timing.
+//! * Hit and miss paths produce identical episodes: entity/player placement
+//!   draws come from a fresh `Rng::new(episode_seed ^ PLACEMENT_SALT)`
+//!   stream (see `scenarios.rs`), never from the generator's leftover
+//!   stream position, so whether the layout was found or built is
+//!   unobservable to the simulation.
+//!
+//! Concurrency: one process-global `crate::sync::Mutex` (so the chaos
+//! checker can explore lock interleavings) around a per-family FIFO.
+//! Misses build *under* the lock — generation is a bounded sub-millisecond
+//! job, and build-once (every concurrent caller of one key gets the same
+//! `Arc`) falls out for free.  Steady state is lock + hash probe + `Arc`
+//! clone.
+//!
+//! Knobs: `--map_cache off` disables (the per-scenario `?map_cache=` param
+//! overrides for tests/benches); `--map_cache_size` bounds both the folded
+//! seed domain and the per-family FIFO capacity.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::obs;
+use crate::sync::Mutex;
+use crate::util::Rng;
+
+use super::map::GridMap;
+use super::mapgen::{LayoutKey, MapSource};
+
+/// Default layout-pool size per family (`--map_cache_size`).
+pub const DEFAULT_CAPACITY: usize = 64;
+
+/// Salt for the placement RNG stream when a cached layout is used: the
+/// uncached path draws placements from the generator's rng *continuation*,
+/// whose position after the map draws is unknowable on a hit, so cached
+/// resets derive placements from `Rng::new(seed ^ PLACEMENT_SALT)` instead.
+/// Distinct episodes folded onto one layout still differ (different seed),
+/// and the placement stream can never alias the layout stream.
+pub const PLACEMENT_SALT: u64 = 0xC0FF_EE5E_ED1A_B0F5;
+
+/// One cached, connectivity-validated layout.  `grid` sits behind its own
+/// `Arc` so worlds can share the read-only map data without holding the
+/// spawn/pickup lists alive per env.
+pub struct CachedLayout {
+    pub grid: Arc<GridMap>,
+    pub spawns: Vec<(f32, f32)>,
+    pub pickups: Vec<(f32, f32)>,
+}
+
+#[derive(Default)]
+struct Family {
+    /// Insertion order of `maps` keys — the FIFO eviction queue.
+    order: VecDeque<u64>,
+    maps: HashMap<u64, Arc<CachedLayout>>,
+}
+
+#[derive(Default)]
+struct CacheState {
+    families: HashMap<LayoutKey, Family>,
+}
+
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+
+fn state() -> &'static Mutex<CacheState> {
+    static S: OnceLock<Mutex<CacheState>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(CacheState::default()))
+}
+
+/// Set the per-family capacity / folded-seed domain (`--map_cache_size`).
+/// Called once at run start by the coordinator; existing entries beyond a
+/// shrunk capacity are evicted lazily on the next insert to their family.
+pub fn set_capacity(cap: usize) {
+    CAPACITY.store(cap.max(1), Ordering::Relaxed);
+}
+
+pub fn capacity() -> usize {
+    CAPACITY.load(Ordering::Relaxed).max(1)
+}
+
+/// Fold an episode seed onto the bounded layout pool.  Identity for seeds
+/// below the capacity — which is what makes the cache-on-vs-off layout
+/// identity property directly testable.
+pub fn fold(episode_seed: u64) -> u64 {
+    episode_seed % capacity() as u64
+}
+
+/// Return the cached layout for `(src, layout_seed)`, generating and
+/// inserting it on miss.  Every concurrent caller of one key gets the same
+/// `Arc` (build-once under the lock).
+pub fn lookup_or_build(src: &MapSource, layout_seed: u64) -> Arc<CachedLayout> {
+    let stats = obs::map_cache_stats();
+    let key = src.layout_key();
+    let mut st = state().lock().unwrap();
+    let cap = capacity();
+    let fam = st.families.entry(key).or_default();
+    if let Some(hit) = fam.maps.get(&layout_seed) {
+        stats.hits.inc();
+        return Arc::clone(hit);
+    }
+    stats.misses.inc();
+    let t0 = obs::clock::now_ns();
+    let built = Arc::new(build(src, layout_seed));
+    stats.build_ns.record(obs::clock::now_ns().saturating_sub(t0));
+    while fam.order.len() >= cap {
+        if let Some(old) = fam.order.pop_front() {
+            fam.maps.remove(&old);
+            stats.evictions.inc();
+        }
+    }
+    fam.order.push_back(layout_seed);
+    fam.maps.insert(layout_seed, Arc::clone(&built));
+    built
+}
+
+/// Generate the layout for `layout_seed` exactly as the uncached reset path
+/// does: the map draws are the *first* draws of `Rng::new(layout_seed)`, so
+/// a cached layout is byte-identical to what `--map_cache off` builds from
+/// the same seed.
+fn build(src: &MapSource, layout_seed: u64) -> CachedLayout {
+    let mut rng = Rng::new(layout_seed);
+    let gen = src.build(&mut rng);
+    CachedLayout { grid: Arc::new(gen.grid), spawns: gen.spawns, pickups: gen.pickups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test uses a map size no registry scenario or other test uses,
+    // so its cache family is private to it — the cache is process-global
+    // and tests run in parallel.
+
+    #[test]
+    fn hit_returns_the_same_allocation_and_matches_uncached_build() {
+        let src = MapSource::Caves { w: 24, h: 17, fill_p: 0.44, steps: 4 };
+        let stats = obs::map_cache_stats();
+        let (h0, m0) = (stats.hits.get(), stats.misses.get());
+        let a = lookup_or_build(&src, 7);
+        let b = lookup_or_build(&src, 7);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit");
+        assert!(stats.misses.get() - m0 >= 1);
+        assert!(stats.hits.get() - h0 >= 1);
+        // The cached grid is exactly what the uncached path generates.
+        let fresh = src.build(&mut Rng::new(7));
+        assert_eq!(a.grid.bytes(), fresh.grid.bytes());
+        assert_eq!(a.spawns, fresh.spawns);
+        assert_eq!(a.pickups, fresh.pickups);
+    }
+
+    #[test]
+    fn distinct_seeds_and_params_get_distinct_layouts() {
+        let src = MapSource::BspRooms { w: 26, h: 18, min_room: 4, doors: false };
+        let a = lookup_or_build(&src, 1);
+        let b = lookup_or_build(&src, 2);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_ne!(a.grid.bytes(), b.grid.bytes());
+        // A layout-affecting param change is a different family...
+        let wider = MapSource::BspRooms { w: 28, h: 18, min_room: 4, doors: false };
+        assert_ne!(src.layout_key(), wider.layout_key());
+        // ...while the key is insensitive to anything but the map source
+        // (difficulty knobs live on the scenario def, not in the key).
+        assert_eq!(src.layout_key(), src.layout_key());
+    }
+
+    #[test]
+    fn fifo_eviction_is_bounded_and_counted() {
+        let src = MapSource::Arena { w: 20, h: 14, pillars: 6, doors: false };
+        let stats = obs::map_cache_stats();
+        let e0 = stats.evictions.get();
+        let cap = capacity() as u64;
+        let first = lookup_or_build(&src, 0);
+        for s in 1..=cap {
+            lookup_or_build(&src, s);
+        }
+        // Seed 0 was the oldest entry; inserting `cap` more must have
+        // evicted it, so looking it up again rebuilds (a fresh allocation).
+        assert!(stats.evictions.get() - e0 >= 1);
+        let rebuilt = lookup_or_build(&src, 0);
+        assert!(!Arc::ptr_eq(&first, &rebuilt), "evicted entry must rebuild");
+        // ...to identical bytes: eviction is invisible to determinism.
+        assert_eq!(first.grid.bytes(), rebuilt.grid.bytes());
+    }
+}

@@ -137,6 +137,34 @@ impl MapSource {
         MapSource::Arena { w: 21, h: 15, pillars: 10, doors: true }
     }
 
+    /// Hashable identity of the *layout portion* of this source, used as
+    /// the map-cache key (`mapcache.rs`).  Only parameters that change the
+    /// generated grid appear here; difficulty knobs (`monsters`, `hp`,
+    /// pickup counts, ...) live on the scenario def and deliberately do NOT
+    /// invalidate cached layouts — that's the curriculum hook.  `f32`
+    /// fields are keyed by bit pattern (`to_bits`), which is exact: two
+    /// sources draw identical maps iff their params are bit-identical.
+    pub fn layout_key(&self) -> LayoutKey {
+        match *self {
+            // Ascii art is 'static, so the pointer+len pair identifies it.
+            MapSource::Ascii(art) => {
+                LayoutKey::Ascii(art.as_ptr() as usize, art.len())
+            }
+            MapSource::Maze { mw, mh, scale, loop_p } => {
+                LayoutKey::Maze(mw, mh, scale, loop_p.to_bits())
+            }
+            MapSource::BspRooms { w, h, min_room, doors } => {
+                LayoutKey::Bsp(w, h, min_room, doors)
+            }
+            MapSource::Caves { w, h, fill_p, steps } => {
+                LayoutKey::Caves(w, h, fill_p.to_bits(), steps)
+            }
+            MapSource::Arena { w, h, pillars, doors } => {
+                LayoutKey::Arena(w, h, pillars, doors)
+            }
+        }
+    }
+
     /// A `map=<kind>` override: replace the source with a default-sized
     /// generator of the named family (then `size=`/`doors=`... retune it).
     pub fn switched(kind: &str) -> Result<MapSource, String> {
@@ -152,6 +180,18 @@ impl MapSource {
             }
         })
     }
+}
+
+/// Map-cache key for one [`MapSource`] — see [`MapSource::layout_key`].
+/// Field order mirrors the source variants; `u32` entries are `f32` bit
+/// patterns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayoutKey {
+    Ascii(usize, usize),
+    Maze(usize, usize, usize, u32),
+    Bsp(usize, usize, usize, bool),
+    Caves(usize, usize, u32, usize),
+    Arena(usize, usize, usize, bool),
 }
 
 /// Walkable for connectivity purposes: doors are openable, walls are not.

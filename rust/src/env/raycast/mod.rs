@@ -3,6 +3,9 @@
 //! * [`map`] — grid maps: ASCII layouts + procedural mazes.
 //! * [`mapgen`] — procedural generators: BSP rooms-and-corridors, cellular
 //!   caves, mirror-symmetric duel arenas (seeded + connectivity-validated).
+//! * [`mapcache`] — process-wide seeded layout cache (DMLab-style level
+//!   cache): warm episode resets reuse validated layouts behind one shared
+//!   allocation instead of regenerating + flood-filling.
 //! * [`world`] — simulation: players, monsters, hitscan combat, pickups,
 //!   doors, scripted-bot AI, per-tick event stream.
 //! * [`render`] — DDA raycast renderer with sprites, depth buffer, HUD.
@@ -11,6 +14,7 @@
 //!   [`crate::env::registry`].
 
 pub mod map;
+pub mod mapcache;
 pub mod mapgen;
 pub mod render;
 pub mod scenarios;

@@ -12,7 +12,7 @@
 use super::map::{GridMap, DOOR_CLOSED, DOOR_OPEN};
 use super::world::{EntityKind, MonsterKind, World, WEAPONS};
 use crate::env::ObsSpec;
-use crate::runtime::native::pool::{Job, NativePool};
+use crate::runtime::native::pool::{Job, NativePool, Wave};
 
 /// Horizontal field of view ~ 77 degrees (tan(fov/2) = 0.8), Doom-like.
 const PLANE_SCALE: f32 = 0.8;
@@ -222,11 +222,12 @@ pub fn render(
         }
     }
 
-    // --- sprites: entities + other players, far to near
+    // --- sprites: entities + other players, far to near.  The candidate
+    // scan reads only the alive/x/y columns of the entity SoA.
     scratch.order.clear();
-    for (i, e) in world.entities.iter().enumerate() {
-        if e.alive {
-            let d = (e.x - p.x).hypot(e.y - p.y);
+    for i in 0..world.entities.len() {
+        if world.entities.alive[i] {
+            let d = (world.entities.x[i] - p.x).hypot(world.entities.y[i] - p.y);
             scratch.order.push((d, i, false));
         }
     }
@@ -248,9 +249,9 @@ pub fn render(
             let q = &world.players[idx];
             (q.x, q.y, [0.30, 0.45, 0.95], 1.0)
         } else {
-            let e = &world.entities[idx];
-            let s = if e.is_monster() { 1.0 } else { 0.5 };
-            (e.x, e.y, entity_color(e.kind), s)
+            let ents = &world.entities;
+            let s = if ents.is_monster(idx) { 1.0 } else { 0.5 };
+            (ents.x[idx], ents.y[idx], entity_color(ents.kind[idx]), s)
         };
         let rel_x = ex - p.x;
         let rel_y = ey - p.y;
@@ -476,14 +477,28 @@ pub fn render_batch(
     }
     colbuf.resize(n * frame, 0);
 
-    // ---- wave 1: raycast disjoint column strips into the column-major
+    // ---- waves 1 + 2, sequenced by the pool's wave scheduler: the
+    // transpose wave's builder runs only after every raycast job has
+    // drained, so it can read the columns wave 1 wrote without the two
+    // waves' borrows of `colbuf` ever overlapping.
+    let strip_cols = pool.rows_per_task(n * w, 8).min(w);
+    let rows_per = pool.rows_per_task(n * h, 8).min(h);
+    let band = rows_per * w * ch;
+    let copy_ch = ch.min(3);
+
+    let mut ctx = WaveCtx { worlds, gathers: &gathers[..n], colbuf, outs };
+
+    // Wave 1: raycast disjoint column strips into the column-major
     // intermediate.  Strip width targets ~2 tasks per thread across the
     // whole batch but never crosses a stream boundary.
-    let strip_cols = pool.rows_per_task(n * w, 8).min(w);
-    {
+    let raycast: Wave<'_, WaveCtx<'_, '_>> = Box::new(move |c| {
+        let worlds = c.worlds;
+        let gathers = c.gathers;
         let mut jobs: Vec<Job<'_>> = Vec::with_capacity(n * w.div_ceil(strip_cols));
-        for (s, sframe) in colbuf.chunks_mut(frame).enumerate() {
-            let map = &worlds[s].map;
+        for (s, sframe) in c.colbuf.chunks_mut(frame).enumerate() {
+            // Deref through `MapRef`: siblings on one cached layout all
+            // read the same shared `GridMap` allocation here.
+            let map: &GridMap = &worlds[s].map;
             let g = &gathers[s];
             let cmds = &g.sprites[..];
             for (ci, strip) in sframe.chunks_mut(strip_cols * h * ch).enumerate() {
@@ -493,19 +508,17 @@ pub fn render_batch(
                 }));
             }
         }
-        pool.run(jobs);
-    }
+        jobs
+    });
 
-    // ---- wave 2: transpose disjoint row bands of each stream into its
-    // HWC output.  Only the channels the oracle's `put` writes are copied
+    // Wave 2: transpose disjoint row bands of each stream into its HWC
+    // output.  Only the channels the oracle's `put` writes are copied
     // (`min(c, 3)`), so any extra channels keep the caller's bytes exactly
     // as the scalar path would.
-    {
-        let rows_per = pool.rows_per_task(n * h, 8).min(h);
-        let band = rows_per * w * ch;
-        let copy_ch = ch.min(3);
+    let transpose: Wave<'_, WaveCtx<'_, '_>> = Box::new(move |c| {
+        let colbuf: &[u8] = &c.colbuf[..];
         let mut jobs: Vec<Job<'_>> = Vec::with_capacity(n * h.div_ceil(rows_per));
-        for (s, out) in outs.iter_mut().enumerate() {
+        for (s, out) in c.outs.iter_mut().enumerate() {
             debug_assert_eq!(out.len(), frame);
             let src = &colbuf[s * frame..(s + 1) * frame];
             for (bi, dst) in out.chunks_mut(band).enumerate() {
@@ -522,8 +535,20 @@ pub fn render_batch(
                 }));
             }
         }
-        pool.run(jobs);
-    }
+        jobs
+    });
+
+    pool.run_waves(&mut ctx, vec![raycast, transpose]);
+}
+
+/// Borrowed state shared by the raycast and transpose waves of
+/// [`render_batch`]; the wave builders receive it sequentially (see
+/// [`NativePool::run_waves`]) so wave 2 can read the columns wave 1 wrote.
+struct WaveCtx<'a, 'o> {
+    worlds: &'a [&'a World],
+    gathers: &'a [GatherOut],
+    colbuf: &'a mut Vec<u8>,
+    outs: &'a mut [&'o mut [u8]],
 }
 
 /// Snapshot one stream's camera/HUD and rebuild its sprite draw list
@@ -546,9 +571,9 @@ fn gather_stream(world: &World, player: usize, obs: ObsSpec, g: &mut GatherOut) 
 
     sprites.clear();
     order.clear();
-    for (i, e) in world.entities.iter().enumerate() {
-        if e.alive {
-            let d = (e.x - p.x).hypot(e.y - p.y);
+    for i in 0..world.entities.len() {
+        if world.entities.alive[i] {
+            let d = (world.entities.x[i] - p.x).hypot(world.entities.y[i] - p.y);
             order.push((d, i, false));
         }
     }
@@ -566,9 +591,9 @@ fn gather_stream(world: &World, player: usize, obs: ObsSpec, g: &mut GatherOut) 
             let q = &world.players[idx];
             (q.x, q.y, [0.30, 0.45, 0.95], 1.0)
         } else {
-            let e = &world.entities[idx];
-            let s = if e.is_monster() { 1.0 } else { 0.5 };
-            (e.x, e.y, entity_color(e.kind), s)
+            let ents = &world.entities;
+            let s = if ents.is_monster(idx) { 1.0 } else { 0.5 };
+            (ents.x[idx], ents.y[idx], entity_color(ents.kind[idx]), s)
         };
         let rel_x = ex - p.x;
         let rel_y = ey - p.y;
@@ -891,8 +916,8 @@ mod tests {
         render(&w, 0, obs, false, &mut scratch, &mut with);
         assert_ne!(base, with, "monster sprite not drawn");
         // Monster behind the camera must not be drawn.
-        w.entities[0].x = 0.5; // behind/inside wall west of player
-        w.entities[0].y = 2.5;
+        w.entities.x[0] = 0.5; // behind/inside wall west of player
+        w.entities.y[0] = 2.5;
         let mut behind = vec![0u8; obs.len()];
         render(&w, 0, obs, false, &mut scratch, &mut behind);
         assert_eq!(base, behind);

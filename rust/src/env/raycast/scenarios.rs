@@ -17,10 +17,11 @@ use crate::env::{AgentStep, Env, EnvSpec, ObsSpec};
 use crate::util::Rng;
 
 use super::map::{GridMap, EMPTY};
+use super::mapcache;
 use super::mapgen::{self, MapSource};
 use super::render::{render, RenderScratch};
 use super::world::{
-    Entity, EntityKind, Intent, MonsterKind, Player, World, WorldCfg,
+    Entity, EntityKind, Intent, MapRef, MonsterKind, Player, World, WorldCfg,
 };
 
 /// Reward shaping weights (appendix A.3).
@@ -229,6 +230,12 @@ pub struct RaycastDef {
     /// Match modes need the weapon-switch/interact heads: require the full
     /// 7-head layout (doomish_full) at construction time.
     pub needs_full_heads: bool,
+    /// Stage episodes from the process-wide layout cache
+    /// ([`super::mapcache`]) instead of regenerating the map per reset.
+    /// Off by default on raw definitions; the trainer injects
+    /// `?map_cache=1` when `--map_cache` is on (the explicit scenario
+    /// param always wins, so tests/benches can pin either path).
+    pub map_cache: bool,
 }
 
 impl RaycastDef {
@@ -244,6 +251,7 @@ impl RaycastDef {
             goal: GoalCfg::None,
             players: PlayerPlacement::Random,
             needs_full_heads: false,
+            map_cache: false,
         }
     }
 
@@ -287,11 +295,22 @@ impl RaycastDef {
                 MapSource::Arena { pillars, .. } => *pillars = count(key, val, 256)?,
                 _ => return Err(format!("'{key}' only applies to arena maps")),
             },
+            "map_cache" => {
+                self.map_cache = match val {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    _ => {
+                        return Err(format!(
+                            "invalid value '{val}' for '{key}' (use on/off)"
+                        ))
+                    }
+                }
+            }
             _ => {
                 return Err(format!(
                     "unknown scenario parameter '{key}' (try monsters, hp, respawn, \
                      health, ammo, armor, bots, ticks, map, size, scale, loop_p, \
-                     fill, doors, pillars)"
+                     fill, doors, pillars, map_cache)"
                 ))
             }
         }
@@ -449,6 +468,15 @@ impl RaycastEnv {
         obs: ObsSpec,
         heads: &[usize],
     ) -> Result<RaycastEnv, String> {
+        let decoder = RaycastEnv::validate(&def, heads)?;
+        Ok(RaycastEnv::from_validated(def, obs, heads, decoder))
+    }
+
+    /// The construction-time def/head pairing checks of [`from_def`],
+    /// split out so batch constructors (`env::batch::make_batch`) run them
+    /// once per batch instead of once per sibling — every sibling shares
+    /// one definition, so per-sibling re-validation was pure waste.
+    pub fn validate(def: &RaycastDef, heads: &[usize]) -> Result<ActionDecoder, String> {
         let decoder = ActionDecoder::new(heads)?;
         if def.needs_full_heads && decoder.layout() != HeadLayout::Full7 {
             return Err(format!(
@@ -469,6 +497,17 @@ impl RaycastEnv {
                 def.cfg.kind_name
             ));
         }
+        Ok(decoder)
+    }
+
+    /// Build from a definition already checked by [`validate`] (whose
+    /// `decoder` this takes, proving the check ran).
+    pub fn from_validated(
+        def: RaycastDef,
+        obs: ObsSpec,
+        heads: &[usize],
+        decoder: ActionDecoder,
+    ) -> RaycastEnv {
         let spec = EnvSpec {
             name: def.cfg.kind_name.to_string(),
             obs,
@@ -489,7 +528,7 @@ impl RaycastEnv {
             intents: Vec::new(),
         };
         env.start_episode(12345);
-        Ok(env)
+        env
     }
 
     /// (Re)build the world for a fresh episode: draw the map from the
@@ -497,13 +536,33 @@ impl RaycastEnv {
     /// the goal object per the declarative tables.
     fn start_episode(&mut self, seed: u64) {
         self.episode_seed = seed;
-        let mut rng = Rng::new(seed);
         // Disjoint-field borrow: the definition is read-only here while the
         // writes below touch world/agent_players/intents — no clone needed.
         let def = &self.def;
         let cfg = &def.cfg;
-        let gen = def.map.build(&mut rng);
-        let map = gen.grid;
+
+        // ---- map --------------------------------------------------------
+        // Cached path: the layout comes from the process-wide cache (one
+        // shared `GridMap` allocation per layout), and placement draws come
+        // from a salted stream — the generator's rng continuation position
+        // is unknowable on a hit, so deriving placements from it would make
+        // hit and miss episodes diverge.  Uncached path: the map draws are
+        // the first draws of `Rng::new(seed)`, which is also exactly how
+        // the cache builds layouts on miss (see `mapcache::fold` for how
+        // episode seeds map onto the bounded layout pool).
+        let (map, spawns, pickups, mut rng) = if def.map_cache {
+            let layout = mapcache::lookup_or_build(&def.map, mapcache::fold(seed));
+            (
+                MapRef::from(std::sync::Arc::clone(&layout.grid)),
+                layout.spawns.clone(),
+                layout.pickups.clone(),
+                Rng::new(seed ^ mapcache::PLACEMENT_SALT),
+            )
+        } else {
+            let mut rng = Rng::new(seed);
+            let gen = def.map.build(&mut rng);
+            (MapRef::from(gen.grid), gen.spawns, gen.pickups, rng)
+        };
 
         // ---- players ----------------------------------------------------
         let total = cfg.n_agents + cfg.n_bots;
@@ -533,8 +592,8 @@ impl RaycastEnv {
                     (x, y, rng.range_f32(-3.14, 3.14))
                 }
                 PlayerPlacement::Spread(d) => {
-                    let hint = (total <= gen.spawns.len())
-                        .then(|| gen.spawns[i])
+                    let hint = (total <= spawns.len())
+                        .then(|| spawns[i])
                         .filter(|&(x, y)| !map.is_solid(x, y));
                     let (x, y) = match hint {
                         Some(p) => p,
@@ -639,7 +698,7 @@ impl RaycastEnv {
         // self-play.
         {
             let map_ref = &map;
-            let mut spots = gen.pickups.into_iter();
+            let mut spots = pickups.into_iter();
             let mut place = |rng: &mut Rng| -> (f32, f32) {
                 for s in spots.by_ref() {
                     if !map_ref.is_solid(s.0, s.1) {
@@ -691,7 +750,7 @@ impl RaycastEnv {
 
         let mut world = World::new(map, def.world.clone(), rng.next_u64());
         world.players = players;
-        world.entities = ents;
+        world.entities = ents.into();
         self.agent_players = (0..cfg.n_agents).collect();
         self.bot_players = (cfg.n_agents..world.players.len()).collect();
         self.world = world;
@@ -709,9 +768,7 @@ impl RaycastEnv {
         {
             return true;
         }
-        if self.def.cfg.end_on_clear
-            && !self.world.entities.iter().any(|e| e.alive && e.is_monster())
-        {
+        if self.def.cfg.end_on_clear && !self.world.entities.any_monster_alive() {
             return true;
         }
         if self.def.cfg.end_on_goal && !self.world.events.objects.is_empty() {
@@ -1045,14 +1102,12 @@ mod tests {
     fn deadly_corridor_goal_ends_episode_far_from_spawn() {
         let mut env = build("deadly_corridor", &DOOM_HEADS);
         env.reset(9);
-        let goal = env
-            .world
-            .entities
-            .iter()
-            .find(|e| matches!(e.kind, EntityKind::Object { .. }))
+        let ents = &env.world.entities;
+        let gi = (0..ents.len())
+            .find(|&i| matches!(ents.kind[i], EntityKind::Object { .. }))
             .expect("deadly_corridor has a goal object");
         let p = &env.world.players[0];
-        let d = (goal.x - p.x).hypot(goal.y - p.y);
+        let d = (ents.x[gi] - p.x).hypot(ents.y[gi] - p.y);
         assert!(d > 6.0, "goal only {d:.1} cells from spawn");
     }
 
@@ -1083,11 +1138,9 @@ mod tests {
     fn generated_scenarios_draw_fresh_maps_per_episode() {
         let mut env = build("battle_gen", &DOOM_HEADS);
         env.reset(21);
-        let first: Vec<(f32, f32)> =
-            env.world.entities.iter().map(|e| (e.x, e.y)).collect();
+        let first = (env.world.entities.x.clone(), env.world.entities.y.clone());
         env.reset(22);
-        let second: Vec<(f32, f32)> =
-            env.world.entities.iter().map(|e| (e.x, e.y)).collect();
+        let second = (env.world.entities.x.clone(), env.world.entities.y.clone());
         assert_ne!(first, second, "fresh seed must produce a fresh layout");
     }
 
@@ -1122,15 +1175,47 @@ mod tests {
         r.set_param("monsters", "20").unwrap();
         r.set_param("health", "0").unwrap();
         let env = RaycastEnv::from_def(*r, DOOM_OBS, &DOOM_HEADS).unwrap();
-        let monsters =
-            env.world.entities.iter().filter(|e| e.is_monster()).count();
-        let medkits = env
-            .world
-            .entities
+        let ents = &env.world.entities;
+        let monsters = (0..ents.len()).filter(|&i| ents.is_monster(i)).count();
+        let medkits = ents
+            .kind
             .iter()
-            .filter(|e| matches!(e.kind, EntityKind::HealthPack))
+            .filter(|&&k| matches!(k, EntityKind::HealthPack))
             .count();
         assert_eq!(monsters, 20);
         assert_eq!(medkits, 0);
+    }
+
+    #[test]
+    fn difficulty_overrides_do_not_invalidate_the_cached_layout() {
+        // The curriculum hook: `monsters`/`hp` are placement-only knobs, so
+        // bumping them mid-run keeps hitting the same cached layouts — the
+        // cache key covers the map source alone.
+        let base = registry::get("battle_gen").unwrap();
+        let Builder::Raycast(r) = base.builder else { panic!() };
+        let mk = |monsters: &str| {
+            let mut d = (*r).clone();
+            d.set_param("map_cache", "on").unwrap();
+            d.set_param("monsters", monsters).unwrap();
+            let mut env = RaycastEnv::from_def(d, DOOM_OBS, &DOOM_HEADS).unwrap();
+            env.reset(3);
+            env
+        };
+        let a = mk("4");
+        let b = mk("9");
+        assert_eq!(
+            a.world.map.bytes(),
+            b.world.map.bytes(),
+            "difficulty override must not change the layout for a seed"
+        );
+        let count = |e: &RaycastEnv| {
+            let ents = &e.world.entities;
+            (0..ents.len()).filter(|&i| ents.is_monster(i)).count()
+        };
+        assert_eq!(count(&a), 4);
+        assert_eq!(count(&b), 9);
+        // Both worlds share the cache's single map allocation.
+        assert!(matches!(a.world.map, MapRef::Shared(_)));
+        assert!(matches!(b.world.map, MapRef::Shared(_)));
     }
 }

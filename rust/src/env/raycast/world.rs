@@ -107,6 +107,128 @@ impl Entity {
     }
 }
 
+/// Entity state in struct-of-arrays form: the simulation and the sprite
+/// gather iterate one field across *all* entities (positions for the beam
+/// scan, alive+kind for the render order, hp for damage), so parallel
+/// arrays keep those sweeps on contiguous cache lines instead of striding
+/// over whole [`Entity`] records.  [`Entity`] remains the construction row
+/// ([`Entities::push`] / `From<Vec<Entity>>` transpose it in).
+#[derive(Clone, Debug, Default)]
+pub struct Entities {
+    pub kind: Vec<EntityKind>,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub hp: Vec<f32>,
+    pub alive: Vec<bool>,
+    pub cooldown: Vec<u32>,
+    pub respawn_ticks: Vec<u32>,
+    respawn_in: Vec<u32>,
+}
+
+impl Entities {
+    pub fn len(&self) -> usize {
+        self.kind.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kind.is_empty()
+    }
+
+    pub fn push(&mut self, e: Entity) {
+        self.kind.push(e.kind);
+        self.x.push(e.x);
+        self.y.push(e.y);
+        self.hp.push(e.hp);
+        self.alive.push(e.alive);
+        self.cooldown.push(e.cooldown);
+        self.respawn_ticks.push(e.respawn_ticks);
+        self.respawn_in.push(e.respawn_in);
+    }
+
+    pub fn clear(&mut self) {
+        self.kind.clear();
+        self.x.clear();
+        self.y.clear();
+        self.hp.clear();
+        self.alive.clear();
+        self.cooldown.clear();
+        self.respawn_ticks.clear();
+        self.respawn_in.clear();
+    }
+
+    #[inline]
+    pub fn is_monster(&self, i: usize) -> bool {
+        matches!(self.kind[i], EntityKind::Monster(_))
+    }
+
+    /// Any living monster left?  (The `*_gen` kill-goal termination test.)
+    pub fn any_monster_alive(&self) -> bool {
+        self.kind
+            .iter()
+            .zip(&self.alive)
+            .any(|(k, &a)| a && matches!(k, EntityKind::Monster(_)))
+    }
+}
+
+impl From<Vec<Entity>> for Entities {
+    fn from(v: Vec<Entity>) -> Entities {
+        let mut e = Entities::default();
+        for ent in v {
+            e.push(ent);
+        }
+        e
+    }
+}
+
+/// The world's map: owned outright (uncached resets), or shared read-only
+/// with every sibling episode running on the same cached layout — one
+/// `GridMap` allocation per layout, not per env.  Doors are the only map
+/// mutation; [`MapRef::make_mut`] clones a shared map on first write, so
+/// cached layouts are never mutated in place.
+#[derive(Clone, Debug)]
+pub enum MapRef {
+    Owned(GridMap),
+    Shared(std::sync::Arc<GridMap>),
+}
+
+impl std::ops::Deref for MapRef {
+    type Target = GridMap;
+
+    #[inline]
+    fn deref(&self) -> &GridMap {
+        match self {
+            MapRef::Owned(m) => m,
+            MapRef::Shared(m) => m,
+        }
+    }
+}
+
+impl MapRef {
+    /// Mutable access, copy-on-write: a shared map is cloned into an owned
+    /// one first, so per-episode door state never leaks into the cache.
+    pub fn make_mut(&mut self) -> &mut GridMap {
+        if let MapRef::Shared(m) = self {
+            *self = MapRef::Owned((**m).clone());
+        }
+        match self {
+            MapRef::Owned(m) => m,
+            MapRef::Shared(_) => unreachable!("shared map was just cloned"),
+        }
+    }
+}
+
+impl From<GridMap> for MapRef {
+    fn from(m: GridMap) -> MapRef {
+        MapRef::Owned(m)
+    }
+}
+
+impl From<std::sync::Arc<GridMap>> for MapRef {
+    fn from(m: std::sync::Arc<GridMap>) -> MapRef {
+        MapRef::Shared(m)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Player {
     pub x: f32,
@@ -219,9 +341,9 @@ impl Default for WorldCfg {
 }
 
 pub struct World {
-    pub map: GridMap,
+    pub map: MapRef,
     pub players: Vec<Player>,
-    pub entities: Vec<Entity>,
+    pub entities: Entities,
     pub cfg: WorldCfg,
     pub tick_count: u64,
     pub rng: Rng,
@@ -229,11 +351,11 @@ pub struct World {
 }
 
 impl World {
-    pub fn new(map: GridMap, cfg: WorldCfg, seed: u64) -> Self {
+    pub fn new(map: impl Into<MapRef>, cfg: WorldCfg, seed: u64) -> Self {
         World {
-            map,
+            map: map.into(),
             players: Vec::new(),
-            entities: Vec::new(),
+            entities: Entities::default(),
             cfg,
             tick_count: 0,
             rng: Rng::new(seed),
@@ -284,13 +406,15 @@ impl World {
         let wall_d = self.wall_distance(sx, sy, angle, def.range);
         let (dx, dy) = (angle.cos(), angle.sin());
 
-        // Nearest target (monster or other player) within the beam.
+        // Nearest target (monster or other player) within the beam.  The
+        // scan touches only the alive/kind/x/y columns of the SoA.
         let mut best: Option<(f32, Target)> = None;
-        for (i, e) in self.entities.iter().enumerate() {
-            if !e.alive || !e.is_monster() {
+        for i in 0..self.entities.len() {
+            if !self.entities.alive[i] || !self.entities.is_monster(i) {
                 continue;
             }
-            if let Some(d) = beam_hit(sx, sy, dx, dy, e.x, e.y, MONSTER_RADIUS, wall_d) {
+            let (ex, ey) = (self.entities.x[i], self.entities.y[i]);
+            if let Some(d) = beam_hit(sx, sy, dx, dy, ex, ey, MONSTER_RADIUS, wall_d) {
                 if best.map(|(bd, _)| d < bd).unwrap_or(true) {
                     best = Some((d, Target::Monster(i)));
                 }
@@ -312,12 +436,11 @@ impl World {
             let dmg = def.damage;
             match target {
                 Target::Monster(i) => {
-                    let e = &mut self.entities[i];
-                    e.hp -= dmg;
+                    self.entities.hp[i] -= dmg;
                     self.events.damage_dealt.push((shooter, dmg));
-                    if e.hp <= 0.0 {
-                        e.alive = false;
-                        e.respawn_in = self.cfg.monster_respawn_ticks;
+                    if self.entities.hp[i] <= 0.0 {
+                        self.entities.alive[i] = false;
+                        self.entities.respawn_in[i] = self.cfg.monster_respawn_ticks;
                         self.events.monster_kills.push(shooter);
                     }
                 }
@@ -397,7 +520,7 @@ impl World {
             }
             if intent.interact {
                 let (x, y, a) = (p.x, p.y, p.angle);
-                self.map.open_door(x, y, a);
+                self.map.make_mut().open_door(x, y, a);
             }
             if p.cooldown > 0 {
                 p.cooldown -= 1;
@@ -429,15 +552,12 @@ impl World {
 
         // 2. Pickups.  Indexed: the body calls `&mut self` methods, which
         // an iterator over `self.entities` would keep borrowed.
-        #[allow(clippy::needless_range_loop)]
         for ei in 0..self.entities.len() {
-            if !self.entities[ei].alive || self.entities[ei].is_monster() {
+            if !self.entities.alive[ei] || self.entities.is_monster(ei) {
                 continue;
             }
-            let (ex, ey, kind) = {
-                let e = &self.entities[ei];
-                (e.x, e.y, e.kind)
-            };
+            let (ex, ey, kind) =
+                (self.entities.x[ei], self.entities.y[ei], self.entities.kind[ei]);
             for pi in 0..self.players.len() {
                 let p = &self.players[pi];
                 if !p.alive {
@@ -488,9 +608,8 @@ impl World {
                     if !matches!(kind, EntityKind::Object { .. }) {
                         self.events.pickups.push((pi, kind));
                     }
-                    let e = &mut self.entities[ei];
-                    e.alive = false;
-                    e.respawn_in = e.respawn_ticks;
+                    self.entities.alive[ei] = false;
+                    self.entities.respawn_in[ei] = self.entities.respawn_ticks[ei];
                     break;
                 }
             }
@@ -498,17 +617,16 @@ impl World {
 
         // 3. Monster AI + respawns.
         for ei in 0..self.entities.len() {
-            let e = &self.entities[ei];
-            if !e.alive {
-                if self.entities[ei].respawn_in > 0 {
-                    self.entities[ei].respawn_in -= 1;
-                    if self.entities[ei].respawn_in == 0 {
+            if !self.entities.alive[ei] {
+                if self.entities.respawn_in[ei] > 0 {
+                    self.entities.respawn_in[ei] -= 1;
+                    if self.entities.respawn_in[ei] == 0 {
                         self.respawn_entity(ei);
                     }
                 }
                 continue;
             }
-            if !e.is_monster() || self.cfg.passive_monsters {
+            if !self.entities.is_monster(ei) || self.cfg.passive_monsters {
                 continue;
             }
             self.monster_ai(ei);
@@ -531,24 +649,22 @@ impl World {
             .first()
             .map(|p| (p.x, p.y, 3.0));
         let (x, y) = self.map.random_spawn(&mut self.rng, avoid);
-        let e = &mut self.entities[ei];
-        e.alive = true;
-        e.x = x;
-        e.y = y;
-        e.hp = match e.kind {
+        let ents = &mut self.entities;
+        ents.alive[ei] = true;
+        ents.x[ei] = x;
+        ents.y[ei] = y;
+        ents.hp[ei] = match ents.kind[ei] {
             EntityKind::Monster(MonsterKind::Chaser) => 40.0,
             EntityKind::Monster(MonsterKind::Shooter) => 25.0,
             _ => 1.0,
         };
-        e.cooldown = 0;
+        ents.cooldown[ei] = 0;
     }
 
     fn monster_ai(&mut self, ei: usize) {
         // Target: nearest living player.
-        let (ex, ey, kind) = {
-            let e = &self.entities[ei];
-            (e.x, e.y, e.kind)
-        };
+        let (ex, ey, kind) =
+            (self.entities.x[ei], self.entities.y[ei], self.entities.kind[ei]);
         let mut best: Option<(f32, usize)> = None;
         for (i, p) in self.players.iter().enumerate() {
             if !p.alive {
@@ -563,14 +679,14 @@ impl World {
         let (tx, ty) = (self.players[target].x, self.players[target].y);
         let has_los = self.map.los(ex, ey, tx, ty);
 
-        if self.entities[ei].cooldown > 0 {
-            self.entities[ei].cooldown -= 1;
+        if self.entities.cooldown[ei] > 0 {
+            self.entities.cooldown[ei] -= 1;
         }
         match kind {
             EntityKind::Monster(MonsterKind::Chaser) => {
                 if dist < MONSTER_RADIUS + PLAYER_RADIUS + 0.3 {
-                    if self.entities[ei].cooldown == 0 {
-                        self.entities[ei].cooldown = 20;
+                    if self.entities.cooldown[ei] == 0 {
+                        self.entities.cooldown[ei] = 20;
                         self.damage_player(target, 10.0, None);
                     }
                 } else if has_los {
@@ -579,24 +695,22 @@ impl World {
                     let dy = (ty - ey) * inv * MONSTER_SPEED;
                     let (nx, ny) =
                         Self::slide(&self.map, ex, ey, dx, dy, MONSTER_RADIUS);
-                    let e = &mut self.entities[ei];
-                    e.x = nx;
-                    e.y = ny;
+                    self.entities.x[ei] = nx;
+                    self.entities.y[ei] = ny;
                 } else {
                     // Wander.
                     let a = self.rng.range_f32(-3.14, 3.14);
                     let (dx, dy) = (a.cos() * MONSTER_SPEED, a.sin() * MONSTER_SPEED);
                     let (nx, ny) =
                         Self::slide(&self.map, ex, ey, dx, dy, MONSTER_RADIUS);
-                    let e = &mut self.entities[ei];
-                    e.x = nx;
-                    e.y = ny;
+                    self.entities.x[ei] = nx;
+                    self.entities.y[ei] = ny;
                 }
             }
             EntityKind::Monster(MonsterKind::Shooter) => {
                 if has_los && dist < 14.0 {
-                    if self.entities[ei].cooldown == 0 {
-                        self.entities[ei].cooldown = 35;
+                    if self.entities.cooldown[ei] == 0 {
+                        self.entities.cooldown[ei] = 35;
                         // Accuracy decays with distance.
                         let hit_p = (1.2 - dist * 0.08).clamp(0.15, 0.9);
                         if self.rng.chance(hit_p) {
@@ -609,9 +723,8 @@ impl World {
                     let dy = (ty - ey) * inv * MONSTER_SPEED;
                     let (nx, ny) =
                         Self::slide(&self.map, ex, ey, dx, dy, MONSTER_RADIUS);
-                    let e = &mut self.entities[ei];
-                    e.x = nx;
-                    e.y = ny;
+                    self.entities.x[ei] = nx;
+                    self.entities.y[ei] = ny;
                 }
             }
             _ => {}
@@ -646,20 +759,21 @@ impl World {
         let mut goal: Option<(f32, f32)> = None;
         if needs_health || needs_ammo {
             let mut best = f32::MAX;
-            for e in &self.entities {
-                if !e.alive {
+            for ei in 0..self.entities.len() {
+                if !self.entities.alive[ei] {
                     continue;
                 }
-                let want = match e.kind {
+                let want = match self.entities.kind[ei] {
                     EntityKind::HealthPack => needs_health,
                     EntityKind::AmmoPack | EntityKind::WeaponPickup(_) => needs_ammo,
                     _ => false,
                 };
                 if want {
-                    let d = (e.x - me.x).hypot(e.y - me.y);
+                    let (ex, ey) = (self.entities.x[ei], self.entities.y[ei]);
+                    let d = (ex - me.x).hypot(ey - me.y);
                     if d < best {
                         best = d;
-                        goal = Some((e.x, e.y));
+                        goal = Some((ex, ey));
                     }
                 }
             }
@@ -829,7 +943,7 @@ mod tests {
             }
         }
         assert_eq!(kills, 1);
-        assert!(!w.entities[0].alive);
+        assert!(!w.entities.alive[0]);
         // Pistol: 25 hp shooter needs 3 hits of 12 => at least 3 shots.
         assert!(w.players[0].ammo[1] <= 47);
     }
@@ -852,7 +966,7 @@ mod tests {
         for _ in 0..60 {
             w.tick(&[shoot]);
         }
-        assert!(w.entities[0].alive, "bullet went through a wall");
+        assert!(w.entities.alive[0], "bullet went through a wall");
     }
 
     #[test]
@@ -879,13 +993,13 @@ mod tests {
         w.entities.push(Entity::new(EntityKind::HealthPack, 2.0, 2.0).with_respawn(5));
         let idle = Intent::default();
         w.tick(&[idle]); // floor hurts, then pickup heals
-        assert!(!w.entities[0].alive);
+        assert!(!w.entities.alive[0]);
         assert_eq!(w.events.pickups.len(), 1);
         assert!(w.players[0].health > 99.0);
         for _ in 0..6 {
             w.tick(&[idle]);
         }
-        assert!(w.entities[0].alive, "pickup did not respawn");
+        assert!(w.entities.alive[0], "pickup did not respawn");
     }
 
     #[test]
@@ -979,8 +1093,48 @@ mod tests {
                 w.tick(&[a]);
             }
             let p = &w.players[0];
-            (p.x, p.y, p.health, w.entities[0].alive, w.entities[0].hp as i32)
+            (p.x, p.y, p.health, w.entities.alive[0], w.entities.hp[0] as i32)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn entities_soa_round_trips_entity_rows() {
+        let rows = vec![
+            Entity::new(EntityKind::Monster(MonsterKind::Chaser), 1.0, 2.0),
+            Entity::new(EntityKind::HealthPack, 3.0, 4.0).with_respawn(9),
+        ];
+        let e: Entities = rows.into();
+        assert_eq!(e.len(), 2);
+        assert!(!e.is_empty());
+        assert!(e.is_monster(0) && !e.is_monster(1));
+        assert!(e.any_monster_alive());
+        assert_eq!((e.x[1], e.y[1], e.respawn_ticks[1]), (3.0, 4.0, 9));
+        assert_eq!(e.hp[0], 40.0);
+        let mut e = e;
+        e.alive[0] = false;
+        assert!(!e.any_monster_alive());
+        e.clear();
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn shared_map_copies_on_door_write() {
+        // A shared layout with a closed door directly east of the player:
+        // interacting must open the door in this world only, leaving the
+        // shared (cached) grid untouched.
+        let grid = std::sync::Arc::new(GridMap::from_ascii(
+            "#####\n\
+             #.D.#\n\
+             #####",
+        ));
+        let mut w = World::new(std::sync::Arc::clone(&grid), WorldCfg::default(), 11);
+        assert!(matches!(w.map, MapRef::Shared(_)));
+        w.players.push(Player::new(1.5, 1.5, 0.0)); // facing +x, at the door
+        let open = Intent { interact: true, ..Default::default() };
+        w.tick(&[open]);
+        assert!(matches!(w.map, MapRef::Owned(_)), "door write must copy");
+        assert!(!w.map.is_solid(2.5, 1.5), "door did not open");
+        assert!(grid.is_solid(2.5, 1.5), "shared layout was mutated");
     }
 }

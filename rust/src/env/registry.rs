@@ -89,7 +89,7 @@ impl ScenarioDef {
             Builder::Raycast(r) => {
                 let mut keys = vec![
                     "monsters", "hp", "respawn", "health", "ammo", "armor", "bots",
-                    "ticks", "map",
+                    "ticks", "map", "map_cache",
                 ];
                 match r.map {
                     MapSource::Ascii(_) => {}

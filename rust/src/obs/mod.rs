@@ -133,6 +133,32 @@ pub fn set_pool_sampling(on: bool) {
     POOL_SAMPLING.store(on, Ordering::Relaxed);
 }
 
+/// Procedural map-cache instrumentation (`env/raycast/mapcache.rs`).  The
+/// cache is process-global and shared across every rollout worker, so its
+/// stats are process-global too.  All four are control-plane — hit/miss
+/// accounting is how a reset-dominated run is diagnosed, so it must not
+/// require a metrics re-run to observe.
+pub struct MapCacheStats {
+    /// Episode resets served from a cached layout.
+    pub hits: Counter,
+    /// Episode resets that had to generate (and insert) a layout.
+    pub misses: Counter,
+    /// Cached layouts dropped by the per-family FIFO capacity bound.
+    pub evictions: Counter,
+    /// Layout generation time on cache miss (ns) — the cost a hit avoids.
+    pub build_ns: Histogram,
+}
+
+pub fn map_cache_stats() -> &'static MapCacheStats {
+    static STATS: OnceLock<MapCacheStats> = OnceLock::new();
+    STATS.get_or_init(|| MapCacheStats {
+        hits: Counter::new(),
+        misses: Counter::new(),
+        evictions: Counter::new(),
+        build_ns: Histogram::new(),
+    })
+}
+
 #[inline]
 pub fn pool_sampling() -> bool {
     POOL_SAMPLING.load(Ordering::Relaxed)

@@ -43,6 +43,12 @@ pub const MAX_DEFAULT_THREADS: usize = 16;
 /// it).
 pub type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
 
+/// One stage of [`NativePool::run_waves`]: given exclusive access to the
+/// shared context, produce the stage's jobs.  The builder runs on the
+/// calling thread, strictly after every earlier wave has drained, so the
+/// jobs it returns may borrow state an earlier wave mutated.
+pub type Wave<'env, C> = Box<dyn for<'a> FnOnce(&'a mut C) -> Vec<Job<'a>> + 'env>;
+
 struct Task {
     job: Box<dyn FnOnce() + Send + 'static>,
     scope: Arc<ScopeState>,
@@ -221,6 +227,25 @@ impl NativePool {
         }
     }
 
+    /// Run a sequence of barriered waves over one shared context.
+    ///
+    /// Each wave builder is invoked only after every job of every earlier
+    /// wave has completed, and receives exclusive access to `ctx` to build
+    /// its job list.  This is what lets a later wave *read* buffers an
+    /// earlier wave *wrote* without overlapping borrows: the context
+    /// reborrows are sequenced by the completion barrier of [`run`]
+    /// (which is also the happens-before edge — every write of wave `i`
+    /// is visible to wave `i + 1`).  Used by the batched raycast renderer
+    /// (column-strip raycast, then transpose of those columns).
+    ///
+    /// [`run`]: NativePool::run
+    pub fn run_waves<C>(&self, ctx: &mut C, waves: Vec<Wave<'_, C>>) {
+        for wave in waves {
+            let jobs = wave(ctx);
+            self.run(jobs);
+        }
+    }
+
     /// Convenience: split `data` into `chunk_len`-sized pieces and run
     /// `f(chunk_index, chunk)` on each in parallel.  Chunks are disjoint
     /// `&mut` slices, so `f` may write freely.
@@ -380,6 +405,42 @@ mod tests {
         }
         pool.run(jobs);
         assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn waves_are_barriered_in_order() {
+        // Wave 2 reads what wave 1 wrote: only sound because run_waves
+        // drains wave 1 completely before building wave 2's jobs.
+        struct Ctx {
+            src: Vec<u64>,
+            sums: Vec<u64>,
+        }
+        let pool = NativePool::new(3);
+        let mut ctx = Ctx { src: vec![0; 64], sums: vec![0; 4] };
+        let fill: Wave<'_, Ctx> = Box::new(|c| {
+            let mut jobs: Vec<Job<'_>> = Vec::new();
+            for (ci, chunk) in c.src.chunks_mut(16).enumerate() {
+                jobs.push(Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (ci * 16 + j) as u64;
+                    }
+                }));
+            }
+            jobs
+        });
+        let reduce: Wave<'_, Ctx> = Box::new(|c| {
+            let src = &c.src[..];
+            let mut jobs: Vec<Job<'_>> = Vec::new();
+            for (ci, slot) in c.sums.iter_mut().enumerate() {
+                jobs.push(Box::new(move || {
+                    *slot = src[ci * 16..(ci + 1) * 16].iter().sum();
+                }));
+            }
+            jobs
+        });
+        pool.run_waves(&mut ctx, vec![fill, reduce]);
+        assert_eq!(ctx.sums.iter().sum::<u64>(), (0..64).sum::<u64>());
+        assert_eq!(ctx.sums[0], (0..16).sum::<u64>());
     }
 
     #[test]

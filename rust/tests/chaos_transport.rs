@@ -4,7 +4,8 @@
 //! gated by `required-features` in Cargo.toml).
 //!
 //! Each model exercises one protocol of `ipc::spsc` / `ipc::sharded` /
-//! `runtime::native::pool` through the `crate::sync` facade: every atomic,
+//! `runtime::native::pool` / `env::raycast::mapcache` through the
+//! `crate::sync` facade: every atomic,
 //! lock, condvar and spawn is a scheduling point, the checker explores
 //! bounded-preemption interleavings exhaustively, and vector clocks flag
 //! any cell access whose happens-before edge relies on stronger orderings
@@ -287,6 +288,38 @@ fn random_mode_smoke_on_the_full_stack() {
         },
     );
     assert_eq!(report.schedules, 150);
+}
+
+#[test]
+fn mapcache_concurrent_build_and_hit() {
+    use sample_factory::env::raycast::mapcache;
+    use sample_factory::env::raycast::mapgen::MapSource;
+    // The map cache serializes on one `crate::sync` mutex: two racing
+    // `lookup_or_build` calls on the same key must converge on a single
+    // shared allocation (one build wins, the other hits) under every
+    // explored interleaving — a torn insert or double build would show up
+    // as distinct `Arc`s or a vector-clock report.  The cache itself is
+    // process-global and outlives each schedule, so a *plain std* counter
+    // (invisible to the scheduler, like the obs clock) mints a fresh seed
+    // per schedule: every run replays the same miss-then-race structure
+    // instead of degenerating into all-hits after the first schedule.
+    static SEED: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let report = check("mapcache_build_vs_hit", cfg(2000), || {
+        let seed = 0x4000_0000
+            + SEED.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let src = MapSource::Caves { w: 13, h: 9, fill_p: 0.40, steps: 2 };
+        let t = thread::spawn_named("cache-b", move || {
+            mapcache::lookup_or_build(&src, seed)
+        });
+        let a = mapcache::lookup_or_build(&src, seed);
+        let b = t.join().unwrap();
+        assert!(
+            std::sync::Arc::ptr_eq(&a.grid, &b.grid),
+            "racing cache lookups returned distinct layouts"
+        );
+        assert_eq!(a.spawns, b.spawns, "cache returned torn placement data");
+    });
+    assert!(report.schedules > 1, "explored only {} schedules", report.schedules);
 }
 
 #[test]

@@ -178,6 +178,107 @@ fn batched_step_render_matches_scalar_oracle() {
     }
 }
 
+#[test]
+fn cached_batch_matches_scalar_oracle() {
+    // Same parity contract with the map cache on for BOTH sides: the
+    // `?map_cache=1` override routes every episode layout (including
+    // auto-reset reseeds inside `step`) through the process-wide cache,
+    // and that must not perturb a single byte of the episode.  k and
+    // threads rotate across the registry sweep so every scenario runs
+    // cached at one cell and the family covers {1,3,6} x {1,2,4}.
+    let defs = sweep();
+    assert!(defs.len() >= 14, "registry sweep shrank to {}", defs.len());
+    for (di, def) in defs.iter().enumerate() {
+        let scenario = format!("{}?map_cache=1", def.name);
+        let k = [1usize, 3, 6][di % 3];
+        let threads = [1, 2, 4][(di / 3) % 3];
+        assert_batch_matches_oracle(def.spec, &scenario, k, threads);
+    }
+}
+
+#[test]
+fn map_cache_on_is_byte_identical_to_off() {
+    // `--map_cache off` must reproduce uncached behaviour exactly, and a
+    // cache *hit* must replay the same episode as the build-on-miss path.
+    // For every generated-map scenario, drive a cache-off env and a
+    // cache-on env through identical resets and action sequences and
+    // compare reward bits, dones, and every rendered frame byte-for-byte.
+    // The seed schedule revisits each seed, so on the cached side the
+    // first visit exercises the miss path and the rest are hits.
+    let steps = (combo_steps() / 2).max(6);
+    for def in sweep().iter().filter(|d| d.name.ends_with("_gen")) {
+        let mut rng_off = Rng::new(0xD00D);
+        let mut rng_on = Rng::new(0xD00D);
+        let mut off = env::make(
+            def.spec,
+            &format!("{}?map_cache=0", def.name),
+            &mut rng_off,
+        )
+        .unwrap();
+        let mut on =
+            env::make(def.spec, &format!("{}?map_cache=1", def.name), &mut rng_on)
+                .unwrap();
+        let sp = off.spec().clone();
+        let heads = sp.action_heads.clone();
+        let obs_len = sp.obs.len();
+        let n_agents = sp.n_agents;
+        let mut arng = Rng::new(0xF00);
+        let mut out_off = vec![AgentStep::default(); n_agents];
+        let mut out_on = vec![AgentStep::default(); n_agents];
+        let mut obs_off = vec![0u8; obs_len];
+        let mut obs_on = vec![0u8; obs_len];
+        // Seeds below the cache capacity fold onto themselves; 3 appears
+        // twice so the second visit is a guaranteed hit.
+        for seed in [3u64, 11, 3] {
+            off.reset(seed);
+            on.reset(seed);
+            for step in 0..steps {
+                let actions = random_actions(&mut arng, &heads, n_agents);
+                off.step(&actions, &mut out_off);
+                on.step(&actions, &mut out_on);
+                for a in 0..n_agents {
+                    let at = format!("{} seed={seed} step={step} agent={a}", def.name);
+                    assert_eq!(
+                        out_off[a].reward.to_bits(),
+                        out_on[a].reward.to_bits(),
+                        "reward bits diverged at {at}"
+                    );
+                    assert_eq!(out_off[a].done, out_on[a].done, "done diverged at {at}");
+                    off.render(a, &mut obs_off);
+                    on.render(a, &mut obs_on);
+                    assert_eq!(obs_off, obs_on, "frame bytes diverged at {at}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_cache_lookups_converge_on_one_allocation() {
+    use sample_factory::env::raycast::mapcache;
+    use sample_factory::env::raycast::mapgen::MapSource;
+    // Racing `lookup_or_build` calls on one key (the TSan lane runs this
+    // under the sanitizer): exactly one build wins and every caller gets
+    // the same shared allocation.  A map size unique to this test keeps
+    // the family private even though the cache is process-global.
+    let src = MapSource::Caves { w: 30, h: 19, fill_p: 0.42, steps: 3 };
+    let rounds = testkit::stress_iters(4).min(16);
+    for round in 0..rounds {
+        let seed = 1_000 + round as u64;
+        let handles: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(move || mapcache::lookup_or_build(&src, seed)))
+            .collect();
+        let got: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for other in &got[1..] {
+            assert!(
+                Arc::ptr_eq(&got[0].grid, &other.grid),
+                "racing builders produced distinct layouts for seed {seed}"
+            );
+            assert_eq!(got[0].spawns, other.spawns);
+        }
+    }
+}
+
 /// One step's signature in a recorded trajectory.
 type StepSig = (Vec<u32>, Vec<bool>, u64);
 
